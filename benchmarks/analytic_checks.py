@@ -1,0 +1,86 @@
+"""Closed-form numbers quoted in the paper's prose, recomputed exactly:
+
+§1.3.1  d=5, n=255: ideal-case probability 0.96
+§2.3    d=5, n=255: type (I) prob ≈ 0.04, type (II) ≈ 1.52e-4,
+        fake pass-through ≈ 6e-7
+§5.2    r=1..4 optimal comm/group = 591 / 402 / 318 / 288 bits (d=1000)
+§5.3    round fractions 0.962 / 0.0380 / 3.61e-4 / 2.86e-6 at (127, 13)
+§6.1    ToW estimator: unbiased, Var = (2d²−2d)/ℓ
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core.hashing import derive_seed
+from repro.core.markov import expected_round_fractions, optimize_parameters
+from repro.core.simdata import make_pair
+from repro.core.tow import estimate_d, tow_sketches
+
+from .common import Row, Timer, print_rows
+
+
+def _exact_ball_bin_probs(d: int, n: int):
+    """P[some bin has >=2 balls], P[type II: some bin odd >=3] for d balls."""
+    p_ideal = math.prod((n - k) / n for k in range(d))
+    # type II for d=5: P[some bin has 3 or 5 balls]
+    # P[exactly one bin has 3, others isolated] + [5 in one bin] + [3+2]
+    if d != 5:
+        return 1 - p_ideal, None
+    n5 = n**5
+    c53, c52 = 10, 10
+    p3 = c53 * n * (n - 1) * (n - 2) / n5          # 3 together, 2 isolated
+    p32 = c53 * n * (n - 1) / n5                   # 3 together + 2 together
+    p5 = n / n5
+    p_type2 = p3 + p32 + p5
+    return 1 - p_ideal, p_type2
+
+
+def run():
+    rows = []
+    with Timer() as t:
+        p_nonideal, p_t2 = _exact_ball_bin_probs(5, 255)
+    rows.append(Row("analytic/ideal_case_5_255", t.us,
+                    f"{1 - p_nonideal:.3f} (paper 0.96)"))
+    rows.append(Row("analytic/type1_prob", 0.0,
+                    f"{p_nonideal - p_t2:.4f} (paper ~0.04)"))
+    rows.append(Row("analytic/type2_prob", 0.0,
+                    f"{p_t2:.3e} (paper 1.52e-4)"))
+    rows.append(Row("analytic/fake_passthrough", 0.0,
+                    f"{p_t2 / 255:.2e} (paper ~6e-7)"))
+
+    # §5.2 r sweep — paper: 591/402/318/288 bits; conventions bracket it
+    for r, paper_bits in ((1, 591), (2, 402), (3, 318), (4, 288)):
+        try:
+            _, _, _, c_s = optimize_parameters(1000, 5.0, r, 0.99, convention="split")
+        except ValueError:
+            c_s = float("nan")
+        try:
+            _, _, _, c_t = optimize_parameters(1000, 5.0, r, 0.99, convention="truncate")
+        except ValueError:
+            c_t = float("inf")
+        rows.append(Row(f"analytic/comm_r{r}", 0.0,
+                        f"split={c_s:.0f}b truncate={c_t:.0f}b paper={paper_bits}b"))
+
+    fr = expected_round_fractions(127, 13, 1000, 200)
+    rows.append(Row("analytic/round_fractions", 0.0,
+                    f"{fr[0]:.3f}/{fr[1]:.4f}/{fr[2]:.2e}/{fr[3]:.2e} "
+                    f"(paper 0.962/0.0380/3.61e-4/2.86e-6)"))
+
+    # ToW moments
+    rng = np.random.default_rng(5)
+    d, ell, trials = 64, 64, 60
+    ests = []
+    for i in range(trials):
+        a, b = make_pair(4000, d, rng)
+        ests.append(estimate_d(tow_sketches(a, derive_seed(1, i), ell),
+                               tow_sketches(b, derive_seed(1, i), ell)))
+    rows.append(Row("analytic/tow_mean_var", 0.0,
+                    f"mean={np.mean(ests):.1f} (d={d}) var={np.var(ests):.0f} "
+                    f"(theory {(2 * d * d - 2 * d) / ell:.0f})"))
+    return print_rows(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Shared benchmark plumbing: timing, CSV rows, scaled-down defaults.
+
+The paper's setup is |A|=1e6, d in [10, 1e5], 1000 instances/point on an
+i7-9800X; this container is a single CPU core, so the default ("quick") grid
+is |A|=3e4, d in {10,100,1000}, 10 trials — the *per-distinct-element*
+metrics the paper reports (bytes/d, success rate) are size-invariant, which
+is what we validate.  ``REPRO_BENCH_FULL=1`` raises to |A|=2e5, d up to 1e4,
+30 trials.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+SIZE_A = 200_000 if FULL else 30_000
+D_GRID = (10, 100, 1000, 10_000) if FULL else (10, 100, 1000)
+TRIALS = 30 if FULL else 10
+TRIALS_SLOW = 10 if FULL else 3  # O(d^2) PinSketch paths (the paper's point)
+KEY_BITS = 32
+THEO_MIN_BITS = KEY_BITS  # information-theoretic minimum per distinct element
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+    extra: dict = field(default_factory=dict)
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.3f},{self.derived}"
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0
+
+    @property
+    def us(self) -> float:
+        return self.s * 1e6
+
+
+def overhead_ratio(bytes_sent: int, d: int) -> float:
+    """Communication overhead as a multiple of the theoretical minimum."""
+    return bytes_sent * 8.0 / (d * THEO_MIN_BITS)
+
+
+def print_rows(rows):
+    for r in rows:
+        print(r.csv(), flush=True)
+    return rows

@@ -1,0 +1,97 @@
+"""Paper Fig. 1a–d: PBS vs PinSketch vs Difference Digest — success rate,
+communication overhead (× theoretical minimum), encode time, decode time.
+
+Paper claims validated here (per-distinct-element metrics are size-invariant,
+so the scaled-down grid still tests them):
+  * all three hit their 0.99 success target (1a);
+  * D.Digest ≈ 6× minimum, PBS ≈ 2.13–2.87×, PinSketch ≈ 1.38× (1b);
+  * PinSketch decode explodes with d — O(d²) — while PBS stays O(d) (1d).
+PinSketch is capped at d ≤ 1000 here for the same reason the paper stopped
+at 30k: the quadratic decode dominates the whole benchmark.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.baselines import ddigest_reconcile, pinsketch_reconcile
+from repro.core.pbs import PBSConfig, reconcile, true_diff
+from repro.core.simdata import make_pair
+from repro.core.tow import estimate_d, planned_d, sketch_bytes, tow_sketches
+
+from .common import (
+    D_GRID,
+    SIZE_A,
+    TRIALS,
+    TRIALS_SLOW,
+    Row,
+    Timer,
+    overhead_ratio,
+    print_rows,
+)
+
+PINSKETCH_D_CAP = 1000
+
+
+def run():
+    rng = np.random.default_rng(7)
+    rows = []
+    for d in D_GRID:
+        size = max(SIZE_A, 2 * d)
+        succ = {"pbs": 0, "pin": 0, "dd": 0}
+        byts = {"pbs": [], "pin": [], "dd": []}
+        enc_us = {"pbs": [], "pin": [], "dd": []}
+        dec_us = {"pbs": [], "pin": [], "dd": []}
+        n_pin = 0
+        for i in range(TRIALS):
+            a, b = make_pair(size, d, rng)
+            td = true_diff(a, b)
+            # shared ToW estimate (both competitors use it, paper §6.2)
+            sa = tow_sketches(a, 50_000 + i)
+            sb = tow_sketches(b, 50_000 + i)
+            d_plan = planned_d(estimate_d(sa, sb))
+
+            with Timer() as t_pbs:
+                res = reconcile(a, b, PBSConfig(seed=i, max_rounds=3))
+            succ["pbs"] += res.success and res.diff == td
+            byts["pbs"].append(res.bytes_sent)
+            enc_us["pbs"].append(t_pbs.us * 0.5)   # encode/decode interleave;
+            dec_us["pbs"].append(t_pbs.us * 0.5)   # split 50/50 for reporting
+
+            if d <= PINSKETCH_D_CAP and i < (TRIALS_SLOW if d >= 1000 else TRIALS):
+                n_pin += 1
+                t = d_plan
+                with Timer() as t_enc:
+                    from repro.core.baselines import pinsketch_encode
+                    pinsketch_encode(b, t)
+                with Timer() as t_dec:
+                    res_p = pinsketch_reconcile(a, b, t)
+                succ["pin"] += res_p.success and res_p.diff == td
+                byts["pin"].append(res_p.bytes_sent)
+                enc_us["pin"].append(t_enc.us)
+                dec_us["pin"].append(t_dec.us - t_enc.us * 2)
+
+            with Timer() as t_dd:
+                res_d = ddigest_reconcile(a, b, d_plan, seed=i)
+            succ["dd"] += res_d.success and res_d.diff == td
+            byts["dd"].append(res_d.bytes_sent)
+            enc_us["dd"].append(t_dd.us * 0.5)
+            dec_us["dd"].append(t_dd.us * 0.5)
+
+        est_b = sketch_bytes(size)
+        for k, label, n_tr in (("pbs", "PBS", TRIALS), ("pin", "PinSketch", n_pin),
+                               ("dd", "D.Digest", TRIALS)):
+            if n_tr == 0:
+                continue
+            ov = overhead_ratio(float(np.mean(byts[k])), d)
+            rows.append(Row(
+                f"fig1/{label}_d{d}",
+                float(np.mean(enc_us[k]) + np.mean(dec_us[k])),
+                f"success={succ[k]}/{n_tr} overhead={ov:.2f}x "
+                f"enc_us={np.mean(enc_us[k]):.0f} dec_us={np.mean(dec_us[k]):.0f} "
+                f"(est {est_b}B excluded, paper conv.)",
+            ))
+    return print_rows(rows)
+
+
+if __name__ == "__main__":
+    run()

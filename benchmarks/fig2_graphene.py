@@ -1,0 +1,57 @@
+"""Paper Fig. 2a–d: PBS vs Graphene (protocol I, B ⊂ A — Graphene's best
+case), target success rate 239/240.  Claim: PBS ~1.2–7.4× less communication
+except when d approaches |A| (Graphene's BF pays off only then)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.baselines import graphene_reconcile
+from repro.core.pbs import PBSConfig, reconcile, true_diff
+from repro.core.simdata import make_pair
+from repro.core.tow import estimate_d, planned_d, tow_sketches
+
+from .common import D_GRID, SIZE_A, TRIALS, Row, Timer, overhead_ratio, print_rows
+
+
+def run():
+    rng = np.random.default_rng(11)
+    rows = []
+    p0 = 239.0 / 240.0
+    for d in D_GRID:
+        size = max(SIZE_A, 2 * d)
+        succ = {"pbs": 0, "gr": 0}
+        byts = {"pbs": [], "gr": []}
+        us = {"pbs": [], "gr": []}
+        for i in range(TRIALS):
+            a, b = make_pair(size, d, rng)
+            td = true_diff(a, b)
+            sa, sb = tow_sketches(a, 80_000 + i), tow_sketches(b, 80_000 + i)
+            d_plan = planned_d(estimate_d(sa, sb))
+
+            with Timer() as t1:
+                res = reconcile(a, b, PBSConfig(seed=i, p0=p0, max_rounds=3))
+            succ["pbs"] += res.success and res.diff == td
+            byts["pbs"].append(res.bytes_sent)
+            us["pbs"].append(t1.us)
+
+            with Timer() as t2:
+                res_g = graphene_reconcile(a, b, d_plan, seed=i)
+            succ["gr"] += res_g.success and res_g.diff == td
+            # subtract the 336B estimator from Graphene per the paper's §6.2
+            byts["gr"].append(max(0, res_g.bytes_sent - 336))
+            us["gr"].append(t2.us)
+
+        ratio = np.mean(byts["gr"]) / max(1.0, np.mean(byts["pbs"]))
+        for k, label in (("pbs", "PBS"), ("gr", "Graphene")):
+            rows.append(Row(
+                f"fig2/{label}_d{d}", float(np.mean(us[k])),
+                f"success={succ[k]}/{TRIALS} "
+                f"overhead={overhead_ratio(float(np.mean(byts[k])), d):.2f}x",
+            ))
+        rows.append(Row(f"fig2/comm_ratio_d{d}", 0.0,
+                        f"graphene/pbs={ratio:.2f}x (paper: 1.2-7.4x)"))
+    return print_rows(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,111 @@
+"""Kernel-layer benchmark: the PBS hot loops (DESIGN.md §3) at protocol scale.
+
+No TPU in this container, so three views per kernel:
+  * interpret — Pallas kernel body in interpret mode (correctness-grade);
+  * ref       — the jitted pure-jnp oracle on CPU (the fastest runnable path
+                here, and what the multi-round protocol actually calls);
+  * tpu_est   — analytic v5e time: max(FLOP/s term, HBM term) from the
+                kernel's exact op/byte counts (the number the §Roofline
+                tables use).
+
+Scale: d = 10,000 -> g = 2,000 groups, (n, t) = (127, 13) — the paper's
+headline operating point where PinSketch's O(d²) decode takes seconds and
+PBS's batched decode is O(d).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bch import BCHCode, batched_decode, sketch_from_positions
+from repro.kernels.ops import bch_decode_batched, pack_bits_to_field, sketch_groups
+from repro.kernels.gf2_matmul import gf2_matmul
+from repro.kernels.tow_sketch import tow_sketch
+from repro.kernels.bin_xorsum import bin_parity_xorsum
+
+from .common import FULL, Row, Timer, print_rows
+
+PEAK_INT = 197e12 / 2          # int8-ish MXU ops/s (conservative: bf16 rate)
+HBM = 819e9
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    best = float("inf")
+    for _ in range(reps):
+        with Timer() as t:
+            r = fn(*args)
+            jax.block_until_ready(r) if hasattr(r, "block_until_ready") or isinstance(r, jax.Array) else None
+        best = min(best, t.us)
+    return best
+
+
+def run():
+    rows = []
+    G, n, t = (8000, 127, 13) if FULL else (2000, 127, 13)
+    code = BCHCode(n, t)
+    m = code.m
+    rng = np.random.default_rng(3)
+
+    # ---- gf2_matmul: G parity bitmaps -> BCH sketches (one GF(2) matmul) --
+    bitmaps = jnp.asarray(rng.integers(0, 2, (G, n)), jnp.int32)
+    P = jnp.asarray(code.field.syndrome_matrix(code.t))
+    ref = jax.jit(lambda a, b: (a @ b) % 2)
+    us_ref = _time(ref, bitmaps, P)
+    flops = 2.0 * G * n * t * m
+    bytes_ = (G * n + n * t * m + G * t * m) * 4
+    tpu_est = max(flops / PEAK_INT, bytes_ / HBM) * 1e6
+    with Timer() as ti:
+        kern = gf2_matmul(bitmaps, P, interpret=True)
+    ok = bool(jnp.all(kern == ref(bitmaps, P)))
+    rows.append(Row("kernel/gf2_matmul_sketch", us_ref,
+                    f"G={G} n={n} tm={t * m} interpret_ok={ok} "
+                    f"interp_us={ti.us:.0f} tpu_est_us={tpu_est:.1f}"))
+
+    # ---- batched BCH decode (jit vmap BM+Chien) vs numpy reference --------
+    positions = [np.sort(rng.choice(n, size=rng.integers(0, t + 1), replace=False))
+                 for _ in range(G)]
+    sketches = np.stack([sketch_from_positions(code, p) for p in positions])
+    sk = jnp.asarray(sketches)
+    jfn = lambda s: bch_decode_batched(s, n=n, t=t)
+    us_jax = _time(jfn, sk)
+    with Timer() as tnp:
+        ok_np, pos_np = batched_decode(code, sketches)
+    okj, posj, cnt = jfn(sk)
+    agree = bool(np.all(np.asarray(okj) == ok_np))
+    rows.append(Row("kernel/bch_decode_batched", us_jax,
+                    f"G={G} jax_us={us_jax:.0f} numpy_us={tnp.us:.0f} "
+                    f"agree={agree} per_group_us={us_jax / G:.2f} (O(d) total)"))
+
+    # ---- O(d) vs O(d^2): PinSketch-style single decode at same d ----------
+    d_total = 5 * G
+    big_code = None
+    rows.append(Row("kernel/decode_scaling", 0.0,
+                    f"PBS decodes d={d_total} as {G} independent t={t} units; "
+                    f"one-shot BCH at t={d_total} needs O(t^2)={d_total**2:.1e} "
+                    f"GF ops vs PBS {G * t * t:.1e}"))
+
+    # ---- ToW sketch kernel -------------------------------------------------
+    elems = jnp.asarray(rng.integers(1, 1 << 32, 200_000, dtype=np.uint64).astype(np.uint32))
+    seeds = jnp.arange(128, dtype=jnp.uint32)
+    with Timer() as ti2:
+        y = tow_sketch(elems, seeds, ell=128, interpret=True)
+    flops = 200_000 * 128 * 8.0
+    bytes_ = 200_000 * 4 * 1.0 + 128 * 4
+    tpu_est = max(flops / PEAK_INT, bytes_ / HBM) * 1e6
+    rows.append(Row("kernel/tow_sketch", ti2.us,
+                    f"N=200k ell=128 interp_us={ti2.us:.0f} tpu_est_us={tpu_est:.1f}"))
+
+    # ---- bin parity/xorsum build ------------------------------------------
+    elems_g = jnp.asarray(rng.integers(1, 1 << 32, 4096, dtype=np.uint64).astype(np.uint32))
+    with Timer() as ti3:
+        par, xb = bin_parity_xorsum(elems_g, n_bins=n, seed=7, interpret=True)
+    rows.append(Row("kernel/bin_xorsum", ti3.us,
+                    f"N=4096 n={n} interp_us={ti3.us:.0f}"))
+    return print_rows(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,88 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline markdown tables.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [--dir experiments/dryrun]
+Writes experiments/roofline_table.md and prints a compact summary.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from .common import Row, print_rows
+
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def load(dir_: Path, tag: str = ""):
+    recs = []
+    for p in sorted(dir_.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("tag", "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:7.2f}s "
+    if x >= 1e-3:
+        return f"{x * 1e3:7.2f}ms"
+    return f"{x * 1e6:7.1f}µs"
+
+
+def table(recs, mesh: str) -> str:
+    lines = [
+        f"### Mesh `{mesh}`",
+        "",
+        "| arch | shape | status | peak GiB/dev | compute | memory | collective | bound | useful-FLOPs ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]))):
+        if r["mesh"] != mesh:
+            continue
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | skip | — | — | — | — | — | — |")
+            continue
+        ro, me = r["roofline"], r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | {me['peak_bytes_per_device'] / 2**30:.2f} "
+            f"| {fmt_s(ro['compute_s'])} | {fmt_s(ro['memory_s'])} | {fmt_s(ro['collective_s'])} "
+            f"| {ro['bound'].replace('_s', '')} | {ro['useful_flops_ratio']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/roofline_table.md")
+    args = ap.parse_args()
+    recs = load(Path(args.dir), args.tag)
+    md = "\n\n".join(table(recs, mesh) for mesh in ("pod", "multipod"))
+    Path(args.out).write_text(md + "\n")
+    ok = sum(1 for r in recs if r.get("status") == "ok")
+    sk = sum(1 for r in recs if r.get("status") == "skipped")
+    rows = [Row("roofline/cells", 0.0, f"ok={ok} skipped={sk} -> {args.out}")]
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        ro = r["roofline"]
+        rows.append(Row(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            0.0,
+            f"bound={ro['bound'].replace('_s', '')} "
+            f"c/m/n={ro['compute_s']:.3g}/{ro['memory_s']:.3g}/{ro['collective_s']:.3g}s "
+            f"useful={ro['useful_flops_ratio']:.3f}",
+        ))
+    return print_rows(rows)
+
+
+def run():
+    return main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark runner: one module per paper table/figure (DESIGN.md §7).
+
+Prints ``name,us_per_call,derived`` CSV rows.  REPRO_BENCH_FULL=1 enables the
+paper-scale grid (slower).  The dry-run / roofline benches read
+experiments/dryrun/*.json (produced by launch/dryrun.py)."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        analytic_checks,
+        fig1_pinsketch_ddigest,
+        fig2_graphene,
+        fig3_pinsketch_wp,
+        fig4_delta_sweep,
+        kernel_bench,
+        table1_param_opt,
+        table2_rounds,
+    )
+
+    mods = [
+        table1_param_opt, table2_rounds, analytic_checks,
+        fig1_pinsketch_ddigest, fig2_graphene, fig3_pinsketch_wp,
+        fig4_delta_sweep, kernel_bench,
+    ]
+    try:
+        from . import roofline_report
+        import pathlib
+        if pathlib.Path("experiments/dryrun").exists():
+            mods.append(roofline_report)
+    except Exception:
+        pass
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in mods:
+        try:
+            mod.run()
+        except Exception:
+            failed += 1
+            print(f"{mod.__name__},0,FAILED", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Paper Table 1 (App. H): success-probability lower-bound grid for d=1000,
+delta=5 (g=200), r=3; optimal (n, t) = (127, 13) with 318 bits/group.
+
+Reproduction stance (see EXPERIMENTS.md §Paper-validation): the paper's
+printed Table 1 is *not* reproducible from its own stated App. D/F model
+("Pr[x⇝0] = 0 for x > t"): under that model rows t ≤ 11 are all ≤ 0
+(the Binomial tail beyond t kills alpha^200), yet the paper prints e.g.
+0.927 at (127, 10).  We therefore report BOTH conventions:
+
+* truncate — the paper's stated model; matches the paper's cells where the
+  x > t path is negligible (t ≥ 16 at n = 63/127: within ~1.5%),
+* split — models the §3.2 3-way-split recovery the protocol actually runs;
+  upper-bounds the paper's cells everywhere,
+
+and validate the thing that actually matters operationally: the optimizers
+of the two conventions bracket the paper's 318-bit optimum, and the real
+protocol meets the p0 guarantee empirically (fig1 benchmark / tests).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.markov import bound_table, optimize_parameters
+
+from .common import Row, Timer, print_rows
+
+PAPER = {
+    8:  (0.0,   0.255, 0.327, 0.343, 0.349, 0.350),
+    9:  (0.521, 0.780, 0.842, 0.857, 0.861, 0.862),
+    10: (0.751, 0.927, 0.965, 0.974, 0.976, 0.977),
+    11: (0.859, 0.969, 0.991, 0.995, 0.996, 0.996),
+    12: (0.913, 0.985, 0.997, 0.999, None,  None),
+    13: (0.939, 0.991, 0.998, None,  None,  None),
+    14: (0.951, 0.994, None,  None,  None,  None),
+    15: (0.956, 0.995, None,  None,  None,  None),
+    16: (0.957, 0.996, None,  None,  None,  None),
+    17: (0.958, 0.996, None,  None,  None,  None),
+}
+NS = (63, 127, 255, 511, 1023, 2047)
+HIGH_T_CELLS = [((63, 16), 0.957), ((63, 17), 0.958), ((127, 17), 0.996)]
+
+
+def grid(convention: str):
+    return bound_table(1000, 5.0, 3, t_values=range(8, 18), n_values=NS,
+                       convention=convention)
+
+
+def run():
+    d, delta, r, p0 = 1000, 5.0, 3, 0.99
+    with Timer() as t:
+        trunc = grid("truncate")
+        split = grid("split")
+
+    # (a) high-t agreement under the paper's stated convention
+    high_err = max(abs(max(trunc[c], 0.0) - ref) for c, ref in HIGH_T_CELLS)
+    # (b) split dominates paper dominates nothing-below-split-minus-slack
+    viol = 0
+    for tv, row in PAPER.items():
+        for j, n in enumerate(NS):
+            ref = 0.999 if row[j] is None else row[j]
+            if max(split[(n, tv)], 0.0) + 5e-3 < ref:
+                viol += 1
+    # (c) optimizer bracket around the paper's 318 bits/group objective
+    n_s, t_s, lb_s, comm_s = optimize_parameters(d, delta, r, p0, convention="split")
+    n_t, t_t, lb_t, comm_t = optimize_parameters(d, delta, r, p0, convention="truncate")
+
+    rows = [
+        Row("table1/high_t_truncate_max_err", t.us, f"{high_err:.4f} (tol 0.015)"),
+        Row("table1/split_upper_bounds_paper", 0.0, f"violations={viol}/60"),
+        Row("table1/opt_split", 0.0, f"(n={n_s},t={t_s}) bound={lb_s:.4f} comm={comm_s:.0f}b"),
+        Row("table1/opt_truncate", 0.0, f"(n={n_t},t={t_t}) bound={lb_t:.4f} comm={comm_t:.0f}b"),
+        Row("table1/paper_bracket_318", 0.0,
+            f"{comm_s:.0f} <= 318 <= {comm_t:.0f}: {comm_s <= 318 <= comm_t}"),
+    ]
+    ok = high_err < 0.015 and viol == 0 and comm_s <= 318 <= comm_t
+    rows.append(Row("table1/" + ("PASS" if ok else "FAIL"), 0.0, ""))
+    return print_rows(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Paper Table 2 (App. J.1): empirical PMF of the number of rounds PBS needs
+to reconcile everything, and the implied means (1.20 / 1.81 / 2.04 / … for
+d = 10 / 100 / 1000 / …).  PBS runs unbounded rounds here (max_rounds stop
+is a far-away safety net), exactly like the paper's J.1 setup."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.pbs import PBSConfig, reconcile, true_diff
+from repro.core.simdata import make_pair
+
+from .common import D_GRID, SIZE_A, TRIALS, Row, Timer, print_rows
+
+PAPER_MEANS = {10: 1.20, 100: 1.81, 1000: 2.04, 10_000: 2.09, 100_000: 2.18}
+
+
+def run():
+    rng = np.random.default_rng(42)
+    rows = []
+    for d in D_GRID:
+        counts = {}
+        fails = 0
+        with Timer() as t:
+            for i in range(TRIALS):
+                a, b = make_pair(max(SIZE_A, 2 * d), d, rng)
+                res = reconcile(a, b, PBSConfig(seed=1000 + i, max_rounds=12))
+                if not (res.success and res.diff == true_diff(a, b)):
+                    fails += 1
+                counts[res.rounds] = counts.get(res.rounds, 0) + 1
+        mean = sum(r * c for r, c in counts.items()) / TRIALS
+        pmf = {r: c / TRIALS for r, c in sorted(counts.items())}
+        rows.append(Row(
+            f"table2/rounds_d{d}", t.us / TRIALS,
+            f"mean={mean:.2f} paper={PAPER_MEANS.get(d, float('nan')):.2f} "
+            f"pmf={pmf} fails={fails}",
+        ))
+    return print_rows(rows)
+
+
+if __name__ == "__main__":
+    run()

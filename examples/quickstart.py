@@ -1,0 +1,35 @@
+"""Quickstart: the paper's protocol end-to-end in 40 lines.
+
+Alice and Bob hold two large key sets differing in d elements; PBS lets
+Alice learn the difference in O(d) time and ~2x the information-theoretic
+minimum bytes.  Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.pbs import PBSConfig, reconcile, true_diff
+from repro.core.simdata import make_pair_two_sided
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # 100k-element sets differing in 600 keys (400 only-Alice, 200 only-Bob)
+    A, B = make_pair_two_sided(100_000, 400, 200, rng)
+    d = len(true_diff(A, B))
+    print(f"|A|={len(A):,} |B|={len(B):,} d={d}")
+
+    res = reconcile(A, B, PBSConfig(seed=7))
+    assert res.success and res.diff == true_diff(A, B)
+
+    minimum = d * 4  # d * log|U| bits = 4 bytes per element
+    print(f"reconciled in {res.rounds} round(s)")
+    print(f"  protocol bytes : {res.bytes_sent:,} "
+          f"({res.bytes_sent / minimum:.2f}x the theoretical minimum)")
+    print(f"  estimator bytes: {res.estimator_bytes} (ToW, 128 sketches)")
+    print(f"  parameters     : n={res.n} t={res.t} g={res.g} "
+          f"(optimized for d_hat={res.d_est:.0f})")
+    print(f"  naive transfer : {4 * len(B):,} bytes "
+          f"({4 * len(B) / res.bytes_sent:.0f}x more)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Batched serving example: requests -> bucketed prefill -> decode loop.
+
+Serves a few dozen mixed-length requests against a reduced qwen2-family
+model through `repro.serve.scheduler.BatchScheduler` (the serving-side
+end-to-end driver) and prints the throughput ledger.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+import numpy as np
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.optim import OptConfig
+from repro.serve.scheduler import BatchScheduler, Request
+from repro.train import init_train_state, make_train_step
+
+
+def main():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = get_smoke_config("qwen2-1.5b")
+    ocfg = OptConfig(warmup=2, total_steps=10)
+    bundle = make_train_step(cfg, mesh, ocfg, batch=4)
+    params, _ = init_train_state(bundle, cfg, mesh, ocfg)
+
+    rng = np.random.default_rng(0)
+    requests = [
+        Request(rid=i,
+                prompt=rng.integers(1, cfg.vocab, size=plen).tolist(),
+                max_new=8)
+        for i, plen in enumerate([16] * 6 + [32] * 5 + [16] * 3)
+    ]
+    sched = BatchScheduler(cfg, mesh, batch=4, max_len=64, eos_id=0)
+    out, stats = sched.run(params, requests)
+
+    assert len(out) == len(requests)
+    done = sum(c.finished for c in out.values())
+    print(f"served {stats.requests} requests in {stats.batches} batches "
+          f"({stats.wall_s:.1f}s incl. compiles)")
+    print(f"  prefill tokens: {stats.prefill_tokens}   decode steps: {stats.decode_steps}")
+    print(f"  finished early (EOS): {done}")
+    for rid in (0, 6):
+        print(f"  request {rid}: prompt[:4]={requests[rid].prompt[:4]} "
+              f"-> {out[rid].tokens}")
+
+
+if __name__ == "__main__":
+    main()

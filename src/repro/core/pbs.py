@@ -1,0 +1,300 @@
+"""The PBS set-reconciliation protocol (paper §2–§3), byte-accounted.
+
+Unidirectional reconciliation: Alice learns A △ B.  Faithful to the paper:
+
+* hash-partition into g = d/δ **groups** (fixed across rounds, §3) and, per
+  round, into n **bins** with a fresh per-round hash (§2.4);
+* per group, Alice sends the t·m-bit **BCH syndrome sketch** of her parity
+  bitmap; Bob decodes the XOR of sketches to locate differing bins and replies
+  with bin indices + his bin XOR sums + his group checksum (Procedure 2);
+* Alice recovers one element per located bin via the XOR trick (Procedure 1),
+  discards fakes with the sub-universe check (Procedure 3), and gates the
+  group on the sum-mod-2^|key| checksum (§2.2.3);
+* BCH decoding failures (> t differing bins) trigger the **3-way split**
+  (§3.2); unreconciled groups re-run with fresh hashes (§2.4).
+
+Every message is byte-accounted with the paper's accounting (Formula (1)),
+so the benchmarks reproduce Fig. 1b/2b/3b directly.  All per-round bin
+algebra is vectorized across *all* active units at once (segmented scatters +
+the batched BM/Chien decoder) — the numpy mirror of the TPU formulation in
+`repro.kernels`, which is tested against this implementation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .bch import BCHCode, batched_decode, sketch_from_positions
+from .hashing import derive_seed, hash_to_range
+from .markov import optimize_parameters
+from .tow import ELL_DEFAULT, GAMMA, estimate_d, planned_d, sketch_bytes, tow_sketches
+
+KEY_BITS = 32
+_MOD = np.uint64(1) << np.uint64(KEY_BITS)
+
+
+def checksum(elems: np.ndarray) -> int:
+    """c(S) = sum of elements mod 2^|key| (paper §2.2.3)."""
+    return int(np.asarray(elems, dtype=np.uint64).sum() % _MOD)
+
+
+@dataclass
+class PBSConfig:
+    delta: float = 5.0
+    r_target: int = 3
+    p0: float = 0.99
+    ell: int = ELL_DEFAULT
+    gamma: float = GAMMA
+    max_rounds: int = 12          # hard stop far beyond the r=3 design point
+    seed: int = 0
+    convention: str = "split"     # parameter-optimizer convention
+    n_override: int | None = None  # pin (n, t) instead of optimizing
+    t_override: int | None = None
+    g_override: int | None = None
+
+
+@dataclass
+class Unit:
+    """An active reconciliation unit: a group, or a split descendant of one."""
+
+    uid: int
+    group: int
+    filters: tuple = ()  # ((seed, idx3), ...) from 3-way splits
+    done: bool = False
+
+
+@dataclass
+class ReconcileResult:
+    diff: set
+    rounds: int
+    success: bool
+    bytes_sent: int               # protocol bytes (paper convention: sans estimator)
+    estimator_bytes: int
+    bytes_per_round: list = field(default_factory=list)
+    n: int = 0
+    t: int = 0
+    g: int = 0
+    d_est: float = 0.0
+    decode_failures: int = 0
+    fake_rejections: int = 0
+
+
+def _slot_assignment(elems, group_of, units, group_order, group_bounds):
+    """Map every element participating this round to its active-unit slot.
+
+    Plain units (no filters) are resolved with one LUT gather; split units
+    (rare) are resolved on their parent group's slice only.
+    Returns (element_indices, slot_ids).
+    """
+    g = len(group_bounds) - 1
+    lut = np.full(g, -1, dtype=np.int64)
+    sel_idx: list[np.ndarray] = []
+    sel_slot: list[np.ndarray] = []
+    for slot, u in enumerate(units):
+        if not u.filters:
+            lut[u.group] = slot
+        else:
+            lo, hi = group_bounds[u.group], group_bounds[u.group + 1]
+            idx = group_order[lo:hi]
+            vals = elems[idx]
+            mask = np.ones(len(idx), dtype=bool)
+            for fs, fi in u.filters:
+                mask &= hash_to_range(vals, 3, fs) == fi
+            sel_idx.append(idx[mask])
+            sel_slot.append(np.full(int(mask.sum()), slot, dtype=np.int64))
+    plain_slot = lut[group_of]
+    plain_sel = plain_slot >= 0
+    sel_idx.append(np.nonzero(plain_sel)[0])
+    sel_slot.append(plain_slot[plain_sel])
+    return np.concatenate(sel_idx), np.concatenate(sel_slot)
+
+
+def _unit_tables(elems, idx, slots, n_units, n, bin_seed):
+    """Per-(unit, bin) parity positions, XOR folds, and per-unit checksums."""
+    vals = elems[idx]
+    bins = hash_to_range(vals, n, bin_seed)
+    flat = slots * n + bins
+    counts = np.zeros(n_units * n, dtype=np.int64)
+    np.add.at(counts, flat, 1)
+    xors = np.zeros(n_units * n, dtype=np.uint32)
+    np.bitwise_xor.at(xors, flat, vals.astype(np.uint32))
+    csums = np.zeros(n_units, dtype=np.uint64)
+    np.add.at(csums, slots, vals.astype(np.uint64))
+    csums %= _MOD
+    odd = np.nonzero(counts & 1)[0]
+    return odd // n, odd % n, xors, csums
+
+
+def _segmented_sketches(code, slot_of_pos, positions, n_units):
+    """BCH sketches for all units at once (segmented XOR over bit positions)."""
+    out = np.zeros((n_units, code.t), dtype=np.int64)
+    if len(positions):
+        gf = code.field
+        j = np.arange(code.t, dtype=np.int64)[None, :]
+        vals = gf.pow_alpha(positions[:, None] * (2 * j + 1))  # (P, t)
+        np.bitwise_xor.at(out, slot_of_pos, vals)
+    return out
+
+
+def reconcile(
+    set_a: np.ndarray,
+    set_b: np.ndarray,
+    cfg: PBSConfig | None = None,
+    d_known: int | None = None,
+) -> ReconcileResult:
+    """Run the full PBS protocol; Alice (holding A) learns A △ B."""
+    cfg = cfg or PBSConfig()
+    a = np.unique(np.asarray(set_a, dtype=np.uint32))
+    b = np.unique(np.asarray(set_b, dtype=np.uint32))
+
+    # --- Phase 0: estimate d with ToW unless known (paper §6.2) -----------
+    est_bytes = 0
+    if d_known is None:
+        seed_tow = derive_seed(cfg.seed, 0x70)
+        sk_a = tow_sketches(a, seed_tow, cfg.ell)
+        sk_b = tow_sketches(b, seed_tow, cfg.ell)
+        d_est = estimate_d(sk_a, sk_b)
+        est_bytes = sketch_bytes(len(a), cfg.ell) + 4  # A->B sketches, B->A d_hat
+        d_plan = planned_d(d_est, cfg.gamma)
+    else:
+        d_est = float(d_known)
+        d_plan = max(1, d_known)
+
+    g = cfg.g_override or max(1, round(d_plan / cfg.delta))
+    if cfg.n_override is not None:
+        n, t = cfg.n_override, cfg.t_override
+    else:
+        n, t, _, _ = optimize_parameters(
+            d_plan, cfg.delta, cfg.r_target, cfg.p0, KEY_BITS, convention=cfg.convention
+        )
+    code = BCHCode(n, t)
+    m = code.m
+
+    seed_groups = derive_seed(cfg.seed, 1)
+    group_b = hash_to_range(b, g, seed_groups)
+    order_b = np.argsort(group_b, kind="stable")
+    bounds_b = np.searchsorted(group_b[order_b], np.arange(g + 1))
+
+    a_set = set(int(x) for x in a)
+    units = [Unit(uid=i, group=i) for i in range(g)]
+    next_uid = g
+    diff: set[int] = set()
+    bytes_per_round: list[int] = []
+    decode_failures = fake_rejections = 0
+    success = False
+    rounds = 0
+
+    for rnd in range(1, cfg.max_rounds + 1):
+        active = [u for u in units if not u.done]
+        if not active:
+            success = True
+            break
+        rounds = rnd
+        round_bits = 0
+        bin_seed = derive_seed(cfg.seed, 2, rnd)
+        n_units = len(active)
+
+        # Alice's effective set is A △ D̂ (§2.4).
+        if diff:
+            diff_arr = np.fromiter(diff, dtype=np.uint32, count=len(diff))
+            eff_a = np.concatenate(
+                [np.setdiff1d(a, diff_arr), np.setdiff1d(diff_arr, a)]
+            )
+        else:
+            eff_a = a
+        group_eff = hash_to_range(eff_a, g, seed_groups)
+        order_a = np.argsort(group_eff, kind="stable")
+        bounds_a = np.searchsorted(group_eff[order_a], np.arange(g + 1))
+
+        idx_a, slot_a = _slot_assignment(eff_a, group_eff, active, order_a, bounds_a)
+        idx_b, slot_b = _slot_assignment(b, group_b, active, order_b, bounds_b)
+
+        pslot_a, ppos_a, xors_a, _ = _unit_tables(eff_a, idx_a, slot_a, n_units, n, bin_seed)
+        pslot_b, ppos_b, xors_b, csum_b = _unit_tables(b, idx_b, slot_b, n_units, n, bin_seed)
+
+        sk_a_all = _segmented_sketches(code, pslot_a, ppos_a, n_units)
+        sk_b_all = _segmented_sketches(code, pslot_b, ppos_b, n_units)
+        round_bits += n_units * (t * m + 1)  # Alice->Bob sketches + ok flags
+
+        ok, err_positions = batched_decode(code, sk_a_all ^ sk_b_all)
+
+        # Per-unit outcomes.  Recovery + checksum gating is O(found elements).
+        csum_a = np.zeros(n_units, dtype=np.uint64)
+        np.add.at(csum_a, slot_a, eff_a[idx_a].astype(np.uint64))
+        csum_a %= _MOD
+
+        for slot, u in enumerate(active):
+            if not ok[slot]:
+                decode_failures += 1
+                split_seed = derive_seed(cfg.seed, 3, rnd, u.uid)
+                u.done = True
+                for k in range(3):
+                    units.append(
+                        Unit(uid=next_uid, group=u.group, filters=u.filters + ((split_seed, k),))
+                    )
+                    next_uid += 1
+                continue
+            pos = err_positions[slot]
+            # Bob -> Alice: bin indices, his XOR sums, his checksum (Formula 1).
+            round_bits += len(pos) * (m + KEY_BITS) + KEY_BITS
+            delta_sum = 0
+            newly = []
+            for p in pos:
+                fi = slot * n + int(p)
+                s = int(xors_a[fi] ^ xors_b[fi])
+                if s == 0:
+                    fake_rejections += 1
+                    continue
+                sx = np.array([s], dtype=np.uint32)
+                # Procedure 3: s must belong to this unit's sub-universe.
+                if (
+                    int(hash_to_range(sx, n, bin_seed)[0]) != int(p)
+                    or int(hash_to_range(sx, g, seed_groups)[0]) != u.group
+                    or any(int(hash_to_range(sx, 3, fs)[0]) != fk for fs, fk in u.filters)
+                ):
+                    fake_rejections += 1
+                    continue
+                newly.append(s)
+                in_eff = (s in a_set) ^ (s in diff)
+                delta_sum += -s if in_eff else s
+            for s in newly:
+                diff.symmetric_difference_update((s,))
+            new_csum = int((int(csum_a[slot]) + delta_sum) % (1 << KEY_BITS))
+            if new_csum == int(csum_b[slot]):
+                u.done = True
+
+        bytes_per_round.append((round_bits + 7) // 8)
+    else:
+        success = all(u.done for u in units)
+
+    return ReconcileResult(
+        diff=diff,
+        rounds=rounds,
+        success=success,
+        bytes_sent=sum(bytes_per_round),
+        estimator_bytes=est_bytes,
+        bytes_per_round=bytes_per_round,
+        n=n,
+        t=t,
+        g=g,
+        d_est=d_est,
+        decode_failures=decode_failures,
+        fake_rejections=fake_rejections,
+    )
+
+
+def reconcile_small(
+    set_a: np.ndarray, set_b: np.ndarray, n: int, t: int, seed: int = 0, max_rounds: int = 12
+) -> ReconcileResult:
+    """PBS-for-small-d (§2): a single group pair with pinned (n, t)."""
+    cfg = PBSConfig(
+        seed=seed, n_override=n, t_override=t, g_override=1, max_rounds=max_rounds
+    )
+    return reconcile(set_a, set_b, cfg, d_known=max(1, t // 2))
+
+
+def true_diff(set_a: np.ndarray, set_b: np.ndarray) -> set:
+    a = set(int(x) for x in np.asarray(set_a).ravel())
+    b = set(int(x) for x in np.asarray(set_b).ravel())
+    return a ^ b

@@ -1,0 +1,104 @@
+"""Hash-partition + parity bitmap + per-bin XOR fold, as one Pallas kernel.
+
+The CPU algorithm scatters each element into its hash bin (sequential memory
+chaos); the TPU formulation (DESIGN.md §3) makes it dense algebra: for an
+element tile E, with H = one_hot(bin(E)) ∈ {0,1}^(tile × n) and
+bits(E) ∈ {0,1}^(tile × 33) (32 key bits ‖ ones column for counting),
+
+    acc(n × 33) += Hᵀ @ bits(E)        — one MXU matmul per tile,
+
+then `acc & 1` yields per-bin XOR folds (bit-parity == XOR) and the parity
+bitmap (count parity) in one shot.  The grid walks element tiles; `acc`
+lives in VMEM scratch for the whole pass.
+
+Binning uses murmur-finalizer mix32 followed by `mod n` (n = 2^m − 1, so a
+multiply-shift range reduction would need 64-bit lanes; `mod` stays in
+32-bit).  `ref.py` mirrors the exact same hash so kernel ≡ oracle bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def mix32_jnp(x: jax.Array, seed) -> jax.Array:
+    """murmur3 fmix32 (uint32 lanes, wrap-around multiplies) — VPU-only ops."""
+    x = x.astype(jnp.uint32)
+    x = x + (jnp.uint32(seed) * jnp.uint32(0x9E3779B9))
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _kernel(elems_ref, valid_ref, o_ref, acc_ref, *, n_bins: int, seed: int, nt: int):
+    ti = pl.program_id(0)
+
+    @pl.when(ti == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    e = elems_ref[...].astype(jnp.uint32)  # (tile,)
+    valid = valid_ref[...] > 0
+    h = mix32_jnp(e, seed)
+    bins = (h % jnp.uint32(n_bins)).astype(jnp.int32)
+    # one-hot dispatch matrix (tile, n) and bit matrix (tile, 33)
+    onehot = (
+        (bins[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, n_bins), 1))
+        & valid[:, None]
+    ).astype(jnp.int32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 32), 1)
+    bits = ((e[:, None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+    bits = jnp.concatenate([bits, valid[:, None].astype(jnp.int32)], axis=1)  # ‖ ones
+    acc_ref[...] += jnp.dot(onehot.T, bits, preferred_element_type=jnp.int32)
+
+    @pl.when(ti == nt - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...] & 1
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "seed", "tile", "interpret"))
+def bin_parity_xorsum(
+    elems: jax.Array,
+    *,
+    n_bins: int,
+    seed: int,
+    tile: int = 1024,
+    interpret: bool = True,
+):
+    """Returns (parity_bitmap (n,), xor_bits (n, 32)) for a set of uint32 keys."""
+    e = elems.astype(jnp.uint32)
+    E = e.shape[0]
+    Ep = max(tile, ((E + tile - 1) // tile) * tile)
+    pad = Ep - E
+    e_p = jnp.concatenate([e, jnp.zeros(pad, jnp.uint32)])
+    valid = jnp.concatenate([jnp.ones(E, jnp.int32), jnp.zeros(pad, jnp.int32)])
+    nt = Ep // tile
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_bins=n_bins, seed=seed, nt=nt),
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((n_bins, 33), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_bins, 33), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((n_bins, 33), jnp.int32)],
+        interpret=interpret,
+    )(e_p, valid)
+    parity = out[:, 32]
+    xor_bits = out[:, :32]
+    return parity, xor_bits
+
+
+def xor_bits_to_u32(xor_bits: jax.Array) -> jax.Array:
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(
+        xor_bits.astype(jnp.uint32) << shifts[None, :], axis=1, dtype=jnp.uint32
+    )

@@ -1,0 +1,94 @@
+"""The (architecture × input-shape) dry-run grid: 10 archs × 4 shapes = 40 cells.
+
+``build_cell(arch, shape, mesh)`` returns the jitted step function plus
+`ShapeDtypeStruct` stand-ins for every input — `.lower(*args)` allocates
+nothing.  ``cell_status`` marks the documented skips (long_500k needs
+sub-quadratic attention; see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.spec import abstract_params
+from repro.optim import OptConfig
+from repro.serve import abstract_cache, make_serve_fns
+from repro.train import batch_shapes, make_train_step
+
+ENC_LEN = 1536  # whisper encoder positions (stub frames), divisible by model=16
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32_768, batch=128),
+    "long_500k": dict(kind="decode", seq=524_288, batch=1),
+}
+
+
+def cell_status(arch: str, shape: str) -> tuple[bool, str]:
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, "skip: pure full attention is quadratic at 500k (per assignment)"
+    return True, "run"
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: object            # jitted step function
+    args: tuple           # abstract args for .lower()
+    meta: dict
+
+
+def default_opt_cfg(arch: str, **overrides) -> OptConfig:
+    base = dict(warmup=100, total_steps=10_000)
+    base.update(overrides)
+    return OptConfig(**base)
+
+
+def build_cell(arch: str, shape: str, mesh, *, opt_cfg: OptConfig | None = None,
+               remat: bool = True, capacity_factor: float | None = None,
+               microbatch: int = 1) -> Cell:
+    info = SHAPES[shape]
+    cfg = get_config(arch)
+    if capacity_factor is not None:
+        cfg = cfg.scaled(capacity_factor=capacity_factor)
+    kind, seq, batch = info["kind"], info["seq"], info["batch"]
+    meta = dict(arch=arch, shape=shape, kind=kind, seq=seq, batch=batch,
+                mesh=dict(zip(mesh.axis_names, (mesh.shape[a] for a in mesh.axis_names))))
+
+    if kind == "train":
+        ocfg = opt_cfg or default_opt_cfg(arch)
+        bundle = make_train_step(cfg, mesh, ocfg, batch=batch, remat=remat,
+                                 microbatch=microbatch)
+        shapes = batch_shapes(cfg, batch, seq, enc_len=ENC_LEN)
+        args = bundle.abstract_args(shapes)
+        sd = ocfg.state_dtype if isinstance(ocfg.state_dtype, str) else str(jnp.dtype(ocfg.state_dtype))
+        meta["opt"] = dict(zero1=ocfg.zero1, master_fp32=ocfg.master_fp32,
+                           state_dtype=sd)
+        return Cell(arch, shape, kind, bundle.step, args, meta)
+
+    sv = make_serve_fns(cfg, mesh, batch=batch, max_len=seq, enc_len=ENC_LEN)
+    params_abs = abstract_params(sv.param_spec)
+    if kind == "prefill":
+        inputs = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+        if cfg.family == "encdec":
+            inputs["enc"] = jax.ShapeDtypeStruct((batch, ENC_LEN, cfg.d_model), jnp.bfloat16)
+        if cfg.frontend == "patch_stub":
+            inputs["frontend"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16)
+        return Cell(arch, shape, kind, sv.prefill, (params_abs, inputs), meta)
+
+    caches = abstract_cache(cfg, mesh, batch, seq, enc_len=ENC_LEN)
+    toks = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    return Cell(arch, shape, kind, sv.decode, (params_abs, caches, toks), meta)
+
+
+def all_cells():
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            yield arch, shape

@@ -1,0 +1,208 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT-lower + compile every (architecture × input-shape)
+cell on the production meshes, and extract the roofline terms.
+
+The two lines above MUST precede any jax import: jax locks the device count
+at first backend init, and the dry-run needs 512 placeholder host devices so
+``jax.make_mesh`` can build (16,16) and (2,16,16) production meshes.  Nothing
+is ever allocated: inputs are ShapeDtypeStructs and we stop at
+``.lower().compile()`` + static analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all            # full sweep
+  ... [--multi-pod] [--zero1] [--state-dtype bf16] [--no-master] [--out DIR]
+"""
+import argparse
+import gc
+import json
+import time
+import traceback
+from pathlib import Path
+
+PEAK_FLOPS = 197e12     # bf16 / chip (v5e)
+HBM_BW = 819e9          # B/s / chip
+ICI_BW = 50e9           # B/s / link
+
+V5E_HBM_BYTES = 16 * 2**30
+
+
+def model_flops(arch: str, kind: str, batch: int, seq: int) -> float:
+    import jax.numpy as jnp  # noqa: F401
+
+    from repro.configs import get_config
+    from repro.models.config import n_active_params
+
+    cfg = get_config(arch)
+    n = n_active_params(cfg)
+    if kind == "train":
+        return 6.0 * n * batch * seq
+    if kind == "prefill":
+        return 2.0 * n * batch * seq
+    return 2.0 * n * batch  # decode: one token per sequence
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: Path,
+             opt_overrides: dict, remat: bool = True,
+             capacity_factor: float | None = None, tag: str = "",
+             attn_skip: bool = True, microbatch: int = 1) -> dict:
+    import jax  # noqa: F401
+
+    from repro.launch.cells import SHAPES, build_cell, cell_status, default_opt_cfg
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.layers import BLOCK_SKIP_DEFAULT
+    from repro.roofline.hlo import analyze_hlo
+
+    BLOCK_SKIP_DEFAULT[0] = attn_skip
+
+    runnable, why = cell_status(arch, shape)
+    mesh_name = "multipod" if multi_pod else "pod"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "tag": tag}
+    if not runnable:
+        rec.update(status="skipped", reason=why)
+        _save(rec, out_dir, tag)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    info = SHAPES[shape]
+    opt_cfg = default_opt_cfg(arch, **opt_overrides) if info["kind"] == "train" else None
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, opt_cfg=opt_cfg, remat=remat,
+                      capacity_factor=capacity_factor, microbatch=microbatch)
+    t_build = time.time() - t0
+
+    t0 = time.time()
+    lowered = cell.fn.lower(*cell.args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    roo = analyze_hlo(hlo, chips)
+
+    mf = model_flops(arch, info["kind"], info["batch"], info["seq"])
+    compute_s = roo["flops_global"] / (chips * PEAK_FLOPS)
+    memory_s = roo["bytes_global"] / (chips * HBM_BW)
+    coll_s = roo["collective_global"] / (chips * ICI_BW)
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s}
+    bound = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    arg_b = getattr(mem, "argument_size_in_bytes", 0)
+    tmp_b = getattr(mem, "temp_size_in_bytes", 0)
+    out_b = getattr(mem, "output_size_in_bytes", 0)
+    alias_b = getattr(mem, "alias_size_in_bytes", 0)
+    peak_b = arg_b + tmp_b + out_b - alias_b
+
+    rec.update(
+        status="ok",
+        kind=info["kind"], batch=info["batch"], seq=info["seq"], chips=chips,
+        meta=cell.meta,
+        times=dict(build=t_build, lower=t_lower, compile=t_compile),
+        memory=dict(
+            argument_bytes_per_device=arg_b,
+            temp_bytes_per_device=tmp_b,
+            output_bytes_per_device=out_b,
+            alias_bytes_per_device=alias_b,
+            peak_bytes_per_device=peak_b,
+            fits_v5e=bool(peak_b <= V5E_HBM_BYTES),
+        ),
+        cost_analysis_raw=dict(
+            flops=float(ca.get("flops", 0.0)),
+            bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        ),
+        hlo=dict(
+            flops_global=roo["flops_global"],
+            bytes_global=roo["bytes_global"],
+            collective_global=roo["collective_global"],
+            collective_by_op_per_device=roo["collective_by_op_per_device"],
+            collective_op_counts=roo["collective_op_counts"],
+            unresolved_dots=roo["unresolved_dots"],
+        ),
+        roofline=dict(
+            **terms, bound=bound, step_time_s=step_s,
+            model_flops=mf,
+            useful_flops_ratio=(mf / roo["flops_global"]) if roo["flops_global"] else 0.0,
+            roofline_fraction=(mf / (chips * PEAK_FLOPS)) / step_s if step_s else 0.0,
+        ),
+    )
+    _save(rec, out_dir, tag)
+    print(
+        f"[dryrun] {arch:18s} {shape:11s} {mesh_name:8s} "
+        f"compile={t_compile:7.1f}s peak/dev={peak_b/2**30:7.2f}GiB "
+        f"bound={bound:12s} terms(c/m/n)="
+        f"{compute_s*1e3:9.3f}/{memory_s*1e3:9.3f}/{coll_s*1e3:9.3f} ms "
+        f"MFU-bound={rec['roofline']['roofline_fraction']:.3f}",
+        flush=True,
+    )
+    del compiled, lowered, cell
+    gc.collect()
+    return rec
+
+
+def _save(rec: dict, out_dir: Path, tag: str = ""):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    sfx = f"__{tag}" if tag else ""
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{sfx}.json"
+    (out_dir / name).write_text(json.dumps(rec, indent=1, default=float))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape id or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--no-master", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-attn-skip", action="store_true",
+                    help="dense chunk-pair attention (paper-faithful baseline)")
+    ap.add_argument("--state-dtype", default="float32",
+                    choices=["float32", "bfloat16", "int8"])
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--microbatch", type=int, default=1)
+    args = ap.parse_args()
+
+    import jax.numpy as jnp
+
+    from repro.configs import ARCH_IDS
+    from repro.launch.cells import SHAPES
+
+    sd = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "int8": "int8"}[args.state_dtype]
+    overrides = dict(
+        zero1=args.zero1,
+        master_fp32=not args.no_master,
+        state_dtype=sd,
+    )
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    out_dir = Path(args.out)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(
+                        arch, shape, multi_pod=mp, out_dir=out_dir,
+                        opt_overrides=overrides, remat=not args.no_remat,
+                        capacity_factor=args.capacity_factor, tag=args.tag,
+                        attn_skip=not args.no_attn_skip, microbatch=args.microbatch,
+                    )
+                except Exception:
+                    failures += 1
+                    print(f"[dryrun] FAIL {arch} {shape} multipod={mp}", flush=True)
+                    traceback.print_exc()
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

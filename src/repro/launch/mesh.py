@@ -1,0 +1,44 @@
+"""Production mesh construction (pure function — importing this module never
+touches jax device state).
+
+Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod : (pod=2, data=16, model=16) = 512 chips; the 'pod' axis carries
+pure data parallelism (gradient reduction only — expert/TP collectives never
+cross pods, see repro.models.ffn.EP_AXES).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)} — run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 (launch/dryrun.py does this)"
+        )
+    import jax.sharding as jsh
+
+    return jax.make_mesh(
+        shape, axes,
+        devices=devices[:need],
+        axis_types=(jsh.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (possibly fake) devices exist — tests."""
+    import jax
+    import jax.sharding as jsh
+
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        devices=jax.devices()[: data * model],
+        axis_types=(jsh.AxisType.Auto, jsh.AxisType.Auto),
+    )

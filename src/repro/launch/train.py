@@ -1,0 +1,128 @@
+"""Production training driver: data pipeline -> sharded train step ->
+checkpoints -> (simulated) elastic events, on whatever devices exist.
+
+This is the same loop a real deployment runs per host; on this CPU container
+it drives small models end-to-end (examples/train_lm.py wraps it).  Fault
+tolerance is exercised for real: checkpoints are atomic + manifest'd, resume
+restores params/opt/ledger, and `--kill-at`/`--resume` simulate a failure and
+a PBS-reconciled recovery.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt [--zero1] [--resume]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import numpy as np
+
+
+def build(arch: str, smoke: bool, batch: int, seq: int, zero1: bool,
+          data: int = 1, model: int = 1, steps: int = 1000):
+    import jax
+    import jax.numpy as jnp  # noqa: F401
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.optim import OptConfig
+    from repro.train import init_train_state, make_train_step
+
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    mesh = jax.make_mesh(
+        (data, model), ("data", "model"), devices=jax.devices()[: data * model],
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    ocfg = OptConfig(warmup=max(5, steps // 20), total_steps=steps, zero1=zero1)
+    bundle = make_train_step(cfg, mesh, ocfg, batch=batch)
+    params, opt = init_train_state(bundle, cfg, mesh, ocfg)
+    return cfg, mesh, ocfg, bundle, params, opt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--kill-at", type=int, default=0, help="simulate failure at step N")
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+    from repro.data import DataConfig, Ledger, global_batch
+    from repro.launch.elastic import ElasticConfig, Membership
+
+    cfg, mesh, ocfg, bundle, params, opt = build(
+        args.arch, args.smoke, args.batch, args.seq, args.zero1,
+        args.data, args.model, args.steps,
+    )
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch)
+    ledger = Ledger()
+    start = 0
+
+    if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        tree, step = restore_checkpoint(args.ckpt_dir)
+        params = jax.device_put(tree["params"], jax.tree.map(lambda x: x.sharding, params))
+        opt = jax.device_put(tree["opt"], jax.tree.map(lambda x: x.sharding, opt))
+        ledger.record(np.asarray(tree["meta"]["consumed"], np.uint32))
+        start = step
+        print(f"[train] resumed from step {step} "
+              f"({len(ledger.consumed)} samples in ledger)", flush=True)
+
+    membership = Membership([0], ElasticConfig())
+    t_last = time.time()
+    for step in range(start, args.steps):
+        if args.kill_at and step == args.kill_at:
+            print(f"[train] simulated failure at step {step} (rerun with --resume)")
+            raise SystemExit(17)
+        gb = global_batch(step, dcfg)
+        batch = {
+            "tokens": gb["tokens"],
+            "labels": gb["labels"],
+        }
+        act_dt = params["final_norm"]["scale"].dtype
+        if cfg.family == "encdec":
+            import jax.numpy as jnp
+
+            batch["enc"] = jnp.zeros((args.batch, 32, cfg.d_model), act_dt)
+        if cfg.frontend == "patch_stub":
+            import jax.numpy as jnp
+
+            nf = min(cfg.n_frontend_tokens, args.seq // 2)
+            tk = np.array(gb["tokens"], copy=True)
+            tk[:, :nf] = -1  # frontend positions: embeddings come from `frontend`
+            batch["tokens"] = tk
+            batch["frontend"] = jnp.zeros((args.batch, args.seq, cfg.d_model), act_dt)
+        params, opt, m = bundle.step(params, opt, batch)
+        ledger.record(gb["ids"])
+        dt = time.time() - t_last
+        t_last = time.time()
+        membership.heartbeat(0, step_time=dt)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"[train] step {step:5d} loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.3f} lr={float(m['lr']):.2e} "
+                  f"dt={dt:.2f}s", flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            tree = {
+                "params": jax.tree.map(np.asarray, params),
+                "opt": jax.tree.map(np.asarray, opt),
+                "meta": {"consumed": ledger.as_array()},
+            }
+            man = save_checkpoint(Path(args.ckpt_dir), step + 1, tree)
+            print(f"[train] checkpoint @{step + 1}: {len(man.shards)} shards", flush=True)
+    print("[train] done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

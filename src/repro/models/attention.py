@@ -1,0 +1,481 @@
+"""GQA and MLA attention blocks (shard_map-resident, sequence-parallel I/O).
+
+Head sharding: query/out projections are sharded over 'model' with Hq padded
+to a multiple of the axis size (zero-init pads are exact); K/V projections
+are replicated (small under GQA) so any rank can serve its query heads'
+groups.  MLA shards the per-head `wkv_b`/`wq_b` expansions (128 heads divide
+every mesh we use) and caches only the latent, decoded in absorbed form.
+
+Decode uses **context parallelism**: the KV (or latent) cache is sharded over
+'model' along the sequence; each rank computes partial attention for ALL
+heads over its chunk and the partials are LSE-combined with two psums
+(flash-decoding across shards) — this is what makes 32k×128 caches fit
+(EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import (
+    MeshCtx,
+    ag_seq,
+    attention_partial_lse,
+    blockwise_attention,
+    combine_partials,
+    pad_to,
+    rms_head_norm,
+    rope,
+    rs_seq,
+)
+from .spec import P
+
+
+def _hq_pad(cfg: ModelConfig, ctx: MeshCtx) -> int:
+    return pad_to(cfg.n_heads, ctx.model_size)
+
+
+def kv_map(cfg: ModelConfig, ctx: MeshCtx) -> jnp.ndarray:
+    """Global (padded) q-head -> kv-head index map."""
+    group = max(1, cfg.n_heads // cfg.n_kv_heads)
+    full = np.minimum(np.arange(_hq_pad(cfg, ctx)) // group, cfg.n_kv_heads - 1)
+    return jnp.asarray(full, dtype=jnp.int32)
+
+
+def local_kv_map(cfg: ModelConfig, ctx: MeshCtx) -> jnp.ndarray:
+    qpr = _hq_pad(cfg, ctx) // ctx.model_size
+    return jax.lax.dynamic_slice_in_dim(kv_map(cfg, ctx), ctx.midx() * qpr, qpr)
+
+
+def _mask_pad_heads(out, cfg: ModelConfig, ctx: MeshCtx, *, local: bool = True):
+    """Zero the outputs of padding query heads (Hq padded to the axis size).
+
+    Without this, the random-init pad heads contribute through wo and receive
+    gradients, so models trained on different mesh sizes would diverge; with
+    it, pad head wq/wo slices get zero gradients and stay inert — mesh-size
+    parity is exact (tests/test_mesh_parity.py)."""
+    hq = _hq_pad(cfg, ctx)
+    if hq == cfg.n_heads:
+        return out
+    Hl = out.shape[1]
+    start = ctx.midx() * Hl if (local and ctx.model_size > 1) else 0
+    gid = start + jnp.arange(Hl)
+    return out * (gid < cfg.n_heads)[None, :, None, None].astype(out.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA
+# --------------------------------------------------------------------------
+
+
+def gqa_spec(cfg: ModelConfig, ctx: MeshCtx) -> dict:
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    hq = _hq_pad(cfg, ctx)
+    hl = cfg.n_heads * dh  # logical (unpadded) head dim — mesh-invariant init
+    spec = {
+        "wq": P((d, hq * dh), (None, "model"), logical=(d, hl)),
+        "wk": P((d, cfg.n_kv_heads * dh), (None, None)),
+        "wv": P((d, cfg.n_kv_heads * dh), (None, None)),
+        "wo": P((hq * dh, d), ("model", None), logical=(hl, d)),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = P((hq * dh,), ("model",), "zeros")
+        spec["bk"] = P((cfg.n_kv_heads * dh,), (None,), "zeros")
+        spec["bv"] = P((cfg.n_kv_heads * dh,), (None,), "zeros")
+    if cfg.qk_norm:
+        spec["q_norm"] = P((dh,), (None,), "ones")
+        spec["k_norm"] = P((dh,), (None,), "ones")
+    return spec
+
+
+def _qkv(p, xg, cfg: ModelConfig, ctx: MeshCtx, positions, *, apply_rope=True):
+    """xg (B, T, d) -> q (B, Hl, T, Dh), k/v (B, Hkv, T, Dh)."""
+    B, T, _ = xg.shape
+    dh = cfg.resolved_head_dim
+    q = xg @ p["wq"]
+    k = xg @ p["wk"]
+    v = xg @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, T, -1, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(B, T, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(B, T, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    if apply_rope:
+        q = rope(q, positions[:, None, :], cfg.rope_theta)
+        k = rope(k, positions[:, None, :], cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(
+    p,
+    x_sp,                 # (B, T/M, d) sequence-sharded residual stream
+    ctx: MeshCtx,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    memory=None,          # (B, Tm, d) for cross-attention (already gathered)
+    return_kv: bool = False,
+):
+    xg = ag_seq(x_sp, ctx)
+    B, T, _ = xg.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    if memory is None:
+        q, k, v = _qkv(p, xg, cfg, ctx, positions)
+    else:
+        q, _, _ = _qkv(p, xg, cfg, ctx, positions, apply_rope=False)
+        Tm = memory.shape[1]
+        mpos = jnp.broadcast_to(jnp.arange(Tm), (B, Tm))
+        _, k, v = _qkv(p, memory, cfg, ctx, mpos, apply_rope=False)
+    out = blockwise_attention(
+        q, k, v, local_kv_map(cfg, ctx), causal=causal, window=window
+    )
+    out = _mask_pad_heads(out, cfg, ctx)
+    B, Hl, T, dh = out.shape
+    o = out.transpose(0, 2, 1, 3).reshape(B, T, Hl * dh) @ p["wo"]
+    o = rs_seq(o, ctx)
+    if return_kv:
+        return o, (k, v)
+    return o
+
+
+def gqa_init_cache(cfg: ModelConfig, ctx: MeshCtx, batch: int, max_len: int):
+    """Sequence-sharded KV cache: each rank owns max_len/M positions."""
+    dh = cfg.resolved_head_dim
+    tc = max_len // ctx.model_size
+    return {
+        "k": jnp.zeros((batch, cfg.n_kv_heads, tc, dh), jnp.bfloat16),
+        "v": jnp.zeros((batch, cfg.n_kv_heads, tc, dh), jnp.bfloat16),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def gqa_fill_cache(cache, k, v, ctx: MeshCtx):
+    """Keep this rank's sequence chunk of freshly-computed prefill K/V.
+
+    Prompts shorter than the cache capacity are right-padded (decode masks
+    positions >= len via kv_valid_len)."""
+    tc = cache["k"].shape[2]
+    t = k.shape[2]
+    cap = tc * ctx.model_size
+    if t < cap:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, cap - t), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, cap - t), (0, 0)))
+    start = ctx.midx() * tc
+    kc = jax.lax.dynamic_slice_in_dim(k, start, tc, axis=2)
+    vc = jax.lax.dynamic_slice_in_dim(v, start, tc, axis=2)
+    return {"k": kc.astype(jnp.bfloat16), "v": vc.astype(jnp.bfloat16), "len": jnp.int32(t)}
+
+
+def gqa_decode(p, x, cache, ctx: MeshCtx, cfg: ModelConfig, *, window=None):
+    """One-token decode against the sequence-sharded cache.
+
+    x: (B, 1, d) replicated over 'model'.  New K/V are computed redundantly;
+    the rank owning the current position writes them into its chunk; partial
+    attention is LSE-combined across ranks; output projection stays
+    head-sharded (each rank multiplies its head slice, then psum via rs/ag
+    equivalence — here a plain psum since T=1).
+    """
+    B = x.shape[0]
+    dh = cfg.resolved_head_dim
+    pos = cache["len"]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q, k_new, v_new = _qkv(p, x, cfg, ctx, positions)
+    # all heads everywhere for decode: gather the head shards (tiny: 1 token)
+    q_all = jax.lax.all_gather(q, ctx.m, axis=1, tiled=True) if ctx.model_size > 1 else q
+
+    tc = cache["k"].shape[2]
+    owner = pos // tc
+    local_pos = pos - owner * tc
+    is_owner = (owner == ctx.midx()) if ctx.model_size > 1 else True
+    k_upd = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(jnp.bfloat16), local_pos, axis=2)
+    v_upd = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(jnp.bfloat16), local_pos, axis=2)
+    k_c = jnp.where(is_owner, k_upd, cache["k"])
+    v_c = jnp.where(is_owner, v_upd, cache["v"])
+
+    kvm = kv_map(cfg, ctx)
+    k_off = (ctx.midx() * tc) if ctx.model_size > 1 else 0
+    q_pos = jnp.broadcast_to(pos[None], (1,))
+    num, m, l = attention_partial_lse(
+        q_all, k_c, v_c, kvm, k_offset=k_off, kv_valid_len=pos + 1, q_pos=q_pos
+    )
+    if window is not None:
+        pass  # window handled by kv_valid via masks in partial (see local_decode)
+    out = combine_partials(num, m, l, ctx)  # (B, Hq_pad, 1, dh)
+    out = _mask_pad_heads(out, cfg, ctx, local=False)
+
+    # local head-slice out-projection + psum
+    hq = out.shape[1]
+    qpr = hq // ctx.model_size
+    o_loc = jax.lax.dynamic_slice_in_dim(out, ctx.midx() * qpr, qpr, axis=1)
+    o = o_loc.transpose(0, 2, 1, 3).reshape(B, 1, qpr * dh) @ p["wo"]
+    if ctx.model_size > 1:
+        o = jax.lax.psum(o, ctx.m)
+    new_cache = {"k": k_c, "v": v_c, "len": pos + 1}
+    return o, new_cache
+
+
+# ---- local (sliding-window) attention decode: replicated ring cache -------
+
+
+def local_init_cache(cfg: ModelConfig, batch: int):
+    dh = cfg.resolved_head_dim
+    w = cfg.window
+    return {
+        "k": jnp.zeros((batch, cfg.n_kv_heads, w, dh), jnp.bfloat16),
+        "v": jnp.zeros((batch, cfg.n_kv_heads, w, dh), jnp.bfloat16),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def local_fill_cache(cache, k, v, cfg: ModelConfig):
+    """Keep the last `window` positions in ring layout slot = pos % window
+    (the layout `local_decode` updates and reads)."""
+    w = cfg.window
+    t = k.shape[2]
+    if t < w:  # positions 0..t-1 land at slots 0..t-1; tail slots unused
+        kc = jnp.pad(k, ((0, 0), (0, 0), (0, w - t), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, 0), (0, w - t), (0, 0)))
+    else:  # last w positions: position p -> slot p % w == roll by (t - w) % w
+        kc = jnp.roll(k[:, :, t - w :], (t - w) % w, axis=2)
+        vc = jnp.roll(v[:, :, t - w :], (t - w) % w, axis=2)
+    return {"k": kc.astype(jnp.bfloat16), "v": vc.astype(jnp.bfloat16), "len": jnp.int32(t)}
+
+
+def local_decode(p, x, cache, ctx: MeshCtx, cfg: ModelConfig):
+    """Sliding-window decode with a replicated ring buffer (window is small).
+
+    Ring layout: slot = pos % window.  RoPE positions are absolute.
+    """
+    B = x.shape[0]
+    dh = cfg.resolved_head_dim
+    w = cfg.window
+    pos = cache["len"]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q, k_new, v_new = _qkv(p, x, cfg, ctx, positions)
+    slot = pos % w
+    k_c = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(jnp.bfloat16), slot, axis=2)
+    v_c = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(jnp.bfloat16), slot, axis=2)
+
+    # positions of ring slots: pos - ((slot - i) mod w)
+    i = jnp.arange(w)
+    age = (slot - i) % w
+    k_pos = pos - age
+    valid = (k_pos >= jnp.maximum(pos - w + 1, 0)) & (k_pos <= pos)
+    kvm_local = local_kv_map(cfg, ctx)
+    kg = jnp.take(k_c, kvm_local, axis=1)
+    vg = jnp.take(v_c, kvm_local, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kg).astype(jnp.float32) / np.sqrt(dh)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    pattn = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", pattn.astype(vg.dtype), vg)
+    out = _mask_pad_heads(out, cfg, ctx)
+    qpr = out.shape[1]
+    o = out.transpose(0, 2, 1, 3).reshape(B, 1, qpr * dh) @ p["wo"]
+    if ctx.model_size > 1:
+        o = jax.lax.psum(o, ctx.m)
+    return o, {"k": k_c, "v": v_c, "len": pos + 1}
+
+
+def cross_fill_cache(p, memory, cfg: ModelConfig, ctx: MeshCtx):
+    """Precompute the cross-attention K/V cache from encoder memory
+    (B, Tm, d), sequence-sharded over 'model'."""
+    B, Tm, _ = memory.shape
+    mpos = jnp.broadcast_to(jnp.arange(Tm), (B, Tm))
+    _, k, v = _qkv(p, memory, cfg, ctx, mpos, apply_rope=False)
+    tc = Tm // ctx.model_size
+    start = (ctx.midx() * tc) if ctx.model_size > 1 else 0
+    return {
+        "k": jax.lax.dynamic_slice_in_dim(k, start, tc, axis=2).astype(jnp.bfloat16),
+        "v": jax.lax.dynamic_slice_in_dim(v, start, tc, axis=2).astype(jnp.bfloat16),
+        "len": jnp.int32(Tm),
+    }
+
+
+def cross_decode(p, x, cache, ctx: MeshCtx, cfg: ModelConfig):
+    """Decoder cross-attention against the (static, seq-sharded) memory cache."""
+    B = x.shape[0]
+    dh = cfg.resolved_head_dim
+    positions = jnp.zeros((B, 1), jnp.int32)
+    q, _, _ = _qkv(p, x, cfg, ctx, positions, apply_rope=False)
+    q_all = jax.lax.all_gather(q, ctx.m, axis=1, tiled=True) if ctx.model_size > 1 else q
+    tc = cache["k"].shape[2]
+    k_off = (ctx.midx() * tc) if ctx.model_size > 1 else 0
+    num, m, l = attention_partial_lse(
+        q_all, cache["k"], cache["v"], kv_map(cfg, ctx),
+        k_offset=k_off, kv_valid_len=cache["len"],
+        q_pos=jnp.full((1,), 1 << 30),  # non-causal: attend to all memory
+    )
+    out = combine_partials(num, m, l, ctx)
+    out = _mask_pad_heads(out, cfg, ctx, local=False)
+    hq = out.shape[1]
+    qpr = hq // ctx.model_size
+    o_loc = jax.lax.dynamic_slice_in_dim(out, ctx.midx() * qpr, qpr, axis=1)
+    o = o_loc.transpose(0, 2, 1, 3).reshape(B, 1, qpr * dh) @ p["wo"]
+    if ctx.model_size > 1:
+        o = jax.lax.psum(o, ctx.m)
+    return o
+
+
+# --------------------------------------------------------------------------
+# MLA (deepseek multi-head latent attention)
+# --------------------------------------------------------------------------
+
+
+def mla_spec(cfg: ModelConfig, ctx: MeshCtx) -> dict:
+    d = cfg.d_model
+    h = pad_to(cfg.n_heads, ctx.model_size)  # 128 divides every mesh we use
+    hn = cfg.n_heads
+    nope, rpe, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    spec = {
+        "wkv_a": P((d, cfg.kv_lora + rpe), (None, None)),
+        "kv_a_norm": P((cfg.kv_lora,), (None,), "ones"),
+        "wkv_b": P((cfg.kv_lora, h * (nope + vd)), (None, "model"),
+                   logical=(cfg.kv_lora, hn * (nope + vd))),
+        "wo": P((h * vd, d), ("model", None), logical=(hn * vd, d)),
+    }
+    if cfg.q_lora:
+        spec["wq_a"] = P((d, cfg.q_lora), (None, None))
+        spec["q_a_norm"] = P((cfg.q_lora,), (None,), "ones")
+        spec["wq_b"] = P((cfg.q_lora, h * (nope + rpe)), (None, "model"),
+                         logical=(cfg.q_lora, hn * (nope + rpe)))
+    else:
+        spec["wq"] = P((d, h * (nope + rpe)), (None, "model"),
+                       logical=(d, hn * (nope + rpe)))
+    return spec
+
+
+def _mla_q(p, xg, cfg: ModelConfig, positions):
+    B, T, _ = xg.shape
+    nope, rpe = cfg.nope_head_dim, cfg.rope_head_dim
+    if cfg.q_lora:
+        qa = xg @ p["wq_a"]
+        qa = rms_head_norm(p["q_a_norm"], qa)
+        q = qa @ p["wq_b"]
+    else:
+        q = xg @ p["wq"]
+    q = q.reshape(B, T, -1, nope + rpe).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions[:, None, :], cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, xg, cfg: ModelConfig, positions):
+    kv_a = xg @ p["wkv_a"]                         # (B, T, lora + rpe)
+    c_kv = rms_head_norm(p["kv_a_norm"], kv_a[..., : cfg.kv_lora])
+    k_rope = rope(
+        kv_a[..., cfg.kv_lora :][:, None], positions[:, None, :], cfg.rope_theta
+    )[:, 0]
+    return c_kv, k_rope
+
+
+def mla_apply(p, x_sp, ctx: MeshCtx, cfg: ModelConfig, *, return_latent=False):
+    """Prefill/train path: expand latent to per-head K/V for local heads."""
+    xg = ag_seq(x_sp, ctx)
+    B, T, _ = xg.shape
+    nope, rpe, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    q_nope, q_rope = _mla_q(p, xg, cfg, positions)           # local heads
+    c_kv, k_rope = _mla_latent(p, xg, cfg, positions)        # replicated
+    kvb = p["wkv_b"].reshape(cfg.kv_lora, -1, nope + vd)     # (lora, Hl, nope+vd)
+    kv = jnp.einsum("btl,lhe->bhte", c_kv, kvb)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    Hl = k_nope.shape[1]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, None], (B, Hl, T, rpe))], axis=-1
+    )
+    ident = jnp.arange(Hl, dtype=jnp.int32)
+    out = blockwise_attention(q, k, v, ident, causal=True)
+    o = out.transpose(0, 2, 1, 3).reshape(B, T, -1) @ p["wo"]
+    o = rs_seq(o, ctx)
+    if return_latent:
+        return o, (c_kv, k_rope)
+    return o
+
+
+def mla_init_cache(cfg: ModelConfig, ctx: MeshCtx, batch: int, max_len: int):
+    tc = max_len // ctx.model_size
+    return {
+        "c_kv": jnp.zeros((batch, tc, cfg.kv_lora), jnp.bfloat16),
+        "k_rope": jnp.zeros((batch, tc, cfg.rope_head_dim), jnp.bfloat16),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_fill_cache(cache, c_kv, k_rope, ctx: MeshCtx):
+    tc = cache["c_kv"].shape[1]
+    t = c_kv.shape[1]
+    cap = tc * ctx.model_size
+    if t < cap:
+        c_kv = jnp.pad(c_kv, ((0, 0), (0, cap - t), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, cap - t), (0, 0)))
+    start = ctx.midx() * tc
+    return {
+        "c_kv": jax.lax.dynamic_slice_in_dim(c_kv, start, tc, axis=1).astype(jnp.bfloat16),
+        "k_rope": jax.lax.dynamic_slice_in_dim(k_rope, start, tc, axis=1).astype(jnp.bfloat16),
+        "len": jnp.int32(t),
+    }
+
+
+def mla_decode(p, x, cache, ctx: MeshCtx, cfg: ModelConfig):
+    """Absorbed MLA decode: attention runs entirely in the latent space.
+
+    q_eff = q_nope @ wkv_b[:, :, :nope]  (per head)  -> scores vs latent cache;
+    output latent -> expand with wkv_b[:, :, nope:] -> head-sharded wo.
+    The latent cache is sequence-sharded; partials are LSE-combined (2 psums
+    of (B, H, lora)-sized tensors — the big win vs. expanded K/V).
+    """
+    B = x.shape[0]
+    nope, rpe, vd, lora = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim, cfg.kv_lora
+    pos = cache["len"]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)            # (B, Hl, 1, ·) local heads
+    c_new, kr_new = _mla_latent(p, x, cfg, positions)        # replicated
+
+    kvb = p["wkv_b"].reshape(lora, -1, nope + vd)
+    wb_k, wb_v = kvb[..., :nope], kvb[..., nope:]            # (lora, Hl, ·)
+    q_lat = jnp.einsum("bhqe,lhe->bhql", q_nope, wb_k)       # (B, Hl, 1, lora)
+
+    # all heads for context-parallel attention (tiny gathers: single token)
+    if ctx.model_size > 1:
+        q_lat = jax.lax.all_gather(q_lat, ctx.m, axis=1, tiled=True)
+        q_rope = jax.lax.all_gather(q_rope, ctx.m, axis=1, tiled=True)
+
+    tc = cache["c_kv"].shape[1]
+    owner = pos // tc
+    local_pos = pos - owner * tc
+    is_owner = (owner == ctx.midx()) if ctx.model_size > 1 else True
+    c_upd = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new.astype(jnp.bfloat16), local_pos, axis=1)
+    r_upd = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new.astype(jnp.bfloat16), local_pos, axis=1)
+    c_c = jnp.where(is_owner, c_upd, cache["c_kv"])
+    r_c = jnp.where(is_owner, r_upd, cache["k_rope"])
+
+    k_off = (ctx.midx() * tc) if ctx.model_size > 1 else 0
+    scale = 1.0 / np.sqrt(nope + rpe)
+    s = (
+        jnp.einsum("bhql,btl->bhqt", q_lat, c_c)
+        + jnp.einsum("bhqr,btr->bhqt", q_rope, r_c)
+    ).astype(jnp.float32) * scale
+    k_pos = k_off + jnp.arange(tc)
+    mask = k_pos[None, :] <= pos
+    s = jnp.where(mask[None, None], s, -1e30)
+    m = s.max(-1)
+    pw = jnp.exp(s - m[..., None])
+    l = pw.sum(-1)
+    num = jnp.einsum("bhqt,btl->bhql", pw.astype(c_c.dtype), c_c).astype(jnp.float32)
+    out_lat = combine_partials(num, m, l, ctx)               # (B, H, 1, lora)
+
+    H = out_lat.shape[1]
+    hpr = H // ctx.model_size
+    ol = jax.lax.dynamic_slice_in_dim(out_lat, ctx.midx() * hpr, hpr, axis=1)
+    v_out = jnp.einsum("bhql,lhe->bhqe", ol, wb_v)           # (B, Hl, 1, vd)
+    o = v_out.transpose(0, 2, 1, 3).reshape(B, 1, hpr * vd) @ p["wo"]
+    if ctx.model_size > 1:
+        o = jax.lax.psum(o, ctx.m)
+    return o, {"c_kv": c_c, "k_rope": r_c, "len": pos + 1}

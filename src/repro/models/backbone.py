@@ -1,0 +1,380 @@
+"""Model assembly: embeddings, blocks, scan-over-layers, losses, caches.
+
+Everything here runs inside shard_map (axes 'data'/'model', optional 'pod').
+The residual stream between blocks is sequence-sharded (Megatron-SP).  The
+layer stack is a `lax.scan` over stacked parameters (+ `jax.checkpoint` for
+training) so HLO size is depth-independent — essential for compiling 61-layer
+models on this container's single CPU core (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import (
+    gqa_apply,
+    gqa_decode,
+    gqa_fill_cache,
+    gqa_init_cache,
+    gqa_spec,
+    local_decode,
+    local_fill_cache,
+    local_init_cache,
+    mla_apply,
+    mla_decode,
+    mla_fill_cache,
+    mla_init_cache,
+    mla_spec,
+)
+from .config import ModelConfig
+from .ffn import mlp_apply, mlp_spec, moe_apply, moe_decode, moe_spec
+from .layers import MeshCtx, ag_seq, apply_norm, norm_spec, pad_to, pmax_const
+from .rglru import rglru_apply, rglru_decode, rglru_init_cache, rglru_spec
+from .spec import P, stack_layers
+from .ssm import ssm_apply, ssm_decode, ssm_init_cache, ssm_spec
+
+
+def vocab_pad(cfg: ModelConfig) -> int:
+    return pad_to(cfg.vocab, 16)
+
+
+# --------------------------------------------------------------------------
+# embedding & losses (vocab-sharded over 'model')
+# --------------------------------------------------------------------------
+
+
+def embed_spec(cfg: ModelConfig) -> dict:
+    v, d = vocab_pad(cfg), cfg.d_model
+    spec = {"tok": P((v, d), ("model", None), scale=0.02)}
+    if not cfg.tie_embeddings:
+        spec["unembed"] = P((d, v), (None, "model"), scale=0.02)
+    return spec
+
+
+def embed_tokens(p, tokens, ctx: MeshCtx, cfg: ModelConfig, *, seq_sharded: bool = True):
+    """Vocab-parallel embedding lookup (Megatron-style).
+
+    seq_sharded=True (train/prefill): tokens (B, T/M) is this rank's seq
+    chunk.  Each rank can only resolve ids inside its vocab shard, and ranks
+    hold *different* tokens, so: all-gather the (tiny, int32) token ids over
+    'model', do the partial lookup over the full T, and reduce-scatter the
+    partial embeddings back to (B, T/M, d).
+
+    seq_sharded=False (decode): tokens (B, 1) replicated; plain psum keeps
+    the output replicated.
+    """
+    v = vocab_pad(cfg)
+    vl = v // ctx.model_size
+    v0 = ctx.midx() * vl if ctx.model_size > 1 else 0
+    if seq_sharded and ctx.model_size > 1:
+        tokens = jax.lax.all_gather(tokens, ctx.m, axis=1, tiled=True)  # (B, T)
+    loc = tokens - v0
+    ok = (loc >= 0) & (loc < vl)
+    emb = jnp.take(p["tok"], jnp.clip(loc, 0, vl - 1), axis=0)
+    emb = jnp.where(ok[..., None], emb, 0)
+    if ctx.model_size > 1:
+        if seq_sharded:
+            emb = jax.lax.psum_scatter(emb, ctx.m, scatter_dimension=1, tiled=True)
+        else:
+            emb = jax.lax.psum(emb, ctx.m)
+    return emb.astype(p["tok"].dtype)  # activation dtype follows the params
+
+
+def _unembed_weight(p, cfg: ModelConfig):
+    return p["tok"].T if cfg.tie_embeddings else p["unembed"]
+
+
+def _mask_vocab_pad(logits, v0, cfg: ModelConfig):
+    """-inf the vocab-padding columns so they never enter softmax/argmax."""
+    v = vocab_pad(cfg)
+    if v == cfg.vocab:
+        return logits
+    gcol = v0 + jnp.arange(logits.shape[-1])
+    return jnp.where(gcol < cfg.vocab, logits, -1e30)
+
+
+def ce_loss(p, x_sp, targets, ctx: MeshCtx, cfg: ModelConfig, t_chunk: int = 512):
+    """Cross-entropy with vocab-sharded logits, chunked over T.
+
+    x_sp (B, T/M, d) seq-sharded; targets (B, T) global.  Gathers the stream
+    once (the standard final all-gather), then per T-chunk computes local
+    logits (B, c, V/M) and reduces the softmax with scalar-sized psums.
+    """
+    xg = ag_seq(x_sp, ctx)  # (B, T, d)
+    B, T, d = xg.shape
+    w = _unembed_weight(p, cfg)
+    v = vocab_pad(cfg)
+    vl = v // ctx.model_size
+    v0 = ctx.midx() * vl if ctx.model_size > 1 else 0
+    t_chunk = min(t_chunk, T)
+    nc = T // t_chunk
+
+    def chunk_loss(carry, i):
+        total, cnt = carry
+        xs = jax.lax.dynamic_slice_in_dim(xg, i * t_chunk, t_chunk, axis=1)
+        ys = jax.lax.dynamic_slice_in_dim(targets, i * t_chunk, t_chunk, axis=1)
+        logits = (xs @ w).astype(jnp.float32)
+        if cfg.logit_softcap:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        logits = _mask_vocab_pad(logits, v0, cfg)
+        m = jax.lax.stop_gradient(logits.max(-1))
+        if ctx.model_size > 1:
+            m = pmax_const(m, ctx.m)  # constant shift; plain pmax has no JVP rule
+        se = jnp.exp(logits - m[..., None]).sum(-1)
+        if ctx.model_size > 1:
+            se = jax.lax.psum(se, ctx.m)
+        valid = ys >= 0  # negative labels (frontend/pad positions) don't count
+        loc = jnp.where(valid, ys, 0) - v0
+        ok = (loc >= 0) & (loc < vl)
+        lab = jnp.take_along_axis(
+            logits, jnp.clip(loc, 0, vl - 1)[..., None], axis=-1
+        )[..., 0]
+        lab = jnp.where(ok, lab, 0.0)
+        if ctx.model_size > 1:
+            lab = jax.lax.psum(lab, ctx.m)
+        nll = jnp.where(valid, (jnp.log(se) + m) - lab, 0.0)
+        return (total + nll.sum(), cnt + valid.sum()), None
+
+    (total, cnt), _ = jax.lax.scan(
+        chunk_loss, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), jnp.arange(nc)
+    )
+    return total / jnp.maximum(cnt, 1).astype(jnp.float32)
+
+
+def greedy_token(p, x, ctx: MeshCtx, cfg: ModelConfig):
+    """Distributed argmax over vocab-sharded logits; x (B, 1, d)."""
+    w = _unembed_weight(p, cfg)
+    v = vocab_pad(cfg)
+    vl = v // ctx.model_size
+    v0 = ctx.midx() * vl if ctx.model_size > 1 else 0
+    logits = (x[:, 0] @ w).astype(jnp.float32)  # (B, V/M)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    logits = _mask_vocab_pad(logits, v0, cfg)
+    val = logits.max(-1)
+    idx = logits.argmax(-1) + v0
+    if ctx.model_size > 1:
+        vals = jax.lax.all_gather(val, ctx.m)        # (M, B)
+        idxs = jax.lax.all_gather(idx, ctx.m)
+        best = vals.argmax(0)
+        return jnp.take_along_axis(idxs, best[None], axis=0)[0]
+    return idx
+
+
+# --------------------------------------------------------------------------
+# block kinds
+# --------------------------------------------------------------------------
+
+
+def block_spec(cfg: ModelConfig, ctx: MeshCtx, kind: str) -> dict:
+    if kind == "attn":
+        return {"ln1": norm_spec(cfg), "attn": gqa_spec(cfg, ctx), "ln2": norm_spec(cfg), "mlp": mlp_spec(cfg)}
+    if kind == "attn_window":
+        return {"ln1": norm_spec(cfg), "attn": gqa_spec(cfg, ctx), "ln2": norm_spec(cfg), "mlp": mlp_spec(cfg)}
+    if kind == "mla_dense":
+        return {"ln1": norm_spec(cfg), "attn": mla_spec(cfg, ctx), "ln2": norm_spec(cfg), "mlp": mlp_spec(cfg)}
+    if kind == "mla_moe":
+        return {"ln1": norm_spec(cfg), "attn": mla_spec(cfg, ctx), "ln2": norm_spec(cfg), "moe": moe_spec(cfg, ctx)}
+    if kind == "ssm":
+        return {"ln1": norm_spec(cfg), "ssm": ssm_spec(cfg, ctx)}
+    if kind == "rglru":
+        return {"ln1": norm_spec(cfg), "rec": rglru_spec(cfg, ctx), "ln2": norm_spec(cfg), "mlp": mlp_spec(cfg)}
+    if kind == "dec":  # enc-dec decoder block: self-attn + cross-attn + mlp
+        return {
+            "ln1": norm_spec(cfg),
+            "attn": gqa_spec(cfg, ctx),
+            "lnx": norm_spec(cfg),
+            "cross": gqa_spec(cfg, ctx),
+            "ln2": norm_spec(cfg),
+            "mlp": mlp_spec(cfg),
+        }
+    raise ValueError(kind)
+
+
+def make_block_fn(
+    cfg: ModelConfig, ctx: MeshCtx, kind: str, ep_data_size: int,
+    *, memory=None, causal: bool = True,
+):
+    """Returns f(params, x_sp) -> (x_sp, aux) for train/prefill."""
+
+    def attn_block(p, x):
+        w = cfg.window if kind == "attn_window" else None
+        h = gqa_apply(p["attn"], apply_norm(p["ln1"], x, cfg), ctx, cfg,
+                      causal=causal, window=w)
+        x = x + h
+        x = x + mlp_apply(p["mlp"], apply_norm(p["ln2"], x, cfg), ctx, cfg)
+        return x, jnp.zeros((), jnp.float32)
+
+    def dec_block(p, x):
+        x = x + gqa_apply(p["attn"], apply_norm(p["ln1"], x, cfg), ctx, cfg)
+        x = x + gqa_apply(p["cross"], apply_norm(p["lnx"], x, cfg), ctx, cfg,
+                          causal=False, memory=memory)
+        x = x + mlp_apply(p["mlp"], apply_norm(p["ln2"], x, cfg), ctx, cfg)
+        return x, jnp.zeros((), jnp.float32)
+
+    def mla_dense_block(p, x):
+        x = x + mla_apply(p["attn"], apply_norm(p["ln1"], x, cfg), ctx, cfg)
+        x = x + mlp_apply(p["mlp"], apply_norm(p["ln2"], x, cfg), ctx, cfg)
+        return x, jnp.zeros((), jnp.float32)
+
+    def mla_moe_block(p, x):
+        x = x + mla_apply(p["attn"], apply_norm(p["ln1"], x, cfg), ctx, cfg)
+        y, aux = moe_apply(p["moe"], apply_norm(p["ln2"], x, cfg), ctx, cfg, ep_data_size)
+        return x + y, aux
+
+    def ssm_block(p, x):
+        x = x + ssm_apply(p["ssm"], apply_norm(p["ln1"], x, cfg), ctx, cfg)
+        return x, jnp.zeros((), jnp.float32)
+
+    def rglru_block(p, x):
+        x = x + rglru_apply(p["rec"], apply_norm(p["ln1"], x, cfg), ctx, cfg)
+        x = x + mlp_apply(p["mlp"], apply_norm(p["ln2"], x, cfg), ctx, cfg)
+        return x, jnp.zeros((), jnp.float32)
+
+    table = {
+        "attn": attn_block,
+        "attn_window": attn_block,
+        "mla_dense": mla_dense_block,
+        "mla_moe": mla_moe_block,
+        "ssm": ssm_block,
+        "rglru": rglru_block,
+        "dec": dec_block,
+    }
+    return table[kind]
+
+
+# --------------------------------------------------------------------------
+# layer plans per family
+# --------------------------------------------------------------------------
+
+
+def layer_plan(cfg: ModelConfig):
+    """[(kind, count, scanned)] — scanned groups share stacked params."""
+    if cfg.family in ("dense", "vlm"):
+        return [("attn", cfg.n_layers, True)]
+    if cfg.family == "moe":
+        return [
+            ("mla_dense", cfg.n_dense_layers, False),
+            ("mla_moe", cfg.n_layers - cfg.n_dense_layers, True),
+        ]
+    if cfg.family == "ssm":
+        return [("ssm", cfg.n_layers, True)]
+    if cfg.family == "hybrid":
+        period = len(cfg.pattern)
+        full = cfg.n_layers // period
+        rem = cfg.n_layers - full * period
+        plan = [("hybrid_period", full, True)]
+        for i in range(rem):
+            kind = "rglru" if cfg.pattern[i] == "rglru" else "attn_window"
+            plan.append((kind, 1, False))
+        return plan
+    if cfg.family == "encdec":
+        return [("dec", cfg.n_layers, True)]
+    raise ValueError(cfg.family)
+
+
+def hybrid_period_spec(cfg, ctx):
+    return {
+        f"b{i}": block_spec(
+            cfg, ctx, "rglru" if k == "rglru" else "attn_window"
+        )
+        for i, k in enumerate(cfg.pattern)
+    }
+
+
+def model_spec(cfg: ModelConfig, ctx: MeshCtx) -> dict:
+    spec = {"embed": embed_spec(cfg), "final_norm": norm_spec(cfg)}
+    for gi, (kind, count, scanned) in enumerate(layer_plan(cfg)):
+        if count == 0:
+            continue
+        base = (
+            hybrid_period_spec(cfg, ctx)
+            if kind == "hybrid_period"
+            else block_spec(cfg, ctx, kind)
+        )
+        spec[f"g{gi}"] = stack_layers(base, count) if scanned else (
+            {f"l{i}": base for i in range(count)} if count > 1 else base
+        )
+    if cfg.family == "encdec":
+        spec["enc"] = {
+            "layers": stack_layers(block_spec(cfg, ctx, "attn"), cfg.n_enc_layers),
+            "norm": norm_spec(cfg),
+        }
+    return spec
+
+
+def _scan_group(fn, params_stack, x, count, remat=True):
+    body = jax.checkpoint(fn) if remat else fn
+
+    def step(carry, p):
+        x, aux = carry
+        x2, a = body(p, x)
+        return (x2, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)), params_stack)
+    return x, aux
+
+
+def encode(params, enc_embeds_sp, ctx: MeshCtx, cfg: ModelConfig, remat=True):
+    """Encoder stack over stub frame embeddings -> gathered memory (B, Te, d)."""
+    fn = make_block_fn(cfg, ctx, "attn", 1, causal=False)
+    act_dt = params["enc"]["norm"]["scale"].dtype  # follow the param dtype
+    x, _ = _scan_group(fn, params["enc"]["layers"], enc_embeds_sp.astype(act_dt),
+                       cfg.n_enc_layers, remat)
+    x = apply_norm(params["enc"]["norm"], x, cfg)
+    return ag_seq(x, ctx)
+
+
+def forward(params, tokens_sp, ctx: MeshCtx, cfg: ModelConfig, *,
+            ep_data_size: int, frontend_sp=None, enc_embeds_sp=None, remat=True):
+    """Sequence-sharded forward to the final norm.
+
+    tokens_sp (B, T/M) — this rank's chunk; frontend_sp (B, T/M, d) optional
+    stub embeddings with a mask convention: positions where frontend feeds
+    are marked by token id == -1 (replaced by the provided embeddings);
+    enc_embeds_sp (B, Te/M, d) drives the encoder for enc-dec models.
+    """
+    x = embed_tokens(params["embed"], jnp.maximum(tokens_sp, 0), ctx, cfg)
+    if frontend_sp is not None:
+        x = jnp.where((tokens_sp < 0)[..., None], frontend_sp.astype(x.dtype), x)
+    memory = (
+        encode(params, enc_embeds_sp, ctx, cfg, remat)
+        if cfg.family == "encdec"
+        else None
+    )
+    aux = jnp.zeros((), jnp.float32)
+    plan = layer_plan(cfg)
+    for gi, (kind, count, scanned) in enumerate(plan):
+        if count == 0:
+            continue
+        p = params[f"g{gi}"]
+        if kind == "hybrid_period":
+            fns = [
+                make_block_fn(cfg, ctx, "rglru" if k == "rglru" else "attn_window", ep_data_size)
+                for k in cfg.pattern
+            ]
+
+            def period_fn(pp, xx):
+                a = jnp.zeros((), jnp.float32)
+                for i, f in enumerate(fns):
+                    xx, ai = f(pp[f"b{i}"], xx)
+                    a = a + ai
+                return xx, a
+
+            x, a = _scan_group(period_fn, p, x, count, remat)
+            aux += a
+        else:
+            fn = make_block_fn(cfg, ctx, kind, ep_data_size, memory=memory)
+            if scanned:
+                x, a = _scan_group(fn, p, x, count, remat)
+                aux += a
+            else:
+                items = [p] if count == 1 else [p[f"l{i}"] for i in range(count)]
+                for item in items:
+                    x, a = (jax.checkpoint(fn) if remat else fn)(item, x)
+                    aux += a
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x, aux

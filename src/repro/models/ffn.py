@@ -1,0 +1,195 @@
+"""Dense FFN (tensor-parallel) and MoE (expert-parallel) blocks.
+
+Dense: classic Megatron column/row split over 'model' wrapped in the
+sequence-parallel AG/RS pair.
+
+MoE: experts are sharded over the **combined ('data','model') axis** — the
+only placement that fits deepseek-v3's ~0.6T expert parameters on a 256-chip
+pod (DESIGN.md §4); the 'pod' axis replicates experts so EP all-to-alls never
+cross pods.  Tokens enter uniquely-owned (sequence-sharded for train/prefill,
+round-robin batch ownership for decode), are routed with a capacity-bounded
+single-shot ``all_to_all`` over the combined axis, processed by the owning
+expert, and returned by the inverse ``all_to_all``; top-k combination happens
+at the source rank where the router weights live.  Shared experts ride the
+dense TP path.  Router runs in fp32; the switch-style aux loss is returned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import MeshCtx, act_fn, ag_seq, rs_seq
+from .spec import P
+
+EP_AXES = ("data", "model")  # expert-parallel world (never includes 'pod')
+
+
+# --------------------------------------------------------------------------
+# dense (TP) FFN
+# --------------------------------------------------------------------------
+
+
+def mlp_spec(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    return {
+        "w_gate": P((d, ff), (None, "model")),
+        "w_up": P((d, ff), (None, "model")),
+        "w_down": P((ff, d), ("model", None)),
+    }
+
+
+def mlp_apply(p, x_sp, ctx: MeshCtx, cfg: ModelConfig):
+    xg = ag_seq(x_sp, ctx)
+    h = act_fn(cfg, xg @ p["w_gate"], xg @ p["w_up"])
+    return rs_seq(h @ p["w_down"], ctx)
+
+
+def mlp_decode(p, x, ctx: MeshCtx, cfg: ModelConfig):
+    """Decode-mode TP FFN: x (B, 1, d) replicated; plain psum combine."""
+    h = act_fn(cfg, x @ p["w_gate"], x @ p["w_up"]) @ p["w_down"]
+    if ctx.model_size > 1:
+        h = jax.lax.psum(h, ctx.m)
+    return h
+
+
+# --------------------------------------------------------------------------
+# MoE
+# --------------------------------------------------------------------------
+
+
+def ep_world(ctx: MeshCtx) -> int:
+    return ctx.data_size * ctx.model_size
+
+
+def padded_experts(cfg: ModelConfig, ctx: MeshCtx) -> int:
+    """Experts padded to a multiple of the EP world (deepseek-v2: 160 -> 256
+    on a 256-chip pod).  Pad experts own no tokens — zero compute, and the
+    router never scores them — they only cost their (sharded) storage."""
+    from .layers import pad_to
+
+    return pad_to(cfg.n_experts, ep_world(ctx))
+
+
+def moe_spec(cfg: ModelConfig, ctx: MeshCtx) -> dict:
+    d, ffm = cfg.d_model, cfg.moe_d_ff
+    e_pad = padded_experts(cfg, ctx)
+    spec = {
+        "router": P((d, cfg.n_experts), (None, None), dtype=jnp.float32),
+        "we_gate": P((e_pad, d, ffm), (EP_AXES, None, None)),
+        "we_up": P((e_pad, d, ffm), (EP_AXES, None, None)),
+        "we_down": P((e_pad, ffm, d), (EP_AXES, None, None)),
+    }
+    if cfg.n_shared_experts:
+        spec.update(
+            {
+                "ws_gate": P((d, cfg.n_shared_experts * ffm), (None, "model")),
+                "ws_up": P((d, cfg.n_shared_experts * ffm), (None, "model")),
+                "ws_down": P((cfg.n_shared_experts * ffm, d), ("model", None)),
+            }
+        )
+    return spec
+
+
+def _moe_core(p, x, owned, cfg: ModelConfig, ctx: MeshCtx, ep_data_size: int):
+    """Route owned tokens through the EP world and bring outputs home.
+
+    x: (Nt, d) local tokens; owned: (Nt,) bool — exactly one rank owns each
+    logical token.  Returns (y (Nt, d) — valid where owned, aux loss).
+    """
+    Nt, d = x.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    world = ep_data_size * ctx.model_size
+    ep_axes = EP_AXES if world > 1 else EP_AXES  # names exist even at size 1
+
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    ownf = owned.astype(jnp.float32)
+    n_owned = jnp.maximum(jax.lax.psum(ownf.sum(), ep_axes), 1.0)
+    frac = (
+        jnp.zeros(E, jnp.float32)
+        .at[topi.reshape(-1)]
+        .add(jnp.repeat(ownf, k))
+    )
+    frac = jax.lax.psum(frac, ep_axes) / (n_owned * k)
+    pbar = jax.lax.psum((probs * ownf[:, None]).sum(0), ep_axes) / n_owned
+    aux = E * jnp.sum(frac * pbar)
+
+    cap = int(np.ceil(Nt * k / world * cfg.capacity_factor)) + 4
+    flat_e = topi.reshape(-1)
+    valid = jnp.repeat(owned, k)
+    dest = flat_e % world
+    onehot = jax.nn.one_hot(dest, world, dtype=jnp.int32) * valid[:, None].astype(jnp.int32)
+    pos = ((jnp.cumsum(onehot, axis=0) - 1) * onehot).sum(-1)
+    keep = valid & (pos < cap)
+    pos_safe = jnp.where(keep, pos, cap)  # OOB scatter updates are dropped
+    tok_idx = jnp.arange(Nt * k) // k
+
+    send = jnp.zeros((world, cap, d), x.dtype)
+    send = send.at[dest, pos_safe].add(jnp.where(keep[:, None], x[tok_idx], 0))
+    meta = jnp.full((world, cap), -1, jnp.int32).at[dest, pos_safe].set(
+        jnp.where(keep, flat_e, -1)
+    )
+
+    recv = jax.lax.all_to_all(send, ep_axes, split_axis=0, concat_axis=0, tiled=True)
+    recv_e = jax.lax.all_to_all(meta, ep_axes, split_axis=0, concat_axis=0, tiled=True)
+
+    rk = jax.lax.axis_index(ep_axes)
+    toks = recv.reshape(world * cap, d)
+    texp = recv_e.reshape(world * cap)
+    lidx = jnp.where((texp >= 0) & (texp % world == rk), texp // world, -1)
+
+    n_local = p["we_gate"].shape[0]  # padded experts / world (dsv3 16x16: 1)
+    out = jnp.zeros_like(toks)
+    for le in range(n_local):
+        sel = (lidx == le)[:, None]
+        xe = jnp.where(sel, toks, 0)
+        h = act_fn(cfg, xe @ p["we_gate"][le], xe @ p["we_up"][le])
+        out = out + jnp.where(sel, h @ p["we_down"][le], 0)
+
+    back = jax.lax.all_to_all(
+        out.reshape(world, cap, d), ep_axes, split_axis=0, concat_axis=0, tiled=True
+    )
+    y_flat = back[dest, jnp.minimum(pos_safe, cap - 1)] * keep[:, None]
+    y = (y_flat.reshape(Nt, k, d) * topw[..., None].astype(x.dtype)).sum(1)
+    return y, aux
+
+
+def moe_apply(p, x_sp, ctx: MeshCtx, cfg: ModelConfig, ep_data_size: int):
+    """Train/prefill path: x_sp (B, T/M, d) sequence-sharded (unique owners)."""
+    B, Ts, d = x_sp.shape
+    x = x_sp.reshape(B * Ts, d)
+    y, aux = _moe_core(p, x, jnp.ones(B * Ts, bool), cfg, ctx, ep_data_size)
+    y = y.reshape(B, Ts, d)
+    if cfg.n_shared_experts:
+        xg = ag_seq(x_sp, ctx)
+        hs = act_fn(cfg, xg @ p["ws_gate"], xg @ p["ws_up"])
+        y = y + rs_seq(hs @ p["ws_down"], ctx)
+    return y, aux
+
+
+def moe_decode(p, x, ctx: MeshCtx, cfg: ModelConfig, ep_data_size: int):
+    """Decode path: x (B, 1, d) replicated over 'model'; batch entries are
+    round-robin owned by model ranks, outputs psum'd back to everyone."""
+    B, _, d = x.shape
+    xt = x.reshape(B, d)
+    owned = (jnp.arange(B) % ctx.model_size) == (
+        ctx.midx() if ctx.model_size > 1 else 0
+    )
+    y, aux = _moe_core(p, xt, owned, cfg, ctx, ep_data_size)
+    y = jnp.where(owned[:, None], y, 0)
+    if ctx.model_size > 1:
+        y = jax.lax.psum(y, ctx.m)
+    y = y.reshape(B, 1, d)
+    if cfg.n_shared_experts:
+        hs = act_fn(cfg, x @ p["ws_gate"], x @ p["ws_up"])
+        hs = hs @ p["ws_down"]
+        if ctx.model_size > 1:
+            hs = jax.lax.psum(hs, ctx.m)
+        y = y + hs
+    return y, aux

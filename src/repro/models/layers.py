@@ -1,0 +1,289 @@
+"""Core transformer layers, written to run INSIDE ``shard_map``.
+
+Distribution contract (DESIGN.md §4):
+
+* mesh axes: ('data', 'model') — plus an optional leading 'pod' axis that is
+  pure data parallelism handled at the step level.
+* the residual stream is **sequence-sharded over 'model'** between blocks
+  (Megatron-SP): every block does all-gather(seq) on entry and
+  reduce-scatter(seq) on exit, which costs exactly one all-reduce equivalent —
+  the same bytes as classic TP, but leaves the stream sharded for MoE
+  dispatch, LayerNorms, and residual adds.
+* attention Q/O projections are head-sharded over 'model' with heads padded
+  to a multiple of the axis size (zero-init pads are exact at init); K/V
+  projections are replicated (GQA keeps them small) so every rank can serve
+  any of its query heads' groups.
+* embeddings/logits are vocab-sharded; the softmax/CE runs distributed with
+  scalar psums only.
+
+All code is pure JAX (no Pallas) so the multi-pod dry-run lowers on any
+backend.  Collectives are explicit (`psum`/`all_gather`/`psum_scatter`) so
+the roofline's collective term is fully controlled by this file.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .spec import P
+
+
+@dataclass(frozen=True)
+class MeshCtx:
+    """Axis context passed through every layer."""
+
+    model_axis: str = "model"
+    model_size: int = 16
+    data_axes: tuple = ("data",)
+    data_size: int = 1          # size of the 'data' axis (EP world = data×model)
+
+    @property
+    def m(self):
+        return self.model_axis
+
+    def midx(self):
+        return jax.lax.axis_index(self.model_axis)
+
+
+def pad_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+# --------------------------------------------------------------------------
+# sequence-parallel plumbing
+# --------------------------------------------------------------------------
+
+
+def ag_seq(x: jax.Array, ctx: MeshCtx) -> jax.Array:
+    """(B, T/M, d) -> (B, T, d): gather the sequence shards."""
+    if ctx.model_size == 1:
+        return x
+    return jax.lax.all_gather(x, ctx.m, axis=1, tiled=True)
+
+
+def rs_seq(x: jax.Array, ctx: MeshCtx) -> jax.Array:
+    """(B, T, d) partial sums -> (B, T/M, d) reduced shard (psum_scatter)."""
+    if ctx.model_size == 1:
+        return x
+    return jax.lax.psum_scatter(x, ctx.m, scatter_dimension=1, tiled=True)
+
+
+def psum_model(x: jax.Array, ctx: MeshCtx) -> jax.Array:
+    if ctx.model_size == 1:
+        return x
+    return jax.lax.psum(x, ctx.m)
+
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(1,))
+def pmax_const(x, axis_name):
+    """pmax treated as a constant under differentiation (softmax max-shift)."""
+    return jax.lax.pmax(x, axis_name)
+
+
+@pmax_const.defjvp
+def _pmax_const_jvp(axis_name, primals, tangents):
+    (x,) = primals
+    return jax.lax.pmax(x, axis_name), jnp.zeros_like(x)
+
+
+# --------------------------------------------------------------------------
+# norms / activations / rope
+# --------------------------------------------------------------------------
+
+
+def norm_spec(cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    if cfg.norm_type == "layernorm":
+        return {"scale": P((d,), (None,), "ones"), "bias": P((d,), (None,), "zeros")}
+    return {"scale": P((d,), (None,), "ones")}
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        xf = xf - mu
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"].astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale, x):
+    """qk-norm: RMS over the head_dim with a learned per-dim scale."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + 1e-6) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding; x (..., T, Dh), positions (..., T)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def act_fn(cfg: ModelConfig, gate, up):
+    if cfg.act == "swiglu":
+        return jax.nn.silu(gate) * up
+    return jax.nn.gelu(gate) * up  # gated GeLU
+
+
+# --------------------------------------------------------------------------
+# blockwise (flash-style) attention — pure JAX, O(chunk^2) memory
+# --------------------------------------------------------------------------
+
+# §Perf baseline switch: [True] = causal block skipping on (the optimized
+# default); launch/dryrun.py --no-attn-skip flips it for before/after runs.
+BLOCK_SKIP_DEFAULT = [True]
+
+
+def blockwise_attention(
+    q: jax.Array,          # (B, Hl, Tq, Dh)
+    k: jax.Array,          # (B, Hkv, Tk, Dh)
+    v: jax.Array,          # (B, Hkv, Tk, Dv)
+    kv_for_q: jax.Array,   # (Hl,) int32 — kv head per local q head
+    *,
+    causal: bool,
+    q_offset=0,
+    k_offset=0,
+    window: int | None = None,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+    kv_valid_len=None,     # mask k positions >= this (ragged caches)
+    block_skip: bool | None = None,
+) -> jax.Array:
+    """Online-softmax attention over a STATIC list of (q-chunk, k-chunk)
+    pairs (memory-bounded for 32k+, reverse-differentiable).
+
+    With ``block_skip`` (the §Perf "causal block skipping" optimization,
+    EXPERIMENTS.md): fully-masked chunk pairs are dropped from the pair list
+    at trace time — causal attention does nq(nq+1)/2 instead of nq·nk chunk
+    matmuls (~2× FLOPs), sliding windows only touch their diagonal band, and
+    no (Tq × Tk) mask is ever materialized (the per-pair mask depends on the
+    scanned pair indices, so XLA cannot hoist it out of the loop — the
+    baseline nested-loop form got its masks precomputed into 100s-of-MB
+    loop carries).  ``block_skip=False`` reproduces the dense pair grid
+    (the paper-faithful baseline used for before/after measurements).
+    """
+    if block_skip is None:
+        block_skip = BLOCK_SKIP_DEFAULT[0]
+    B, Hl, Tq, Dh = q.shape
+    Dv = v.shape[-1]
+    Tk = k.shape[2]
+    scale = 1.0 / np.sqrt(Dh)
+    kg = jnp.take(k, kv_for_q, axis=1)  # (B, Hl, Tk, Dh) — broadcast gather
+    vg = jnp.take(v, kv_for_q, axis=1)
+
+    q_chunk = min(q_chunk, Tq)
+    k_chunk = min(k_chunk, Tk)
+    nq = (Tq + q_chunk - 1) // q_chunk
+    nk = (Tk + k_chunk - 1) // k_chunk
+    Tq_p, Tk_p = nq * q_chunk, nk * k_chunk
+    if Tq_p != Tq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Tq_p - Tq), (0, 0)))
+    if Tk_p != Tk:
+        kg = jnp.pad(kg, ((0, 0), (0, 0), (0, Tk_p - Tk), (0, 0)))
+        vg = jnp.pad(vg, ((0, 0), (0, 0), (0, Tk_p - Tk), (0, 0)))
+    kv_len = kv_valid_len if kv_valid_len is not None else Tk
+
+    # ---- static pair list (trace-time; offsets are static in our callers) --
+    qo = int(q_offset) if not hasattr(q_offset, "aval") else None
+    ko = int(k_offset) if not hasattr(k_offset, "aval") else None
+    pairs = []
+    for qi in range(nq):
+        for kj in range(nk):
+            if block_skip and qo is not None and ko is not None:
+                q_lo = qo + qi * q_chunk
+                q_hi = qo + (qi + 1) * q_chunk - 1
+                k_lo = ko + kj * k_chunk
+                k_hi = ko + (kj + 1) * k_chunk - 1
+                if causal and k_lo > q_hi:
+                    continue                       # fully above the diagonal
+                if window is not None and k_hi <= q_lo - window:
+                    continue                       # fully left of the band
+            pairs.append((qi, kj))
+    pair_arr = jnp.asarray(np.array(pairs, dtype=np.int32))  # (P, 2)
+
+    def step(carry, pair):
+        m_all, l_all, acc_all = carry              # (nq,B,H,qc) ×2, (nq,B,H,qc,Dv)
+        qi, kj = pair[0], pair[1]
+        qc = jax.lax.dynamic_index_in_dim(q_st, qi, axis=0, keepdims=False)
+        ks = jax.lax.dynamic_slice_in_dim(kg, kj * k_chunk, k_chunk, axis=2)
+        vs = jax.lax.dynamic_slice_in_dim(vg, kj * k_chunk, k_chunk, axis=2)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        k_pos = k_offset + kj * k_chunk + jnp.arange(k_chunk)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qc, ks).astype(jnp.float32) * scale
+        mask = k_pos[None, :] < (k_offset + kv_len)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > (q_pos[:, None] - window)
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_prev = jax.lax.dynamic_index_in_dim(m_all, qi, 0, keepdims=False)
+        l_prev = jax.lax.dynamic_index_in_dim(l_all, qi, 0, keepdims=False)
+        acc_prev = jax.lax.dynamic_index_in_dim(acc_all, qi, 0, keepdims=False)
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(-1)
+        acc_new = acc_prev * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vs.dtype), vs
+        ).astype(jnp.float32)
+        m_all = jax.lax.dynamic_update_index_in_dim(m_all, m_new, qi, 0)
+        l_all = jax.lax.dynamic_update_index_in_dim(l_all, l_new, qi, 0)
+        acc_all = jax.lax.dynamic_update_index_in_dim(acc_all, acc_new, qi, 0)
+        return (m_all, l_all, acc_all), None
+
+    q_st = q.reshape(B, Hl, nq, q_chunk, Dh).transpose(2, 0, 1, 3, 4)  # (nq,B,H,qc,Dh)
+    init = (
+        jnp.full((nq, B, Hl, q_chunk), -1e30, jnp.float32),
+        jnp.zeros((nq, B, Hl, q_chunk), jnp.float32),
+        jnp.zeros((nq, B, Hl, q_chunk, Dv), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(step, init, pair_arr)
+    out = acc / jnp.maximum(l[..., None], 1e-30)               # (nq,B,H,qc,Dv)
+    out = out.transpose(1, 2, 0, 3, 4).reshape(B, Hl, Tq_p, Dv)
+    return out[:, :, :Tq].astype(q.dtype)
+
+
+def attention_partial_lse(q, k, v, kv_for_q, *, k_offset, kv_valid_len, q_pos):
+    """Decode-side partial attention over a local KV chunk.
+
+    Returns (numerator (B,H,1,Dv) f32, max (B,H,1) f32, denom (B,H,1) f32) for
+    LSE-combination across the model axis (flash-decoding over shards).
+    """
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    kg = jnp.take(k, kv_for_q, axis=1)
+    vg = jnp.take(v, kv_for_q, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kg).astype(jnp.float32) * scale
+    k_pos = k_offset + jnp.arange(k.shape[2])
+    mask = (k_pos[None, :] < kv_valid_len) & (k_pos[None, :] <= q_pos[:, None])
+    s = jnp.where(mask[None, None], s, -1e30)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    num = jnp.einsum("bhqk,bhkd->bhqd", p.astype(vg.dtype), vg).astype(jnp.float32)
+    return num, m, l
+
+
+def combine_partials(num, m, l, ctx: MeshCtx):
+    """LSE-combine per-shard partial attention across the model axis."""
+    if ctx.model_size == 1:
+        return (num / jnp.maximum(l[..., None], 1e-30)).astype(jnp.bfloat16)
+    m_all = jax.lax.pmax(m, ctx.m)
+    corr = jnp.exp(m - m_all)
+    num = jax.lax.psum(num * corr[..., None], ctx.m)
+    l = jax.lax.psum(l * corr, ctx.m)
+    return (num / jnp.maximum(l[..., None], 1e-30)).astype(jnp.bfloat16)

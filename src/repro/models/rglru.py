@@ -1,0 +1,146 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ x_t),
+a_t = exp(c · r_t · log σ(Λ)),  c = 8,
+with sigmoid input/recurrence gates (diagonal — see DESIGN.md §5).
+
+Distribution (§Perf hillclimb 2, EXPERIMENTS.md): the block is
+**sequence-parallel**, not Megatron-TP.  The recurrence is elementwise over
+channels, so instead of gathering the full (B, T, d) stream per block
+(2 all-gather + 2 reduce-scatter like the MLP), each rank keeps its T/M
+sequence chunk with FULL width, runs a local ``associative_scan``, and
+composes chunks across ranks with one all-gather of (B, w) segment
+summaries (an affine map (A_seg, B_seg) per chunk) + a 3-step conv halo
+``ppermute`` — O(B·w·M) bytes instead of O(B·T·d).  Weights are replicated
+over 'model' (grad psum over 'model' comes from the leaf-axes complement
+rule automatically).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import MeshCtx
+from .spec import P
+
+_C = 8.0
+
+
+def rglru_spec(cfg: ModelConfig, ctx: MeshCtx) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "w_gate_branch": P((d, w), (None, None)),
+        "w_rec_branch": P((d, w), (None, None)),
+        "conv_w": P((4, w), (None, None)),
+        "conv_b": P((w,), (None,), "zeros"),
+        "lam": P((w,), (None,), "ones"),      # Λ (softplus-domain init)
+        "gx_w": P((w,), (None,), "ones"),     # diagonal input gate
+        "gx_b": P((w,), (None,), "zeros"),
+        "ga_w": P((w,), (None,), "ones"),     # diagonal recurrence gate
+        "ga_b": P((w,), (None,), "zeros"),
+        "wout": P((w, d), (None, None)),
+    }
+
+
+def _branch_in(p, x):
+    gate = jax.nn.gelu(x @ p["w_gate_branch"])
+    rec = x @ p["w_rec_branch"]
+    return gate, rec
+
+
+def _conv_with_halo(rec, halo, p):
+    """Causal depthwise conv over the local chunk with a 3-position halo
+    from the previous rank (zeros on rank 0)."""
+    K = p["conv_w"].shape[0]
+    xp = jnp.concatenate([halo, rec], axis=1)  # (B, T/M + 3, w)
+    out = sum(xp[:, i : i + rec.shape[1]] * p["conv_w"][i] for i in range(K))
+    return out + p["conv_b"]
+
+
+def _gates(p, x):
+    i_t = jax.nn.sigmoid(x * p["gx_w"] + p["gx_b"])
+    r_t = jax.nn.sigmoid(x * p["ga_w"] + p["ga_b"])
+    log_a = _C * r_t * jax.nn.log_sigmoid(p["lam"].astype(jnp.float32) + 4.0)
+    a_t = jnp.exp(log_a)
+    b_t = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-8)) * (i_t * x)
+    return log_a.astype(jnp.float32), a_t.astype(jnp.float32), b_t.astype(jnp.float32)
+
+
+def _combine(l, r):
+    al, bl = l
+    ar, br = r
+    return al * ar, bl * ar + br
+
+
+def rglru_apply(p, x_sp, ctx: MeshCtx, cfg: ModelConfig, *, return_state=False):
+    """Sequence-parallel forward: x_sp (B, T/M, d) in, (B, T/M, d) out."""
+    B, Tc, _ = x_sp.shape
+    gate, rec = _branch_in(p, x_sp)
+
+    if ctx.model_size > 1:
+        perm = [(i, i + 1) for i in range(ctx.model_size - 1)]
+        halo = jax.lax.ppermute(rec[:, -3:], ctx.m, perm)  # rank r-1 -> r
+    else:
+        halo = jnp.zeros_like(rec[:, :3])
+    rec = _conv_with_halo(rec, halo, p)
+    log_a, a, b = _gates(p, rec)
+
+    a_prefix = jnp.exp(jnp.cumsum(log_a, axis=1))          # (B, Tc, w)
+    _, h_local = jax.lax.associative_scan(_combine, (a, b), axis=1)
+
+    if ctx.model_size > 1:
+        A_seg = a_prefix[:, -1]                            # (B, w)
+        B_seg = h_local[:, -1]
+        A_all = jax.lax.all_gather(A_seg, ctx.m)           # (M, B, w)
+        B_all = jax.lax.all_gather(B_seg, ctx.m)
+        _, Bcum = jax.lax.associative_scan(_combine, (A_all, B_all), axis=0)
+        r = ctx.midx()
+        h_prev = jax.lax.dynamic_index_in_dim(
+            Bcum, jnp.maximum(r - 1, 0), 0, keepdims=False
+        )
+        h_in = jnp.where(r > 0, h_prev, 0.0)               # (B, w)
+        h = a_prefix * h_in[:, None] + h_local
+        h_last_global = jax.lax.dynamic_index_in_dim(
+            Bcum, ctx.model_size - 1, 0, keepdims=False
+        )
+        rec_tail_all = jax.lax.all_gather(rec[:, -3:], ctx.m)  # (M, B, 3, w)
+        rec_tail = rec_tail_all[-1]
+    else:
+        h = h_local
+        h_last_global = h[:, -1]
+        rec_tail = rec[:, -3:]
+
+    out = (h.astype(x_sp.dtype) * gate) @ p["wout"]        # local — no collective
+    if return_state:
+        return out, {
+            "h": h_last_global,
+            "conv": rec_tail.astype(jnp.bfloat16),
+            "len": jnp.int32(Tc * ctx.model_size),
+        }
+    return out
+
+
+def rglru_init_cache(cfg: ModelConfig, ctx: MeshCtx, batch: int):
+    w = cfg.lru_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, 3, w), jnp.bfloat16),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def rglru_decode(p, x, cache, ctx: MeshCtx, cfg: ModelConfig):
+    """x (B, 1, d) replicated over 'model'; weights replicated -> no psum."""
+    gate, rec = _branch_in(p, x)                       # (B, 1, w)
+    window = jnp.concatenate([cache["conv"].astype(rec.dtype), rec], axis=1)
+    rec1 = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    _, a, b = _gates(p, rec1)
+    h = a * cache["h"] + b
+    out = (h.astype(x.dtype) * gate[:, 0]) @ p["wout"]
+    return out[:, None], {
+        "h": h,
+        "conv": window[:, 1:].astype(jnp.bfloat16),
+        "len": cache["len"] + 1,
+    }

@@ -1,0 +1,121 @@
+"""Parameter-spec system: one source of truth for shapes, shardings and init.
+
+A model is described as a nested dict of `P` leaves.  From that single tree we
+derive (a) materialized parameters for smoke tests / real training, (b)
+`ShapeDtypeStruct` stand-ins for the AOT dry-run (nothing allocated), and (c)
+`PartitionSpec`s for both the `shard_map` body and the jit boundary.
+
+Sharding axes are *logical* names ('model', 'data', None); `resolve_pspec`
+maps them onto the active mesh (the 'pod' axis, when present, is folded into
+data parallelism at the step level, not in parameter specs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+
+@dataclass(frozen=True)
+class P:
+    """A parameter leaf: shape + logical sharding + init law.
+
+    `logical` (optional): the unpadded shape — init draws random values at
+    this shape and zero-pads to `shape`, so the SAME seed yields the SAME
+    model regardless of mesh size (head-padding makes `shape` mesh-
+    dependent; tests/test_mesh_parity.py relies on this invariance)."""
+
+    shape: tuple
+    axes: tuple            # logical axis per dim: 'model' | None
+    init: str = "normal"   # normal | zeros | ones | scaled
+    scale: float | None = None
+    dtype: Any = jnp.bfloat16
+    logical: tuple | None = None
+
+
+def tree_map_p(fn, tree):
+    if isinstance(tree, dict):
+        return {k: tree_map_p(fn, v) for k, v in tree.items()}
+    assert isinstance(tree, P), type(tree)
+    return fn(tree)
+
+
+def abstract_params(tree):
+    """ShapeDtypeStructs for .lower() — no memory is touched."""
+    return tree_map_p(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), tree)
+
+
+def pspecs(tree):
+    return tree_map_p(lambda p: PartitionSpec(*p.axes), tree)
+
+
+def init_params(tree, key):
+    """Materialize parameters (smoke tests / examples / real training)."""
+    leaves = []
+
+    def collect(p):
+        leaves.append(p)
+        return p
+
+    tree_map_p(collect, tree)
+    keys = jax.random.split(key, max(1, len(leaves)))
+    it = iter(range(len(leaves)))
+
+    def build(p: P):
+        i = next(it)
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, p.dtype)
+        if p.init == "ones":
+            return jnp.ones(p.shape, p.dtype)
+        draw = p.logical or p.shape
+        fan_in = draw[-2] if len(draw) >= 2 else draw[-1]
+        scale = p.scale if p.scale is not None else 1.0 / np.sqrt(max(1, fan_in))
+        x = (jax.random.normal(keys[i], draw, jnp.float32) * scale).astype(p.dtype)
+        if p.logical is not None and p.logical != p.shape:
+            x = jnp.pad(x, [(0, a - b) for a, b in zip(p.shape, p.logical)])
+        return x
+
+    return tree_map_p(build, tree)
+
+
+def stack_layers(tree, n_layers: int):
+    """Add a leading scan axis to every leaf (never sharded)."""
+    return tree_map_p(
+        lambda p: P(
+            (n_layers,) + p.shape, (None,) + p.axes, p.init, p.scale, p.dtype,
+            logical=((n_layers,) + p.logical) if p.logical is not None else None,
+        ),
+        tree,
+    )
+
+
+def count_params(tree) -> int:
+    total = 0
+
+    def add(p):
+        nonlocal total
+        total += int(np.prod(p.shape))
+        return p
+
+    tree_map_p(add, tree)
+    return total
+
+
+def shard_info(tree, axis_size: int) -> dict:
+    """Bytes per device for a given model-axis size (for memory budgeting)."""
+    per_dev = 0
+
+    def add(p):
+        nonlocal per_dev
+        n = int(np.prod(p.shape)) * jnp.dtype(p.dtype).itemsize
+        if "model" in p.axes:
+            n //= axis_size
+        per_dev += n
+        return p
+
+    tree_map_p(add, tree)
+    return {"bytes_per_device": per_dev}

@@ -1,0 +1,222 @@
+"""Mamba-2 / SSD block (state-space duality, arXiv:2405.21060), shard_map-
+resident.  Heads (= d_inner/headdim) are sharded over 'model'; the shared
+B/C projections (ngroups=1) are replicated (small); output row-sharded with
+sequence-parallel reduce-scatter.
+
+Train/prefill uses the chunked SSD algorithm: quadratic attention-like
+within-chunk term + an inter-chunk state recurrence (lax.scan over chunks).
+Decode is the O(1) recurrent step — why `long_500k` runs for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import MeshCtx, ag_seq, rs_seq
+from .spec import P
+
+
+def _dims(cfg: ModelConfig, ctx: MeshCtx):
+    d_inner = cfg.d_model * cfg.ssm_expand
+    H = d_inner // cfg.ssm_headdim
+    return d_inner, H, cfg.ssm_headdim, cfg.ssm_ngroups, cfg.ssm_state
+
+
+def ssm_spec(cfg: ModelConfig, ctx: MeshCtx) -> dict:
+    d = cfg.d_model
+    d_inner, H, hp, G, N = _dims(cfg, ctx)
+    return {
+        "wz": P((d, d_inner), (None, "model")),
+        "wx": P((d, d_inner), (None, "model")),
+        "wbc": P((d, 2 * G * N), (None, None)),
+        "wdt": P((d, H), (None, "model")),
+        "dt_bias": P((H,), ("model",), "zeros"),
+        "a_log": P((H,), ("model",), "ones"),
+        "dskip": P((H,), ("model",), "ones"),
+        "conv_x": P((cfg.ssm_conv, d_inner), (None, "model")),
+        "conv_bc": P((cfg.ssm_conv, 2 * G * N), (None, None)),
+        "gate_norm": P((d_inner,), ("model",), "ones"),
+        "wout": P((d_inner, d), ("model", None)),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv: x (B, T, C), w (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out)
+
+
+def _ssd_chunked(xh, dt, A, B, C, cfg: ModelConfig, init_state=None):
+    """Chunked SSD: xh (B, T, H, P), dt (B, T, H), B/C (B, T, G, N).
+
+    Returns (y (B, T, H, P), final_state (B, H, P, N)).
+    """
+    Bsz, T, H, Pd = xh.shape
+    G = B.shape[2]
+    N = B.shape[3]
+    L = min(cfg.ssm_chunk, T)
+    T_pad = -(-T // L) * L
+    if T_pad != T:  # ragged tail: dt=0 pads are exact no-ops in the SSD math
+        pad = ((0, 0), (0, T_pad - T), (0, 0), (0, 0))
+        xh = jnp.pad(xh, pad)
+        dt = jnp.pad(dt, pad[:3])
+        B = jnp.pad(B, pad)
+        C = jnp.pad(C, pad)
+    T_eff = T_pad
+    nC = T_eff // L
+    rep = H // G
+
+    xc = xh.reshape(Bsz, nC, L, H, Pd)
+    dtc = dt.reshape(Bsz, nC, L, H)
+    Bc = B.reshape(Bsz, nC, L, G, N)
+    Cc = C.reshape(Bsz, nC, L, G, N)
+    dA = dtc * (-jnp.exp(A))[None, None, None, :]      # (B, nC, L, H) negative
+    cum = jnp.cumsum(dA, axis=2)                        # within-chunk cumulative
+
+    # within-chunk (quadratic) term; mask BEFORE exp (where-after-exp makes
+    # inf·0 = NaN gradients on the q<k entries)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nC,Lq,Lk,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.exp(jnp.where(tri[None, None, :, :, None], seg, -1e30))
+    Bg = jnp.repeat(Bc, rep, axis=3)
+    Cg = jnp.repeat(Cc, rep, axis=3)
+    scores = jnp.einsum("bclhn,bckhn->bclkh", Cg, Bg)   # (B,nC,Lq,Lk,H)
+    M = scores * decay * dtc[:, :, None, :, :]
+    y_diag = jnp.einsum("bclkh,bckhp->bclhp", M.astype(xc.dtype), xc)
+
+    # chunk-boundary states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)     # (B,nC,L,H)
+    state_chunk = jnp.einsum(
+        "bclhn,bclh,bclhp->bchpn",
+        Bg,
+        (dtc * decay_to_end).astype(xc.dtype),
+        xc,
+    )                                                    # (B,nC,H,P,N)
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))           # (B,nC,H)
+
+    def scan_fn(h, inp):
+        st, dec = inp                                    # (B,H,P,N), (B,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                                  # emit state BEFORE chunk
+
+    h0 = init_state if init_state is not None else jnp.zeros(
+        (Bsz, H, Pd, N), jnp.float32
+    )
+    final, h_prevs = jax.lax.scan(
+        scan_fn,
+        h0,
+        (
+            state_chunk.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+            chunk_decay.transpose(1, 0, 2),
+        ),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)           # (B,nC,H,P,N)
+
+    # inter-chunk contribution: y_off = C · (decay_in · h_prev)
+    decay_in = jnp.exp(cum)                              # (B,nC,L,H)
+    y_off = jnp.einsum(
+        "bclhn,bchpn,bclh->bclhp", Cg, h_prevs.astype(Cg.dtype), decay_in.astype(Cg.dtype)
+    )
+    y = (y_diag + y_off).reshape(Bsz, T_eff, H, Pd)[:, :T]
+    return y, final
+
+
+def _gated_rmsnorm(y, scale, cfg: ModelConfig, ctx: MeshCtx):
+    d_inner = cfg.d_model * cfg.ssm_expand
+    ss = jnp.sum(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    if ctx.model_size > 1:
+        ss = jax.lax.psum(ss, ctx.m)
+    var = ss / d_inner
+    return (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)).astype(y.dtype) * scale
+
+
+def _proj(p, xg, cfg: ModelConfig):
+    z = xg @ p["wz"]
+    xin = xg @ p["wx"]
+    bc = xg @ p["wbc"]
+    dt = jax.nn.softplus(xg @ p["wdt"] + p["dt_bias"])
+    return z, xin, bc, dt
+
+
+def ssm_apply(p, x_sp, ctx: MeshCtx, cfg: ModelConfig, *, return_state=False):
+    xg = ag_seq(x_sp, ctx)
+    Bsz, T, d = xg.shape
+    _, H, hp, G, N = _dims(cfg, ctx)
+    z, xin, bc, dt = _proj(p, xg, cfg)
+    xin = _causal_conv(xin, p["conv_x"])
+    bc = _causal_conv(bc, p["conv_bc"])
+    Bm = bc[..., : G * N].reshape(Bsz, T, G, N)
+    Cm = bc[..., G * N :].reshape(Bsz, T, G, N)
+    Hl = xin.shape[-1] // hp
+    xh = xin.reshape(Bsz, T, Hl, hp)
+    y, state = _ssd_chunked(xh, dt, p["a_log"].astype(jnp.float32), Bm, Cm, cfg)
+    y = y + xh * p["dskip"][None, None, :, None]
+    y = y.reshape(Bsz, T, Hl * hp)
+    # gated RMSNorm (mamba2's norm-before-out) — variance over the FULL
+    # d_inner (channels are model-sharded: psum the local sum of squares)
+    y = y * jax.nn.silu(z)
+    y = _gated_rmsnorm(y, p["gate_norm"], cfg, ctx)
+    out = rs_seq(y @ p["wout"], ctx)
+    if return_state:
+        conv_tail_x = xg @ p["wx"]
+        conv_state = {
+            "x": jax.lax.dynamic_slice_in_dim(conv_tail_x, T - (cfg.ssm_conv - 1), cfg.ssm_conv - 1, 1),
+            "bc": jax.lax.dynamic_slice_in_dim(xg @ p["wbc"], T - (cfg.ssm_conv - 1), cfg.ssm_conv - 1, 1),
+        }
+        return out, {"ssd": state, "conv": conv_state, "len": jnp.int32(T)}
+    return out
+
+
+def ssm_init_cache(cfg: ModelConfig, ctx: MeshCtx, batch: int):
+    d_inner, H, hp, G, N = _dims(cfg, ctx)
+    Hl = max(1, H // ctx.model_size)
+    dl = Hl * hp
+    return {
+        "ssd": jnp.zeros((batch, Hl, hp, N), jnp.float32),
+        "conv": {
+            "x": jnp.zeros((batch, cfg.ssm_conv - 1, dl), jnp.bfloat16),
+            "bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * G * N), jnp.bfloat16),
+        },
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def ssm_decode(p, x, cache, ctx: MeshCtx, cfg: ModelConfig):
+    """O(1) recurrent step: x (B, 1, d) replicated over 'model'."""
+    Bsz = x.shape[0]
+    _, H, hp, G, N = _dims(cfg, ctx)
+    z, xin, bc, dt = _proj(p, x, cfg)                    # (B, 1, ·)
+    # conv step over ring of last K-1 raw inputs
+    cx = jnp.concatenate([cache["conv"]["x"], xin], axis=1)   # (B, K, dl)
+    cbc = jnp.concatenate([cache["conv"]["bc"], bc], axis=1)
+    xin = jax.nn.silu(jnp.einsum("bkc,kc->bc", cx, p["conv_x"]))[:, None]
+    bcv = jax.nn.silu(jnp.einsum("bkc,kc->bc", cbc, p["conv_bc"]))[:, None]
+    Bm = bcv[..., : G * N].reshape(Bsz, G, N)
+    Cm = bcv[..., G * N :].reshape(Bsz, G, N)
+    Hl = xin.shape[-1] // hp
+    rep = Hl // G if Hl >= G else 1
+    xh = xin.reshape(Bsz, Hl, hp)
+    dA = (dt[:, 0] * (-jnp.exp(p["a_log"].astype(jnp.float32))))  # (B, Hl)
+    Bg = jnp.repeat(Bm, rep, axis=1)[:, :Hl]
+    Cg = jnp.repeat(Cm, rep, axis=1)[:, :Hl]
+    h = cache["ssd"] * jnp.exp(dA)[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt[:, 0], xh.astype(jnp.float32), Bg.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", h, Cg.astype(jnp.float32)).astype(x.dtype)
+    y = y + xh * p["dskip"][None, :, None]
+    y = y.reshape(Bsz, 1, Hl * hp)
+    y = y * jax.nn.silu(z)
+    y = _gated_rmsnorm(y, p["gate_norm"], cfg, ctx)
+    out = y @ p["wout"]
+    if ctx.model_size > 1:
+        out = jax.lax.psum(out, ctx.m)
+    new_cache = {
+        "ssd": h,
+        "conv": {"x": cx[:, 1:], "bc": cbc[:, 1:]},
+        "len": cache["len"] + 1,
+    }
+    return out, new_cache

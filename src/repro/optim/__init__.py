@@ -1,0 +1,11 @@
+"""Distributed AdamW (+ ZeRO-1) and LR schedules (shard_map-resident)."""
+from .adamw import (  # noqa: F401
+    LeafPlan,
+    OptConfig,
+    apply_updates,
+    build_plan,
+    init_opt_state,
+    lr_schedule,
+    opt_state_spec,
+    sync_gradient,
+)

@@ -1,0 +1,401 @@
+"""AdamW that runs INSIDE ``shard_map``, with per-leaf gradient synchronization
+and optional ZeRO-1 state sharding.
+
+Distribution contract
+---------------------
+Parameters live as local shards per the `P` spec tree (repro.models.spec):
+each leaf names the mesh axes that shard it ('model', or ('data','model') for
+expert weights); every other mesh axis replicates it.  After backward, the
+local gradient of a leaf is *partial* along exactly its replication axes, so:
+
+* plain path: ``g = psum(g, replication_axes)`` — one all-reduce per leaf
+  (XLA fuses them);
+* ZeRO-1 path (``zero1=True``): the 'data'-axis reduction becomes a
+  ``psum_scatter`` (half the bytes of an all-reduce), the Adam state and the
+  fp32 master copy are stored only for this rank's 1/D slice, and the updated
+  slice is ``all_gather``-ed back — the classic ZeRO-1 memory/collective
+  trade, one of the §Perf hillclimb levers (EXPERIMENTS.md).
+
+Global-norm clipping stays exact under both paths: every leaf contributes
+``sum(g²) / n_ranks_holding_this_value`` and a single scalar psum over the
+whole mesh recovers the true global norm (verified against the single-device
+reference in tests/test_train_parity.py).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.spec import P, tree_map_p
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr_peak: float = 3e-4
+    lr_min_frac: float = 0.1
+    warmup: int = 100
+    total_steps: int = 10_000
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: Any = jnp.float32   # m/v dtype: f32 | bf16 | "int8" (block-quantized)
+    master_fp32: bool = True         # keep an fp32 master copy of bf16 params
+    zero1: bool = False              # shard states + master over 'data'
+
+    @property
+    def int8_states(self) -> bool:
+        return isinstance(self.state_dtype, str) and self.state_dtype == "int8"
+
+
+QBLK = 256  # block size for int8 quantization of m/v
+
+
+# Log-spaced (dynamic) codebook: preserves the RELATIVE precision of tiny
+# entries — linear absmax int8 zeroes small v entries inside mixed-magnitude
+# blocks -> rsqrt blowups (measured in EXPERIMENTS.md §Perf).  The code is a
+# pure function of the index (geometric levels spanning 7 decades), so
+# encoding is closed-form log arithmetic — no searchsorted (whose binary-
+# search while-loop materialized multiple full-size s32/f32 temporaries on
+# the 851M-element deepseek expert states; ditto §Perf).
+_DECADES = 7.0
+
+
+def _quantize(x: jax.Array, *, signed: bool):
+    """f32 (N,) padded to QBLK multiple -> (int8 code (N,), f32 scales)."""
+    blocks = x.reshape(-1, QBLK)
+    s = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1), 1e-30)
+    y = blocks / s[:, None]
+    ay = jnp.abs(y)
+    levels = 126.0 if signed else 254.0
+    # idx 1..levels+1 spans 10^-7..10^0 geometrically; 0 encodes zero
+    mag = jnp.clip(
+        jnp.round((jnp.log10(jnp.maximum(ay, 1e-30)) + _DECADES) / _DECADES * levels),
+        0.0, levels,
+    ) + 1.0
+    mag = jnp.where(ay < 10.0 ** (-_DECADES - 0.5), 0.0, mag)
+    if signed:
+        q = (jnp.sign(y) * mag).astype(jnp.int8)   # ±(1..127)
+    else:
+        q = mag.astype(jnp.uint8)                  # 0..255
+    return q.reshape(-1), s
+
+
+def _dequantize(q: jax.Array, s: jax.Array, *, signed: bool):
+    qi = q.astype(jnp.float32)
+    mag = jnp.abs(qi)
+    levels = 126.0 if signed else 254.0
+    val = 10.0 ** ((mag - 1.0) / levels * _DECADES - _DECADES)
+    val = jnp.where(mag == 0, 0.0, val) * (jnp.sign(qi) if signed else 1.0)
+    return (val.reshape(-1, QBLK) * s[:, None]).reshape(-1)
+
+
+def _pad_len(n: int) -> int:
+    return -(-n // QBLK) * QBLK
+
+
+# Big leaves (the 851M-element deepseek expert states) update in CHUNK-sized
+# slices under lax.map so the f32 dequant/update temporaries stay ~100 MB
+# instead of 4×3.2 GB (§Perf hillclimb 1, EXPERIMENTS.md).
+UPDATE_CHUNK = 1 << 22
+
+
+def _state_pad(n: int, cfg: OptConfig) -> int:
+    base = _pad_len(n) if cfg.int8_states else n
+    if base > 2 * UPDATE_CHUNK:
+        return -(-base // UPDATE_CHUNK) * UPDATE_CHUNK
+    return base
+
+
+def lr_schedule(cfg: OptConfig, step):
+    """Linear warmup -> cosine decay to lr_min_frac."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr_peak * (step + 1.0) / max(1, cfg.warmup)
+    prog = jnp.clip(
+        (step - cfg.warmup) / max(1, cfg.total_steps - cfg.warmup), 0.0, 1.0
+    )
+    cos = cfg.lr_min_frac + (1 - cfg.lr_min_frac) * 0.5 * (1 + jnp.cos(np.pi * prog))
+    return jnp.where(step < cfg.warmup, warm, cfg.lr_peak * cos)
+
+
+# ---------------------------------------------------------------------------
+# per-leaf distribution plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LeafPlan:
+    sync_axes: tuple       # plain-psum axes for this leaf's gradient
+    scatter: bool          # ZeRO-1: reduce-scatter over 'data' instead
+    param_axes: tuple      # mesh axes (mesh order) that shard the param leaf
+    norm_weight: float     # 1 / (#ranks holding the synced value)
+    chunk: int             # per-rank slice length when scatter
+    local_shape: tuple     # local shard shape of the param leaf
+
+
+def _leaf_axis_names(p: P) -> set:
+    names = set()
+    for ax in p.axes:
+        if ax is None:
+            continue
+        if isinstance(ax, tuple):
+            names.update(ax)
+        else:
+            names.add(ax)
+    return names
+
+
+def _local_shape(p: P, mesh_sizes: dict) -> tuple:
+    shape = []
+    for dim, ax in zip(p.shape, p.axes):
+        f = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            if a is not None:
+                f *= mesh_sizes[a]
+        assert dim % f == 0, (p.shape, p.axes, dim, f)
+        shape.append(dim // f)
+    return tuple(shape)
+
+
+def build_plan(spec_tree, mesh_axes: tuple, mesh_sizes: dict, cfg: OptConfig):
+    """LeafPlan tree; mesh_axes e.g. ('data','model') or ('pod','data','model')."""
+
+    def plan_leaf(p: P) -> LeafPlan:
+        used = _leaf_axis_names(p)
+        repl = tuple(a for a in mesh_axes if a not in used)
+        local = _local_shape(p, mesh_sizes)
+        size = int(np.prod(local))
+        D = mesh_sizes.get("data", 1)
+        scatter = cfg.zero1 and "data" in repl and size >= D and D > 1
+        sync = tuple(a for a in repl if not (scatter and a == "data"))
+        weight = 1.0 / int(np.prod([mesh_sizes[a] for a in sync])) if sync else 1.0
+        chunk = -(-size // D) if scatter else size
+        return LeafPlan(
+            sync_axes=sync,
+            scatter=scatter,
+            param_axes=tuple(a for a in mesh_axes if a in used),
+            norm_weight=weight,
+            chunk=chunk,
+            local_shape=local,
+        )
+
+    return tree_map_p(plan_leaf, spec_tree)
+
+
+def _state_layout(plan: LeafPlan, mesh_sizes: dict):
+    """1-D state layout per leaf: (base local length, holders, dim0 axes)."""
+    base = plan.chunk if plan.scatter else int(np.prod(plan.local_shape))
+    holders = int(np.prod([mesh_sizes[a] for a in plan.param_axes]))
+    axes = tuple(plan.param_axes) + (("data",) if plan.scatter else ())
+    dim0 = (axes if axes else None,)
+    if plan.scatter:
+        holders *= mesh_sizes.get("data", 1)
+    return base, holders, dim0
+
+
+def opt_state_spec(spec_tree, plan_tree, mesh_sizes: dict, cfg: OptConfig):
+    """P tree for the optimizer state (drives abstract/pspecs/init like params).
+
+    All states are flat 1-D per local shard; int8 m/v add per-QBLK scales."""
+
+    def leaf(p: P, plan: LeafPlan):
+        base, holders, dim0 = _state_layout(plan, mesh_sizes)
+        pad = _state_pad(base, cfg)
+        if cfg.int8_states:
+            st = {
+                "m_q": P((holders * pad,), dim0, "zeros", dtype=jnp.int8),
+                "m_s": P((holders * pad // QBLK,), dim0, "zeros", dtype=jnp.float32),
+                "v_q": P((holders * pad,), dim0, "zeros", dtype=jnp.uint8),
+                "v_s": P((holders * pad // QBLK,), dim0, "zeros", dtype=jnp.float32),
+            }
+        else:
+            st = {
+                "m": P((holders * pad,), dim0, "zeros", dtype=cfg.state_dtype),
+                "v": P((holders * pad,), dim0, "zeros", dtype=cfg.state_dtype),
+            }
+        if cfg.master_fp32:
+            st["master"] = P((holders * pad,), dim0, "zeros", dtype=jnp.float32)
+        return st
+
+    def walk(spec, plan):
+        if isinstance(spec, dict):
+            return {k: walk(spec[k], plan[k]) for k in spec}
+        return leaf(spec, plan)
+
+    return {"step": P((), (), "zeros", dtype=jnp.int32), "leaves": walk(spec_tree, plan_tree)}
+
+
+def init_opt_state(params, plan_tree, cfg: OptConfig):
+    """Build the LOCAL optimizer state inside shard_map (or single-device)."""
+
+    def leaf(x, plan: LeafPlan):
+        base = plan.chunk if plan.scatter else int(np.prod(plan.local_shape))
+        pad = _state_pad(base, cfg)
+        if cfg.int8_states:
+            st = {
+                "m_q": jnp.zeros((pad,), jnp.int8),
+                "m_s": jnp.zeros((pad // QBLK,), jnp.float32),
+                "v_q": jnp.zeros((pad,), jnp.uint8),
+                "v_s": jnp.zeros((pad // QBLK,), jnp.float32),
+            }
+        else:
+            st = {
+                "m": jnp.zeros((pad,), cfg.state_dtype),
+                "v": jnp.zeros((pad,), cfg.state_dtype),
+            }
+        if cfg.master_fp32:
+            ref = _my_slice(x, plan) if plan.scatter else x.reshape(-1)
+            ref = jnp.pad(ref.astype(jnp.float32), (0, pad - base))
+            st["master"] = ref
+        return st
+
+    def walk(par, plan):
+        if isinstance(par, dict):
+            return {k: walk(par[k], plan[k]) for k in par}
+        return leaf(par, plan)
+
+    return {"step": jnp.zeros((), jnp.int32), "leaves": walk(params, plan_tree)}
+
+
+def _didx():
+    return jax.lax.axis_index("data")
+
+
+def _my_slice(x, plan: LeafPlan):
+    flat = x.reshape(-1)
+    pad = plan.chunk * (-(-flat.shape[0] // plan.chunk))
+    D = pad // plan.chunk
+    if pad != flat.shape[0]:
+        flat = jnp.pad(flat, (0, pad - flat.shape[0]))
+    return jax.lax.dynamic_slice_in_dim(flat, _didx() * plan.chunk, plan.chunk)
+
+
+def _unslice(slice_new, plan: LeafPlan, dtype):
+    full = jax.lax.all_gather(slice_new, "data", axis=0, tiled=True)
+    size = int(np.prod(plan.local_shape))
+    return full[:size].reshape(plan.local_shape).astype(dtype)
+
+
+def sync_gradient(g, plan: LeafPlan):
+    """Partial local grad -> fully-reduced grad (full shard or ZeRO-1 slice)."""
+    if plan.scatter:
+        flat = g.reshape(-1).astype(jnp.float32)
+        pad = plan.chunk * (-(-flat.shape[0] // plan.chunk))
+        if pad != flat.shape[0]:
+            flat = jnp.pad(flat, (0, pad - flat.shape[0]))
+        gs = jax.lax.psum_scatter(flat, "data", scatter_dimension=0, tiled=True)
+        if plan.sync_axes:
+            gs = jax.lax.psum(gs, plan.sync_axes)
+        return gs
+    g = g.astype(jnp.float32)
+    return jax.lax.psum(g, plan.sync_axes) if plan.sync_axes else g
+
+
+def apply_updates(grads, params, opt_state, plan_tree, cfg: OptConfig, mesh_axes,
+                  *, presynced: bool = False):
+    """One AdamW step inside shard_map.  Returns (params, opt_state, metrics).
+
+    presynced=True: `grads` are already fully reduced (e.g. by the
+    error-feedback top-k compressor, repro.optim.compression)."""
+    flat_plans, flat_grads, flat_params, flat_states = [], [], [], []
+
+    def collect(g, x, st, plan):
+        if isinstance(plan, dict):
+            for k in plan:
+                collect(g[k], x[k], st[k], plan[k])
+        else:
+            flat_plans.append(plan)
+            flat_grads.append(g)
+            flat_params.append(x)
+            flat_states.append(st)
+
+    collect(grads, params, opt_state["leaves"], plan_tree)
+
+    if presynced:
+        synced = [g.astype(jnp.float32) for g in flat_grads]
+    else:
+        synced = [sync_gradient(g, pl) for g, pl in zip(flat_grads, flat_plans)]
+
+    # exact global grad norm (see module docstring)
+    sq = sum(
+        pl.norm_weight * jnp.sum(jnp.square(g)) for g, pl in zip(synced, flat_plans)
+    )
+    sq = jax.lax.psum(sq, tuple(mesh_axes))
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    step = opt_state["step"]
+    lr = lr_schedule(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - cfg.beta1**t
+    bc2 = 1.0 - cfg.beta2**t
+
+    def update_flat(gp, refp, st):
+        """One (possibly chunked) flat update: returns (new_ref, new_state)."""
+        if cfg.int8_states:
+            m = _dequantize(st["m_q"], st["m_s"], signed=True) * cfg.beta1 + (1 - cfg.beta1) * gp
+            v = _dequantize(st["v_q"], st["v_s"], signed=False) * cfg.beta2 + (1 - cfg.beta2) * jnp.square(gp)
+            mq, ms = _quantize(m, signed=True)
+            vq, vs = _quantize(v, signed=False)
+            nst = {"m_q": mq, "m_s": ms, "v_q": vq, "v_s": vs}
+        else:
+            m = st["m"].astype(jnp.float32) * cfg.beta1 + (1 - cfg.beta1) * gp
+            v = st["v"].astype(jnp.float32) * cfg.beta2 + (1 - cfg.beta2) * jnp.square(gp)
+            nst = {"m": m.astype(cfg.state_dtype), "v": v.astype(cfg.state_dtype)}
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps) + cfg.weight_decay * refp
+        new_ref = refp - lr * upd
+        if cfg.master_fp32:
+            nst["master"] = new_ref
+        return new_ref, nst
+
+    new_params, new_states = [], []
+    for g, x, st, pl in zip(synced, flat_params, flat_states, flat_plans):
+        g = (g * scale).reshape(-1)
+        base = g.shape[0]
+        pad = _state_pad(base, cfg)
+        gp = jnp.pad(g, (0, pad - base)) if pad != base else g
+        if cfg.master_fp32:
+            ref = st["master"]
+        else:
+            raw = _my_slice(x, pl) if pl.scatter else x.reshape(-1)
+            ref = jnp.pad(raw.astype(jnp.float32), (0, pad - base))
+        state = {k: v for k, v in st.items() if k != "master"}
+        if pad > UPDATE_CHUNK and pad % UPDATE_CHUNK == 0:
+            nch = pad // UPDATE_CHUNK
+            sh = lambda a, n=nch: a.reshape(n, -1)  # noqa: E731
+            new_ref_c, nst_c = jax.lax.map(
+                lambda args: update_flat(*args),
+                (sh(gp), sh(ref), jax.tree.map(sh, state)),
+            )
+            new_ref = new_ref_c.reshape(-1)
+            nst = jax.tree.map(lambda a: a.reshape(-1), nst_c)
+        else:
+            new_ref, nst = update_flat(gp, ref, state)
+        if cfg.master_fp32:
+            nst["master"] = new_ref
+        out_flat = new_ref[:base]
+        if pl.scatter:
+            x_new = _unslice(out_flat, pl, x.dtype)
+        else:
+            x_new = out_flat.reshape(pl.local_shape).astype(x.dtype)
+        new_params.append(x_new)
+        new_states.append(nst)
+
+    it_p = iter(new_params)
+    it_s = iter(new_states)
+
+    def rebuild2(plan, which):
+        if isinstance(plan, dict):
+            return {k: rebuild2(plan[k], which) for k in plan}
+        return next(it_p) if which == "p" else next(it_s)
+
+    out_params = rebuild2(plan_tree, "p")
+    out_states = rebuild2(plan_tree, "s")
+    new_opt = {"step": step + 1, "leaves": out_states}
+    return out_params, new_opt, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,141 @@
+"""Gradient compression: error-feedback top-k sparsification over 'data'.
+
+At 1000+ nodes the cross-pod gradient reduction is the bandwidth bill.  The
+classic remedy (Lin et al., Deep Gradient Compression; Karimireddy et al.,
+EF-SGD) is: per leaf, send only the top-k fraction of gradient magnitude,
+keep the unsent residual in a local error-feedback buffer and add it back
+next step — unbiased in the long run, convergence-safe thanks to the
+feedback.
+
+Mapping onto the mesh (DESIGN.md §4): compression replaces the leaf's
+'data'-axis reduction (its *replication* sync) for leaves above a size
+threshold.  Each data-rank selects its local top-k (indices + values,
+``1/ratio``× fewer bytes), all-gathers the sparse sets over 'data', and
+scatter-adds them into a dense buffer — ``2·k·(4+4)·D`` bytes vs
+``2·S·(D−1)/D`` for the dense all-reduce, a win whenever
+``ratio < S/(8·k·D)``-ish; the roofline’s collective term shows the swap
+(all-reduce → small all-gathers).
+
+The 'model'-axis portions of a leaf's sync (norm weights etc.) stay dense —
+they are small by construction.  ZeRO-1 and compression are mutually
+exclusive per leaf (both re-implement the 'data' reduction); ``build``
+resolves the precedence (compression wins for eligible leaves).
+
+Exactness is deliberately NOT preserved (that is the point); the
+convergence contract is tested in tests/test_compression.py: smoke-model
+loss under 10% compression tracks the dense run, and the error-feedback
+buffers stay bounded.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.spec import P, tree_map_p
+
+from .adamw import LeafPlan, OptConfig
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    ratio: float = 0.01           # fraction of entries sent per step
+    min_leaf_size: int = 65_536   # dense sync below this
+    enabled: bool = False
+
+
+def eligible(plan: LeafPlan, ccfg: CompressionConfig) -> bool:
+    size = int(np.prod(plan.local_shape))
+    return (
+        ccfg.enabled
+        and "data" in plan.sync_axes
+        and not plan.scatter
+        and size >= ccfg.min_leaf_size
+    )
+
+
+def k_for(plan: LeafPlan, ccfg: CompressionConfig) -> int:
+    size = int(np.prod(plan.local_shape))
+    return max(1, int(size * ccfg.ratio))
+
+
+def error_spec(spec_tree, plan_tree, ccfg: CompressionConfig):
+    """P tree of error-feedback buffers (zeros for ineligible leaves)."""
+
+    def walk(spec, plan):
+        if isinstance(spec, dict):
+            return {k: walk(spec[k], plan[k]) for k in spec}
+        if eligible(plan, ccfg):
+            return P(spec.shape, spec.axes, "zeros", dtype=jnp.float32)
+        return P((1,), (None,), "zeros", dtype=jnp.float32)  # placeholder
+
+    return walk(spec_tree, plan_tree)
+
+
+def init_error_state(params, plan_tree, ccfg: CompressionConfig):
+    def walk(par, plan):
+        if isinstance(par, dict):
+            return {k: walk(par[k], plan[k]) for k in par}
+        if eligible(plan, ccfg):
+            return jnp.zeros(par.shape, jnp.float32)
+        return jnp.zeros((1,), jnp.float32)
+
+    return walk(params, plan_tree)
+
+
+def compressed_sync(g, err, plan: LeafPlan, ccfg: CompressionConfig):
+    """EF-top-k reduction over 'data' (+ dense psum over remaining axes).
+
+    Returns (g_synced ≈ mean-preserving sum over data ranks, new_err).
+    """
+    other = tuple(a for a in plan.sync_axes if a != "data")
+    acc = g.astype(jnp.float32) + err.astype(jnp.float32)
+    flat = acc.reshape(-1)
+    k = k_for(plan, ccfg)
+    mag = jnp.abs(flat)
+    vals, idx = jax.lax.top_k(mag, k)
+    sel = jnp.zeros_like(flat, dtype=bool).at[idx].set(True)
+    send_vals = flat[idx]                                   # (k,)
+    new_err = jnp.where(sel, 0.0, flat).reshape(g.shape)
+
+    # exchange sparse contributions across the data axis
+    all_idx = jax.lax.all_gather(idx, "data")               # (D, k)
+    all_val = jax.lax.all_gather(send_vals, "data")         # (D, k)
+    dense = jnp.zeros_like(flat).at[all_idx.reshape(-1)].add(all_val.reshape(-1))
+    g_sync = dense.reshape(g.shape)
+    if other:
+        g_sync = jax.lax.psum(g_sync, other)
+    return g_sync, new_err
+
+
+def sync_all(grads, err_state, plan_tree, cfg: OptConfig, ccfg: CompressionConfig):
+    """Per-leaf sync: compressed where eligible, dense elsewhere.
+
+    Returns (synced grads tree (f32), new error state tree, bytes ledger).
+    """
+    from .adamw import sync_gradient
+
+    sent_dense = [0]
+    sent_sparse = [0]
+
+    def walk(g, e, plan):
+        if isinstance(plan, dict):
+            out = {k: walk(g[k], e[k], plan[k]) for k in plan}
+            return (
+                {k: v[0] for k, v in out.items()},
+                {k: v[1] for k, v in out.items()},
+            )
+        if eligible(plan, ccfg):
+            gs, ne = compressed_sync(g, e, plan, ccfg)
+            sent_sparse[0] += 8 * k_for(plan, ccfg)
+            return gs, ne
+        size = int(np.prod(plan.local_shape))
+        if "data" in plan.sync_axes or plan.scatter:
+            sent_dense[0] += 4 * size
+        return sync_gradient(g, plan), e
+
+    gs, ne = walk(grads, err_state, plan_tree)
+    ledger = {"sparse_bytes": sent_sparse[0], "dense_bytes": sent_dense[0]}
+    return gs, ne, ledger

@@ -1,0 +1,2 @@
+"""Roofline analysis: HLO collective/flop/byte accounting + reports."""
+from .hlo import analyze_hlo, collective_bytes  # noqa: F401

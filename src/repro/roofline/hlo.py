@@ -1,0 +1,308 @@
+"""Static roofline accounting from post-SPMD compiled HLO text.
+
+``analyze_hlo(hlo_text, chips)`` walks the computation graph — ``while``
+bodies weighted by their trip counts (``known_trip_count`` backend config,
+falling back to loop-condition constants), so a collective or matmul inside
+the 61-layer scan is charged 61×, unlike ``compiled.cost_analysis()`` which
+charges loop bodies once — and accumulates three quantities per device:
+
+* **flops** — every ``dot`` op: ``2 · prod(result dims) · prod(contracting
+  dims)`` (operand shapes resolved through a per-computation symbol table).
+  Elementwise flops are not counted; for every architecture here dots are
+  >95% of compute (the SSD/RG-LRU scans' elementwise work is noted in
+  EXPERIMENTS.md).
+* **bytes** — HBM traffic proxy: for every *scope-level* op in fused HLO
+  (fusions, dots, copies, slices, collectives), result bytes + operand bytes.
+  Internals of kLoop/kInput fusions are register/VMEM-resident and excluded.
+* **collective bytes** — ring-algorithm bytes per participating device:
+
+      all-reduce(S, N)   : 2·S·(N−1)/N     all-gather -> S : S·(N−1)/N
+      reduce-scatter(S_out): S_out·(N−1)   all-to-all(S, N): S·(N−1)/N
+      collective-permute : S
+
+Global = per-device × chips (uniform SPMD).  Roofline terms (DESIGN.md §6):
+compute = flops_global/(chips·197e12), memory = bytes_global/(chips·819e9),
+collective = coll_global/(chips·50e9).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_SHAPE_TOK = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)\(")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*([a-z0-9]+\[[0-9,]*\])")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([0-9,\s]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)')
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|true_computation|false_computation)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,\s]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _dims(shape_str: str):
+    m = _SHAPE_TOK.search(shape_str)
+    if not m:
+        return None, []
+    dt, dims = m.group(1), m.group(2)
+    return dt, [int(d) for d in dims.split(",") if d.strip()]
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOK.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _participants(line: str, chips: int) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_LIST.search(line)
+    if m:
+        return max(1, len([x for x in m.group(1).split(",") if x.strip()]))
+    if "collective-permute" in line:
+        return 2
+    return chips
+
+
+def _coll_bytes(op: str, result_bytes: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * result_bytes * (n - 1) / n
+    if op == "all-gather":
+        return result_bytes * (n - 1) / n
+    if op == "reduce-scatter":
+        return float(result_bytes) * (n - 1)
+    if op == "all-to-all":
+        return result_bytes * (n - 1) / n
+    if op == "collective-permute":
+        return float(result_bytes)
+    return 0.0
+
+
+@dataclass
+class Comp:
+    name: str
+    symbols: dict = field(default_factory=dict)    # %name -> shape string
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = field(default_factory=lambda: defaultdict(float))
+    coll_counts: dict = field(default_factory=lambda: defaultdict(int))
+    whiles: list = field(default_factory=list)     # (body, cond, trips or None)
+    flop_calls: list = field(default_factory=list)
+    constants: list = field(default_factory=list)  # integer constants (trip counts)
+    unresolved_dots: int = 0
+
+
+def _split(text: str) -> dict[str, Comp]:
+    comps, cur = {}, None
+    for line in text.splitlines():
+        ls = line.rstrip()
+        if ls.endswith("{") and ") -> " in ls and "=" not in ls.split("(")[0]:
+            m = _HEADER_RE.match(ls.strip())
+            if m:
+                cur = Comp(m.group(1))
+                comps[cur.name] = cur
+                for pname, pshape in _PARAM_RE.findall(ls.split(") -> ")[0]):
+                    cur.symbols[pname] = pshape
+                # tuple-typed params: grab every dtype[…] in declaration order
+                continue
+        if cur is None:
+            continue
+        _scan_line(cur, line)
+    return comps
+
+
+def _scan_line(comp: Comp, line: str):
+    d = _DEF_RE.match(line)
+    if not d:
+        return
+    name, shape_str, op = d.group(1), d.group(2), d.group(3)
+    comp.symbols[name] = shape_str
+    base_op = op[:-6] if op.endswith("-start") else op
+    if op.endswith("-done"):
+        return
+    if base_op == "constant":
+        for c in _CONST_RE.findall(line):
+            comp.constants.append(int(c))
+        return
+    if base_op in _COLL_OPS:
+        n = _participants(line, 0) or 1
+        rb = _shape_bytes(shape_str)
+        comp.coll[base_op] += _coll_bytes(base_op, rb, n)
+        comp.coll_counts[base_op] += 1
+        comp.bytes += 2 * rb
+        return
+    if base_op == "while":
+        body = _BODY_RE.search(line)
+        cond = _COND_RE.search(line)
+        trip = _TRIP_RE.search(line)
+        comp.whiles.append(
+            (body and body.group(1), cond and cond.group(1),
+             int(trip.group(1)) if trip else None)
+        )
+        return
+    if base_op == "dot":
+        args = re.search(r"dot\(([^)]*)\)", line)
+        cd = _LHS_CDIMS.search(line)
+        _, rdims = _dims(shape_str)
+        if args and cd is not None and rdims is not None:
+            opnames = [a.strip().lstrip("%") for a in args.group(1).split(",")]
+            lhs_shape = comp.symbols.get(opnames[0]) if opnames else None
+            if lhs_shape:
+                _, ldims = _dims(lhs_shape)
+                k = 1
+                for c in cd.group(1).split(","):
+                    if c.strip():
+                        k *= ldims[int(c)]
+                rn = 1
+                for x in rdims:
+                    rn *= x
+                comp.flops += 2.0 * rn * k
+            else:
+                comp.unresolved_dots += 1
+        else:
+            comp.unresolved_dots += 1
+    if base_op in _NO_TRAFFIC:
+        return
+    # scope-level traffic: result + operands (fusion internals excluded)
+    rb = _shape_bytes(shape_str)
+    lname = name.lower()
+    args = re.search(rf"{re.escape(op)}\(([^)]*)\)", line)
+    op_bytes = []
+    if args:
+        for a in args.group(1).split(","):
+            a = a.strip().lstrip("%")
+            if a in comp.symbols:
+                op_bytes.append(_shape_bytes(comp.symbols[a]))
+    if "dynamic-update-slice" in lname or base_op == "dynamic-update-slice":
+        # in-place window write: traffic ≈ 2 × the (small) update operand
+        small = min([b for b in op_bytes if b > 0], default=rb)
+        traffic = 2 * small
+    elif "dynamic-slice" in lname or base_op == "dynamic-slice" or base_op == "slice":
+        # reads only result-sized window of the (possibly huge) operand
+        traffic = 2 * rb
+    else:
+        traffic = rb + sum(op_bytes)
+    comp.bytes += traffic
+    # flops inside fusions (dots occasionally fused): descend for flops only
+    for callee in _CALLS_RE.findall(line):
+        comp.flop_calls.append(callee)
+    m = _BRANCHES_RE.search(line)
+    if m:
+        for callee in m.group(1).split(","):
+            comp.flop_calls.append(callee.strip().lstrip("%"))
+
+
+def _trip_from_cond(cond: Comp | None) -> int:
+    if cond is None:
+        return 1
+    return max(cond.constants, default=1)
+
+
+def analyze_hlo(hlo_text: str, chips: int) -> dict:
+    comps = _split(hlo_text)
+
+    memo: dict[str, dict] = {}
+
+    def walk(name: str, depth=0) -> dict:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None or depth > 80:
+            return {"flops": 0.0, "bytes": 0.0, "coll": {}, "counts": {}, "unresolved": 0}
+        memo[name] = {"flops": 0.0, "bytes": 0.0, "coll": {}, "counts": {}, "unresolved": 0}
+        acc = {
+            "flops": comp.flops,
+            "bytes": comp.bytes,
+            "coll": dict(comp.coll),
+            "counts": dict(comp.coll_counts),
+            "unresolved": comp.unresolved_dots,
+        }
+
+        def add(sub, mult=1.0):
+            acc["flops"] += sub["flops"] * mult
+            acc["bytes"] += sub["bytes"] * mult
+            acc["unresolved"] += sub["unresolved"]
+            for k, v in sub["coll"].items():
+                acc["coll"][k] = acc["coll"].get(k, 0.0) + v * mult
+            for k, v in sub["counts"].items():
+                acc["counts"][k] = acc["counts"].get(k, 0) + int(v * mult)
+
+        for callee in comp.flop_calls:
+            sub = walk(callee, depth + 1)
+            acc["flops"] += sub["flops"]          # flops only: fusion internals
+            acc["unresolved"] += sub["unresolved"]
+            for k, v in sub["coll"].items():
+                acc["coll"][k] = acc["coll"].get(k, 0.0) + v
+            for k, v in sub["counts"].items():
+                acc["counts"][k] = acc["counts"].get(k, 0) + v
+        for body, cond, trips in comp.whiles:
+            t = trips if trips else _trip_from_cond(comps.get(cond))
+            if body:
+                add(walk(body, depth + 1), t)
+            if cond:
+                add(walk(cond, depth + 1), t)
+        memo[name] = acc
+        return acc
+
+    entry = None
+    for n in comps:
+        if "main" in n:
+            entry = n
+            break
+    if entry is None and comps:
+        entry = max(comps, key=lambda n: comps[n].bytes + comps[n].flops)
+    res = walk(entry) if entry else {"flops": 0, "bytes": 0, "coll": {}, "counts": {}, "unresolved": 0}
+    coll_pd = sum(res["coll"].values())
+    return {
+        "entry": entry,
+        "flops_per_device": res["flops"],
+        "bytes_per_device": res["bytes"],
+        "collective_per_device": coll_pd,
+        "flops_global": res["flops"] * chips,
+        "bytes_global": res["bytes"] * chips,
+        "collective_global": coll_pd * chips,
+        "collective_by_op_per_device": res["coll"],
+        "collective_op_counts": res["counts"],
+        "unresolved_dots": res["unresolved"],
+    }
+
+
+def collective_bytes(hlo_text: str, chips: int) -> dict:
+    """Back-compat wrapper: collective summary only."""
+    r = analyze_hlo(hlo_text, chips)
+    return {
+        "per_device_bytes": r["collective_per_device"],
+        "global_bytes": r["collective_global"],
+        "by_op_per_device": r["collective_by_op_per_device"],
+        "op_counts_weighted": r["collective_op_counts"],
+        "entry": r["entry"],
+    }

@@ -1,0 +1,7 @@
+"""Serving layer: prefill/decode step factories + sharded cache specs."""
+from .engine import (  # noqa: F401
+    ServeBundle,
+    abstract_cache,
+    cache_spec,
+    make_serve_fns,
+)

@@ -1,0 +1,424 @@
+"""Serving engine: prefill and one-token decode step factories.
+
+Decode distribution (DESIGN.md §4): the residual stream is **replicated over
+'model'** (a single token is tiny) while long KV/latent caches are
+**sequence-sharded over 'model'** (context parallelism) and batch-sharded
+over the data axes; attention partials are LSE-combined across shards
+(flash-decoding).  SSM/RG-LRU caches are O(1) per token — their channel/head
+dims shard over 'model' — which is why `long_500k` runs for those families.
+
+Cache layout is declared as a `P` tree (`cache_spec`) from the same
+source-of-truth system as parameters, so the dry-run lowers `decode_step`
+against `ShapeDtypeStruct`s with zero allocation, and prefill's shard_map
+out_specs / decode's in_specs are guaranteed consistent.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.models.attention import (
+    cross_decode,
+    cross_fill_cache,
+    gqa_apply,
+    gqa_decode,
+    gqa_fill_cache,
+    gqa_init_cache,
+    local_decode,
+    local_fill_cache,
+    mla_apply,
+    mla_decode,
+    mla_fill_cache,
+    mla_init_cache,
+)
+from repro.models.backbone import (
+    embed_tokens,
+    encode,
+    greedy_token,
+    layer_plan,
+    model_spec,
+)
+from repro.models.config import ModelConfig
+from repro.models.ffn import mlp_apply, mlp_decode, moe_apply, moe_decode
+from repro.models.layers import MeshCtx, apply_norm
+from repro.models.rglru import rglru_apply, rglru_decode, rglru_init_cache
+from repro.models.spec import P, abstract_params, pspecs, stack_layers
+from repro.models.ssm import ssm_apply, ssm_decode, ssm_init_cache
+from repro.train.step import batch_axes, mesh_ctx, mesh_sizes
+
+
+# ---------------------------------------------------------------------------
+# cache P-spec tree (one source of truth for shapes + shardings)
+# ---------------------------------------------------------------------------
+
+
+def _kind_cache_spec(cfg: ModelConfig, kind: str, ba, batch: int, max_len: int,
+                     enc_len: int) -> dict:
+    dh = cfg.resolved_head_dim
+    i32 = jnp.int32
+    if kind in ("attn", "attn_window") and kind == "attn":
+        return {
+            "k": P((batch, cfg.n_kv_heads, max_len, dh), (ba, None, "model", None), "zeros", dtype=jnp.bfloat16),
+            "v": P((batch, cfg.n_kv_heads, max_len, dh), (ba, None, "model", None), "zeros", dtype=jnp.bfloat16),
+            "len": P((), (), "zeros", dtype=i32),
+        }
+    if kind == "attn_window":
+        w = cfg.window
+        return {
+            "k": P((batch, cfg.n_kv_heads, w, dh), (ba, None, None, None), "zeros", dtype=jnp.bfloat16),
+            "v": P((batch, cfg.n_kv_heads, w, dh), (ba, None, None, None), "zeros", dtype=jnp.bfloat16),
+            "len": P((), (), "zeros", dtype=i32),
+        }
+    if kind in ("mla_dense", "mla_moe"):
+        return {
+            "c_kv": P((batch, max_len, cfg.kv_lora), (ba, "model", None), "zeros", dtype=jnp.bfloat16),
+            "k_rope": P((batch, max_len, cfg.rope_head_dim), (ba, "model", None), "zeros", dtype=jnp.bfloat16),
+            "len": P((), (), "zeros", dtype=i32),
+        }
+    if kind == "ssm":
+        d_inner = cfg.d_model * cfg.ssm_expand
+        H = d_inner // cfg.ssm_headdim
+        G, N, K = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_conv
+        return {
+            "ssd": P((batch, H, cfg.ssm_headdim, N), (ba, "model", None, None), "zeros", dtype=jnp.float32),
+            "conv": {
+                "x": P((batch, K - 1, d_inner), (ba, None, "model"), "zeros", dtype=jnp.bfloat16),
+                "bc": P((batch, K - 1, 2 * G * N), (ba, None, None), "zeros", dtype=jnp.bfloat16),
+            },
+            "len": P((), (), "zeros", dtype=i32),
+        }
+    if kind == "rglru":
+        # sequence-parallel RG-LRU: weights + decode state replicated over
+        # 'model' (batch-sharded only) — see repro.models.rglru
+        w = cfg.lru_width
+        return {
+            "h": P((batch, w), (ba, None), "zeros", dtype=jnp.float32),
+            "conv": P((batch, 3, w), (ba, None, None), "zeros", dtype=jnp.bfloat16),
+            "len": P((), (), "zeros", dtype=i32),
+        }
+    if kind == "dec":
+        return {
+            "self": _kind_cache_spec(cfg, "attn", ba, batch, max_len, enc_len),
+            "cross": {
+                "k": P((batch, cfg.n_kv_heads, enc_len, dh), (ba, None, "model", None), "zeros", dtype=jnp.bfloat16),
+                "v": P((batch, cfg.n_kv_heads, enc_len, dh), (ba, None, "model", None), "zeros", dtype=jnp.bfloat16),
+                "len": P((), (), "zeros", dtype=i32),
+            },
+        }
+    raise ValueError(kind)
+
+
+def cache_spec(cfg: ModelConfig, mesh, batch: int, max_len: int, enc_len: int = 1536):
+    ba = batch_axes(mesh, batch)
+    tree = {}
+    for gi, (kind, count, scanned) in enumerate(layer_plan(cfg)):
+        if count == 0:
+            continue
+        if kind == "hybrid_period":
+            base = {
+                f"b{i}": _kind_cache_spec(
+                    cfg, "rglru" if k == "rglru" else "attn_window", ba, batch, max_len, enc_len
+                )
+                for i, k in enumerate(cfg.pattern)
+            }
+        else:
+            base = _kind_cache_spec(cfg, kind, ba, batch, max_len, enc_len)
+        tree[f"g{gi}"] = stack_layers(base, count) if scanned else (
+            {f"l{i}": base for i in range(count)} if count > 1 else base
+        )
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# per-kind prefill / decode block functions
+# ---------------------------------------------------------------------------
+
+
+def _prefill_block(cfg, ctx, kind, ep_data, max_len, batch, *, memory=None):
+    def attn(p, x):
+        h, (k, v) = gqa_apply(p["attn"], apply_norm(p["ln1"], x, cfg), ctx, cfg,
+                              causal=True, return_kv=True)
+        x = x + h
+        x = x + mlp_apply(p["mlp"], apply_norm(p["ln2"], x, cfg), ctx, cfg)
+        init = gqa_init_cache(cfg, ctx, batch, max_len)
+        return x, gqa_fill_cache(init, k, v, ctx)
+
+    def attn_window(p, x):
+        h, (k, v) = gqa_apply(p["attn"], apply_norm(p["ln1"], x, cfg), ctx, cfg,
+                              causal=True, window=cfg.window, return_kv=True)
+        x = x + h
+        x = x + mlp_apply(p["mlp"], apply_norm(p["ln2"], x, cfg), ctx, cfg)
+        return x, local_fill_cache(None, k, v, cfg)
+
+    def mla_dense(p, x):
+        h, (c_kv, k_rope) = mla_apply(p["attn"], apply_norm(p["ln1"], x, cfg), ctx, cfg,
+                                      return_latent=True)
+        x = x + h
+        x = x + mlp_apply(p["mlp"], apply_norm(p["ln2"], x, cfg), ctx, cfg)
+        init = mla_init_cache(cfg, ctx, batch, max_len)
+        return x, mla_fill_cache(init, c_kv, k_rope, ctx)
+
+    def mla_moe(p, x):
+        h, (c_kv, k_rope) = mla_apply(p["attn"], apply_norm(p["ln1"], x, cfg), ctx, cfg,
+                                      return_latent=True)
+        x = x + h
+        y, _ = moe_apply(p["moe"], apply_norm(p["ln2"], x, cfg), ctx, cfg, ep_data)
+        init = mla_init_cache(cfg, ctx, batch, max_len)
+        return x + y, mla_fill_cache(init, c_kv, k_rope, ctx)
+
+    def ssm(p, x):
+        h, state = ssm_apply(p["ssm"], apply_norm(p["ln1"], x, cfg), ctx, cfg,
+                             return_state=True)
+        return x + h, state
+
+    def rglru(p, x):
+        h, state = rglru_apply(p["rec"], apply_norm(p["ln1"], x, cfg), ctx, cfg,
+                               return_state=True)
+        x = x + h
+        x = x + mlp_apply(p["mlp"], apply_norm(p["ln2"], x, cfg), ctx, cfg)
+        return x, state
+
+    def dec(p, x):
+        h, (k, v) = gqa_apply(p["attn"], apply_norm(p["ln1"], x, cfg), ctx, cfg,
+                              causal=True, return_kv=True)
+        x = x + h
+        x = x + gqa_apply(p["cross"], apply_norm(p["lnx"], x, cfg), ctx, cfg,
+                          causal=False, memory=memory)
+        x = x + mlp_apply(p["mlp"], apply_norm(p["ln2"], x, cfg), ctx, cfg)
+        init = gqa_init_cache(cfg, ctx, batch, max_len)
+        cache = {
+            "self": gqa_fill_cache(init, k, v, ctx),
+            "cross": cross_fill_cache(p["cross"], memory, cfg, ctx),
+        }
+        return x, cache
+
+    return {
+        "attn": attn, "attn_window": attn_window, "mla_dense": mla_dense,
+        "mla_moe": mla_moe, "ssm": ssm, "rglru": rglru, "dec": dec,
+    }[kind]
+
+
+def _decode_block(cfg, ctx, kind, ep_data):
+    def attn(p, x, c):
+        h, c2 = gqa_decode(p["attn"], apply_norm(p["ln1"], x, cfg), c, ctx, cfg)
+        x = x + h
+        x = x + mlp_decode(p["mlp"], apply_norm(p["ln2"], x, cfg), ctx, cfg)
+        return x, c2
+
+    def attn_window(p, x, c):
+        h, c2 = local_decode(p["attn"], apply_norm(p["ln1"], x, cfg), c, ctx, cfg)
+        x = x + h
+        x = x + mlp_decode(p["mlp"], apply_norm(p["ln2"], x, cfg), ctx, cfg)
+        return x, c2
+
+    def mla_dense(p, x, c):
+        h, c2 = mla_decode(p["attn"], apply_norm(p["ln1"], x, cfg), c, ctx, cfg)
+        x = x + h
+        x = x + mlp_decode(p["mlp"], apply_norm(p["ln2"], x, cfg), ctx, cfg)
+        return x, c2
+
+    def mla_moe(p, x, c):
+        h, c2 = mla_decode(p["attn"], apply_norm(p["ln1"], x, cfg), c, ctx, cfg)
+        x = x + h
+        y, _ = moe_decode(p["moe"], apply_norm(p["ln2"], x, cfg), ctx, cfg, ep_data)
+        return x + y, c2
+
+    def ssm(p, x, c):
+        h, c2 = ssm_decode(p["ssm"], apply_norm(p["ln1"], x, cfg), c, ctx, cfg)
+        return x + h, c2
+
+    def rglru(p, x, c):
+        h, c2 = rglru_decode(p["rec"], apply_norm(p["ln1"], x, cfg), c, ctx, cfg)
+        x = x + h
+        x = x + mlp_decode(p["mlp"], apply_norm(p["ln2"], x, cfg), ctx, cfg)
+        return x, c2
+
+    def dec(p, x, c):
+        h, c2self = gqa_decode(p["attn"], apply_norm(p["ln1"], x, cfg), c["self"], ctx, cfg)
+        x = x + h
+        x = x + cross_decode(p["cross"], apply_norm(p["lnx"], x, cfg), c["cross"], ctx, cfg)
+        x = x + mlp_decode(p["mlp"], apply_norm(p["ln2"], x, cfg), ctx, cfg)
+        return x, {"self": c2self, "cross": c["cross"]}
+
+    return {
+        "attn": attn, "attn_window": attn_window, "mla_dense": mla_dense,
+        "mla_moe": mla_moe, "ssm": ssm, "rglru": rglru, "dec": dec,
+    }[kind]
+
+
+def _hybrid_kind(k: str) -> str:
+    return "rglru" if k == "rglru" else "attn_window"
+
+
+# ---------------------------------------------------------------------------
+# step factories
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ServeBundle:
+    prefill: callable | None
+    decode: callable
+    param_spec: dict
+    cache_pspec: dict
+    batch_ax: object
+    ctx: MeshCtx
+
+
+def _sh(mesh, tree_ps):
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps), tree_ps,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+
+def make_serve_fns(cfg: ModelConfig, mesh, *, batch: int, max_len: int,
+                   enc_len: int = 1536) -> ServeBundle:
+    ctx = mesh_ctx(mesh)
+    sizes = mesh_sizes(mesh)
+    ep_data = sizes.get("data", 1)
+    spec = model_spec(cfg, ctx)
+    p_ps = pspecs(spec)
+    c_spec = cache_spec(cfg, mesh, batch, max_len, enc_len)
+    c_ps = pspecs(c_spec)
+    ba = batch_axes(mesh, batch)
+    plan = layer_plan(cfg)
+
+    # ---------------- prefill ----------------
+    def local_prefill(params, inputs):
+        tokens = inputs["tokens"]                       # (B_l, T/M)
+        x = embed_tokens(params["embed"], jnp.maximum(tokens, 0), ctx, cfg)
+        if "frontend" in inputs:
+            x = jnp.where((tokens < 0)[..., None], inputs["frontend"].astype(x.dtype), x)
+        memory = (
+            encode(params, inputs["enc"], ctx, cfg, remat=False)
+            if cfg.family == "encdec" else None
+        )
+        caches = {}
+        for gi, (kind, count, scanned) in enumerate(plan):
+            if count == 0:
+                continue
+            p = params[f"g{gi}"]
+            if kind == "hybrid_period":
+                fns = [
+                    _prefill_block(cfg, ctx, _hybrid_kind(k), ep_data, max_len, batch)
+                    for k in cfg.pattern
+                ]
+
+                def period_fn(xx, pp):
+                    cc = {}
+                    for i, f in enumerate(fns):
+                        xx, ci = f(pp[f"b{i}"], xx)
+                        cc[f"b{i}"] = ci
+                    return xx, cc
+
+                x, caches[f"g{gi}"] = jax.lax.scan(period_fn, x, p)
+            else:
+                fn = _prefill_block(cfg, ctx, kind, ep_data, max_len, batch, memory=memory)
+                if scanned:
+                    x, caches[f"g{gi}"] = jax.lax.scan(lambda xx, pp: fn(pp, xx), x, p)
+                elif count == 1:
+                    x, caches[f"g{gi}"] = fn(p, x)
+                else:
+                    cc = {}
+                    for i in range(count):
+                        x, cc[f"l{i}"] = fn(p[f"l{i}"], x)
+                    caches[f"g{gi}"] = cc
+        x = apply_norm(params["final_norm"], x, cfg)
+        if ctx.model_size > 1:
+            lasts = jax.lax.all_gather(x[:, -1:], ctx.m)    # (M, B_l, 1, d)
+            x_last = lasts[-1]
+        else:
+            x_last = x[:, -1:]
+        token = greedy_token(params["embed"], x_last, ctx, cfg)
+        return caches, token
+
+    # ---------------- decode ----------------
+    def local_decode_step(params, caches, tokens):
+        # (B_l, 1, d), replicated over 'model'
+        x = embed_tokens(params["embed"], tokens, ctx, cfg, seq_sharded=False)
+        new_caches = {}
+        for gi, (kind, count, scanned) in enumerate(plan):
+            if count == 0:
+                continue
+            p = params[f"g{gi}"]
+            c = caches[f"g{gi}"]
+            if kind == "hybrid_period":
+                fns = [
+                    _decode_block(cfg, ctx, _hybrid_kind(k), ep_data)
+                    for k in cfg.pattern
+                ]
+
+                def period_fn(xx, inp):
+                    pp, cc = inp
+                    c2 = {}
+                    for i, f in enumerate(fns):
+                        xx, ci = f(pp[f"b{i}"], xx, cc[f"b{i}"])
+                        c2[f"b{i}"] = ci
+                    return xx, c2
+
+                x, new_caches[f"g{gi}"] = jax.lax.scan(period_fn, x, (p, c))
+            else:
+                fn = _decode_block(cfg, ctx, kind, ep_data)
+                if scanned:
+                    def step_fn(xx, inp):
+                        pp, cc = inp
+                        return fn(pp, xx, cc)
+
+                    x, new_caches[f"g{gi}"] = jax.lax.scan(step_fn, x, (p, c))
+                elif count == 1:
+                    x, new_caches[f"g{gi}"] = fn(p, x, c)
+                else:
+                    cc2 = {}
+                    for i in range(count):
+                        x, cc2[f"l{i}"] = fn(p[f"l{i}"], x, c[f"l{i}"])
+                    new_caches[f"g{gi}"] = cc2
+        x = apply_norm(params["final_norm"], x, cfg)
+        token = greedy_token(params["embed"], x, ctx, cfg)
+        return token, new_caches
+
+    # input pspecs
+    in_tok_prefill = PartitionSpec(ba, "model")
+    prefill_in = {"tokens": in_tok_prefill}
+    if cfg.family == "encdec":
+        prefill_in["enc"] = PartitionSpec(ba, "model", None)
+    if cfg.frontend == "patch_stub":
+        prefill_in["frontend"] = PartitionSpec(ba, "model", None)
+    tok_ps = PartitionSpec(ba)
+
+    prefill_body = jax.shard_map(
+        local_prefill, mesh=mesh,
+        in_specs=(p_ps, prefill_in),
+        out_specs=(c_ps, tok_ps),
+        check_vma=False,
+    )
+    prefill = jax.jit(
+        prefill_body,
+        in_shardings=(_sh(mesh, p_ps), _sh(mesh, prefill_in)),
+        out_shardings=(_sh(mesh, c_ps), _sh(mesh, tok_ps)),
+    )
+
+    decode_body = jax.shard_map(
+        local_decode_step, mesh=mesh,
+        in_specs=(p_ps, c_ps, PartitionSpec(ba, None)),
+        out_specs=(tok_ps, c_ps),
+        check_vma=False,
+    )
+    decode = jax.jit(
+        decode_body,
+        in_shardings=(_sh(mesh, p_ps), _sh(mesh, c_ps), _sh(mesh, PartitionSpec(ba, None))),
+        out_shardings=(_sh(mesh, tok_ps), _sh(mesh, c_ps)),
+        donate_argnums=(1,),
+    )
+    return ServeBundle(
+        prefill=prefill, decode=decode, param_spec=spec,
+        cache_pspec=c_spec, batch_ax=ba, ctx=ctx,
+    )
+
+
+def abstract_cache(cfg: ModelConfig, mesh, batch: int, max_len: int, enc_len: int = 1536):
+    return abstract_params(cache_spec(cfg, mesh, batch, max_len, enc_len))

@@ -1,0 +1,121 @@
+"""Batch scheduler for serving: bucketed prefill + decode loop.
+
+Production inference needs a layer between raw step functions and requests:
+this one buckets requests by prompt length (one compiled prefill per bucket
+length — the standard bucketing trade against full continuous batching,
+noted in DESIGN.md), packs them into the fixed decode batch, runs the decode
+loop with a per-request done mask, and streams tokens out.  Underfull
+batches are padded with a copy of the first request (masked out of results).
+
+Throughput accounting (prefill tokens, decode steps, wall time) is returned
+for the serving example / benchmarks.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.serve.engine import make_serve_fns
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list            # token ids
+    max_new: int = 16
+
+
+@dataclass
+class Completion:
+    rid: int
+    tokens: list
+    finished: bool
+
+
+@dataclass
+class ServeStats:
+    requests: int = 0
+    prefill_tokens: int = 0
+    decode_steps: int = 0
+    wall_s: float = 0.0
+    batches: int = 0
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        return self.decode_steps / self.wall_s if self.wall_s else 0.0
+
+
+class BatchScheduler:
+    def __init__(self, cfg: ModelConfig, mesh, *, batch: int, max_len: int,
+                 eos_id: int = 0, enc_len: int = 32):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.batch = batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.enc_len = enc_len
+        self._engines = {}   # prompt_len -> ServeBundle
+
+    def _engine(self, prompt_len: int):
+        if prompt_len not in self._engines:
+            self._engines[prompt_len] = make_serve_fns(
+                self.cfg, self.mesh, batch=self.batch,
+                max_len=self.max_len, enc_len=self.enc_len,
+            )
+        return self._engines[prompt_len]
+
+    def run(self, params, requests: list[Request], *, extras=None) -> tuple[dict, ServeStats]:
+        """Serve all requests; returns ({rid: Completion}, stats)."""
+        stats = ServeStats(requests=len(requests))
+        t0 = time.time()
+        buckets: dict[int, list[Request]] = defaultdict(list)
+        for r in requests:
+            if len(r.prompt) >= self.max_len:
+                raise ValueError(f"prompt {r.rid} longer than max_len")
+            buckets[len(r.prompt)].append(r)
+
+        out: dict[int, Completion] = {}
+        for plen, reqs in sorted(buckets.items()):
+            for i in range(0, len(reqs), self.batch):
+                chunk = reqs[i : i + self.batch]
+                out.update(self._run_batch(params, chunk, plen, stats, extras))
+                stats.batches += 1
+        stats.wall_s = time.time() - t0
+        return out, stats
+
+    def _run_batch(self, params, chunk: list[Request], plen: int,
+                   stats: ServeStats, extras) -> dict:
+        sv = self._engine(plen)
+        B = self.batch
+        rows = chunk + [chunk[0]] * (B - len(chunk))     # pad with a copy
+        toks = np.stack([np.asarray(r.prompt, np.int32) for r in rows])
+        inputs = {"tokens": jnp.asarray(toks)}
+        if extras:
+            inputs.update(extras)
+        caches, tok = sv.prefill(params, inputs)
+        stats.prefill_tokens += plen * len(chunk)
+
+        max_new = max(r.max_new for r in chunk)
+        gen = [[int(t)] for t in np.asarray(tok)]
+        done = np.array([int(t) == self.eos_id for t in np.asarray(tok)])
+        for _ in range(max_new - 1):
+            if all(done[: len(chunk)]):
+                break
+            tok, caches = sv.decode(params, caches, tok[:, None])
+            stats.decode_steps += int((~done[: len(chunk)]).sum())
+            arr = np.asarray(tok)
+            for b in range(B):
+                if not done[b]:
+                    gen[b].append(int(arr[b]))
+                    if int(arr[b]) == self.eos_id or len(gen[b]) >= rows[b].max_new:
+                        done[b] = True
+        return {
+            r.rid: Completion(r.rid, gen[b][: r.max_new],
+                              finished=bool(done[b]))
+            for b, r in enumerate(chunk)
+        }

@@ -1,0 +1,11 @@
+"""Training loop layer: shard_map step factory + state init."""
+from .step import (  # noqa: F401
+    TrainBundle,
+    batch_axes,
+    batch_pspec_tree,
+    batch_shapes,
+    init_train_state,
+    make_train_step,
+    mesh_ctx,
+    mesh_sizes,
+)

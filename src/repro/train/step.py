@@ -1,0 +1,256 @@
+"""Training-step factory: shard_map body + jit boundary with explicit shardings.
+
+``make_train_step(cfg, mesh, opt_cfg)`` returns a jitted
+``step(params, opt_state, batch) -> (params, opt_state, metrics)`` whose
+in/out shardings come from the single `P`-spec source of truth
+(repro.models.spec), so the multi-pod dry-run can `.lower()` it against
+`ShapeDtypeStruct`s with zero allocation.
+
+Loss/grad correctness under the mesh (see DESIGN.md §4):
+
+* the per-rank objective is ``(ce_mean_local + coef·aux) / world`` — summing
+  it over ALL ranks equals ``mean_ce + coef·mean_pods(aux)`` exactly (ce is
+  replicated across 'model' by the distributed softmax, aux across the
+  ('data','model') EP world), so
+* the gradient of the global objective w.r.t. each leaf is the psum of local
+  grads over exactly the leaf's replication axes — which is what
+  `repro.optim.sync_gradient` performs (reduce-scatter under ZeRO-1).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.models.backbone import ce_loss, forward, model_spec
+from repro.models.config import ModelConfig
+from repro.models.layers import MeshCtx
+from repro.models.spec import abstract_params, init_params, pspecs, tree_map_p
+from repro.optim import (
+    OptConfig,
+    apply_updates,
+    build_plan,
+    init_opt_state,
+    opt_state_spec,
+)
+from repro.optim.compression import (
+    CompressionConfig,
+    error_spec,
+    init_error_state,
+    sync_all,
+)
+
+
+def mesh_ctx(mesh) -> MeshCtx:
+    names = mesh.axis_names
+    return MeshCtx(
+        model_size=mesh.shape["model"],
+        data_axes=tuple(a for a in names if a != "model"),
+        data_size=mesh.shape.get("data", 1),
+    )
+
+
+def mesh_sizes(mesh) -> dict:
+    return {a: mesh.shape[a] for a in mesh.axis_names}
+
+
+def batch_axes(mesh, batch: int):
+    """Mesh axes to shard the batch dim over ('pod'+'data' when divisible)."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    world = int(np.prod([mesh.shape[a] for a in dp]))
+    if batch % world == 0:
+        return dp
+    if "data" in dp and batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return None  # replicate (e.g. long_500k batch=1)
+
+
+@dataclass(frozen=True)
+class TrainBundle:
+    step: callable            # jitted (params, opt, batch) -> (params, opt, metrics)
+    param_spec: dict          # P tree
+    opt_spec: dict            # P tree
+    in_shardings: tuple
+    batch_pspecs: dict
+    ctx: MeshCtx
+
+    def abstract_args(self, batch_shapes: dict):
+        """ShapeDtypeStructs for .lower() — nothing allocated."""
+        return (
+            abstract_params(self.param_spec),
+            abstract_params(self.opt_spec),
+            {k: jax.ShapeDtypeStruct(*v) for k, v in batch_shapes.items()},
+        )
+
+
+def batch_pspec_tree(cfg: ModelConfig, mesh, batch: int) -> dict:
+    ba = batch_axes(mesh, batch)
+    tree = {
+        "tokens": PartitionSpec(ba, "model"),
+        "labels": PartitionSpec(ba, None),
+    }
+    if cfg.family == "encdec":
+        tree["enc"] = PartitionSpec(ba, "model", None)
+    if cfg.frontend == "patch_stub":
+        tree["frontend"] = PartitionSpec(ba, "model", None)
+    return tree
+
+
+def batch_shapes(cfg: ModelConfig, batch: int, seq: int, enc_len: int = 1536) -> dict:
+    shapes = {
+        "tokens": ((batch, seq), jnp.int32),
+        "labels": ((batch, seq), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        shapes["enc"] = ((batch, enc_len, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "patch_stub":
+        shapes["frontend"] = ((batch, seq, cfg.d_model), jnp.bfloat16)
+    return shapes
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    mesh,
+    opt_cfg: OptConfig,
+    *,
+    batch: int,
+    aux_coef: float = 1e-3,
+    remat: bool = True,
+    microbatch: int = 1,
+    compression: CompressionConfig | None = None,
+) -> TrainBundle:
+    """microbatch > 1 = gradient accumulation: the local batch is processed
+    in `microbatch` sequential slices under lax.scan, shrinking activation
+    memory ~linearly at the cost of one f32 grad accumulator per leaf.
+    compression = error-feedback top-k gradient compression over 'data'
+    (repro.optim.compression).  Both are §Perf levers (EXPERIMENTS.md)."""
+    ctx = mesh_ctx(mesh)
+    sizes = mesh_sizes(mesh)
+    world = int(np.prod(list(sizes.values())))
+    spec = model_spec(cfg, ctx)
+    plan = build_plan(spec, mesh.axis_names, sizes, opt_cfg)
+    o_spec = opt_state_spec(spec, plan, sizes, opt_cfg)
+    ccfg = compression or CompressionConfig()
+    if ccfg.enabled:
+        o_spec["err"] = error_spec(spec, plan, ccfg)
+    p_ps, o_ps = pspecs(spec), pspecs(o_spec)
+    b_ps = batch_pspec_tree(cfg, mesh, batch)
+    ep_data = sizes.get("data", 1)
+
+    def local_step(params, opt_state, batch_):
+        def objective(params, mb):
+            x, aux = forward(
+                params,
+                mb["tokens"],
+                ctx,
+                cfg,
+                ep_data_size=ep_data,
+                frontend_sp=mb.get("frontend"),
+                enc_embeds_sp=mb.get("enc"),
+                remat=remat,
+            )
+            ce = ce_loss(params["embed"], x, mb["labels"], ctx, cfg)
+            return (ce + aux_coef * aux) / (world * microbatch), (ce, aux)
+
+        if microbatch == 1:
+            (_, (ce, aux)), grads = jax.value_and_grad(
+                objective, has_aux=True)(params, batch_)
+        else:
+            stacked = {
+                k: v.reshape((microbatch, v.shape[0] // microbatch) + v.shape[1:])
+                for k, v in batch_.items()
+            }
+
+            def mb_step(carry, mb):
+                acc, ce_a, aux_a = carry
+                (_, (ce, aux)), g = jax.value_and_grad(
+                    objective, has_aux=True)(params, mb)
+                acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc, g)
+                return (acc, ce_a + ce / microbatch, aux_a + aux / microbatch), None
+
+            zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            (grads, ce, aux), _ = jax.lax.scan(
+                mb_step, (zeros, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                stacked,
+            )
+        if ccfg.enabled:
+            grads, new_err, _ledger = sync_all(
+                grads, opt_state["err"], plan, opt_cfg, ccfg
+            )
+            new_params, new_opt, om = apply_updates(
+                grads, params, opt_state, plan, opt_cfg, mesh.axis_names,
+                presynced=True,
+            )
+            new_opt["err"] = new_err
+        else:
+            new_params, new_opt, om = apply_updates(
+                grads, params, opt_state, plan, opt_cfg, mesh.axis_names
+            )
+        metrics = {
+            "loss": jax.lax.psum(ce / world, mesh.axis_names),
+            "aux": jax.lax.psum(aux / world, mesh.axis_names),
+            "grad_norm": om["grad_norm"],
+            "lr": om["lr"],
+        }
+        return new_params, new_opt, metrics
+
+    m_ps = {k: PartitionSpec() for k in ("loss", "aux", "grad_norm", "lr")}
+    body = jax.shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(p_ps, o_ps, b_ps),
+        out_specs=(p_ps, o_ps, m_ps),
+        check_vma=False,
+    )
+    sh = lambda tree: jax.tree.map(  # noqa: E731
+        lambda ps: NamedSharding(mesh, ps), tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+    step = jax.jit(
+        body,
+        in_shardings=(sh(p_ps), sh(o_ps), sh(b_ps)),
+        out_shardings=(sh(p_ps), sh(o_ps), sh(m_ps)),
+        donate_argnums=(0, 1),
+    )
+    return TrainBundle(
+        step=step, param_spec=spec, opt_spec=o_spec,
+        in_shardings=(sh(p_ps), sh(o_ps), sh(b_ps)), batch_pspecs=b_ps, ctx=ctx,
+    )
+
+
+def init_train_state(bundle: TrainBundle, cfg: ModelConfig, mesh, opt_cfg: OptConfig,
+                     seed=0, compression: CompressionConfig | None = None):
+    """Materialize (params, opt_state) on the mesh (smoke tests / real runs).
+
+    Params are initialized globally then sharded; the optimizer state is
+    built *inside* shard_map so ZeRO-1 slices land on their owning ranks.
+    """
+    sizes = mesh_sizes(mesh)
+    spec = bundle.param_spec
+    plan = build_plan(spec, mesh.axis_names, sizes, opt_cfg)
+    p_ps, o_ps = pspecs(spec), pspecs(bundle.opt_spec)
+    sh = lambda tree_ps: jax.tree.map(  # noqa: E731
+        lambda ps: NamedSharding(mesh, ps), tree_ps,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+    ccfg = compression or CompressionConfig()
+
+    def build_opt(p):
+        st = init_opt_state(p, plan, opt_cfg)
+        if ccfg.enabled:
+            st["err"] = init_error_state(p, plan, ccfg)
+        return st
+
+    params = jax.device_put(init_params(spec, jax.random.PRNGKey(seed)), sh(p_ps))
+    opt_init = jax.jit(
+        jax.shard_map(
+            build_opt,
+            mesh=mesh, in_specs=(p_ps,), out_specs=o_ps, check_vma=False,
+        ),
+        out_shardings=sh(o_ps),
+    )
+    return params, opt_init(params)

@@ -1,0 +1,69 @@
+"""Baseline scheme correctness (PinSketch, D.Digest, Graphene, PinSketch/WP)."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import (
+    IBF,
+    ddigest_reconcile,
+    graphene_reconcile,
+    pinsketch_encode,
+    pinsketch_decode,
+    pinsketch_reconcile,
+    pinsketch_wp_reconcile,
+)
+from repro.core.simdata import make_pair
+
+
+def _td(a, b):
+    return set(int(x) for x in a) ^ set(int(x) for x in b)
+
+
+@pytest.mark.parametrize("d", [0, 1, 5, 20])
+def test_pinsketch(d):
+    rng = np.random.default_rng(d)
+    a, b = make_pair(3000, d, rng)
+    r = pinsketch_reconcile(a, b, t=max(d, 1) + 2)
+    assert r.success and r.diff == _td(a, b)
+    assert r.bytes_sent == ((max(d, 1) + 2) * 32 + 7) // 8
+
+
+def test_pinsketch_overload_detected():
+    rng = np.random.default_rng(5)
+    a, b = make_pair(3000, 30, rng)
+    r = pinsketch_reconcile(a, b, t=10)  # d > t: must not silently succeed
+    assert not r.success
+
+
+def test_ibf_peel_roundtrip():
+    rng = np.random.default_rng(2)
+    a, b = make_pair(5000, 25, rng)
+    ibf_a = IBF(80, 4, seed=1)
+    ibf_a.insert_all(a)
+    ibf_b = IBF(80, 4, seed=1)
+    ibf_b.insert_all(b)
+    ok, rec = ibf_a.subtract(ibf_b).peel()
+    assert ok and rec == _td(a, b)
+
+
+@pytest.mark.parametrize("d", [5, 50, 300])
+def test_ddigest(d):
+    rng = np.random.default_rng(d)
+    a, b = make_pair(20000, d, rng)
+    r = ddigest_reconcile(a, b, d_plan=int(1.38 * d) + 2)
+    assert r.success and r.diff == _td(a, b)
+
+
+@pytest.mark.parametrize("d", [10, 100])
+def test_graphene(d):
+    rng = np.random.default_rng(d)
+    a, b = make_pair(20000, d, rng)
+    r = graphene_reconcile(a, b, d_plan=int(1.38 * d) + 2)
+    assert r.success and r.diff == _td(a, b)
+
+
+def test_pinsketch_wp():
+    rng = np.random.default_rng(9)
+    a, b = make_pair(20000, 60, rng)
+    r = pinsketch_wp_reconcile(a, b, d_plan=60, t=13)
+    assert r.success and r.diff == _td(a, b)
+    assert r.rounds <= 3

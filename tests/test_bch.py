@@ -1,0 +1,83 @@
+"""BCH sketch codec: roundtrip, linearity, overload detection, batched parity."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bch import (
+    BCHCode,
+    batched_decode,
+    decode_sketch,
+    sketch_from_positions,
+    sketch_xor,
+)
+
+
+@pytest.mark.parametrize("n,t", [(63, 8), (127, 13), (255, 11), (511, 6), (1023, 17)])
+def test_roundtrip(n, t):
+    rng = np.random.default_rng(n + t)
+    code = BCHCode(n, t)
+    for _ in range(15):
+        d = int(rng.integers(0, t + 1))
+        diff = rng.choice(n, size=d, replace=False)
+        ok, rec = decode_sketch(code, sketch_from_positions(code, diff))
+        assert ok
+        assert set(rec.tolist()) == set(diff.tolist())
+
+
+@pytest.mark.parametrize("n,t", [(63, 8), (127, 13)])
+def test_overload_detected(n, t):
+    """> t errors must be reported as failure (w.h.p.), never mis-decoded."""
+    rng = np.random.default_rng(7)
+    code = BCHCode(n, t)
+    silent_wrong = 0
+    for _ in range(30):
+        diff = rng.choice(n, size=t + 2 + int(rng.integers(0, 5)), replace=False)
+        ok, rec = decode_sketch(code, sketch_from_positions(code, diff))
+        if ok and set(rec.tolist()) != set(diff.tolist()):
+            silent_wrong += 1
+    assert silent_wrong == 0
+
+
+def test_linearity():
+    code = BCHCode(127, 9)
+    rng = np.random.default_rng(0)
+    pa = rng.choice(127, size=20, replace=False)
+    pb = rng.choice(127, size=20, replace=False)
+    sym = np.array(sorted(set(pa.tolist()) ^ set(pb.tolist())))
+    lhs = sketch_xor(sketch_from_positions(code, pa), sketch_from_positions(code, pb))
+    assert (lhs == sketch_from_positions(code, sym)).all()
+
+
+@given(st.integers(min_value=0, max_value=11), st.integers(min_value=0, max_value=2**31))
+@settings(max_examples=60, deadline=None)
+def test_roundtrip_property(d, seed):
+    code = BCHCode(255, 11)
+    rng = np.random.default_rng(seed)
+    diff = rng.choice(255, size=d, replace=False)
+    ok, rec = decode_sketch(code, sketch_from_positions(code, diff))
+    assert ok and set(rec.tolist()) == set(diff.tolist())
+
+
+@pytest.mark.parametrize("n,t", [(63, 8), (127, 13), (255, 9)])
+def test_batched_matches_scalar(n, t):
+    rng = np.random.default_rng(n)
+    code = BCHCode(n, t)
+    sketches, expect = [], []
+    for _ in range(40):
+        d = int(rng.integers(0, t + 4))  # includes overload rows
+        diff = rng.choice(n, size=d, replace=False)
+        sketches.append(sketch_from_positions(code, diff))
+        expect.append(decode_sketch(code, sketches[-1]))
+    ok, positions = batched_decode(code, np.stack(sketches))
+    for i, (ok_i, pos_i) in enumerate(expect):
+        assert ok[i] == ok_i
+        assert set(positions[i].tolist()) == set(pos_i.tolist())
+
+
+def test_zero_sketch():
+    code = BCHCode(127, 13)
+    ok, rec = decode_sketch(code, np.zeros(13, dtype=np.int64))
+    assert ok and len(rec) == 0
+    okb, posb = batched_decode(code, np.zeros((3, 13), dtype=np.int64))
+    assert okb.all() and all(len(p) == 0 for p in posb)

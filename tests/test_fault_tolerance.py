@@ -1,0 +1,185 @@
+"""Checkpoint manager, PBS manifest sync, data ledger, elastic membership."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint import (
+    latest_step,
+    load_manifest,
+    reconcile_manifests,
+    restore_checkpoint,
+    save_checkpoint,
+    sync_checkpoint,
+)
+from repro.data import DataConfig, Ledger, global_batch, host_shard, step_sample_ids
+from repro.launch.elastic import ElasticConfig, Membership, NodeState, viable_grid
+
+
+def _tree(rng, scale=1.0):
+    return {
+        "emb": {"w": (rng.normal(size=(2000, 64)) * scale).astype(np.float32)},
+        "layers": {"q": rng.normal(size=(3, 64, 64)).astype(np.float32)},
+        "step": np.int32(7),
+    }
+
+
+# ---------------------------------------------------------------------------
+# checkpoints
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tree = _tree(rng)
+    save_checkpoint(tmp_path, 5, tree)
+    out, step = restore_checkpoint(tmp_path)
+    assert step == 5
+    np.testing.assert_array_equal(out["emb"]["w"], tree["emb"]["w"])
+    np.testing.assert_array_equal(out["layers"]["q"], tree["layers"]["q"])
+    assert out["step"] == 7
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    rng = np.random.default_rng(0)
+    for s in range(6):
+        save_checkpoint(tmp_path, s, _tree(rng), keep=3)
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.iterdir()
+                   if p.name.startswith("step_"))
+    assert steps == [3, 4, 5]
+    assert latest_step(tmp_path) == 5
+
+
+def test_checkpoint_bfloat16_leaves(tmp_path):
+    import jax.numpy as jnp
+
+    tree = {"w": np.asarray(jnp.ones((17, 5), jnp.bfloat16) * 1.5)}
+    save_checkpoint(tmp_path, 1, tree)
+    out, _ = restore_checkpoint(tmp_path)
+    assert str(out["w"].dtype) == "bfloat16"
+    np.testing.assert_array_equal(np.asarray(out["w"], np.float32), 1.5)
+
+
+def test_pbs_manifest_sync_moves_only_changed_shards(tmp_path):
+    rng = np.random.default_rng(1)
+    tree = {"w": rng.normal(size=(4_000_000,)).astype(np.float32)}  # ~16 MB, 4 shards
+    save_checkpoint(tmp_path / "src", 1, tree)
+    r0 = sync_checkpoint(tmp_path / "src", tmp_path / "dst")
+    assert r0.shards_fetched == 4
+
+    tree["w"] = tree["w"].copy()
+    tree["w"][0] += 1.0                      # touches exactly one 4MiB block
+    save_checkpoint(tmp_path / "src", 2, tree)
+    r = sync_checkpoint(tmp_path / "src", tmp_path / "dst")
+    assert r.success and r.shards_fetched == 1
+    assert r.payload_bytes <= 4 * 2**20 + 1024
+    assert r.pbs_bytes < r.naive_bytes       # beats shipping the manifest
+    out, step = restore_checkpoint(tmp_path / "dst")
+    assert step == 2
+    np.testing.assert_array_equal(out["w"], tree["w"])
+
+
+def test_manifest_reconcile_identical_is_free(tmp_path):
+    rng = np.random.default_rng(2)
+    tree = _tree(rng)
+    save_checkpoint(tmp_path / "a", 3, tree)
+    save_checkpoint(tmp_path / "b", 3, tree)
+    ma = load_manifest(tmp_path / "a", 3)
+    mb = load_manifest(tmp_path / "b", 3)
+    fetch, delete, res = reconcile_manifests(ma, mb)
+    assert fetch == [] and delete == [] and res.success
+
+
+def test_checkpoint_atomicity_no_tmp_left(tmp_path):
+    rng = np.random.default_rng(3)
+    save_checkpoint(tmp_path, 1, _tree(rng))
+    assert not [p for p in tmp_path.iterdir() if p.name.startswith(".tmp")]
+
+
+# ---------------------------------------------------------------------------
+# data pipeline + ledger
+# ---------------------------------------------------------------------------
+
+
+def test_data_determinism_and_sharding():
+    cfg = DataConfig(vocab=1000, seq_len=16, global_batch=32)
+    b1, b2 = global_batch(4, cfg), global_batch(4, cfg)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 1000
+    ids = step_sample_ids(4, cfg)
+    parts = [host_shard(ids, h, 4) for h in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), ids)
+    # rescale: 8 hosts partition the same ids
+    parts8 = [host_shard(ids, h, 8) for h in range(8)]
+    np.testing.assert_array_equal(np.concatenate(parts8), ids)
+
+
+def test_ledger_reconcile_exactly_once():
+    cfg = DataConfig(vocab=100, seq_len=4, global_batch=64)
+    fleet, node = Ledger(), Ledger()
+    for s in range(30):
+        ids = step_sample_ids(s, cfg)
+        fleet.record(ids)
+        if s < 25:
+            node.record(ids)
+    missing, extra, res = node.reconcile(fleet)
+    assert res.success and len(missing) == 5 * 64 and not extra
+    node.merge(missing)
+    assert node.consumed == fleet.consumed
+    assert res.bytes_sent + res.estimator_bytes < 4 * len(fleet.consumed)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_common=st.integers(0, 300),
+    n_miss=st.integers(0, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ledger_reconcile_property(n_common, n_miss, seed):
+    rng = np.random.default_rng(seed)
+    univ = rng.choice(np.arange(1, 1 << 20, dtype=np.uint32),
+                      size=n_common + n_miss, replace=False)
+    fleet, node = Ledger(), Ledger()
+    fleet.record(univ)
+    node.record(univ[: n_common])
+    missing, extra, res = node.reconcile(fleet, seed=seed & 0xFFFF)
+    assert res.success
+    assert missing == set(int(x) for x in univ[n_common:])
+    assert not extra
+
+
+# ---------------------------------------------------------------------------
+# elastic membership
+# ---------------------------------------------------------------------------
+
+
+def test_membership_failure_and_rejoin():
+    t = [0.0]
+    m = Membership([0, 1, 2, 3], ElasticConfig(), clock=lambda: t[0])
+    for _ in range(12):
+        t[0] += 1.0
+        for n in (0, 1, 3):
+            m.heartbeat(n, step_time=1.0)
+        m.sweep()
+    assert m.nodes[2].state == NodeState.DEAD
+    assert m.alive() == [0, 1, 3]
+    gen = m.generation
+    m.heartbeat(2)                      # rejoins
+    assert m.nodes[2].state == NodeState.JOINING
+    m.admit(2)
+    assert m.alive() == [0, 1, 2, 3] and m.generation == gen + 1
+
+
+def test_straggler_detection():
+    t = [0.0]
+    m = Membership(range(8), ElasticConfig(straggler_factor=1.5), clock=lambda: t[0])
+    for _ in range(10):
+        t[0] += 1.0
+        for n in range(8):
+            m.heartbeat(n, step_time=2.0 if n == 5 else 1.0)
+    assert m.stragglers() == [5]
+
+
+@pytest.mark.parametrize("n,expect", [(256, (16, 16)), (255, (15, 16)), (17, (1, 16)), (8, (1, 8))])
+def test_viable_grid(n, expect):
+    assert viable_grid(n, 16) == expect

@@ -1,0 +1,66 @@
+"""Field-arithmetic unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.gf2m import get_field, gf32_inv, gf32_mul, gf32_pow
+
+
+@pytest.mark.parametrize("m", [6, 7, 8, 10, 11])
+def test_field_axioms(m):
+    gf = get_field(m)
+    rng = np.random.default_rng(m)
+    a = rng.integers(1, gf.n + 1, size=200)
+    b = rng.integers(1, gf.n + 1, size=200)
+    c = rng.integers(1, gf.n + 1, size=200)
+    assert (gf.mul(a, gf.mul(b, c)) == gf.mul(gf.mul(a, b), c)).all()
+    assert (gf.mul(a, b) == gf.mul(b, a)).all()
+    assert (gf.mul(a, gf.inv(a)) == 1).all()
+    assert (gf.mul(a, b ^ c) == (gf.mul(a, b) ^ gf.mul(a, c))).all()
+    assert (gf.mul(a, 0) == 0).all()
+    assert (gf.mul(a, 1) == a).all()
+
+
+@given(st.integers(min_value=1, max_value=127), st.integers(min_value=1, max_value=127))
+@settings(max_examples=200, deadline=None)
+def test_mult_matrix_agrees_with_table_mul(a, b):
+    gf = get_field(7)
+    prod_table = int(gf.mul(a, b))
+    prod_mat = int(gf.from_bits(gf.to_bits(a) @ gf.mult_matrix(b) % 2))
+    assert prod_table == prod_mat
+
+
+@pytest.mark.parametrize("m", [6, 8, 11])
+def test_bit_roundtrip(m):
+    gf = get_field(m)
+    vals = np.arange(gf.n + 1)
+    assert (gf.from_bits(gf.to_bits(vals)) == vals).all()
+
+
+def test_gf32_axioms():
+    rng = np.random.default_rng(0)
+    a = rng.integers(1, 1 << 32, size=300, dtype=np.uint64)
+    b = rng.integers(1, 1 << 32, size=300, dtype=np.uint64)
+    c = rng.integers(1, 1 << 32, size=300, dtype=np.uint64)
+    assert (gf32_mul(a, gf32_mul(b, c)) == gf32_mul(gf32_mul(a, b), c)).all()
+    assert (gf32_mul(a, gf32_inv(a)) == 1).all()
+    assert (gf32_pow(a, (1 << 32) - 1) == 1).all()
+    assert (gf32_mul(a, b ^ c) == (gf32_mul(a, b) ^ gf32_mul(a, c))).all()
+
+
+def test_syndrome_matrix_matches_direct():
+    from repro.core.bch import BCHCode, sketch_from_positions
+
+    code = BCHCode(127, 5)
+    gf = code.field
+    P = gf.syndrome_matrix(code.t)  # (n, t*m)
+    rng = np.random.default_rng(3)
+    for _ in range(10):
+        pos = rng.choice(code.n, size=rng.integers(0, 9), replace=False)
+        bitmap = np.zeros(code.n, dtype=np.int64)
+        bitmap[pos] = 1
+        via_mat = (bitmap @ P) % 2
+        syn = gf.from_bits(via_mat.reshape(code.t, gf.m))
+        direct = sketch_from_positions(code, pos)
+        assert (syn == direct).all()

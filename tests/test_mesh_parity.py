@@ -1,0 +1,117 @@
+"""Distribution correctness: the SAME model computed on different meshes must
+produce the same losses, gradients and tokens (fp32, deterministic data).
+
+Runs each mesh in a subprocess (the device count is locked at first jax init,
+so the 8 fake host devices need a fresh process)."""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SCRIPT = r"""
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+arch, data, model, zero1 = sys.argv[1], int(sys.argv[2]), int(sys.argv[3]), sys.argv[4] == "1"
+import jax, jax.numpy as jnp, numpy as np
+
+# force fp32 params so cross-mesh reduction order is the only difference
+import repro.models.spec as spec_mod
+import repro.train.step as ts
+import repro.serve.engine as se
+from repro.models.backbone import model_spec as _orig_spec
+from repro.models.spec import P, tree_map_p
+
+def f32_spec(cfg, ctx):
+    return tree_map_p(
+        lambda p: P(p.shape, p.axes, p.init, p.scale,
+                    jnp.float32 if p.dtype == jnp.bfloat16 else p.dtype,
+                    p.logical),
+        _orig_spec(cfg, ctx))
+ts.model_spec = f32_spec
+se.model_spec = f32_spec
+
+from repro.configs import get_smoke_config
+from repro.optim import OptConfig
+from repro.train import make_train_step, init_train_state
+from repro.serve import make_serve_fns
+
+mesh = jax.make_mesh((data, model), ("data", "model"),
+                     devices=jax.devices()[: data * model],
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = get_smoke_config(arch)
+ocfg = OptConfig(warmup=2, total_steps=10, zero1=zero1)
+B, T, ENC = 4, 64, 32
+bundle = make_train_step(cfg, mesh, ocfg, batch=B)
+params, opt = init_train_state(bundle, cfg, mesh, ocfg, seed=0)
+rng = np.random.default_rng(0)
+toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, T)), jnp.int32)
+batch = {"tokens": toks, "labels": toks}
+if cfg.family == "encdec":
+    batch["enc"] = jnp.asarray(rng.normal(size=(B, ENC, cfg.d_model)), jnp.float32)
+if cfg.frontend == "patch_stub":
+    batch["tokens"] = batch["tokens"].at[:, : cfg.n_frontend_tokens].set(-1)
+    batch["frontend"] = jnp.asarray(rng.normal(size=(B, T, cfg.d_model)), jnp.float32)
+
+# serve parity on the UNTRAINED params (identical across meshes -> tokens
+# must match exactly; after training, params drift by fp32 reduction order
+# and near-tie argmaxes flip)
+sv = make_serve_fns(cfg, mesh, batch=B, max_len=T, enc_len=ENC)
+inputs = {k: v for k, v in batch.items() if k in ("tokens", "enc", "frontend")}
+caches, tok = sv.prefill(params, inputs)
+seq = [np.asarray(tok).tolist()]
+for _ in range(3):
+    tok, caches = sv.decode(params, caches, tok[:, None])
+    seq.append(np.asarray(tok).tolist())
+
+losses, gnorms = [], []
+for _ in range(3):
+    params, opt, m = bundle.step(params, opt, batch)
+    losses.append(float(m["loss"])); gnorms.append(float(m["grad_norm"]))
+print("RESULT" + json.dumps({"losses": losses, "gnorms": gnorms, "tokens": seq}))
+"""
+
+
+def _run(arch, data, model, zero1=False):
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT, arch, str(data), str(model), "1" if zero1 else "0"],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT")][-1]
+    return json.loads(line[len("RESULT"):])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "deepseek-v3-671b", "mamba2-780m",
+                                  "recurrentgemma-2b", "whisper-tiny"])
+def test_mesh_parity(arch):
+    ref = _run(arch, 1, 1)
+    tp = _run(arch, 2, 4)
+    # fp32 reduction order differs across meshes (LSE-combined decode,
+    # chunked attention pairs, flat optimizer updates); drift compounds.
+    np.testing.assert_allclose(ref["losses"], tp["losses"], rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(ref["gnorms"], tp["gnorms"], rtol=2e-2, atol=2e-2)
+    # Greedy argmax over random-init logits sits on near-ties, so a 1e-6
+    # cross-mesh reduction-order difference (LSE-combined decode) can flip a
+    # token, after which that row's continuation legitimately diverges.  The
+    # guaranteed-equal part is the prefill next-token (forward math, already
+    # bounded by the loss check above); incremental-decode correctness is
+    # covered exactly per-mesh by tests/test_serve_consistency.py.
+    # MoE capacity dropping is topology-dependent by design (per-rank
+    # dispatch buffers), so one dropped-token row may differ there.
+    mism = sum(a != b for a, b in zip(ref["tokens"][0], tp["tokens"][0]))
+    allow = 1 if arch.startswith("deepseek") else 0
+    assert mism <= allow, (ref["tokens"][0], tp["tokens"][0])
+
+
+@pytest.mark.slow
+def test_zero1_matches_plain_adamw():
+    plain = _run("qwen2-1.5b", 4, 2, zero1=False)
+    z1 = _run("qwen2-1.5b", 4, 2, zero1=True)
+    np.testing.assert_allclose(plain["losses"], z1["losses"], rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(plain["gnorms"], z1["gnorms"], rtol=2e-4, atol=2e-4)
+    assert plain["tokens"] == z1["tokens"]

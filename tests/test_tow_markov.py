@@ -1,0 +1,113 @@
+"""ToW estimator statistics + Markov-framework validation against the paper."""
+import numpy as np
+import pytest
+
+from repro.core import markov
+from repro.core.hashing import derive_seed
+from repro.core.simdata import make_pair
+from repro.core.tow import estimate_d, planned_d, tow_sketches
+
+
+def test_tow_unbiased_and_variance():
+    """E[d_hat] = d, Var[d_hat] = (2d^2 - 2d)/ell (paper App. A)."""
+    rng = np.random.default_rng(0)
+    d, ell, trials = 64, 32, 120
+    ests = []
+    for i in range(trials):
+        a, b = make_pair(2000, d, rng)
+        sa = tow_sketches(a, derive_seed(900, i), ell)
+        sb = tow_sketches(b, derive_seed(900, i), ell)
+        ests.append(estimate_d(sa, sb))
+    mean = float(np.mean(ests))
+    var = float(np.var(ests))
+    exp_var = (2 * d * d - 2 * d) / ell
+    se = np.sqrt(exp_var / trials)
+    assert abs(mean - d) < 5 * se, (mean, d, se)
+    assert 0.4 * exp_var < var < 2.2 * exp_var, (var, exp_var)
+
+
+def test_gamma_inflation_covers():
+    """Pr[d <= 1.38 * d_hat] >= 0.99 with ell = 128 (paper §6.2)."""
+    rng = np.random.default_rng(1)
+    d, trials, covered = 100, 60, 0
+    for i in range(trials):
+        a, b = make_pair(3000, d, rng)
+        sa = tow_sketches(a, derive_seed(7, i))
+        sb = tow_sketches(b, derive_seed(7, i))
+        covered += d <= planned_d(estimate_d(sa, sb))
+    assert covered >= trials - 2  # ~99% coverage, allow tiny slack
+
+
+def test_transition_matrix_exact_isolation_prob():
+    """M(i, 0) must equal the falling-factorial isolation probability."""
+    n = 127
+    M = markov.transition_matrix(n, 13)
+    for i in [2, 5, 8, 13]:
+        exact = np.prod([(n - k) / n for k in range(i)])
+        assert abs(M[i, 0] - exact) < 1e-12
+
+
+def test_transition_matrix_vs_monte_carlo():
+    rng = np.random.default_rng(2)
+    n, x, trials = 127, 6, 40000
+    M = markov.transition_matrix(n, 13)
+    counts = np.zeros(14)
+    for _ in range(trials):
+        bins = rng.integers(0, n, size=x)
+        _, c = np.unique(bins, return_counts=True)
+        counts[int(c[c > 1].sum())] += 1
+    emp = counts / trials
+    assert np.abs(emp - M[x, :14]).max() < 0.01
+
+
+def test_paper_ideal_case_probability():
+    """§1.3.1: d=5, n=255 -> ideal case prob 0.96."""
+    p = np.prod([(255 - k) / 255 for k in range(5)])
+    assert round(p, 2) == 0.96
+    assert abs(markov.transition_matrix(255, 5)[5, 0] - p) < 1e-12
+
+
+def test_round_fractions_match_paper():
+    """§5.3: fractions 0.962 / 0.0380 / 3.61e-4 / 2.86e-6 at (127, 13)."""
+    f = markov.expected_round_fractions(127, 13, 1000, 200)
+    assert abs(f[0] - 0.962) < 2e-3
+    assert abs(f[1] - 0.0380) < 2e-3
+    assert abs(f[2] - 3.61e-4) < 5e-5
+    assert abs(f[3] - 2.86e-6) < 5e-7
+
+
+def test_table1_high_t_cells():
+    """Table 1 cells where the x > t path is negligible match within ~1.5%."""
+    for (n, t), paper in [((63, 17), 0.958), ((127, 17), 0.996), ((63, 16), 0.957)]:
+        ours = markov.overall_lower_bound(n, t, 1000, 200, 3)
+        assert abs(ours - paper) < 0.015, ((n, t), ours, paper)
+
+
+def test_split_convention_bounds_sane():
+    """Split model dominates truncate and both live in [−1, 1]."""
+    for n, t in [(127, 10), (255, 8), (511, 13)]:
+        lo = markov.overall_lower_bound(n, t, 1000, 200, 3, "truncate")
+        hi = markov.overall_lower_bound(n, t, 1000, 200, 3, "split")
+        assert -1.0 <= lo <= hi <= 1.0
+
+
+def test_optimizer_feasible_and_bracket():
+    """r=3 optimum lands in the paper's bracket; paper reports 318 bits."""
+    n_s, t_s, lb_s, comm_s = markov.optimize_parameters(1000, 5, 3, 0.99, convention="split")
+    n_t, t_t, lb_t, comm_t = markov.optimize_parameters(1000, 5, 3, 0.99, convention="truncate")
+    assert lb_s >= 0.99 and lb_t >= 0.99
+    assert comm_s <= 318 <= comm_t  # conventions bracket the paper's value
+
+
+def test_empirical_success_rate_meets_p0():
+    """The guarantee the optimizer promises must hold for the real protocol."""
+    from repro.core.pbs import PBSConfig, reconcile, true_diff
+
+    rng = np.random.default_rng(3)
+    ok = 0
+    trials = 25
+    for i in range(trials):
+        a, b = make_pair(5000, 100, rng)
+        res = reconcile(a, b, PBSConfig(seed=i, max_rounds=3), d_known=100)
+        ok += res.success and res.diff == true_diff(a, b)
+    assert ok >= trials - 1  # p0 = 0.99 target; 25 trials
