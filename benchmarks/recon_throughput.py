@@ -1,0 +1,110 @@
+"""Multi-session reconciliation throughput: the repro.recon engine under load.
+
+Sweeps a sessions × d grid (DESIGN.md §5/§7).  Each point submits S
+independent Alice↔Bob pairs to ``ReconcileServer``, drives every session's
+full PBS protocol through the batched accelerator path, and reports
+
+  * sessions/sec (wall clock over the whole batch, compiles included),
+  * bytes per distinct element (the paper's communication metric),
+  * the maximum per-session deviation of ``bytes_sent`` from the
+    single-session ``core.pbs.reconcile`` oracle — the engine is the same
+    state machine, so this must be 0% (the run fails above 1%).
+
+Runs standalone (``python benchmarks/recon_throughput.py --sessions 64
+--d 50``) or via ``python -m benchmarks.run`` with the quick default grid.
+On this container the kernels execute in Pallas interpret mode; on TPU the
+same dataflow compiles for the MXU.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+
+if __package__ in (None, ""):  # standalone: make src/ importable
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+    from common import Row, print_rows
+else:
+    from .common import Row, print_rows
+
+import numpy as np
+
+from repro.core.pbs import PBSConfig, reconcile
+from repro.core.simdata import make_pair
+from repro.recon import ReconcileServer
+
+
+def bench_point(sessions: int, d: int, size: int, *, check: bool = True, seed: int = 0):
+    pairs = [
+        make_pair(size, d, np.random.default_rng(seed + 7919 * s + d))
+        for s in range(sessions)
+    ]
+    server = ReconcileServer()
+    for s, (a, b) in enumerate(pairs):
+        server.submit(a, b, cfg=PBSConfig(seed=seed + s), d_known=d)
+    t0 = time.perf_counter()
+    results = server.run()
+    wall = time.perf_counter() - t0
+
+    n_ok = sum(results[s].success for s in range(sessions))
+    total_bytes = sum(results[s].bytes_sent for s in range(sessions))
+    total_diff = sum(len(results[s].diff) for s in range(sessions))
+
+    max_dev = 0.0
+    if check:
+        for s, (a, b) in enumerate(pairs):
+            oracle = reconcile(a, b, PBSConfig(seed=seed + s), d_known=d)
+            dev = abs(results[s].bytes_sent - oracle.bytes_sent) / oracle.bytes_sent
+            max_dev = max(max_dev, dev)
+        if max_dev > 0.01:
+            raise AssertionError(
+                f"per-session bytes deviate {max_dev:.2%} from core.pbs (>1%)"
+            )
+
+    return Row(
+        name=f"recon_throughput/S{sessions}_d{d}",
+        us_per_call=wall * 1e6 / sessions,
+        derived=(
+            f"sessions_per_s={sessions / wall:.2f} "
+            f"bytes_per_diff={total_bytes / max(1, total_diff):.2f} "
+            f"success={n_ok}/{sessions} "
+            + (f"max_byte_dev={max_dev:.4%}" if check else "unchecked")
+        ),
+    )
+
+
+def run():
+    """Quick grid for ``python -m benchmarks.run`` (CSV rows like the others)."""
+    rows = [bench_point(8, d, size=2000, check=True) for d in (10, 50)]
+    return print_rows(rows)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--sessions", type=str, default="64",
+                    help="comma-separated session counts (default 64)")
+    ap.add_argument("--d", type=str, default="50",
+                    help="comma-separated set-difference sizes (default 50)")
+    ap.add_argument("--size", type=int, default=3000, help="|A| per session")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-check", action="store_true",
+                    help="skip the per-session core.pbs byte validation")
+    args = ap.parse_args(argv)
+
+    grid_s = [int(x) for x in args.sessions.split(",")]
+    grid_d = [int(x) for x in args.d.split(",")]
+    print("name,us_per_call,derived")
+    rows = []
+    for sessions in grid_s:
+        for d in grid_d:
+            rows.append(
+                bench_point(sessions, d, args.size, check=not args.no_check,
+                            seed=args.seed)
+            )
+            print(rows[-1].csv(), flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

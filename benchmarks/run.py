@@ -17,6 +17,7 @@ def main() -> None:
         fig3_pinsketch_wp,
         fig4_delta_sweep,
         kernel_bench,
+        recon_throughput,
         table1_param_opt,
         table2_rounds,
     )
@@ -24,7 +25,7 @@ def main() -> None:
     mods = [
         table1_param_opt, table2_rounds, analytic_checks,
         fig1_pinsketch_ddigest, fig2_graphene, fig3_pinsketch_wp,
-        fig4_delta_sweep, kernel_bench,
+        fig4_delta_sweep, kernel_bench, recon_throughput,
     ]
     try:
         from . import roofline_report

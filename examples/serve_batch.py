@@ -1,48 +1,67 @@
-"""Batched serving example: requests -> bucketed prefill -> decode loop.
+"""Batched reconciliation serving: mixed sessions through ``repro.recon``.
 
-Serves a few dozen mixed-length requests against a reduced qwen2-family
-model through `repro.serve.scheduler.BatchScheduler` (the serving-side
-end-to-end driver) and prints the throughput ledger.
+A traffic-shaped workload — many concurrent Alice↔Bob pairs of different
+sizes and difference cardinalities, some with unknown d (ToW phase 0), one
+deliberately BCH-overloaded so the 3-way split fires mid-batch — driven
+end-to-end by ``ReconcileServer``.  Every round, the planner packs all live
+units of all sessions into per-code cohorts and the jitted executor runs the
+bin/sketch/decode for the whole fleet at once (DESIGN.md §5).
 
 Run:  PYTHONPATH=src python examples/serve_batch.py
 """
+import time
+
 import numpy as np
 
-import jax
-
-from repro.configs import get_smoke_config
-from repro.optim import OptConfig
-from repro.serve.scheduler import BatchScheduler, Request
-from repro.train import init_train_state, make_train_step
+from repro.core.pbs import PBSConfig, true_diff
+from repro.core.simdata import make_pair, make_pair_two_sided
+from repro.recon import ReconcileServer
 
 
 def main():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    cfg = get_smoke_config("qwen2-1.5b")
-    ocfg = OptConfig(warmup=2, total_steps=10)
-    bundle = make_train_step(cfg, mesh, ocfg, batch=4)
-    params, _ = init_train_state(bundle, cfg, mesh, ocfg)
-
     rng = np.random.default_rng(0)
-    requests = [
-        Request(rid=i,
-                prompt=rng.integers(1, cfg.vocab, size=plen).tolist(),
-                max_new=8)
-        for i, plen in enumerate([16] * 6 + [32] * 5 + [16] * 3)
-    ]
-    sched = BatchScheduler(cfg, mesh, batch=4, max_len=64, eos_id=0)
-    out, stats = sched.run(params, requests)
+    server = ReconcileServer()
+    workload = []  # (sid, label, a, b)
 
-    assert len(out) == len(requests)
-    done = sum(c.finished for c in out.values())
-    print(f"served {stats.requests} requests in {stats.batches} batches "
-          f"({stats.wall_s:.1f}s incl. compiles)")
-    print(f"  prefill tokens: {stats.prefill_tokens}   decode steps: {stats.decode_steps}")
-    print(f"  finished early (EOS): {done}")
-    for rid in (0, 6):
-        print(f"  request {rid}: prompt[:4]={requests[rid].prompt[:4]} "
-              f"-> {out[rid].tokens}")
+    # a dozen plain sessions with mixed sizes / difference cardinalities
+    for i, (size, d) in enumerate(
+        [(2000, 5), (3000, 20), (1500, 8), (4000, 60), (2500, 12), (3500, 40)]
+    ):
+        a, b = make_pair(size, d, np.random.default_rng(100 + i))
+        sid = server.submit(a, b, cfg=PBSConfig(seed=i), d_known=d)
+        workload.append((sid, f"d={d}", a, b))
+
+    # two-sided + estimator-path sessions (d unknown -> ToW phase 0)
+    a, b = make_pair_two_sided(3000, 25, 15, rng)
+    sid = server.submit(a, b, cfg=PBSConfig(seed=31))
+    workload.append((sid, "two-sided,est", a, b))
+
+    # one overloaded session: d far above t in a single group -> 3-way split
+    a, b = make_pair(2500, 40, np.random.default_rng(17))
+    sid = server.submit(
+        a, b,
+        cfg=PBSConfig(seed=6, n_override=255, t_override=8, g_override=1),
+        d_known=40,
+    )
+    workload.append((sid, "overload,split", a, b))
+
+    t0 = time.perf_counter()
+    results = server.run()
+    wall = time.perf_counter() - t0
+
+    print(f"served {len(workload)} sessions in {wall:.1f}s "
+          f"({len(workload) / wall:.2f} sessions/s incl. compiles)")
+    print(f"{'sid':>3} {'label':<15} {'rounds':>6} {'bytes':>7} "
+          f"{'bytes/d':>8} {'splits':>6}  exact")
+    for sid, label, a, b in workload:
+        r = results[sid]
+        td = true_diff(a, b)
+        d = max(1, len(td))
+        assert r.success and r.diff == td
+        print(f"{sid:>3} {label:<15} {r.rounds:>6} {r.bytes_sent:>7} "
+              f"{r.bytes_sent / d:>8.1f} {r.decode_failures:>6}  ok")
+    total = sum(results[s].bytes_sent for s, *_ in workload)
+    print(f"total protocol bytes: {total:,}")
 
 
 if __name__ == "__main__":

@@ -2,7 +2,7 @@
 61L d_model=7168 128H (kv via MLA lora=512) moe_d_ff=2048 vocab=129280
 [arXiv:2412.19437].  MTP head is a training-loss add-on; systems behaviour is
 unchanged, so it is represented by the optional `mtp` flag (off by default —
-see DESIGN.md §5)."""
+see DESIGN.md §8)."""
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

@@ -17,7 +17,15 @@ Every message is byte-accounted with the paper's accounting (Formula (1)),
 so the benchmarks reproduce Fig. 1b/2b/3b directly.  All per-round bin
 algebra is vectorized across *all* active units at once (segmented scatters +
 the batched BM/Chien decoder) — the numpy mirror of the TPU formulation in
-`repro.kernels`, which is tested against this implementation.
+`repro.kernels`.
+
+The round state machine is factored into pure pieces — ``plan_protocol`` /
+``SessionState`` / ``group_view`` / ``slot_assignment`` / ``unit_tables`` /
+``apply_round_outcomes`` / ``finalize_result`` — shared verbatim by the
+batched multi-session engine in ``repro.recon`` (DESIGN.md §5), which swaps
+only the numpy bin/sketch/decode tables for the accelerator kernels.
+``reconcile`` below is the single-session composition of those pieces and is
+the oracle the batched engine is validated against unit-for-unit.
 """
 from __future__ import annotations
 
@@ -80,7 +88,110 @@ class ReconcileResult:
     fake_rejections: int = 0
 
 
-def _slot_assignment(elems, group_of, units, group_order, group_bounds):
+# ---------------------------------------------------------------------------
+# Pure protocol pieces (shared with the batched engine in repro.recon)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ProtocolPlan:
+    """Everything phase 0 pins down for one Alice↔Bob session: the estimated
+    difference, the optimized (n, t, g), and the derived hash seeds."""
+
+    cfg: PBSConfig
+    n: int
+    t: int
+    g: int
+    d_est: float
+    est_bytes: int
+    seed_groups: int
+
+    @property
+    def code(self) -> BCHCode:
+        return BCHCode(self.n, self.t)
+
+    @property
+    def m(self) -> int:
+        return self.code.m
+
+
+def plan_protocol(
+    a: np.ndarray, b: np.ndarray, cfg: PBSConfig, d_known: int | None = None
+) -> ProtocolPlan:
+    """Phase 0: estimate d with ToW unless known (§6.2), then optimize (n, t, g)."""
+    est_bytes = 0
+    if d_known is None:
+        seed_tow = derive_seed(cfg.seed, 0x70)
+        sk_a = tow_sketches(a, seed_tow, cfg.ell)
+        sk_b = tow_sketches(b, seed_tow, cfg.ell)
+        d_est = estimate_d(sk_a, sk_b)
+        est_bytes = sketch_bytes(len(a), cfg.ell) + 4  # A->B sketches, B->A d_hat
+        d_plan = planned_d(d_est, cfg.gamma)
+    else:
+        d_est = float(d_known)
+        d_plan = max(1, d_known)
+
+    g = cfg.g_override or max(1, round(d_plan / cfg.delta))
+    if cfg.n_override is not None:
+        n, t = cfg.n_override, cfg.t_override
+    else:
+        n, t, _, _ = optimize_parameters(
+            d_plan, cfg.delta, cfg.r_target, cfg.p0, KEY_BITS, convention=cfg.convention
+        )
+    return ProtocolPlan(
+        cfg=cfg, n=n, t=t, g=g, d_est=d_est, est_bytes=est_bytes,
+        seed_groups=derive_seed(cfg.seed, 1),
+    )
+
+
+@dataclass
+class SessionState:
+    """Mutable per-session protocol state threaded through the rounds."""
+
+    a: np.ndarray
+    b: np.ndarray
+    a_set: set
+    diff: set
+    units: list
+    next_uid: int
+    group_b: np.ndarray           # Bob's group ids (fixed across rounds)
+    order_b: np.ndarray
+    bounds_b: np.ndarray
+    bytes_per_round: list = field(default_factory=list)
+    rounds: int = 0
+    decode_failures: int = 0
+    fake_rejections: int = 0
+
+    def active_units(self) -> list:
+        return [u for u in self.units if not u.done]
+
+
+def group_view(elems: np.ndarray, g: int, seed_groups: int):
+    """Group ids + stable order + group boundaries for one element array."""
+    grp = hash_to_range(elems, g, seed_groups)
+    order = np.argsort(grp, kind="stable")
+    bounds = np.searchsorted(grp[order], np.arange(g + 1))
+    return grp, order, bounds
+
+
+def new_session_state(a: np.ndarray, b: np.ndarray, plan: ProtocolPlan) -> SessionState:
+    grp_b, order_b, bounds_b = group_view(b, plan.g, plan.seed_groups)
+    return SessionState(
+        a=a, b=b, a_set=set(int(x) for x in a), diff=set(),
+        units=[Unit(uid=i, group=i) for i in range(plan.g)], next_uid=plan.g,
+        group_b=grp_b, order_b=order_b, bounds_b=bounds_b,
+    )
+
+
+def effective_set(a: np.ndarray, diff: set) -> np.ndarray:
+    """Alice's effective set A △ D̂ for the next round (§2.4)."""
+    if not diff:
+        return a
+    diff_arr = np.fromiter(diff, dtype=np.uint32, count=len(diff))
+    return np.concatenate([np.setdiff1d(a, diff_arr), np.setdiff1d(diff_arr, a)])
+
+
+def slot_assignment(elems, group_of, units, group_order, group_bounds):
     """Map every element participating this round to its active-unit slot.
 
     Plain units (no filters) are resolved with one LUT gather; split units
@@ -110,8 +221,11 @@ def _slot_assignment(elems, group_of, units, group_order, group_bounds):
     return np.concatenate(sel_idx), np.concatenate(sel_slot)
 
 
-def _unit_tables(elems, idx, slots, n_units, n, bin_seed):
-    """Per-(unit, bin) parity positions, XOR folds, and per-unit checksums."""
+def unit_tables(elems, idx, slots, n_units, n, bin_seed):
+    """Per-(unit, bin) parity positions, XOR folds, and per-unit checksums.
+
+    Returns (parity_slot, parity_pos, xors (n_units, n) uint32, csums (n_units,)).
+    """
     vals = elems[idx]
     bins = hash_to_range(vals, n, bin_seed)
     flat = slots * n + bins
@@ -123,10 +237,10 @@ def _unit_tables(elems, idx, slots, n_units, n, bin_seed):
     np.add.at(csums, slots, vals.astype(np.uint64))
     csums %= _MOD
     odd = np.nonzero(counts & 1)[0]
-    return odd // n, odd % n, xors, csums
+    return odd // n, odd % n, xors.reshape(n_units, n), csums
 
 
-def _segmented_sketches(code, slot_of_pos, positions, n_units):
+def segmented_sketches(code, slot_of_pos, positions, n_units):
     """BCH sketches for all units at once (segmented XOR over bit positions)."""
     out = np.zeros((n_units, code.t), dtype=np.int64)
     if len(positions):
@@ -135,6 +249,95 @@ def _segmented_sketches(code, slot_of_pos, positions, n_units):
         vals = gf.pow_alpha(positions[:, None] * (2 * j + 1))  # (P, t)
         np.bitwise_xor.at(out, slot_of_pos, vals)
     return out
+
+
+def apply_round_outcomes(
+    st: SessionState,
+    active: list,
+    ok,
+    positions,
+    xors_a: np.ndarray,
+    xors_b: np.ndarray,
+    csum_a: np.ndarray,
+    csum_b: np.ndarray,
+    *,
+    plan: ProtocolPlan,
+    bin_seed: int,
+    rnd: int,
+) -> int:
+    """Alice's per-unit endgame for one round: recovery via the XOR trick
+    (Procedure 1), fake rejection (Procedure 3), checksum gating (§2.2.3),
+    and the 3-way-split re-queue on BCH overload (§3.2).
+
+    All arrays are indexed by the unit's position (slot) in ``active``:
+    ``positions[slot]`` is the decoded bin index array, ``xors_*[slot]`` the
+    (n,) per-bin XOR folds, ``csum_*[slot]`` the unit checksums.  Mutates
+    ``st`` (diff, unit queue, counters) and returns the Bob->Alice bits this
+    round adds to Formula (1) — the caller accounts the Alice->Bob sketches.
+    """
+    cfg, n, g, m = plan.cfg, plan.n, plan.g, plan.m
+    bits = 0
+    for slot, u in enumerate(active):
+        if not ok[slot]:
+            st.decode_failures += 1
+            split_seed = derive_seed(cfg.seed, 3, rnd, u.uid)
+            u.done = True
+            for k in range(3):
+                st.units.append(
+                    Unit(uid=st.next_uid, group=u.group, filters=u.filters + ((split_seed, k),))
+                )
+                st.next_uid += 1
+            continue
+        pos = positions[slot]
+        # Bob -> Alice: bin indices, his XOR sums, his checksum (Formula 1).
+        bits += len(pos) * (m + KEY_BITS) + KEY_BITS
+        delta_sum = 0
+        newly = []
+        for p in pos:
+            s = int(xors_a[slot, int(p)] ^ xors_b[slot, int(p)])
+            if s == 0:
+                st.fake_rejections += 1
+                continue
+            sx = np.array([s], dtype=np.uint32)
+            # Procedure 3: s must belong to this unit's sub-universe.
+            if (
+                int(hash_to_range(sx, n, bin_seed)[0]) != int(p)
+                or int(hash_to_range(sx, g, plan.seed_groups)[0]) != u.group
+                or any(int(hash_to_range(sx, 3, fs)[0]) != fk for fs, fk in u.filters)
+            ):
+                st.fake_rejections += 1
+                continue
+            newly.append(s)
+            in_eff = (s in st.a_set) ^ (s in st.diff)
+            delta_sum += -s if in_eff else s
+        for s in newly:
+            st.diff.symmetric_difference_update((s,))
+        new_csum = int((int(csum_a[slot]) + delta_sum) % (1 << KEY_BITS))
+        if new_csum == int(csum_b[slot]):
+            u.done = True
+    return bits
+
+
+def finalize_result(st: SessionState, plan: ProtocolPlan) -> ReconcileResult:
+    return ReconcileResult(
+        diff=st.diff,
+        rounds=st.rounds,
+        success=all(u.done for u in st.units),
+        bytes_sent=sum(st.bytes_per_round),
+        estimator_bytes=plan.est_bytes,
+        bytes_per_round=st.bytes_per_round,
+        n=plan.n,
+        t=plan.t,
+        g=plan.g,
+        d_est=plan.d_est,
+        decode_failures=st.decode_failures,
+        fake_rejections=st.fake_rejections,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Single-session protocol loop (the numpy oracle)
+# ---------------------------------------------------------------------------
 
 
 def reconcile(
@@ -148,140 +351,41 @@ def reconcile(
     a = np.unique(np.asarray(set_a, dtype=np.uint32))
     b = np.unique(np.asarray(set_b, dtype=np.uint32))
 
-    # --- Phase 0: estimate d with ToW unless known (paper §6.2) -----------
-    est_bytes = 0
-    if d_known is None:
-        seed_tow = derive_seed(cfg.seed, 0x70)
-        sk_a = tow_sketches(a, seed_tow, cfg.ell)
-        sk_b = tow_sketches(b, seed_tow, cfg.ell)
-        d_est = estimate_d(sk_a, sk_b)
-        est_bytes = sketch_bytes(len(a), cfg.ell) + 4  # A->B sketches, B->A d_hat
-        d_plan = planned_d(d_est, cfg.gamma)
-    else:
-        d_est = float(d_known)
-        d_plan = max(1, d_known)
-
-    g = cfg.g_override or max(1, round(d_plan / cfg.delta))
-    if cfg.n_override is not None:
-        n, t = cfg.n_override, cfg.t_override
-    else:
-        n, t, _, _ = optimize_parameters(
-            d_plan, cfg.delta, cfg.r_target, cfg.p0, KEY_BITS, convention=cfg.convention
-        )
-    code = BCHCode(n, t)
-    m = code.m
-
-    seed_groups = derive_seed(cfg.seed, 1)
-    group_b = hash_to_range(b, g, seed_groups)
-    order_b = np.argsort(group_b, kind="stable")
-    bounds_b = np.searchsorted(group_b[order_b], np.arange(g + 1))
-
-    a_set = set(int(x) for x in a)
-    units = [Unit(uid=i, group=i) for i in range(g)]
-    next_uid = g
-    diff: set[int] = set()
-    bytes_per_round: list[int] = []
-    decode_failures = fake_rejections = 0
-    success = False
-    rounds = 0
+    plan = plan_protocol(a, b, cfg, d_known)
+    code = plan.code
+    n, t, g, m = plan.n, plan.t, plan.g, plan.m
+    st = new_session_state(a, b, plan)
 
     for rnd in range(1, cfg.max_rounds + 1):
-        active = [u for u in units if not u.done]
+        active = st.active_units()
         if not active:
-            success = True
             break
-        rounds = rnd
-        round_bits = 0
+        st.rounds = rnd
         bin_seed = derive_seed(cfg.seed, 2, rnd)
         n_units = len(active)
 
-        # Alice's effective set is A △ D̂ (§2.4).
-        if diff:
-            diff_arr = np.fromiter(diff, dtype=np.uint32, count=len(diff))
-            eff_a = np.concatenate(
-                [np.setdiff1d(a, diff_arr), np.setdiff1d(diff_arr, a)]
-            )
-        else:
-            eff_a = a
-        group_eff = hash_to_range(eff_a, g, seed_groups)
-        order_a = np.argsort(group_eff, kind="stable")
-        bounds_a = np.searchsorted(group_eff[order_a], np.arange(g + 1))
+        eff_a = effective_set(a, st.diff)
+        group_eff, order_a, bounds_a = group_view(eff_a, g, plan.seed_groups)
 
-        idx_a, slot_a = _slot_assignment(eff_a, group_eff, active, order_a, bounds_a)
-        idx_b, slot_b = _slot_assignment(b, group_b, active, order_b, bounds_b)
+        idx_a, slot_a = slot_assignment(eff_a, group_eff, active, order_a, bounds_a)
+        idx_b, slot_b = slot_assignment(b, st.group_b, active, st.order_b, st.bounds_b)
 
-        pslot_a, ppos_a, xors_a, _ = _unit_tables(eff_a, idx_a, slot_a, n_units, n, bin_seed)
-        pslot_b, ppos_b, xors_b, csum_b = _unit_tables(b, idx_b, slot_b, n_units, n, bin_seed)
+        pslot_a, ppos_a, xors_a, csum_a = unit_tables(eff_a, idx_a, slot_a, n_units, n, bin_seed)
+        pslot_b, ppos_b, xors_b, csum_b = unit_tables(b, idx_b, slot_b, n_units, n, bin_seed)
 
-        sk_a_all = _segmented_sketches(code, pslot_a, ppos_a, n_units)
-        sk_b_all = _segmented_sketches(code, pslot_b, ppos_b, n_units)
-        round_bits += n_units * (t * m + 1)  # Alice->Bob sketches + ok flags
+        sk_a_all = segmented_sketches(code, pslot_a, ppos_a, n_units)
+        sk_b_all = segmented_sketches(code, pslot_b, ppos_b, n_units)
+        round_bits = n_units * (t * m + 1)  # Alice->Bob sketches + ok flags
 
         ok, err_positions = batched_decode(code, sk_a_all ^ sk_b_all)
 
-        # Per-unit outcomes.  Recovery + checksum gating is O(found elements).
-        csum_a = np.zeros(n_units, dtype=np.uint64)
-        np.add.at(csum_a, slot_a, eff_a[idx_a].astype(np.uint64))
-        csum_a %= _MOD
+        round_bits += apply_round_outcomes(
+            st, active, ok, err_positions, xors_a, xors_b, csum_a, csum_b,
+            plan=plan, bin_seed=bin_seed, rnd=rnd,
+        )
+        st.bytes_per_round.append((round_bits + 7) // 8)
 
-        for slot, u in enumerate(active):
-            if not ok[slot]:
-                decode_failures += 1
-                split_seed = derive_seed(cfg.seed, 3, rnd, u.uid)
-                u.done = True
-                for k in range(3):
-                    units.append(
-                        Unit(uid=next_uid, group=u.group, filters=u.filters + ((split_seed, k),))
-                    )
-                    next_uid += 1
-                continue
-            pos = err_positions[slot]
-            # Bob -> Alice: bin indices, his XOR sums, his checksum (Formula 1).
-            round_bits += len(pos) * (m + KEY_BITS) + KEY_BITS
-            delta_sum = 0
-            newly = []
-            for p in pos:
-                fi = slot * n + int(p)
-                s = int(xors_a[fi] ^ xors_b[fi])
-                if s == 0:
-                    fake_rejections += 1
-                    continue
-                sx = np.array([s], dtype=np.uint32)
-                # Procedure 3: s must belong to this unit's sub-universe.
-                if (
-                    int(hash_to_range(sx, n, bin_seed)[0]) != int(p)
-                    or int(hash_to_range(sx, g, seed_groups)[0]) != u.group
-                    or any(int(hash_to_range(sx, 3, fs)[0]) != fk for fs, fk in u.filters)
-                ):
-                    fake_rejections += 1
-                    continue
-                newly.append(s)
-                in_eff = (s in a_set) ^ (s in diff)
-                delta_sum += -s if in_eff else s
-            for s in newly:
-                diff.symmetric_difference_update((s,))
-            new_csum = int((int(csum_a[slot]) + delta_sum) % (1 << KEY_BITS))
-            if new_csum == int(csum_b[slot]):
-                u.done = True
-
-        bytes_per_round.append((round_bits + 7) // 8)
-    else:
-        success = all(u.done for u in units)
-
-    return ReconcileResult(
-        diff=diff,
-        rounds=rounds,
-        success=success,
-        bytes_sent=sum(bytes_per_round),
-        estimator_bytes=est_bytes,
-        bytes_per_round=bytes_per_round,
-        n=n,
-        t=t,
-        g=g,
-        d_est=d_est,
-        decode_failures=decode_failures,
-        fake_rejections=fake_rejections,
-    )
+    return finalize_result(st, plan)
 
 
 def reconcile_small(

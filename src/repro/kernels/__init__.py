@@ -1,3 +1,31 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel layer for the PBS hot loops (DESIGN.md §3).
+
+One module per kernel (+ ``ops.py`` protocol-level wrappers, ``ref.py``
+pure-numpy oracles).  ``interpret=None`` everywhere resolves per backend:
+interpreter off-TPU, compiled on TPU (see ``platform.resolve_interpret``).
+"""
+from .bin_xorsum import bin_parity_xorsum, bin_parity_xorsum_units, xor_bits_to_u32
+from .gf2_matmul import gf2_matmul
+from .ops import (
+    bch_decode_batched,
+    encode_group,
+    encode_groups,
+    sketch_groups,
+    tow_estimate,
+)
+from .platform import resolve_interpret
+from .tow_sketch import tow_sketch
+
+__all__ = [
+    "bch_decode_batched",
+    "bin_parity_xorsum",
+    "bin_parity_xorsum_units",
+    "encode_group",
+    "encode_groups",
+    "gf2_matmul",
+    "resolve_interpret",
+    "sketch_groups",
+    "tow_estimate",
+    "tow_sketch",
+    "xor_bits_to_u32",
+]

@@ -11,9 +11,16 @@ then `acc & 1` yields per-bin XOR folds (bit-parity == XOR) and the parity
 bitmap (count parity) in one shot.  The grid walks element tiles; `acc`
 lives in VMEM scratch for the whole pass.
 
-Binning uses murmur-finalizer mix32 followed by `mod n` (n = 2^m − 1, so a
-multiply-shift range reduction would need 64-bit lanes; `mod` stays in
-32-bit).  `ref.py` mirrors the exact same hash so kernel ≡ oracle bit-for-bit.
+Two binning reductions are provided (both keyed by murmur-finalizer mix32):
+
+* ``bin_parity_xorsum`` (single set) reduces with `mod n` — the historical
+  kernel hash, mirrored by `ref.bin_parity_xorsum_ref`;
+* ``bin_parity_xorsum_units`` (the batched multi-session path, DESIGN.md §5)
+  reduces with the same multiply-shift `(h * n) >> 32` as
+  `repro.core.hashing.hash_to_range`, so the kernel bins bit-for-bit like the
+  numpy protocol.  The 64-bit product is synthesized from 16-bit halves
+  (`mulshift_bins`) because TPU lanes are 32-bit; exact for any n < 2^16,
+  which covers every field this repo instantiates (m ≤ 14).
 """
 from __future__ import annotations
 
@@ -24,17 +31,35 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .platform import ceil_to, resolve_interpret
+
 
 def mix32_jnp(x: jax.Array, seed) -> jax.Array:
-    """murmur3 fmix32 (uint32 lanes, wrap-around multiplies) — VPU-only ops."""
+    """murmur3 fmix32 (uint32 lanes, wrap-around multiplies) — VPU-only ops.
+
+    ``seed`` may be a python int or a traced scalar (per-unit seeds).
+    """
     x = x.astype(jnp.uint32)
-    x = x + (jnp.uint32(seed) * jnp.uint32(0x9E3779B9))
+    x = x + (jnp.asarray(seed, dtype=jnp.uint32) * jnp.uint32(0x9E3779B9))
     x = x ^ (x >> 16)
     x = x * jnp.uint32(0x85EBCA6B)
     x = x ^ (x >> 13)
     x = x * jnp.uint32(0xC2B2AE35)
     x = x ^ (x >> 16)
     return x
+
+
+def mulshift_bins(h: jax.Array, size: int) -> jax.Array:
+    """Bias-free range reduction ``(h * size) >> 32`` in 32-bit lanes.
+
+    Splits h into 16-bit halves so every partial product stays below 2^32;
+    exact match of ``core.hashing.hash_to_range`` for size < 2^16.
+    """
+    assert size < (1 << 16), size
+    lo = h & jnp.uint32(0xFFFF)
+    hi = h >> jnp.uint32(16)
+    sz = jnp.uint32(size)
+    return ((hi * sz + ((lo * sz) >> jnp.uint32(16))) >> jnp.uint32(16)).astype(jnp.int32)
 
 
 def _kernel(elems_ref, valid_ref, o_ref, acc_ref, *, n_bins: int, seed: int, nt: int):
@@ -70,9 +95,10 @@ def bin_parity_xorsum(
     n_bins: int,
     seed: int,
     tile: int = 1024,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Returns (parity_bitmap (n,), xor_bits (n, 32)) for a set of uint32 keys."""
+    interpret = resolve_interpret(interpret)
     e = elems.astype(jnp.uint32)
     E = e.shape[0]
     Ep = max(tile, ((E + tile - 1) // tile) * tile)
@@ -97,8 +123,77 @@ def bin_parity_xorsum(
     return parity, xor_bits
 
 
+def _units_kernel(seeds_ref, elems_ref, valid_ref, o_ref, acc_ref, *, n_bins: int, nt: int):
+    """Grid (U, nt): per unit u, walk its element tiles accumulating Hᵀ @ bits."""
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    e = elems_ref[...][0].astype(jnp.uint32)   # (tile,)
+    valid = valid_ref[...][0] > 0
+    seed = seeds_ref[...][0]                   # this unit's per-round bin seed
+    bins = mulshift_bins(mix32_jnp(e, seed), n_bins)
+    onehot = (
+        (bins[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, n_bins), 1))
+        & valid[:, None]
+    ).astype(jnp.int32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 32), 1)
+    bits = ((e[:, None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+    bits = jnp.concatenate([bits, valid[:, None].astype(jnp.int32)], axis=1)  # ‖ ones
+    acc_ref[...] += jnp.dot(onehot.T, bits, preferred_element_type=jnp.int32)
+
+    @pl.when(ti == nt - 1)
+    def _emit():
+        o_ref[...] = (acc_ref[...] & 1)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "tile", "interpret"))
+def bin_parity_xorsum_units(
+    elems: jax.Array,
+    valid: jax.Array,
+    seeds: jax.Array,
+    *,
+    n_bins: int,
+    tile: int | None = None,
+    interpret: bool | None = None,
+):
+    """Batched bin/parity/XOR-fold over U packed units in one kernel launch.
+
+    ``elems``/``valid``: (U, E) padded unit rows (valid == 0 marks padding);
+    ``seeds``: (U,) uint32 per-unit binning seeds (sessions derive different
+    seeds, so units of many sessions pack into one launch — DESIGN.md §5).
+    Bins with the protocol's multiply-shift hash (``hash_to_range``).
+    Returns (parity (U, n_bins) int32, xor_bits (U, n_bins, 32) int32).
+    """
+    interpret = resolve_interpret(interpret)
+    e = elems.astype(jnp.uint32)
+    U, E = e.shape
+    if tile is None:  # smallest lane-aligned tile covering typical unit loads
+        tile = max(128, min(1024, ceil_to(E, 128)))
+    Ep = max(tile, ceil_to(E, tile))
+    pad = Ep - E
+    e_p = jnp.pad(e, ((0, 0), (0, pad)))
+    v_p = jnp.pad(valid.astype(jnp.int32), ((0, 0), (0, pad)))
+    nt = Ep // tile
+    out = pl.pallas_call(
+        functools.partial(_units_kernel, n_bins=n_bins, nt=nt),
+        grid=(U, nt),
+        in_specs=[
+            pl.BlockSpec((1,), lambda u, i: (u,)),
+            pl.BlockSpec((1, tile), lambda u, i: (u, i)),
+            pl.BlockSpec((1, tile), lambda u, i: (u, i)),
+        ],
+        out_specs=pl.BlockSpec((1, n_bins, 33), lambda u, i: (u, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((U, n_bins, 33), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((n_bins, 33), jnp.int32)],
+        interpret=interpret,
+    )(seeds.astype(jnp.uint32), e_p, v_p)
+    return out[:, :, 32], out[:, :, :32]
+
+
 def xor_bits_to_u32(xor_bits: jax.Array) -> jax.Array:
+    """(..., 32) 0/1 bit planes -> (...,) uint32 XOR-fold values."""
     shifts = jnp.arange(32, dtype=jnp.uint32)
-    return jnp.sum(
-        xor_bits.astype(jnp.uint32) << shifts[None, :], axis=1, dtype=jnp.uint32
-    )
+    return jnp.sum(xor_bits.astype(jnp.uint32) << shifts, axis=-1, dtype=jnp.uint32)

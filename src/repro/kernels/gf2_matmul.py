@@ -24,9 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-def _ceil_to(x: int, mult: int) -> int:
-    return ((x + mult - 1) // mult) * mult
+from .platform import ceil_to as _ceil_to
+from .platform import resolve_interpret
 
 
 def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
@@ -53,9 +52,10 @@ def gf2_matmul(
     bm: int = 128,
     bn: int = 256,
     bk: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """(A @ B) mod 2 for 0/1 int32 matrices of any shape (padded internally)."""
+    interpret = resolve_interpret(interpret)
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)

@@ -1,7 +1,12 @@
 """Jitted wrappers tying the Pallas kernels to PBS protocol semantics.
 
-* ``encode_groups``      — parity bitmaps + bin XOR folds + BCH sketches for a
-                           batch of groups (bin_xorsum kernel + gf2_matmul).
+* ``encode_group``       — parity bitmap + bin XOR folds + BCH sketch for one
+                           set (bin_xorsum kernel + gf2_matmul).
+* ``encode_groups``      — the batched form over U packed units with ragged
+                           element counts (padded rows + valid masks) and
+                           per-unit bin seeds: the encode step of the
+                           multi-session engine (DESIGN.md §5), binning with
+                           the protocol's multiply-shift hash.
 * ``bch_decode_batched`` — fully-jitted vmapped Berlekamp–Massey + Chien
                            search over all group pairs at once (fixed 2t-trip
                            ``fori_loop``; the TPU replacement for the paper's
@@ -9,7 +14,8 @@
 * ``tow_estimate``       — ToW sketches via the tow_sketch kernel.
 
 Everything is validated against `ref.py` / `repro.core.bch` in
-tests/test_kernels.py across shape/dtype sweeps.
+tests/test_kernels.py and tests/test_recon_batch.py across shape/dtype
+sweeps.  ``interpret=None`` resolves per backend (kernels/platform.py).
 """
 from __future__ import annotations
 
@@ -22,7 +28,7 @@ import numpy as np
 from repro.core.bch import BCHCode
 from repro.core.gf2m import get_field
 
-from .bin_xorsum import bin_parity_xorsum, xor_bits_to_u32
+from .bin_xorsum import bin_parity_xorsum, bin_parity_xorsum_units, xor_bits_to_u32
 from .gf2_matmul import gf2_matmul
 from .tow_sketch import tow_sketch
 
@@ -38,14 +44,14 @@ def pack_bits_to_field(bits: jax.Array, m: int) -> jax.Array:
     return jnp.sum(b << jnp.arange(m, dtype=jnp.int32), axis=-1)
 
 
-def sketch_groups(bitmaps: jax.Array, code: BCHCode, *, interpret: bool = True):
+def sketch_groups(bitmaps: jax.Array, code: BCHCode, *, interpret: bool | None = None):
     """BCH sketches for G parity bitmaps at once: one GF(2) matmul on the MXU."""
     P = jnp.asarray(code.field.syndrome_matrix(code.t))
     bits = gf2_matmul(bitmaps.astype(jnp.int32), P, interpret=interpret)
     return pack_bits_to_field(bits, code.m)
 
 
-def encode_group(elems: jax.Array, code: BCHCode, seed: int, *, interpret: bool = True):
+def encode_group(elems: jax.Array, code: BCHCode, seed: int, *, interpret: bool | None = None):
     """Full PBS encode of one group: (parity bitmap, bin XOR sums, sketch)."""
     parity, xor_bits = bin_parity_xorsum(
         elems, n_bins=code.n, seed=seed, interpret=interpret
@@ -54,7 +60,31 @@ def encode_group(elems: jax.Array, code: BCHCode, seed: int, *, interpret: bool 
     return parity, xor_bits_to_u32(xor_bits), sketch
 
 
-def tow_estimate(elems_a: jax.Array, elems_b: jax.Array, seeds: jax.Array, *, interpret=True):
+def encode_groups(
+    elems: jax.Array,
+    valid: jax.Array,
+    seeds: jax.Array,
+    code: BCHCode,
+    *,
+    interpret: bool | None = None,
+):
+    """Batched PBS encode of U packed units with ragged element counts.
+
+    ``elems``/``valid``: (U, E) padded rows (``valid == 0`` marks padding);
+    ``seeds``: (U,) per-unit bin seeds.  One bin_xorsum launch bins every
+    unit's elements with the protocol's multiply-shift hash, then one GF(2)
+    matmul sketches all parity bitmaps (DESIGN.md §5).
+
+    Returns (parity (U, n), xors (U, n) uint32, sketches (U, t)).
+    """
+    parity, xor_bits = bin_parity_xorsum_units(
+        elems, valid, seeds, n_bins=code.n, interpret=interpret
+    )
+    sketches = sketch_groups(parity, code, interpret=interpret)
+    return parity, xor_bits_to_u32(xor_bits), sketches
+
+
+def tow_estimate(elems_a: jax.Array, elems_b: jax.Array, seeds: jax.Array, *, interpret=None):
     ya = tow_sketch(elems_a, seeds, ell=seeds.shape[0], interpret=interpret)
     yb = tow_sketch(elems_b, seeds, ell=seeds.shape[0], interpret=interpret)
     diff = (ya - yb).astype(jnp.float32)
@@ -162,7 +192,7 @@ def bch_decode_batched(sketches: jax.Array, *, n: int, t: int):
     return ok, pos, count
 
 
-def chien_eval_matmul(locator_bits: jax.Array, code: BCHCode, *, interpret=True):
+def chien_eval_matmul(locator_bits: jax.Array, code: BCHCode, *, interpret=None):
     """Whole-field locator evaluation as one GF(2) matmul (kernel path).
 
     locator_bits: (U, (t+1)*m) -> eval bits (U, n, m); rows of zeros = roots.

@@ -1,0 +1,22 @@
+"""Backend-derived execution defaults for the Pallas kernel layer.
+
+Every kernel entry point takes ``interpret: bool | None = None``.  ``None``
+resolves from the JAX backend at trace time: off-TPU (CPU/GPU) the kernel
+body runs under the Pallas interpreter — bit-exact dataflow validation on
+any host — while on TPU it compiles for the MXU/VPU.  Passing an explicit
+bool still pins the mode (the kernel tests pin ``interpret=True`` shapes).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(flag: bool | None = None) -> bool:
+    if flag is None:
+        return jax.default_backend() != "tpu"
+    return bool(flag)
+
+
+def ceil_to(x: int, mult: int) -> int:
+    """Round ``x`` up to a multiple of ``mult`` (block/lane alignment)."""
+    return ((x + mult - 1) // mult) * mult

@@ -34,6 +34,29 @@ def bin_parity_xorsum_ref(elems: np.ndarray, n_bins: int, seed: int):
     return parity, xor_bits, xors
 
 
+def bin_parity_xorsum_units_ref(elems, valid, seeds, n_bins: int):
+    """Sequential-scatter oracle for the batched units kernel.
+
+    Bins with the protocol's multiply-shift hash ``(mix32(e) * n) >> 32``
+    (``core.hashing.hash_to_range``), evaluated in uint64 as ground truth for
+    the kernel's 16-bit-split formulation.
+    """
+    e = np.asarray(elems, dtype=np.uint32)
+    v = np.asarray(valid) != 0
+    U, _ = e.shape
+    parity = np.zeros((U, n_bins), dtype=np.int32)
+    xors = np.zeros((U, n_bins), dtype=np.uint32)
+    for u in range(U):
+        vals = e[u][v[u]]
+        h = mix32_ref(vals, int(seeds[u]))
+        bins = ((h.astype(np.uint64) * np.uint64(n_bins)) >> np.uint64(32)).astype(np.int64)
+        counts = np.zeros(n_bins, dtype=np.int64)
+        np.add.at(counts, bins, 1)
+        np.bitwise_xor.at(xors[u], bins, vals)
+        parity[u] = (counts & 1).astype(np.int32)
+    return parity, xors
+
+
 def tow_sketch_ref(elems: np.ndarray, seeds: np.ndarray) -> np.ndarray:
     """Oracle for the ToW kernel's two-round mix family."""
     e = np.asarray(elems, dtype=np.uint32)

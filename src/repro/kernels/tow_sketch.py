@@ -16,6 +16,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .bin_xorsum import mix32_jnp
+from .platform import resolve_interpret
 
 
 def _kernel(elems_ref, valid_ref, seeds_ref, o_ref, acc_ref, *, nt: int):
@@ -47,9 +48,10 @@ def tow_sketch(
     *,
     ell: int = 128,
     tile: int = 2048,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """ℓ ToW sketches Y_i = Σ_s f_i(s) of a uint32 key set."""
+    interpret = resolve_interpret(interpret)
     e = elems.astype(jnp.uint32)
     E = e.shape[0]
     Ep = max(tile, ((E + tile - 1) // tile) * tile)

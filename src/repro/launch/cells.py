@@ -3,7 +3,7 @@
 ``build_cell(arch, shape, mesh)`` returns the jitted step function plus
 `ShapeDtypeStruct` stand-ins for every input — `.lower(*args)` allocates
 nothing.  ``cell_status`` marks the documented skips (long_500k needs
-sub-quadratic attention; see DESIGN.md §5).
+sub-quadratic attention; see DESIGN.md §8).
 """
 from __future__ import annotations
 

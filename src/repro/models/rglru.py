@@ -2,7 +2,7 @@
 
 h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ x_t),
 a_t = exp(c · r_t · log σ(Λ)),  c = 8,
-with sigmoid input/recurrence gates (diagonal — see DESIGN.md §5).
+with sigmoid input/recurrence gates (diagonal — see DESIGN.md §8).
 
 Distribution (§Perf hillclimb 2, EXPERIMENTS.md): the block is
 **sequence-parallel**, not Megatron-TP.  The recurrence is elementwise over

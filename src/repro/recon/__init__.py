@@ -1,0 +1,22 @@
+"""Batched multi-session set reconciliation on the accelerator path.
+
+The single-session protocol in ``repro.core.pbs`` is the numpy oracle; this
+package turns it into a traffic-serving system (DESIGN.md §5): a
+``SessionBatch`` planner packs the active units of S concurrent Alice↔Bob
+sessions into padded per-code cohorts, a jitted ``execute_round`` runs each
+round's bin/sketch/decode for every unit at once through the Pallas kernels,
+and ``ReconcileServer`` keeps per-session byte ledgers identical to
+``core.pbs.reconcile``.
+"""
+from .engine import execute_round
+from .server import ReconcileServer, reconcile_batch
+from .session import CohortRound, ReconSession, SessionBatch
+
+__all__ = [
+    "CohortRound",
+    "ReconSession",
+    "ReconcileServer",
+    "SessionBatch",
+    "execute_round",
+    "reconcile_batch",
+]

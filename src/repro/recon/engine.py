@@ -1,0 +1,66 @@
+"""The jitted round executor: one cohort's round entirely on the accelerator.
+
+Per call (DESIGN.md §5 round dataflow), for all U packed units at once:
+
+1. ``encode_groups`` twice (Alice's effective sets, Bob's sets): the batched
+   bin_xorsum Pallas kernel bins every unit with its own per-round hash and
+   folds per-bin parities/XORs, then one GF(2) matmul over all parity
+   bitmaps yields every unit's BCH sketch;
+2. the sketch XOR feeds ``bch_decode_batched`` — the vmapped fixed-trip
+   Berlekamp–Massey + Chien search (DESIGN.md §3) — locating each unit's
+   differing bins (``ok`` False = BCH overload → the host re-queues the
+   unit's 3-way split);
+3. per-unit checksums (sum mod 2^32) come from a masked wrap-around uint32
+   reduction, matching the paper's §2.2.3 gate bit-for-bit.
+
+Everything here is shape-polymorphic only in (U, Ea, Eb); the planner aligns
+those to fixed multiples so a serving loop settles into a handful of compiled
+variants per cohort code.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bch import BCHCode
+from repro.kernels.ops import bch_decode_batched, encode_groups
+
+
+def _wrap_csum(elems: jax.Array, valid: jax.Array) -> jax.Array:
+    """Per-unit checksum c(S) = sum mod 2^32 via wrap-around uint32 adds."""
+    vals = jnp.where(valid != 0, elems.astype(jnp.uint32), jnp.uint32(0))
+    return jnp.sum(vals, axis=1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "t", "interpret"))
+def execute_round(
+    elems_a: jax.Array,
+    valid_a: jax.Array,
+    elems_b: jax.Array,
+    valid_b: jax.Array,
+    seeds: jax.Array,
+    *,
+    n: int,
+    t: int,
+    interpret: bool | None = None,
+):
+    """Run one PBS round for U packed units of one (n, t) cohort.
+
+    Returns (xors_a, xors_b (U, n) uint32, ok (U,), positions (U, t) padded
+    with -1, counts (U,), csum_a, csum_b (U,) uint32).
+    """
+    code = BCHCode(n, t)
+    _, xors_a, sk_a = encode_groups(elems_a, valid_a, seeds, code, interpret=interpret)
+    _, xors_b, sk_b = encode_groups(elems_b, valid_b, seeds, code, interpret=interpret)
+    ok, pos, cnt = bch_decode_batched(sk_a ^ sk_b, n=n, t=t)
+    return (
+        xors_a,
+        xors_b,
+        ok,
+        pos,
+        cnt,
+        _wrap_csum(elems_a, valid_a),
+        _wrap_csum(elems_b, valid_b),
+    )

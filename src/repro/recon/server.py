@@ -1,0 +1,154 @@
+"""ReconcileServer: the traffic-serving facade over the batched engine.
+
+``submit`` any number of Alice↔Bob pairs, then ``run`` drives every session's
+full PBS protocol concurrently: each global round, the SessionBatch planner
+packs all live units into per-code cohorts, the jitted executor runs the
+round's encode→sketch→decode on the accelerator path, and the host applies
+the per-unit outcomes — recovery, fake rejection, checksum gating, and the
+3-way-split re-queue — through the *same* ``core.pbs`` state-machine
+functions as the single-session oracle.
+
+Byte accounting is per session and identical to ``core.pbs.ReconcileResult``:
+the sketch/flag upload counts each session's own active units, and the
+Bob→Alice reply bits come from the shared ``apply_round_outcomes``, so
+``run()[sid].bytes_sent`` equals what ``core.pbs.reconcile`` reports for the
+same pair, seed for seed (asserted in tests/test_recon_batch.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pbs import (
+    PBSConfig,
+    ReconcileResult,
+    apply_round_outcomes,
+    finalize_result,
+    new_session_state,
+    plan_protocol,
+)
+
+from .engine import execute_round
+from .session import CohortRound, ReconSession, SessionBatch
+
+
+class ReconcileServer:
+    """Batched multi-session PBS reconciliation (DESIGN.md §5).
+
+    ``interpret`` follows the kernel convention: None = derive from backend
+    (interpreter off-TPU, compiled on TPU).
+    """
+
+    def __init__(self, *, interpret: bool | None = None):
+        self._interpret = interpret
+        self._sessions: list[ReconSession] = []
+
+    def submit(
+        self,
+        set_a: np.ndarray,
+        set_b: np.ndarray,
+        cfg: PBSConfig | None = None,
+        d_known: int | None = None,
+    ) -> int:
+        """Enqueue one session (Alice holds ``set_a``); returns its sid.
+
+        Phase 0 (ToW estimate + parameter optimization) runs at submit time,
+        so cohort membership is known before the first round.
+        """
+        cfg = cfg or PBSConfig()
+        a = np.unique(np.asarray(set_a, dtype=np.uint32))
+        b = np.unique(np.asarray(set_b, dtype=np.uint32))
+        plan = plan_protocol(a, b, cfg, d_known)
+        sid = len(self._sessions)
+        self._sessions.append(
+            ReconSession(sid=sid, plan=plan, state=new_session_state(a, b, plan))
+        )
+        return sid
+
+    @property
+    def sessions(self) -> list[ReconSession]:
+        return self._sessions
+
+    def run(self) -> dict[int, ReconcileResult]:
+        """Drive every submitted session to completion; sid -> result."""
+        batch = SessionBatch(self._sessions)
+        rnd = 0
+        while True:
+            rnd += 1
+            cohorts = batch.plan_round(rnd)
+            if not cohorts:
+                break
+            for cohort in cohorts:
+                self._run_cohort_round(cohort, rnd)
+        return {s.sid: finalize_result(s.state, s.plan) for s in self._sessions}
+
+    def _run_cohort_round(self, cohort: CohortRound, rnd: int) -> None:
+        xors_a, xors_b, ok, pos, cnt, csum_a, csum_b = jax.device_get(
+            execute_round(
+                jnp.asarray(cohort.elems_a),
+                jnp.asarray(cohort.valid_a),
+                jnp.asarray(cohort.elems_b),
+                jnp.asarray(cohort.valid_b),
+                jnp.asarray(cohort.seeds),
+                n=cohort.n,
+                t=cohort.t,
+                interpret=self._interpret,
+            )
+        )
+        sketch_bits = cohort.t * cohort.m + 1  # per-unit sketch + ok flag
+        for sess, base, active, bin_seed in cohort.members:
+            k = len(active)
+            rows = slice(base, base + k)
+            positions = [
+                pos[base + i, : cnt[base + i]].astype(np.int64) for i in range(k)
+            ]
+            round_bits = k * sketch_bits
+            round_bits += apply_round_outcomes(
+                sess.state,
+                active,
+                ok[rows],
+                positions,
+                xors_a[rows],
+                xors_b[rows],
+                csum_a[rows],
+                csum_b[rows],
+                plan=sess.plan,
+                bin_seed=bin_seed,
+                rnd=rnd,
+            )
+            sess.state.bytes_per_round.append((round_bits + 7) // 8)
+            sess.state.rounds = rnd
+
+
+def reconcile_batch(
+    pairs,
+    cfgs=None,
+    d_knowns=None,
+    *,
+    interpret: bool | None = None,
+) -> list[ReconcileResult]:
+    """One-shot convenience: reconcile a list of (set_a, set_b) pairs.
+
+    ``cfgs``/``d_knowns`` may be None, a single value applied to every pair,
+    or a per-pair sequence.  Results come back in submission order.
+    """
+    npairs = len(pairs)
+
+    def _broadcast(x, name):
+        # scalars (None, a PBSConfig, an int d) broadcast; any sized
+        # non-string container is per-pair and must match the pair count
+        if x is None or isinstance(x, str) or not hasattr(x, "__len__"):
+            return [x] * npairs
+        if len(x) != npairs:
+            raise ValueError(f"{name} has {len(x)} entries for {npairs} pairs")
+        return list(x)
+
+    server = ReconcileServer(interpret=interpret)
+    for (a, b), cfg, dk in zip(
+        pairs, _broadcast(cfgs, "cfgs"), _broadcast(d_knowns, "d_knowns")
+    ):
+        server.submit(a, b, cfg=cfg, d_known=dk)
+    results = server.run()
+    return [results[i] for i in range(npairs)]

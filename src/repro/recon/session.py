@@ -1,0 +1,164 @@
+"""Multi-session planning: cohorts, unit packing, and the SessionBatch planner.
+
+One ``ReconSession`` is one Alice↔Bob pair running the full PBS protocol with
+its own parameters, seeds, and byte ledger.  The planner's job (DESIGN.md §5)
+is to turn S concurrent sessions into dense accelerator work each round:
+
+1. every session hash-partitions its sets into its g groups (plus any 3-way
+   split descendants) exactly as `core.pbs` does — the *unit* queue;
+2. sessions are bucketed into **cohorts** by BCH code (n, t), since one
+   cohort shares one syndrome matrix and one vmapped decode;
+3. each cohort's S×g active units are packed into one padded
+   ``(units, elems)`` layout per side (rows = units, ragged element counts
+   padded to a lane-aligned width, ``valid`` masking the tail), with a
+   per-unit bin-seed vector so units from different sessions — which draw
+   different per-round hash functions — still share a single kernel launch.
+
+Packing is pure numpy bookkeeping over the *same* ``slot_assignment`` the
+single-session oracle uses, which is what makes the batched engine
+unit-for-unit identical to ``core.pbs.reconcile``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.bch import BCHCode
+from repro.core.hashing import derive_seed
+from repro.core.pbs import (
+    ProtocolPlan,
+    SessionState,
+    effective_set,
+    group_view,
+    slot_assignment,
+)
+from repro.kernels.platform import ceil_to as _ceil_to
+
+
+@dataclass
+class ReconSession:
+    """One submitted Alice↔Bob pair: its plan (phase 0) + mutable round state."""
+
+    sid: int
+    plan: ProtocolPlan
+    state: SessionState
+
+    @property
+    def code_key(self) -> tuple[int, int]:
+        return (self.plan.n, self.plan.t)
+
+
+@dataclass
+class CohortRound:
+    """One cohort's packed work for one protocol round.
+
+    ``members`` maps each session to its slot range in the packed layout:
+    (session, slot_base, active_units, bin_seed).  Unit u of session s lives
+    at row ``slot_base + u`` of every array.  Rows past the true unit count
+    are all-padding (valid == 0, seed == 0): they sketch to zero, decode as
+    trivially-ok empty units, and are never mapped back to a session.
+    """
+
+    n: int
+    t: int
+    m: int
+    members: list
+    seeds: np.ndarray        # (U,) uint32 per-unit bin seeds
+    elems_a: np.ndarray      # (U, Ea) uint32 padded Alice rows
+    valid_a: np.ndarray      # (U, Ea) int32
+    elems_b: np.ndarray      # (U, Eb) uint32 padded Bob rows
+    valid_b: np.ndarray      # (U, Eb) int32
+
+
+def _unit_rows(elems: np.ndarray, idx: np.ndarray, slot: np.ndarray, k: int):
+    """Order one session's participating elements by unit slot.
+
+    Returns (vals concatenated in slot order, per-slot counts (k,))."""
+    counts = np.bincount(slot, minlength=k).astype(np.int64)
+    order = np.argsort(slot, kind="stable")
+    return elems[idx[order]].astype(np.uint32), counts
+
+
+def _pack(vals_list, counts_list, u_pad: int, width: int):
+    """Scatter slot-ordered value runs into a padded (u_pad, width) layout."""
+    counts = np.concatenate(counts_list) if counts_list else np.zeros(0, np.int64)
+    u = len(counts)
+    out = np.zeros((u_pad, width), dtype=np.uint32)
+    valid = np.zeros((u_pad, width), dtype=np.int32)
+    if u:
+        mask = np.arange(width)[None, :] < counts[:, None]
+        out[:u][mask] = np.concatenate(vals_list)
+        valid[:u][mask] = 1
+    return out, valid
+
+
+class SessionBatch:
+    """Plans one padded cohort layout per BCH code for each protocol round."""
+
+    # alignment of the packed layout: rows to the sublane unit, element
+    # width to the lane unit, so TPU block shapes need no re-padding.
+    ROW_ALIGN = 8
+    COL_ALIGN = 128
+
+    def __init__(self, sessions: list[ReconSession]):
+        self.sessions = sessions
+
+    def plan_round(self, rnd: int) -> list[CohortRound]:
+        """All cohorts with live work in round ``rnd`` (empty list = all done)."""
+        cohorts: dict[tuple[int, int], list] = {}
+        for s in self.sessions:
+            if rnd > s.plan.cfg.max_rounds:
+                continue  # session exhausted its budget: reported as failed
+            active = s.state.active_units()
+            if not active:
+                continue
+            cohorts.setdefault(s.code_key, []).append((s, active))
+        return [
+            self._pack_cohort(n, t, members, rnd)
+            for (n, t), members in sorted(cohorts.items())
+        ]
+
+    def _pack_cohort(self, n: int, t: int, members, rnd: int) -> CohortRound:
+        vals_a, cnts_a, vals_b, cnts_b, seed_runs, packed = [], [], [], [], [], []
+        base = 0
+        for s, active in members:
+            st = s.state
+            plan = s.plan
+            bin_seed = derive_seed(plan.cfg.seed, 2, rnd)
+            k = len(active)
+
+            eff_a = effective_set(st.a, st.diff)
+            grp_a, order_a, bounds_a = group_view(eff_a, plan.g, plan.seed_groups)
+            idx_a, slot_a = slot_assignment(eff_a, grp_a, active, order_a, bounds_a)
+            idx_b, slot_b = slot_assignment(
+                st.b, st.group_b, active, st.order_b, st.bounds_b
+            )
+
+            va, ca = _unit_rows(eff_a, idx_a, slot_a, k)
+            vb, cb = _unit_rows(st.b, idx_b, slot_b, k)
+            vals_a.append(va)
+            cnts_a.append(ca)
+            vals_b.append(vb)
+            cnts_b.append(cb)
+            seed_runs.append(np.full(k, bin_seed, dtype=np.uint64))
+            packed.append((s, base, active, bin_seed))
+            base += k
+
+        u_pad = max(self.ROW_ALIGN, _ceil_to(base, self.ROW_ALIGN))
+        wa = max(
+            self.COL_ALIGN,
+            _ceil_to(int(max((c.max() if len(c) else 0) for c in cnts_a)), self.COL_ALIGN),
+        )
+        wb = max(
+            self.COL_ALIGN,
+            _ceil_to(int(max((c.max() if len(c) else 0) for c in cnts_b)), self.COL_ALIGN),
+        )
+        elems_a, valid_a = _pack(vals_a, cnts_a, u_pad, wa)
+        elems_b, valid_b = _pack(vals_b, cnts_b, u_pad, wb)
+        seeds = np.zeros(u_pad, dtype=np.uint32)
+        seeds[:base] = np.concatenate(seed_runs).astype(np.uint32)
+        return CohortRound(
+            n=n, t=t, m=BCHCode(n, t).m, members=packed, seeds=seeds,
+            elems_a=elems_a, valid_a=valid_a, elems_b=elems_b, valid_b=valid_b,
+        )

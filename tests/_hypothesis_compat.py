@@ -1,0 +1,44 @@
+"""Optional-dependency shim for hypothesis (the ``[test]`` extra).
+
+Test modules import ``given``/``settings``/``st`` from here instead of from
+``hypothesis`` directly.  When hypothesis is installed the real objects are
+re-exported unchanged; when it is missing, property-based tests collect as
+clean skips (instead of failing module collection) while every plain pytest
+test in the same module keeps running.
+
+The ``given`` stub replaces the decorated function with a zero-argument
+skipper so pytest never tries to resolve the strategy keywords as fixtures.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # optional dependency: pip install -e .[test]
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def _skipped():
+                pytest.skip("hypothesis not installed (pip install -e .[test])")
+
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategies:
+        """Placeholder strategy factory: every attribute returns an inert stub."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -1,8 +1,7 @@
 """BCH sketch codec: roundtrip, linearity, overload detection, batched parity."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.bch import (
     BCHCode,

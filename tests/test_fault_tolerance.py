@@ -1,8 +1,7 @@
 """Checkpoint manager, PBS manifest sync, data ledger, elastic membership."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint import (
     latest_step,

@@ -1,8 +1,7 @@
 """Field-arithmetic unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.gf2m import get_field, gf32_inv, gf32_mul, gf32_pow
 

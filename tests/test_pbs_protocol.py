@@ -2,8 +2,7 @@
 communication accounting, estimator integration, and hypothesis properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.pbs import PBSConfig, checksum, reconcile, reconcile_small, true_diff
 from repro.core.simdata import make_pair, make_pair_two_sided

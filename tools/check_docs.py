@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""Fail if any docstring cites a DESIGN.md section anchor that doesn't exist.
+
+Module docstrings across the repo cite stable anchors like ``DESIGN.md §5``;
+this keeps those citations honest: every ``§N`` referenced next to a
+DESIGN.md mention must appear as a ``## §N`` heading in DESIGN.md.
+
+Usage: python tools/check_docs.py   (exit 1 on dangling anchors)
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+CITE_RE = re.compile(r"DESIGN\.md[^§\n]{0,10}((?:§\d+[/,\s–—-]{0,3})+)")
+SECT_RE = re.compile(r"§(\d+)")
+
+
+def design_anchors() -> set[str]:
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        print("FAIL: DESIGN.md does not exist", file=sys.stderr)
+        sys.exit(1)
+    return {
+        m.group(1)
+        for m in re.finditer(r"^##\s+§(\d+)", design.read_text(), re.MULTILINE)
+    }
+
+
+def cited_anchors() -> dict[str, list[str]]:
+    """anchor -> files citing it, from every .py file under the scan dirs."""
+    cites: dict[str, list[str]] = {}
+    for d in SCAN_DIRS:
+        for path in (ROOT / d).rglob("*.py"):
+            if "__pycache__" in path.parts:
+                continue
+            text = path.read_text(errors="replace")
+            for cm in CITE_RE.finditer(text):
+                for sm in SECT_RE.finditer(cm.group(1)):
+                    cites.setdefault(sm.group(1), []).append(
+                        str(path.relative_to(ROOT))
+                    )
+    return cites
+
+
+def main() -> int:
+    anchors = design_anchors()
+    cites = cited_anchors()
+    missing = {sec: files for sec, files in cites.items() if sec not in anchors}
+    if missing:
+        for sec in sorted(missing, key=int):
+            files = ", ".join(sorted(set(missing[sec])))
+            print(f"FAIL: DESIGN.md has no '## §{sec}' heading, cited by: {files}",
+                  file=sys.stderr)
+        return 1
+    total = sum(len(v) for v in cites.values())
+    print(f"ok: {total} DESIGN.md citations across {len(cites)} anchors "
+          f"({', '.join('§' + s for s in sorted(cites, key=int))}), all present")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
