@@ -2,13 +2,23 @@
 
 Sweeps a sessions × d grid (DESIGN.md §5/§7).  Each point submits S
 independent Alice↔Bob pairs to ``ReconcileServer``, drives every session's
-full PBS protocol through the batched accelerator path, and reports
+full PBS protocol through the device-resident batched path, and reports
 
-  * sessions/sec (wall clock over the whole batch, compiles included),
+  * sessions/sec and rounds/sec (wall clock over the whole batch, compiles
+    included),
+  * the host↔device transfer ledger: actual H2D bytes per round (element
+    store uploaded once + small per-round overlays) vs the legacy
+    re-pack-per-round equivalent, and kernel launches per round (the fused
+    two-side encode halves them),
+  * the host-ms vs device-ms split of the round loop,
   * bytes per distinct element (the paper's communication metric),
   * the maximum per-session deviation of ``bytes_sent`` from the
     single-session ``core.pbs.reconcile`` oracle — the engine is the same
     state machine, so this must be 0% (the run fails above 1%).
+
+The full grid is also written to ``BENCH_recon.json`` (``--json`` to move
+it, ``--no-json`` to skip) so CI tracks the perf trajectory; ``--min-h2d-
+ratio`` turns the transfer win into a hard gate (the CI smoke job passes 3).
 
 Runs standalone (``python benchmarks/recon_throughput.py --sessions 64
 --d 50``) or via ``python -m benchmarks.run`` with the quick default grid.
@@ -18,6 +28,7 @@ same dataflow compiles for the MXU.
 from __future__ import annotations
 
 import argparse
+import json
 import pathlib
 import sys
 import time
@@ -62,21 +73,68 @@ def bench_point(sessions: int, d: int, size: int, *, check: bool = True, seed: i
                 f"per-session bytes deviate {max_dev:.2%} from core.pbs (>1%)"
             )
 
-    return Row(
+    st = server.stats
+    point = {
+        "sessions": sessions,
+        "d": d,
+        "size": size,
+        "wall_s": round(wall, 4),
+        "sessions_per_s": round(sessions / wall, 3),
+        "rounds": st["rounds"],
+        "rounds_per_s": round(st["rounds"] / wall, 3),
+        "cohort_rounds": st["cohort_rounds"],
+        "h2d_store_bytes": st["h2d_store_bytes"],
+        "h2d_round_bytes": st["h2d_round_bytes"],
+        "h2d_bytes_per_round": round(st["h2d_bytes_per_round"], 1),
+        "legacy_h2d_bytes_per_round": round(st["legacy_h2d_bytes_per_round"], 1),
+        "h2d_ratio": round(st["h2d_ratio"], 3),
+        "kernel_launches_per_round": st["kernel_launches"] / max(1, st["rounds"]),
+        "legacy_kernel_launches_per_round": st["legacy_kernel_launches"]
+        / max(1, st["rounds"]),
+        "host_ms": round(st["host_s"] * 1e3, 2),
+        "device_ms": round(st["device_s"] * 1e3, 2),
+        "bytes_per_diff": round(total_bytes / max(1, total_diff), 2),
+        "success": n_ok,
+        "max_byte_dev": max_dev if check else None,
+    }
+    row = Row(
         name=f"recon_throughput/S{sessions}_d{d}",
         us_per_call=wall * 1e6 / sessions,
         derived=(
             f"sessions_per_s={sessions / wall:.2f} "
-            f"bytes_per_diff={total_bytes / max(1, total_diff):.2f} "
+            f"rounds_per_s={point['rounds_per_s']:.2f} "
+            f"h2d_ratio={point['h2d_ratio']:.2f} "
+            f"bytes_per_diff={point['bytes_per_diff']:.2f} "
             f"success={n_ok}/{sessions} "
             + (f"max_byte_dev={max_dev:.4%}" if check else "unchecked")
         ),
     )
+    return row, point
+
+
+def write_json(points: list[dict], path: str) -> None:
+    """BENCH_recon.json: the perf-trajectory artifact CI tracks per PR."""
+    doc = {
+        "bench": "recon_throughput",
+        "grid": [{"sessions": p["sessions"], "d": p["d"]} for p in points],
+        "points": points,
+    }
+    pathlib.Path(path).write_text(json.dumps(doc, indent=1) + "\n")
 
 
 def run():
-    """Quick grid for ``python -m benchmarks.run`` (CSV rows like the others)."""
-    rows = [bench_point(8, d, size=2000, check=True) for d in (10, 50)]
+    """Quick grid for ``python -m benchmarks.run`` (CSV rows like the others).
+
+    The JSON artifact is anchored to the repo root (where .gitignore covers
+    it) rather than the caller's cwd.
+    """
+    rows = []
+    points = []
+    for d in (10, 50):
+        row, point = bench_point(8, d, size=2000, check=True)
+        rows.append(row)
+        points.append(point)
+    write_json(points, pathlib.Path(__file__).resolve().parents[1] / "BENCH_recon.json")
     return print_rows(rows)
 
 
@@ -90,19 +148,33 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-check", action="store_true",
                     help="skip the per-session core.pbs byte validation")
+    ap.add_argument("--json", type=str, default="BENCH_recon.json",
+                    help="path for the JSON artifact (default BENCH_recon.json)")
+    ap.add_argument("--no-json", action="store_true", help="skip the JSON artifact")
+    ap.add_argument("--min-h2d-ratio", type=float, default=0.0,
+                    help="fail if any point's H2D transfer win drops below this")
     args = ap.parse_args(argv)
 
     grid_s = [int(x) for x in args.sessions.split(",")]
     grid_d = [int(x) for x in args.d.split(",")]
     print("name,us_per_call,derived")
-    rows = []
+    rows, points = [], []
     for sessions in grid_s:
         for d in grid_d:
-            rows.append(
-                bench_point(sessions, d, args.size, check=not args.no_check,
-                            seed=args.seed)
+            row, point = bench_point(sessions, d, args.size,
+                                     check=not args.no_check, seed=args.seed)
+            rows.append(row)
+            points.append(point)
+            print(row.csv(), flush=True)
+    if not args.no_json:
+        write_json(points, args.json)
+        print(f"# wrote {args.json}", flush=True)
+    if args.min_h2d_ratio:
+        worst = min(p["h2d_ratio"] for p in points)
+        if worst < args.min_h2d_ratio:
+            raise AssertionError(
+                f"H2D transfer ratio {worst:.2f} < required {args.min_h2d_ratio}"
             )
-            print(rows[-1].csv(), flush=True)
     return rows
 
 

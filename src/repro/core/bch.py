@@ -12,6 +12,7 @@ bitmap via Berlekamp–Massey + Chien search.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import numpy as np
@@ -35,6 +36,18 @@ class BCHCode:
     @property
     def sketch_bits(self) -> int:
         return self.t * self.m
+
+
+@functools.lru_cache(maxsize=None)
+def bch_code(n: int, t: int) -> BCHCode:
+    """Memoized ``BCHCode`` lookup for the hot per-round paths.
+
+    ``BCHCode`` itself is a cheap frozen dataclass, but routing every cohort
+    encode/decode through one cached instance per (n, t) also keeps the
+    field singleton (``get_field``) and its memoized syndrome/Chien matrices
+    warm, so round planning never re-derives GF tables.
+    """
+    return BCHCode(n, t)
 
 
 def sketch_from_positions(code: BCHCode, positions: np.ndarray) -> np.ndarray:

@@ -113,17 +113,21 @@ class GF2m:
         rows = [self.to_bits(self.mul(1 << k, c)) for k in range(self.m)]
         return np.stack(rows, axis=0).astype(np.int32)
 
+    @functools.lru_cache(maxsize=None)
     def syndrome_matrix(self, t: int) -> np.ndarray:
         """(n, t*m) binary matrix P mapping a parity bitmap to its t odd syndromes.
 
         P[i, j*m:(j+1)*m] = bits(alpha^(i*(2j+1))).  A bitmap's sketch is
         (bitmap @ P) mod 2 — one dense GF(2) matmul (MXU-friendly).
+        Memoized per (field, t): fields are singletons via ``get_field``, so
+        repeated cohort encodes reuse one table instead of re-deriving it.
         """
         i = np.arange(self.n, dtype=np.int64)[:, None]
         j = np.arange(t, dtype=np.int64)[None, :]
         powers = self.pow_alpha(i * (2 * j + 1))  # (n, t) integer elements
         return self.to_bits(powers).reshape(self.n, t * self.m)
 
+    @functools.lru_cache(maxsize=None)
     def chien_matrix(self, t: int) -> np.ndarray:
         """((t+1)*m, n*m) binary matrix C for whole-field polynomial evaluation.
 

@@ -157,6 +157,9 @@ class SessionState:
     group_b: np.ndarray           # Bob's group ids (fixed across rounds)
     order_b: np.ndarray
     bounds_b: np.ndarray
+    group_a: np.ndarray           # Alice's group ids over the *base* set A
+    order_a: np.ndarray           # (fixed across rounds — grouping is round-
+    bounds_a: np.ndarray          #  invariant; only diff membership changes)
     bytes_per_round: list = field(default_factory=list)
     rounds: int = 0
     decode_failures: int = 0
@@ -176,10 +179,12 @@ def group_view(elems: np.ndarray, g: int, seed_groups: int):
 
 def new_session_state(a: np.ndarray, b: np.ndarray, plan: ProtocolPlan) -> SessionState:
     grp_b, order_b, bounds_b = group_view(b, plan.g, plan.seed_groups)
+    grp_a, order_a, bounds_a = group_view(a, plan.g, plan.seed_groups)
     return SessionState(
         a=a, b=b, a_set=set(int(x) for x in a), diff=set(),
         units=[Unit(uid=i, group=i) for i in range(plan.g)], next_uid=plan.g,
         group_b=grp_b, order_b=order_b, bounds_b=bounds_b,
+        group_a=grp_a, order_a=order_a, bounds_a=bounds_a,
     )
 
 
@@ -189,6 +194,23 @@ def effective_set(a: np.ndarray, diff: set) -> np.ndarray:
         return a
     diff_arr = np.fromiter(diff, dtype=np.uint32, count=len(diff))
     return np.concatenate([np.setdiff1d(a, diff_arr), np.setdiff1d(diff_arr, a)])
+
+
+def diff_overlay(st: SessionState) -> tuple[np.ndarray, np.ndarray]:
+    """Alice's effective set as a delta against her base set A.
+
+    A △ D̂ = (A \\ removed) ∪ added with ``removed = A ∩ D̂`` (elements Alice
+    must drop this round) and ``added = D̂ \\ A`` (recovered elements she must
+    inject).  Both are tiny (≤ |D̂| ≤ d) — this is what lets the batched
+    engine keep A device-resident and ship only the overlay per round
+    (DESIGN.md §5) instead of materializing ``effective_set``.
+    """
+    if not st.diff:
+        empty = np.zeros(0, dtype=np.uint32)
+        return empty, empty
+    d = np.fromiter(st.diff, dtype=np.uint32, count=len(st.diff))
+    in_a = np.isin(d, st.a)
+    return d[in_a], d[~in_a]
 
 
 def slot_assignment(elems, group_of, units, group_order, group_bounds):

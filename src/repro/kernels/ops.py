@@ -4,9 +4,11 @@
                            set (bin_xorsum kernel + gf2_matmul).
 * ``encode_groups``      — the batched form over U packed units with ragged
                            element counts (padded rows + valid masks) and
-                           per-unit bin seeds: the encode step of the
-                           multi-session engine (DESIGN.md §5), binning with
-                           the protocol's multiply-shift hash.
+                           per-unit bin seeds, binning with the protocol's
+                           multiply-shift hash.  The multi-session engine's
+                           fused executor (DESIGN.md §5) composes the same
+                           two pieces — ``bin_parity_xorsum_units`` +
+                           ``sketch_groups`` — over both sides at once.
 * ``bch_decode_batched`` — fully-jitted vmapped Berlekamp–Massey + Chien
                            search over all group pairs at once (fixed 2t-trip
                            ``fori_loop``; the TPU replacement for the paper's
@@ -25,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bch import BCHCode
+from repro.core.bch import BCHCode, bch_code
 from repro.core.gf2m import get_field
 
 from .bin_xorsum import bin_parity_xorsum, bin_parity_xorsum_units, xor_bits_to_u32
@@ -104,7 +106,7 @@ def bch_decode_batched(sketches: jax.Array, *, n: int, t: int):
     overload (paper §3.2 -> 3-way split).  GF ops run on log/exp tables in
     int32 lanes; BM is a fixed-trip fori_loop (no data-dependent control).
     """
-    code = BCHCode(n, t)
+    code = bch_code(n, t)
     gf = code.field
     m = code.m
     exp_t = jnp.asarray(gf.exp, dtype=jnp.int32)          # (2n,)

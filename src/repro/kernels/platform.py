@@ -20,3 +20,15 @@ def resolve_interpret(flag: bool | None = None) -> bool:
 def ceil_to(x: int, mult: int) -> int:
     """Round ``x`` up to a multiple of ``mult`` (block/lane alignment)."""
     return ((x + mult - 1) // mult) * mult
+
+
+def pow2_bucket(x: int, floor: int) -> int:
+    """Round ``x`` up to a power of two, never below ``floor``.
+
+    Shape bucketing for the serving loop (DESIGN.md §5): padding every
+    dynamic dimension to a power of two above its hardware alignment bounds
+    the set of compiled executor variants to O(log) per dimension instead of
+    one per distinct workload size.
+    """
+    v = max(int(x), 1, floor)
+    return 1 << (v - 1).bit_length()

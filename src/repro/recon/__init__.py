@@ -2,18 +2,20 @@
 
 The single-session protocol in ``repro.core.pbs`` is the numpy oracle; this
 package turns it into a traffic-serving system (DESIGN.md §5): a
-``SessionBatch`` planner packs the active units of S concurrent Alice↔Bob
-sessions into padded per-code cohorts, a jitted ``execute_round`` runs each
-round's bin/sketch/decode for every unit at once through the Pallas kernels,
-and ``ReconcileServer`` keeps per-session byte ledgers identical to
+``SessionBatch`` planner uploads each cohort's element store to the device
+once and emits only small gather/overlay arrays per round, a fused jitted
+``execute_round`` rebuilds unit rows on device and runs both sides'
+bin/sketch/decode in one call, and ``ReconcileServer`` dispatches all
+cohorts asynchronously while keeping per-session byte ledgers identical to
 ``core.pbs.reconcile``.
 """
 from .engine import execute_round
 from .server import ReconcileServer, reconcile_batch
-from .session import CohortRound, ReconSession, SessionBatch
+from .session import CohortRoundPlan, CohortStore, ReconSession, SessionBatch
 
 __all__ = [
-    "CohortRound",
+    "CohortRoundPlan",
+    "CohortStore",
     "ReconSession",
     "ReconcileServer",
     "SessionBatch",

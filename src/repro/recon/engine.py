@@ -1,21 +1,27 @@
-"""The jitted round executor: one cohort's round entirely on the accelerator.
+"""The fused round executor: one cohort's round as one jitted device call.
 
 Per call (DESIGN.md §5 round dataflow), for all U packed units at once:
 
-1. ``encode_groups`` twice (Alice's effective sets, Bob's sets): the batched
-   bin_xorsum Pallas kernel bins every unit with its own per-round hash and
-   folds per-bin parities/XORs, then one GF(2) matmul over all parity
-   bitmaps yields every unit's BCH sketch;
-2. the sketch XOR feeds ``bch_decode_batched`` — the vmapped fixed-trip
+1. **on-device row build** — gather each unit's element row from the
+   cohort's resident store (uploaded once per run), derive the valid mask
+   from the store counts, apply Alice's diff overlay (drop removed = A ∩ D̂
+   by value match, append added = D̂ \\ A columns), and mask both sides by
+   the unit's 3-way-split filter chain with the same multiply-shift hash
+   the protocol uses on the host;
+2. **fused two-side encode** — Alice's and Bob's built rows stack into ONE
+   ``bin_parity_xorsum_units`` launch and ONE GF(2) sketch matmul (half the
+   kernel launches of encoding each side separately), with the per-unit
+   wrap-around checksums folded into the same pass;
+3. the sketch XOR feeds ``bch_decode_batched`` — the vmapped fixed-trip
    Berlekamp–Massey + Chien search (DESIGN.md §3) — locating each unit's
    differing bins (``ok`` False = BCH overload → the host re-queues the
-   unit's 3-way split);
-3. per-unit checksums (sum mod 2^32) come from a masked wrap-around uint32
-   reduction, matching the paper's §2.2.3 gate bit-for-bit.
+   unit's 3-way split).
 
-Everything here is shape-polymorphic only in (U, Ea, Eb); the planner aligns
-those to fixed multiples so a serving loop settles into a handful of compiled
-variants per cohort code.
+Shape polymorphism is confined to (U, Wa, Wb, R, X, F), all bucketed to
+powers of two by the planner, so a serving loop settles into a bounded set
+of compiled variants per cohort code.  On TPU the per-round overlay buffers
+are donated — they are dead after the call, so XLA may reuse their memory
+for outputs.
 """
 from __future__ import annotations
 
@@ -24,26 +30,82 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.bch import BCHCode
-from repro.kernels.ops import bch_decode_batched, encode_groups
+from repro.core.bch import bch_code
+from repro.kernels.bin_xorsum import (
+    bin_parity_xorsum_units,
+    mix32_jnp,
+    mulshift_bins,
+    xor_bits_to_u32,
+)
+from repro.kernels.ops import bch_decode_batched, sketch_groups
 
 
 def _wrap_csum(elems: jax.Array, valid: jax.Array) -> jax.Array:
     """Per-unit checksum c(S) = sum mod 2^32 via wrap-around uint32 adds."""
-    vals = jnp.where(valid != 0, elems.astype(jnp.uint32), jnp.uint32(0))
+    vals = jnp.where(valid, elems.astype(jnp.uint32), jnp.uint32(0))
     return jnp.sum(vals, axis=1, dtype=jnp.uint32)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "t", "interpret"))
-def execute_round(
-    elems_a: jax.Array,
-    valid_a: jax.Array,
-    elems_b: jax.Array,
-    valid_b: jax.Array,
+def _build_rows(flat, start, cnt, row_map, width: int):
+    """Gather padded unit element rows + validity from the CSR store.
+
+    ``width`` is the planner's per-round gather width (pow2-bucketed max row
+    count among the gathered units); reads past a row's count are clamped to
+    index 0 and masked invalid.
+    """
+    starts = start[row_map][:, None]                   # (U, 1)
+    counts = cnt[row_map][:, None]
+    offs = jnp.arange(width, dtype=jnp.int32)[None, :]
+    valid = offs < counts
+    idx = jnp.where(valid, starts + offs, 0)
+    return flat[idx], valid                            # (U, W) uint32, bool
+
+
+def _apply_filters(elems, valid, fseeds, fbins, fcnt):
+    """Mask elements by the unit's 3-way-split filter chain (paper §3.2).
+
+    F (the chain depth) is a static dim, so the loop unrolls; inactive
+    levels (fcnt <= k) pass everything through.
+    """
+    for k in range(fseeds.shape[1]):
+        on = (fcnt > k)[:, None]
+        bins3 = mulshift_bins(mix32_jnp(elems, fseeds[:, k][:, None]), 3)
+        valid = valid & (~on | (bins3 == fbins[:, k][:, None]))
+    return valid
+
+
+def _pad_width(elems, valid, width):
+    pad = width - elems.shape[1]
+    if pad == 0:
+        return elems, valid
+    return (
+        jnp.pad(elems, ((0, 0), (0, pad))),
+        jnp.pad(valid, ((0, 0), (0, pad))),
+    )
+
+
+def _execute_round(
+    flat_a: jax.Array,
+    start_a: jax.Array,
+    cnt_a: jax.Array,
+    flat_b: jax.Array,
+    start_b: jax.Array,
+    cnt_b: jax.Array,
+    row_map: jax.Array,
+    unit_valid: jax.Array,
     seeds: jax.Array,
+    removed: jax.Array,
+    removed_cnt: jax.Array,
+    added: jax.Array,
+    added_cnt: jax.Array,
+    fseeds: jax.Array,
+    fbins: jax.Array,
+    fcnt: jax.Array,
     *,
     n: int,
     t: int,
+    width_a: int,
+    width_b: int,
     interpret: bool | None = None,
 ):
     """Run one PBS round for U packed units of one (n, t) cohort.
@@ -51,16 +113,65 @@ def execute_round(
     Returns (xors_a, xors_b (U, n) uint32, ok (U,), positions (U, t) padded
     with -1, counts (U,), csum_a, csum_b (U,) uint32).
     """
-    code = BCHCode(n, t)
-    _, xors_a, sk_a = encode_groups(elems_a, valid_a, seeds, code, interpret=interpret)
-    _, xors_b, sk_b = encode_groups(elems_b, valid_b, seeds, code, interpret=interpret)
-    ok, pos, cnt = bch_decode_batched(sk_a ^ sk_b, n=n, t=t)
-    return (
-        xors_a,
-        xors_b,
-        ok,
-        pos,
-        cnt,
-        _wrap_csum(elems_a, valid_a),
-        _wrap_csum(elems_b, valid_b),
+    code = bch_code(n, t)
+
+    # --- Alice: store row + diff overlay --------------------------------
+    ea, va = _build_rows(flat_a, start_a, cnt_a, row_map, width_a)
+    rm_on = jnp.arange(removed.shape[1])[None, :] < removed_cnt[:, None]
+    hit = (ea[:, :, None] == removed[:, None, :]) & rm_on[:, None, :]
+    va = va & ~jnp.any(hit, axis=-1)
+    ea = jnp.concatenate([ea, added], axis=1)
+    va = jnp.concatenate(
+        [va, jnp.arange(added.shape[1])[None, :] < added_cnt[:, None]], axis=1
     )
+
+    # --- Bob: store row only (his set never changes) --------------------
+    eb, vb = _build_rows(flat_b, start_b, cnt_b, row_map, width_b)
+
+    # --- split filters + padding-unit mask, both sides ------------------
+    va = _apply_filters(ea, va, fseeds, fbins, fcnt)
+    vb = _apply_filters(eb, vb, fseeds, fbins, fcnt)
+    uv = (unit_valid != 0)[:, None]
+    va, vb = va & uv, vb & uv
+
+    # --- fused two-side encode: one bin launch, one sketch matmul -------
+    width = max(ea.shape[1], eb.shape[1])
+    ea, va = _pad_width(ea, va, width)
+    eb, vb = _pad_width(eb, vb, width)
+    elems2 = jnp.concatenate([ea, eb], axis=0)          # (2U, W)
+    valid2 = jnp.concatenate([va, vb], axis=0)
+    seeds2 = jnp.concatenate([seeds, seeds], axis=0)
+    parity2, xor_bits2 = bin_parity_xorsum_units(
+        elems2, valid2.astype(jnp.int32), seeds2, n_bins=n, interpret=interpret
+    )
+    sk2 = sketch_groups(parity2, code, interpret=interpret)
+    xors2 = xor_bits_to_u32(xor_bits2)
+    csum2 = _wrap_csum(elems2, valid2)
+
+    u = row_map.shape[0]
+    ok, pos, cnt = bch_decode_batched(sk2[:u] ^ sk2[u:], n=n, t=t)
+    return xors2[:u], xors2[u:], ok, pos, cnt, csum2[:u], csum2[u:]
+
+
+# Per-round overlay buffers are dead after the call; donating them lets XLA
+# alias their device memory on TPU.  Off-TPU donation is unsupported and
+# only warns, so it stays off there.
+_ROUND_BUFFERS = (
+    "row_map", "unit_valid", "seeds", "removed", "removed_cnt",
+    "added", "added_cnt", "fseeds", "fbins", "fcnt",
+)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_executor(donate: bool):
+    return jax.jit(
+        _execute_round,
+        static_argnames=("n", "t", "width_a", "width_b", "interpret"),
+        donate_argnames=_ROUND_BUFFERS if donate else (),
+    )
+
+
+def execute_round(*args, **kwargs):
+    """Jitted ``_execute_round``; the backend probe for buffer donation is
+    deferred to call time so importing this module never initializes JAX."""
+    return _jitted_executor(jax.default_backend() == "tpu")(*args, **kwargs)

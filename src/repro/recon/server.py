@@ -1,20 +1,29 @@
 """ReconcileServer: the traffic-serving facade over the batched engine.
 
 ``submit`` any number of Alice↔Bob pairs, then ``run`` drives every session's
-full PBS protocol concurrently: each global round, the SessionBatch planner
-packs all live units into per-code cohorts, the jitted executor runs the
-round's encode→sketch→decode on the accelerator path, and the host applies
-the per-unit outcomes — recovery, fake rejection, checksum gating, and the
-3-way-split re-queue — through the *same* ``core.pbs`` state-machine
-functions as the single-session oracle.
+full PBS protocol concurrently.  Before round 1, each cohort's element store
+uploads to the device once; each global round the SessionBatch planner emits
+only small gather/overlay arrays, **all cohorts dispatch before the first
+device_get** (JAX async dispatch overlaps their device work), and the host
+applies the per-unit outcomes — recovery, fake rejection, checksum gating,
+and the 3-way-split re-queue — through the *same* ``core.pbs`` state-machine
+functions as the single-session oracle.  Decoded bin positions come back as
+one vectorized unpack per cohort (no per-unit Python slicing).
 
 Byte accounting is per session and identical to ``core.pbs.ReconcileResult``:
 the sketch/flag upload counts each session's own active units, and the
 Bob→Alice reply bits come from the shared ``apply_round_outcomes``, so
 ``run()[sid].bytes_sent`` equals what ``core.pbs.reconcile`` reports for the
 same pair, seed for seed (asserted in tests/test_recon_batch.py).
+
+``stats`` (after ``run``) reports the transfer/launch ledger the device-
+resident pipeline is optimizing: actual H2D bytes (store once + overlays per
+round) against the legacy re-pack-per-round equivalent, kernel launches per
+round (fused two-side encode = 2 vs 4), and the host-ms vs device-ms split.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -31,7 +40,7 @@ from repro.core.pbs import (
 )
 
 from .engine import execute_round
-from .session import CohortRound, ReconSession, SessionBatch
+from .session import CohortRoundPlan, ReconSession, SessionBatch
 
 
 class ReconcileServer:
@@ -44,6 +53,8 @@ class ReconcileServer:
     def __init__(self, *, interpret: bool | None = None):
         self._interpret = interpret
         self._sessions: list[ReconSession] = []
+        self._batch: SessionBatch | None = None
+        self._stats: dict = {}
 
     def submit(
         self,
@@ -65,51 +76,119 @@ class ReconcileServer:
         self._sessions.append(
             ReconSession(sid=sid, plan=plan, state=new_session_state(a, b, plan))
         )
+        self._batch = None  # new member: cohort stores must be rebuilt
         return sid
 
     @property
     def sessions(self) -> list[ReconSession]:
         return self._sessions
 
+    @property
+    def stats(self) -> dict:
+        """Transfer/launch/time ledger of the last ``run`` (DESIGN.md §5)."""
+        return dict(self._stats)
+
     def run(self) -> dict[int, ReconcileResult]:
-        """Drive every submitted session to completion; sid -> result."""
-        batch = SessionBatch(self._sessions)
+        """Drive every submitted session to completion; sid -> result.
+
+        The SessionBatch (and its device-resident stores) is kept across
+        ``run`` calls: a second ``run`` with no new sessions re-uploads
+        nothing, and stores only build when a cohort has live work.
+        """
+        t_run = time.perf_counter()
+        if self._batch is None:
+            self._batch = SessionBatch(self._sessions)
+        batch = self._batch
+        prior_store_bytes = batch.store_upload_bytes()
+        st = {
+            "rounds": 0,
+            "cohort_rounds": 0,
+            "h2d_round_bytes": 0,
+            "legacy_h2d_round_bytes": 0,
+            "kernel_launches": 0,
+            "legacy_kernel_launches": 0,
+            "device_s": 0.0,
+        }
         rnd = 0
         while True:
             rnd += 1
-            cohorts = batch.plan_round(rnd)
-            if not cohorts:
+            plans = batch.plan_round(rnd)
+            if not plans:
                 break
-            for cohort in cohorts:
-                self._run_cohort_round(cohort, rnd)
+            st["rounds"] = rnd
+            st["cohort_rounds"] += len(plans)
+            # dispatch every cohort before the first device_get: JAX async
+            # dispatch lets cohort k+1's device work overlap cohort k's.
+            # Dispatch itself (upload, tracing, compiles) is host work; only
+            # the blocking readback window counts as device time.
+            inflight = [(plan, self._dispatch(plan)) for plan in plans]
+            for plan, out in inflight:
+                t0 = time.perf_counter()
+                out = jax.device_get(out)
+                st["device_s"] += time.perf_counter() - t0
+                self._apply_cohort(plan, out, rnd)
+            for plan in plans:
+                st["h2d_round_bytes"] += plan.h2d_bytes
+                st["legacy_h2d_round_bytes"] += plan.legacy_h2d_bytes
+                st["kernel_launches"] += 2       # fused bin launch + sketch matmul
+                st["legacy_kernel_launches"] += 4  # 2x bin + 2x sketch, per side
+
+        # stores built during *this* run (cached ones re-upload nothing)
+        st["h2d_store_bytes"] = batch.store_upload_bytes() - prior_store_bytes
+        st["h2d_bytes"] = st["h2d_store_bytes"] + st["h2d_round_bytes"]
+        st["legacy_h2d_bytes"] = st["legacy_h2d_round_bytes"]
+        rounds = max(1, st["rounds"])
+        st["h2d_bytes_per_round"] = st["h2d_bytes"] / rounds
+        st["legacy_h2d_bytes_per_round"] = st["legacy_h2d_bytes"] / rounds
+        st["h2d_ratio"] = st["legacy_h2d_bytes"] / max(1, st["h2d_bytes"])
+        st["total_s"] = time.perf_counter() - t_run
+        st["host_s"] = st["total_s"] - st["device_s"]
+        if st["rounds"] or not self._stats:
+            # an idempotent re-run that did no work keeps the meaningful
+            # ledger of the run that actually drove rounds
+            self._stats = st
         return {s.sid: finalize_result(s.state, s.plan) for s in self._sessions}
 
-    def _run_cohort_round(self, cohort: CohortRound, rnd: int) -> None:
-        xors_a, xors_b, ok, pos, cnt, csum_a, csum_b = jax.device_get(
-            execute_round(
-                jnp.asarray(cohort.elems_a),
-                jnp.asarray(cohort.valid_a),
-                jnp.asarray(cohort.elems_b),
-                jnp.asarray(cohort.valid_b),
-                jnp.asarray(cohort.seeds),
-                n=cohort.n,
-                t=cohort.t,
-                interpret=self._interpret,
-            )
+    def _dispatch(self, plan: CohortRoundPlan):
+        """Enqueue one cohort's fused round executor; returns device futures."""
+        store = plan.store
+        return execute_round(
+            store.flat_a,
+            store.start_a,
+            store.cnt_a,
+            store.flat_b,
+            store.start_b,
+            store.cnt_b,
+            *(jnp.asarray(plan.arrays[k]) for k in (
+                "row_map", "unit_valid", "seeds", "removed", "removed_cnt",
+                "added", "added_cnt", "fseeds", "fbins", "fcnt",
+            )),
+            n=store.n,
+            t=store.t,
+            width_a=plan.width_a,
+            width_b=plan.width_b,
+            interpret=self._interpret,
         )
-        sketch_bits = cohort.t * cohort.m + 1  # per-unit sketch + ok flag
-        for sess, base, active, bin_seed in cohort.members:
+
+    def _apply_cohort(self, plan: CohortRoundPlan, out, rnd: int) -> None:
+        xors_a, xors_b, ok, pos, cnt, csum_a, csum_b = out
+        # one vectorized unpack of the (U, t) padded position rows: valid
+        # entries are left-justified, so a masked flatten + split by the
+        # per-unit counts yields every unit's decoded bins at once.
+        cnt = np.asarray(cnt, dtype=np.int64)
+        pos = np.asarray(pos)
+        positions = np.split(pos[pos >= 0].astype(np.int64), np.cumsum(cnt)[:-1])
+
+        sketch_bits = plan.store.t * plan.store.m + 1  # per-unit sketch + ok flag
+        for sess, base, active, bin_seed in plan.members:
             k = len(active)
             rows = slice(base, base + k)
-            positions = [
-                pos[base + i, : cnt[base + i]].astype(np.int64) for i in range(k)
-            ]
             round_bits = k * sketch_bits
             round_bits += apply_round_outcomes(
                 sess.state,
                 active,
                 ok[rows],
-                positions,
+                positions[rows],
                 xors_a[rows],
                 xors_b[rows],
                 csum_a[rows],

@@ -1,39 +1,46 @@
-"""Multi-session planning: cohorts, unit packing, and the SessionBatch planner.
+"""Multi-session planning: cohort stores, round overlays, and SessionBatch.
 
 One ``ReconSession`` is one Alice↔Bob pair running the full PBS protocol with
 its own parameters, seeds, and byte ledger.  The planner's job (DESIGN.md §5)
-is to turn S concurrent sessions into dense accelerator work each round:
+is to turn S concurrent sessions into dense accelerator work each round while
+keeping host↔device traffic off the steady-state path:
 
-1. every session hash-partitions its sets into its g groups (plus any 3-way
-   split descendants) exactly as `core.pbs` does — the *unit* queue;
-2. sessions are bucketed into **cohorts** by BCH code (n, t), since one
-   cohort shares one syndrome matrix and one vmapped decode;
-3. each cohort's S×g active units are packed into one padded
-   ``(units, elems)`` layout per side (rows = units, ragged element counts
-   padded to a lane-aligned width, ``valid`` masking the tail), with a
-   per-unit bin-seed vector so units from different sessions — which draw
-   different per-round hash functions — still share a single kernel launch.
+1. sessions are bucketed into **cohorts** by BCH code (n, t) — cohort
+   membership is fixed at submit time, since phase 0 pins every session's
+   code before the first round;
+2. at the start of ``run`` each cohort builds its **element store** once:
+   both sides' elements packed row-per-group in a padded ``(G, W)`` device
+   matrix (grouping is round-invariant — the group hash seed never changes),
+   uploaded a single time for the whole protocol;
+3. per round the planner emits only small index/overlay arrays — the
+   unit→store-row gather map, per-unit bin seeds, Alice's diff overlay
+   (removed = A ∩ D̂, added = D̂ \\ A per unit), and the 3-way-split filter
+   chains — and the fused executor rebuilds each unit's element rows *on
+   device* from the resident store.
 
-Packing is pure numpy bookkeeping over the *same* ``slot_assignment`` the
-single-session oracle uses, which is what makes the batched engine
-unit-for-unit identical to ``core.pbs.reconcile``.
+Every dynamic dimension (unit rows, store widths, overlay widths, filter
+depth) is bucketed to a power of two at or above the hardware alignment
+(``pow2_bucket``), so a serving loop converges to a bounded set of compiled
+executor variants per cohort code.
+
+The per-unit element *sets* the executor reconstructs are exactly the
+``slot_assignment`` sets of the single-session oracle (parity/XOR/checksum
+reductions are permutation-invariant), which is what keeps the batched
+engine unit-for-unit identical to ``core.pbs.reconcile``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.bch import BCHCode
+import jax.numpy as jnp
+
+from repro.core.bch import bch_code
 from repro.core.hashing import derive_seed
-from repro.core.pbs import (
-    ProtocolPlan,
-    SessionState,
-    effective_set,
-    group_view,
-    slot_assignment,
-)
+from repro.core.pbs import ProtocolPlan, SessionState, diff_overlay, group_view
 from repro.kernels.platform import ceil_to as _ceil_to
+from repro.kernels.platform import pow2_bucket
 
 
 @dataclass
@@ -50,115 +57,282 @@ class ReconSession:
 
 
 @dataclass
-class CohortRound:
-    """One cohort's packed work for one protocol round.
+class CohortStore:
+    """One cohort's device-resident element store, uploaded once per run.
 
-    ``members`` maps each session to its slot range in the packed layout:
-    (session, slot_base, active_units, bin_seed).  Unit u of session s lives
-    at row ``slot_base + u`` of every array.  Rows past the true unit count
-    are all-padding (valid == 0, seed == 0): they sketch to zero, decode as
-    trivially-ok empty units, and are never mapped back to a session.
+    CSR layout — one flat element array per side plus per-row (start, count)
+    — so the one-time upload is the raw element bytes with no padding waste.
+    Row ``row_of[(sid, group)]`` is that session group's slice; the executor
+    gathers ``flat[start + iota]`` into padded unit rows *on device* and
+    derives the valid mask from the counts, so neither padded element
+    matrices nor valid matrices ever cross the host↔device boundary.
     """
 
     n: int
     t: int
     m: int
+    row_of: dict                   # (sid, group) -> store row index
+    flat_a: jnp.ndarray            # (Ea_total,) uint32, device-resident
+    start_a: jnp.ndarray           # (G,) int32 row offsets into flat_a
+    cnt_a: jnp.ndarray             # (G,) int32 row element counts
+    flat_b: jnp.ndarray            # (Eb_total,) uint32
+    start_b: jnp.ndarray           # (G,) int32
+    cnt_b: jnp.ndarray             # (G,) int32
+    cnt_a_host: np.ndarray         # host copies: per-round gather widths +
+    cnt_b_host: np.ndarray         #   legacy-traffic accounting
+    h2d_bytes: int = 0             # one-time upload cost of this store
+
+
+@dataclass
+class CohortRoundPlan:
+    """One cohort's host-side work order for one round: small arrays only.
+
+    ``members`` maps each session to its slot range in the packed unit axis:
+    (session, slot_base, active_units, bin_seed).  Unit u of session s lives
+    at row ``slot_base + u`` of every per-unit array.  Rows past the true
+    unit count have ``unit_valid == 0``: the executor masks them to empty,
+    they sketch to zero, decode as trivially-ok, and are never mapped back.
+    """
+
+    store: CohortStore
     members: list
-    seeds: np.ndarray        # (U,) uint32 per-unit bin seeds
-    elems_a: np.ndarray      # (U, Ea) uint32 padded Alice rows
-    valid_a: np.ndarray      # (U, Ea) int32
-    elems_b: np.ndarray      # (U, Eb) uint32 padded Bob rows
-    valid_b: np.ndarray      # (U, Eb) int32
+    units: int                     # true (unpadded) unit count
+    width_a: int = 0               # this round's gather widths (pow2-bucketed
+    width_b: int = 0               #   max row count among gathered units)
+    arrays: dict = field(default_factory=dict)
+    h2d_bytes: int = 0             # this round's overlay upload
+    legacy_h2d_bytes: int = 0      # what the re-pack-per-round path would ship
 
 
-def _unit_rows(elems: np.ndarray, idx: np.ndarray, slot: np.ndarray, k: int):
-    """Order one session's participating elements by unit slot.
-
-    Returns (vals concatenated in slot order, per-slot counts (k,))."""
-    counts = np.bincount(slot, minlength=k).astype(np.int64)
-    order = np.argsort(slot, kind="stable")
-    return elems[idx[order]].astype(np.uint32), counts
+def _grouped_rows(elems: np.ndarray, order: np.ndarray, bounds: np.ndarray, g: int):
+    """Yield each group's elements (slot order) from a cached group view."""
+    for grp in range(g):
+        yield elems[order[bounds[grp] : bounds[grp + 1]]].astype(np.uint32)
 
 
-def _pack(vals_list, counts_list, u_pad: int, width: int):
-    """Scatter slot-ordered value runs into a padded (u_pad, width) layout."""
-    counts = np.concatenate(counts_list) if counts_list else np.zeros(0, np.int64)
-    u = len(counts)
-    out = np.zeros((u_pad, width), dtype=np.uint32)
-    valid = np.zeros((u_pad, width), dtype=np.int32)
-    if u:
-        mask = np.arange(width)[None, :] < counts[:, None]
-        out[:u][mask] = np.concatenate(vals_list)
-        valid[:u][mask] = 1
-    return out, valid
+def _by_group(vals: np.ndarray, g: int, seed_groups: int) -> dict:
+    """Partition a small value array by its (round-invariant) group id,
+    through the same canonical ``group_view`` the oracle partitions with."""
+    if not len(vals):
+        return {}
+    _, order, bounds = group_view(vals, g, seed_groups)
+    sv = vals[order]
+    return {
+        gi: sv[bounds[gi] : bounds[gi + 1]]
+        for gi in range(g)
+        if bounds[gi + 1] > bounds[gi]
+    }
 
 
 class SessionBatch:
-    """Plans one padded cohort layout per BCH code for each protocol round."""
+    """Plans per-code cohorts: one resident store, small overlays per round."""
 
-    # alignment of the packed layout: rows to the sublane unit, element
-    # width to the lane unit, so TPU block shapes need no re-padding.
+    # alignment floors of the packed layouts: unit rows to the sublane unit,
+    # element widths to the lane unit; pow2_bucket rounds up from there.
     ROW_ALIGN = 8
     COL_ALIGN = 128
+    OVERLAY_ALIGN = 8              # diff-overlay widths (removed/added cols)
 
     def __init__(self, sessions: list[ReconSession]):
         self.sessions = sessions
+        self._stores: dict[tuple[int, int], CohortStore] = {}
 
-    def plan_round(self, rnd: int) -> list[CohortRound]:
+    # ---- upload-once element store -------------------------------------
+
+    def store_upload_bytes(self) -> int:
+        """One-time H2D cost of the stores built so far (0 if none yet) —
+        accounting only, never forces a build."""
+        return sum(s.h2d_bytes for s in self._stores.values())
+
+    def store_for(self, key: tuple[int, int]) -> CohortStore:
+        """This code's store, built (and uploaded) on first live use only.
+
+        Members are the sessions of this code that still have live units at
+        build time, so a rebuilt batch never re-uploads elements for
+        sessions that already finished; sessions only ever *finish*, so
+        every later round's live set is a subset of the rows built here.
+        """
+        if key not in self._stores:
+            members = [
+                s for s in self.sessions
+                if s.code_key == key and s.state.active_units()
+            ]
+            self._stores[key] = self._build_store(*key, members)
+        return self._stores[key]
+
+    def _build_store(self, n: int, t: int, members: list[ReconSession]) -> CohortStore:
+        rows_a: list[np.ndarray] = []
+        rows_b: list[np.ndarray] = []
+        row_of: dict = {}
+        for s in members:
+            st, plan = s.state, s.plan
+            segs_a = _grouped_rows(st.a, st.order_a, st.bounds_a, plan.g)
+            segs_b = _grouped_rows(st.b, st.order_b, st.bounds_b, plan.g)
+            for grp, (sa, sb) in enumerate(zip(segs_a, segs_b)):
+                row_of[(s.sid, grp)] = len(rows_a)
+                rows_a.append(sa)
+                rows_b.append(sb)
+
+        def pack(rows):
+            cnt = np.array([len(r) for r in rows], dtype=np.int32)
+            start = np.zeros(len(rows), dtype=np.int32)
+            np.cumsum(cnt[:-1], out=start[1:])
+            flat = (
+                np.concatenate(rows).astype(np.uint32)
+                if rows else np.zeros(0, np.uint32)
+            )
+            # lane-pad the flat tail only: the gather clamps past-end reads.
+            # (No pow2 bucket here — the store shape is fixed for the whole
+            # run, so it costs one executor compile per cohort, not one per
+            # round; only round-varying dims need bucketing.)
+            flat = np.pad(flat, (0, _ceil_to(max(len(flat), 1), self.COL_ALIGN) - len(flat)))
+            return flat, start, cnt
+
+        fa, sa, ca = pack(rows_a)
+        fb, sb, cb = pack(rows_b)
+        store = CohortStore(
+            n=n, t=t, m=bch_code(n, t).m, row_of=row_of,
+            flat_a=jnp.asarray(fa), start_a=jnp.asarray(sa), cnt_a=jnp.asarray(ca),
+            flat_b=jnp.asarray(fb), start_b=jnp.asarray(sb), cnt_b=jnp.asarray(cb),
+            cnt_a_host=ca, cnt_b_host=cb,
+            h2d_bytes=sum(x.nbytes for x in (fa, sa, ca, fb, sb, cb)),
+        )
+        return store
+
+    # ---- per-round overlay planning ------------------------------------
+
+    def plan_round(self, rnd: int) -> list[CohortRoundPlan]:
         """All cohorts with live work in round ``rnd`` (empty list = all done)."""
-        cohorts: dict[tuple[int, int], list] = {}
+        live: dict[tuple[int, int], list] = {}
         for s in self.sessions:
             if rnd > s.plan.cfg.max_rounds:
                 continue  # session exhausted its budget: reported as failed
             active = s.state.active_units()
             if not active:
                 continue
-            cohorts.setdefault(s.code_key, []).append((s, active))
+            live.setdefault(s.code_key, []).append((s, active))
         return [
-            self._pack_cohort(n, t, members, rnd)
-            for (n, t), members in sorted(cohorts.items())
+            self._plan_cohort(self.store_for(key), members, rnd)
+            for key, members in sorted(live.items())
         ]
 
-    def _pack_cohort(self, n: int, t: int, members, rnd: int) -> CohortRound:
-        vals_a, cnts_a, vals_b, cnts_b, seed_runs, packed = [], [], [], [], [], []
+    def _plan_cohort(self, store: CohortStore, members, rnd: int) -> CohortRoundPlan:
+        total = sum(len(active) for _, active in members)
+        u_pad = pow2_bucket(total, self.ROW_ALIGN)
+
+        row_map = np.zeros(u_pad, dtype=np.int32)
+        unit_valid = np.zeros(u_pad, dtype=np.int32)
+        # built uint32 end-to-end: derive_seed yields uint32-range ints by
+        # construction (asserted per session below), no dtype churn.
+        seeds = np.zeros(u_pad, dtype=np.uint32)
+        removed_of: list[np.ndarray | None] = [None] * u_pad
+        added_of: list[np.ndarray | None] = [None] * u_pad
+        filters_of: list[tuple] = [()] * u_pad
+
+        packed = []
         base = 0
         for s, active in members:
-            st = s.state
-            plan = s.plan
+            st, plan = s.state, s.plan
             bin_seed = derive_seed(plan.cfg.seed, 2, rnd)
-            k = len(active)
-
-            eff_a = effective_set(st.a, st.diff)
-            grp_a, order_a, bounds_a = group_view(eff_a, plan.g, plan.seed_groups)
-            idx_a, slot_a = slot_assignment(eff_a, grp_a, active, order_a, bounds_a)
-            idx_b, slot_b = slot_assignment(
-                st.b, st.group_b, active, st.order_b, st.bounds_b
-            )
-
-            va, ca = _unit_rows(eff_a, idx_a, slot_a, k)
-            vb, cb = _unit_rows(st.b, idx_b, slot_b, k)
-            vals_a.append(va)
-            cnts_a.append(ca)
-            vals_b.append(vb)
-            cnts_b.append(cb)
-            seed_runs.append(np.full(k, bin_seed, dtype=np.uint64))
+            assert 0 <= bin_seed < 1 << 32, bin_seed
+            removed, added = diff_overlay(st)
+            rem_by_grp = _by_group(removed, plan.g, plan.seed_groups)
+            add_by_grp = _by_group(added, plan.g, plan.seed_groups)
+            for slot, u in enumerate(active):
+                row = base + slot
+                row_map[row] = store.row_of[(s.sid, u.group)]
+                unit_valid[row] = 1
+                seeds[row] = bin_seed
+                removed_of[row] = rem_by_grp.get(u.group)
+                added_of[row] = add_by_grp.get(u.group)
+                filters_of[row] = u.filters
             packed.append((s, base, active, bin_seed))
-            base += k
+            base += len(active)
 
-        u_pad = max(self.ROW_ALIGN, _ceil_to(base, self.ROW_ALIGN))
-        wa = max(
-            self.COL_ALIGN,
-            _ceil_to(int(max((c.max() if len(c) else 0) for c in cnts_a)), self.COL_ALIGN),
+        r_w = pow2_bucket(
+            max((len(r) for r in removed_of if r is not None), default=0),
+            self.OVERLAY_ALIGN,
         )
-        wb = max(
-            self.COL_ALIGN,
-            _ceil_to(int(max((c.max() if len(c) else 0) for c in cnts_b)), self.COL_ALIGN),
+        x_w = pow2_bucket(
+            max((len(a) for a in added_of if a is not None), default=0),
+            self.OVERLAY_ALIGN,
         )
-        elems_a, valid_a = _pack(vals_a, cnts_a, u_pad, wa)
-        elems_b, valid_b = _pack(vals_b, cnts_b, u_pad, wb)
-        seeds = np.zeros(u_pad, dtype=np.uint32)
-        seeds[:base] = np.concatenate(seed_runs).astype(np.uint32)
-        return CohortRound(
-            n=n, t=t, m=BCHCode(n, t).m, members=packed, seeds=seeds,
-            elems_a=elems_a, valid_a=valid_a, elems_b=elems_b, valid_b=valid_b,
+        # zero-width when no unit carries a split filter: the executor's
+        # statically-unrolled filter loop then vanishes for the common
+        # no-split round instead of hashing both (U, W) sides for nothing
+        max_f = max((len(f) for f in filters_of), default=0)
+        f_w = pow2_bucket(max_f, 1) if max_f else 0
+
+        removed_arr = np.zeros((u_pad, r_w), dtype=np.uint32)
+        removed_cnt = np.zeros(u_pad, dtype=np.int32)
+        added_arr = np.zeros((u_pad, x_w), dtype=np.uint32)
+        added_cnt = np.zeros(u_pad, dtype=np.int32)
+        fseeds = np.zeros((u_pad, f_w), dtype=np.uint32)
+        fbins = np.zeros((u_pad, f_w), dtype=np.int32)
+        fcnt = np.zeros(u_pad, dtype=np.int32)
+        for row in range(total):
+            r = removed_of[row]
+            if r is not None:
+                removed_arr[row, : len(r)] = r
+                removed_cnt[row] = len(r)
+            a = added_of[row]
+            if a is not None:
+                added_arr[row, : len(a)] = a
+                added_cnt[row] = len(a)
+            flt = filters_of[row]
+            if flt:
+                fseeds[row, : len(flt)] = [fs for fs, _ in flt]
+                fbins[row, : len(flt)] = [fi for _, fi in flt]
+                fcnt[row] = len(flt)
+
+        arrays = {
+            "row_map": row_map,
+            "unit_valid": unit_valid,
+            "seeds": seeds,
+            "removed": removed_arr,
+            "removed_cnt": removed_cnt,
+            "added": added_arr,
+            "added_cnt": added_cnt,
+            "fseeds": fseeds,
+            "fbins": fbins,
+            "fcnt": fcnt,
+        }
+        live_rows = row_map[:total]
+        plan = CohortRoundPlan(
+            store=store,
+            members=packed,
+            units=total,
+            width_a=pow2_bucket(
+                int(store.cnt_a_host[live_rows].max(initial=0)), self.COL_ALIGN
+            ),
+            width_b=pow2_bucket(
+                int(store.cnt_b_host[live_rows].max(initial=0)), self.COL_ALIGN
+            ),
+            arrays=arrays,
+            h2d_bytes=sum(a.nbytes for a in arrays.values()),
+            legacy_h2d_bytes=self._legacy_round_bytes(
+                store, row_map[:total], removed_cnt[:total], added_cnt[:total],
+                fcnt[:total],
+            ),
         )
+        return plan
+
+    def _legacy_round_bytes(self, store, row_map, removed_cnt, added_cnt, fcnt):
+        """H2D bytes the re-pack-per-round layout (PR 1) would ship this round.
+
+        That path re-uploaded per round, per side, a padded uint32 element
+        matrix *and* an equally-sized int32 valid matrix plus per-unit seeds.
+        Per-unit element counts are exact for plain units (store count minus
+        removed plus added); split descendants hold ~count/3^depth of their
+        parent — an estimate, but splits are rare and small.
+        """
+        if not len(row_map):
+            return 0
+        shrink = np.power(3.0, fcnt.astype(np.float64))
+        na = (store.cnt_a_host[row_map] - removed_cnt + added_cnt) / shrink
+        nb = store.cnt_b_host[row_map] / shrink
+        u_old = max(self.ROW_ALIGN, _ceil_to(len(row_map), self.ROW_ALIGN))
+        wa_old = max(self.COL_ALIGN, _ceil_to(int(na.max()), self.COL_ALIGN))
+        wb_old = max(self.COL_ALIGN, _ceil_to(int(nb.max()), self.COL_ALIGN))
+        # elems (4B) + valid (4B) per cell, both sides, + uint32 seeds
+        return u_old * (wa_old + wb_old) * 8 + u_old * 4

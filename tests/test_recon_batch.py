@@ -10,10 +10,12 @@ import pytest
 
 import jax.numpy as jnp
 
+from repro.core.bch import BCHCode, batched_decode, sketch_from_positions
 from repro.core.pbs import PBSConfig, reconcile, true_diff
 from repro.core.simdata import make_pair, make_pair_two_sided
 from repro.kernels import bin_parity_xorsum_units, xor_bits_to_u32
 from repro.kernels import ref as kref
+from repro.kernels.ops import bch_decode_batched, sketch_groups
 from repro.recon import ReconcileServer, reconcile_batch
 
 SIZES = {5: 1500, 50: 4000, 500: 8000}
@@ -107,6 +109,106 @@ def test_reconcile_batch_convenience_order():
     )
     for (a, b), res in zip(pairs, results):
         assert res.success and res.diff == true_diff(a, b)
+
+
+def _assert_decode_matches_oracle(code, sketches):
+    """bch_decode_batched must agree with core.bch.batched_decode row-for-row."""
+    ok_ref, pos_ref = batched_decode(code, sketches)
+    ok, pos, cnt = bch_decode_batched(
+        jnp.asarray(sketches, dtype=jnp.int32), n=code.n, t=code.t
+    )
+    ok, pos, cnt = np.asarray(ok), np.asarray(pos), np.asarray(cnt)
+    np.testing.assert_array_equal(ok, ok_ref)
+    for u in range(len(sketches)):
+        np.testing.assert_array_equal(pos[u, : cnt[u]], pos_ref[u])
+        assert np.all(pos[u, cnt[u] :] == -1)  # padding convention
+    return ok, pos, cnt
+
+
+def test_bch_decode_batched_t1_code():
+    """t=1 codes: the degenerate single-syndrome BM path, incl. the known
+    2-error aliasing (two errors can mimic one; the protocol's checksum gate
+    is what catches it) — kernel and numpy oracle must agree on all of it."""
+    code = BCHCode(127, 1)
+    sk = np.stack([
+        np.zeros(1, np.int64),
+        sketch_from_positions(code, np.array([13])),
+        sketch_from_positions(code, np.array([5, 97])),  # aliases to one root
+        sketch_from_positions(code, np.array([0])),      # boundary positions
+        sketch_from_positions(code, np.array([126])),
+    ])
+    ok, pos, cnt = _assert_decode_matches_oracle(code, sk)
+    assert ok.all()                       # t=1 decode "succeeds" on all rows
+    assert list(pos[1, :1]) == [13] and list(pos[3, :1]) == [0]
+    assert list(pos[4, :1]) == [126]
+    assert cnt[2] == 1                    # the 2-error alias: one fake root
+
+
+def test_bch_decode_batched_zero_rows_mixed_with_overload():
+    """All-zero sketches (reconciled units) interleaved with genuinely
+    overloaded rows (> t differing bins) in one batch: zeros decode
+    trivially-ok, overloads fail and expose no positions."""
+    code = BCHCode(255, 3)
+    sk = np.stack([
+        np.zeros(3, np.int64),
+        sketch_from_positions(code, np.array([7, 19, 200])),
+        sketch_from_positions(code, np.arange(1, 9)),    # 8 errors >> t=3
+        np.zeros(3, np.int64),
+        sketch_from_positions(code, np.arange(11, 16)),  # 5 errors > t=3
+    ])
+    ok, pos, cnt = _assert_decode_matches_oracle(code, sk)
+    np.testing.assert_array_equal(ok, [True, True, False, True, False])
+    assert cnt[0] == cnt[3] == 0 and np.all(pos[0] == -1)
+    assert list(pos[1, :3]) == [7, 19, 200]
+    assert cnt[2] == cnt[4] == 0 and np.all(pos[2] == -1)  # no positions leak
+
+
+def test_padded_unit_decodes_trivially_ok():
+    """A valid==0 row (cohort padding unit) through the full encode→decode
+    path must sketch to zero and decode trivially-ok, exactly like the
+    oracle decodes an all-zero difference sketch."""
+    code = BCHCode(127, 2)
+    rng = np.random.default_rng(42)
+    U, E = 4, 64
+    elems_a = rng.integers(1, 1 << 32, size=(U, E), dtype=np.uint64).astype(np.uint32)
+    elems_b = elems_a.copy()
+    elems_b[0, :3] = rng.integers(1, 1 << 32, size=3)   # unit 0 differs
+    valid = np.ones((U, E), np.int32)
+    valid[2] = 0                                         # unit 2 is all-padding
+    seeds = np.full(U, 99, np.uint32)
+
+    def sketch(elems):
+        parity, _ = bin_parity_xorsum_units(
+            jnp.asarray(elems), jnp.asarray(valid), jnp.asarray(seeds), n_bins=code.n
+        )
+        return sketch_groups(parity, code)
+
+    diff = np.asarray(sketch(elems_a) ^ sketch(elems_b))
+    assert np.all(diff[2] == 0)                          # padding sketches to zero
+    ok, pos, cnt = _assert_decode_matches_oracle(code, diff.astype(np.int64))
+    assert ok[2] and cnt[2] == 0 and np.all(pos[2] == -1)
+    assert ok[1] and ok[3] and cnt[1] == cnt[3] == 0     # identical rows: zero diff
+
+
+def test_upload_once_store_h2d_ratio():
+    """The device-resident pipeline's acceptance gate: over a multi-round
+    batch, total H2D traffic (store once + per-round overlays) must be at
+    least 3x smaller than the re-pack-per-round layout's, with half its
+    kernel launches per round."""
+    server = ReconcileServer()
+    for s in range(4):
+        a, b = make_pair(2500, 50, np.random.default_rng(60 + s))
+        server.submit(a, b, cfg=PBSConfig(seed=s), d_known=50)
+    results = server.run()
+    assert all(results[s].success for s in range(4))
+    stats = server.stats
+    assert stats["rounds"] >= 2                      # multi-round workload
+    assert stats["h2d_ratio"] >= 3.0, stats
+    assert stats["kernel_launches"] == 2 * stats["cohort_rounds"]
+    assert stats["legacy_kernel_launches"] == 4 * stats["cohort_rounds"]
+    # overlays are small: steady-state rounds ship a tiny fraction of a
+    # full re-upload
+    assert stats["h2d_round_bytes"] < 0.1 * stats["legacy_h2d_round_bytes"]
 
 
 @pytest.mark.parametrize("n_bins", [63, 127, 8191])
