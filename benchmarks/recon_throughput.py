@@ -11,14 +11,24 @@ full PBS protocol through the device-resident batched path, and reports
     re-pack-per-round equivalent, and kernel launches per round (the fused
     two-side encode halves them),
   * the host-ms vs device-ms split of the round loop,
+  * phase-0 estimation time: the vectorized host ToW mirror vs the Pallas
+    ``tow_sketch`` kernel the server batches submit-time estimation
+    through (bit-identical numerators, asserted),
   * bytes per distinct element (the paper's communication metric),
+  * the *measured* wire traffic: each point re-runs as a real
+    ``repro.net`` endpoint pair over the in-memory transport, asserts the
+    frame-measured ledger equals the engine's accounting per session, and
+    reports ``wire_bytes_per_diff`` — framed bytes actually shipped
+    (DESIGN.md §9; ``--no-wire`` skips),
   * the maximum per-session deviation of ``bytes_sent`` from the
     single-session ``core.pbs.reconcile`` oracle — the engine is the same
     state machine, so this must be 0% (the run fails above 1%).
 
 The full grid is also written to ``BENCH_recon.json`` (``--json`` to move
 it, ``--no-json`` to skip) so CI tracks the perf trajectory; ``--min-h2d-
-ratio`` turns the transfer win into a hard gate (the CI smoke job passes 3).
+ratio`` turns the transfer win into a hard gate (the CI smoke job passes
+3) and ``--max-bytes-per-diff`` gates the measured wire bytes per distinct
+element (CI passes 9 ≈ 2.25x the 4-byte minimum for 32-bit keys).
 
 Runs standalone (``python benchmarks/recon_throughput.py --sessions 64
 --d 50``) or via ``python -m benchmarks.run`` with the quick default grid.
@@ -41,12 +51,72 @@ else:
 
 import numpy as np
 
+from repro.core.hashing import derive_seed
 from repro.core.pbs import PBSConfig, reconcile
 from repro.core.simdata import make_pair
-from repro.recon import ReconcileServer
+from repro.core.tow import ELL_DEFAULT, estimate_numerator, tow_seeds, tow_sketches
+from repro.net import AliceEndpoint, BobEndpoint, InMemoryDuplex, run_pair
+from repro.recon import ReconcileServer, phase0_numerators
 
 
-def bench_point(sessions: int, d: int, size: int, *, check: bool = True, seed: int = 0):
+def _phase0_times(pairs, seed):
+    """Phase-0 ToW estimation over the whole batch: host numpy mirror vs
+    the Pallas kernel path the server routes submit-time estimation
+    through.  Both produce bit-identical numerators (asserted)."""
+    seeds_list = [
+        tow_seeds(derive_seed(seed + s, 0x70), ELL_DEFAULT)
+        for s in range(len(pairs))
+    ]
+    t0 = time.perf_counter()
+    host = [
+        estimate_numerator(
+            tow_sketches(a, derive_seed(seed + s, 0x70)),
+            tow_sketches(b, derive_seed(seed + s, 0x70)),
+        )
+        for s, (a, b) in enumerate(pairs)
+    ]
+    host_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    dev = phase0_numerators(pairs, seeds_list)
+    device_s = time.perf_counter() - t0
+    if host != dev:
+        raise AssertionError(f"phase-0 kernel diverged from host: {host} != {dev}")
+    return host_s, device_s
+
+
+def _wire_measurement(pairs, d, seed, results):
+    """Re-run the batch as two repro.net endpoints over the in-memory
+    transport and *measure* the wire traffic.  Per-session ledgers must
+    equal the in-process engine's accounting exactly; the framed protocol
+    bytes (ledger + structural overhead, sans the estimator/verify
+    exchanges) are what the --max-bytes-per-diff gate inspects."""
+    ta, tb = InMemoryDuplex.pair()
+    alice, bob = AliceEndpoint(ta), BobEndpoint(tb)
+    for s, (a, b) in enumerate(pairs):
+        cfg = PBSConfig(seed=seed + s)
+        alice.submit(a, cfg=cfg, d_known=d)
+        bob.submit(b, cfg=cfg, d_known=d)
+    t0 = time.perf_counter()
+    wres = run_pair(alice, bob)
+    wall = time.perf_counter() - t0
+    for s in range(len(pairs)):
+        if wres[s].bytes_per_round != results[s].bytes_per_round:
+            raise AssertionError(
+                f"sid {s}: measured wire ledger {wres[s].bytes_per_round} != "
+                f"engine accounting {results[s].bytes_per_round}"
+            )
+    stats = alice.wire_stats
+    ledger = sum(wres[s].bytes_sent for s in range(len(pairs)))
+    return {
+        "wire_wall_s": round(wall, 4),
+        "wire_protocol_bytes": stats["protocol_frame_bytes"],
+        "wire_overhead_bytes": stats["protocol_frame_bytes"] - ledger,
+        "wire_verify_bytes": stats["verify_frame_bytes"],
+    }
+
+
+def bench_point(sessions: int, d: int, size: int, *, check: bool = True, seed: int = 0,
+                wire: bool = True):
     pairs = [
         make_pair(size, d, np.random.default_rng(seed + 7919 * s + d))
         for s in range(sessions)
@@ -73,6 +143,7 @@ def bench_point(sessions: int, d: int, size: int, *, check: bool = True, seed: i
                 f"per-session bytes deviate {max_dev:.2%} from core.pbs (>1%)"
             )
 
+    phase0_host_s, phase0_device_s = _phase0_times(pairs, seed)
     st = server.stats
     point = {
         "sessions": sessions,
@@ -93,10 +164,17 @@ def bench_point(sessions: int, d: int, size: int, *, check: bool = True, seed: i
         / max(1, st["rounds"]),
         "host_ms": round(st["host_s"] * 1e3, 2),
         "device_ms": round(st["device_s"] * 1e3, 2),
+        "phase0_host_ms": round(phase0_host_s * 1e3, 2),
+        "phase0_device_ms": round(phase0_device_s * 1e3, 2),
         "bytes_per_diff": round(total_bytes / max(1, total_diff), 2),
         "success": n_ok,
         "max_byte_dev": max_dev if check else None,
     }
+    if wire:
+        point.update(_wire_measurement(pairs, d, seed, results))
+        point["wire_bytes_per_diff"] = round(
+            point["wire_protocol_bytes"] / max(1, total_diff), 2
+        )
     row = Row(
         name=f"recon_throughput/S{sessions}_d{d}",
         us_per_call=wall * 1e6 / sessions,
@@ -105,7 +183,11 @@ def bench_point(sessions: int, d: int, size: int, *, check: bool = True, seed: i
             f"rounds_per_s={point['rounds_per_s']:.2f} "
             f"h2d_ratio={point['h2d_ratio']:.2f} "
             f"bytes_per_diff={point['bytes_per_diff']:.2f} "
-            f"success={n_ok}/{sessions} "
+            + (
+                f"wire_bytes_per_diff={point['wire_bytes_per_diff']:.2f} "
+                if wire else ""
+            )
+            + f"success={n_ok}/{sessions} "
             + (f"max_byte_dev={max_dev:.4%}" if check else "unchecked")
         ),
     )
@@ -148,11 +230,16 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-check", action="store_true",
                     help="skip the per-session core.pbs byte validation")
+    ap.add_argument("--no-wire", action="store_true",
+                    help="skip the two-endpoint wire-byte measurement")
     ap.add_argument("--json", type=str, default="BENCH_recon.json",
                     help="path for the JSON artifact (default BENCH_recon.json)")
     ap.add_argument("--no-json", action="store_true", help="skip the JSON artifact")
     ap.add_argument("--min-h2d-ratio", type=float, default=0.0,
                     help="fail if any point's H2D transfer win drops below this")
+    ap.add_argument("--max-bytes-per-diff", type=float, default=0.0,
+                    help="fail if any point's MEASURED wire bytes per distinct "
+                         "element exceed this (4 B/diff = the 32-bit minimum)")
     args = ap.parse_args(argv)
 
     grid_s = [int(x) for x in args.sessions.split(",")]
@@ -162,7 +249,8 @@ def main(argv=None):
     for sessions in grid_s:
         for d in grid_d:
             row, point = bench_point(sessions, d, args.size,
-                                     check=not args.no_check, seed=args.seed)
+                                     check=not args.no_check, seed=args.seed,
+                                     wire=not args.no_wire)
             rows.append(row)
             points.append(point)
             print(row.csv(), flush=True)
@@ -174,6 +262,15 @@ def main(argv=None):
         if worst < args.min_h2d_ratio:
             raise AssertionError(
                 f"H2D transfer ratio {worst:.2f} < required {args.min_h2d_ratio}"
+            )
+    if args.max_bytes_per_diff:
+        if args.no_wire:
+            raise SystemExit("--max-bytes-per-diff needs the wire measurement")
+        worst = max(p["wire_bytes_per_diff"] for p in points)
+        if worst > args.max_bytes_per_diff:
+            raise AssertionError(
+                f"measured wire bytes/diff {worst:.2f} > allowed "
+                f"{args.max_bytes_per_diff}"
             )
     return rows
 

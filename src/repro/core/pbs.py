@@ -36,7 +36,15 @@ import numpy as np
 from .bch import BCHCode, batched_decode, sketch_from_positions
 from .hashing import derive_seed, hash_to_range
 from .markov import optimize_parameters
-from .tow import ELL_DEFAULT, GAMMA, estimate_d, planned_d, sketch_bytes, tow_sketches
+from .tow import (
+    ELL_DEFAULT,
+    GAMMA,
+    dhat_bytes,
+    estimate_numerator,
+    planned_d,
+    sketch_bytes,
+    tow_sketches,
+)
 
 KEY_BITS = 32
 _MOD = np.uint64(1) << np.uint64(KEY_BITS)
@@ -115,22 +123,7 @@ class ProtocolPlan:
         return self.code.m
 
 
-def plan_protocol(
-    a: np.ndarray, b: np.ndarray, cfg: PBSConfig, d_known: int | None = None
-) -> ProtocolPlan:
-    """Phase 0: estimate d with ToW unless known (§6.2), then optimize (n, t, g)."""
-    est_bytes = 0
-    if d_known is None:
-        seed_tow = derive_seed(cfg.seed, 0x70)
-        sk_a = tow_sketches(a, seed_tow, cfg.ell)
-        sk_b = tow_sketches(b, seed_tow, cfg.ell)
-        d_est = estimate_d(sk_a, sk_b)
-        est_bytes = sketch_bytes(len(a), cfg.ell) + 4  # A->B sketches, B->A d_hat
-        d_plan = planned_d(d_est, cfg.gamma)
-    else:
-        d_est = float(d_known)
-        d_plan = max(1, d_known)
-
+def _mk_plan(cfg: PBSConfig, d_est: float, d_plan: int, est_bytes: int) -> ProtocolPlan:
     g = cfg.g_override or max(1, round(d_plan / cfg.delta))
     if cfg.n_override is not None:
         n, t = cfg.n_override, cfg.t_override
@@ -142,6 +135,34 @@ def plan_protocol(
         cfg=cfg, n=n, t=t, g=g, d_est=d_est, est_bytes=est_bytes,
         seed_groups=derive_seed(cfg.seed, 1),
     )
+
+
+def plan_from_estimate(cfg: PBSConfig, numerator: int, set_size_a: int) -> ProtocolPlan:
+    """Pin (n, t, g) from the phase-0 exchange: the d_hat numerator (what the
+    MSG_DHAT reply carries — d_hat = numerator / ell) and Alice's set size
+    (which sizes the sketch frame).  Both endpoints call this with identical
+    inputs, so both derive the identical plan; est_bytes is the framed
+    length of the two phase-0 messages."""
+    d_est = numerator / cfg.ell
+    est_bytes = sketch_bytes(set_size_a, cfg.ell) + dhat_bytes(numerator)
+    return _mk_plan(cfg, d_est, planned_d(d_est, cfg.gamma), est_bytes)
+
+
+def plan_from_d_known(cfg: PBSConfig, d_known: int) -> ProtocolPlan:
+    """Pin (n, t, g) when d is known out-of-band (no estimator traffic)."""
+    return _mk_plan(cfg, float(d_known), max(1, d_known), 0)
+
+
+def plan_protocol(
+    a: np.ndarray, b: np.ndarray, cfg: PBSConfig, d_known: int | None = None
+) -> ProtocolPlan:
+    """Phase 0: estimate d with ToW unless known (§6.2), then optimize (n, t, g)."""
+    if d_known is not None:
+        return plan_from_d_known(cfg, d_known)
+    seed_tow = derive_seed(cfg.seed, 0x70)
+    sk_a = tow_sketches(a, seed_tow, cfg.ell)
+    sk_b = tow_sketches(b, seed_tow, cfg.ell)
+    return plan_from_estimate(cfg, estimate_numerator(sk_a, sk_b), len(a))
 
 
 @dataclass
@@ -211,6 +232,30 @@ def diff_overlay(st: SessionState) -> tuple[np.ndarray, np.ndarray]:
     d = np.fromiter(st.diff, dtype=np.uint32, count=len(st.diff))
     in_a = np.isin(d, st.a)
     return d[in_a], d[~in_a]
+
+
+def session_live(st: SessionState, cfg: PBSConfig, rnd: int) -> bool:
+    """Does this session participate in round ``rnd``?  Shared by the
+    batched planner and both ``repro.net`` endpoints — the two sides of the
+    wire must agree on liveness to parse each other's round frames."""
+    return rnd <= cfg.max_rounds and any(not u.done for u in st.units)
+
+
+def queue_split(st: SessionState, u: Unit, rnd: int, cfg_seed: int) -> None:
+    """BCH overload: retire ``u`` and enqueue its 3-way split (§3.2).
+
+    The split seed and child uids are derived deterministically from
+    (cfg seed, round, parent uid), so Alice and a wire-separated Bob that
+    both observe the decode failure enqueue identical descendants.
+    """
+    st.decode_failures += 1
+    split_seed = derive_seed(cfg_seed, 3, rnd, u.uid)
+    u.done = True
+    for k in range(3):
+        st.units.append(
+            Unit(uid=st.next_uid, group=u.group, filters=u.filters + ((split_seed, k),))
+        )
+        st.next_uid += 1
 
 
 def slot_assignment(elems, group_of, units, group_order, group_bounds):
@@ -286,7 +331,7 @@ def apply_round_outcomes(
     plan: ProtocolPlan,
     bin_seed: int,
     rnd: int,
-) -> int:
+) -> tuple[int, list[bool]]:
     """Alice's per-unit endgame for one round: recovery via the XOR trick
     (Procedure 1), fake rejection (Procedure 3), checksum gating (§2.2.3),
     and the 3-way-split re-queue on BCH overload (§3.2).
@@ -294,21 +339,18 @@ def apply_round_outcomes(
     All arrays are indexed by the unit's position (slot) in ``active``:
     ``positions[slot]`` is the decoded bin index array, ``xors_*[slot]`` the
     (n,) per-bin XOR folds, ``csum_*[slot]`` the unit checksums.  Mutates
-    ``st`` (diff, unit queue, counters) and returns the Bob->Alice bits this
-    round adds to Formula (1) — the caller accounts the Alice->Bob sketches.
+    ``st`` (diff, unit queue, counters) and returns (bits, done): the
+    Bob->Alice bits this round adds to Formula (1) — the caller accounts
+    the Alice->Bob sketches — and the per-slot checksum-settled flags that
+    the endpoint path ships to Bob as the round-outcome frame so he can
+    mirror the unit queue.
     """
     cfg, n, g, m = plan.cfg, plan.n, plan.g, plan.m
     bits = 0
+    done = [False] * len(active)
     for slot, u in enumerate(active):
         if not ok[slot]:
-            st.decode_failures += 1
-            split_seed = derive_seed(cfg.seed, 3, rnd, u.uid)
-            u.done = True
-            for k in range(3):
-                st.units.append(
-                    Unit(uid=st.next_uid, group=u.group, filters=u.filters + ((split_seed, k),))
-                )
-                st.next_uid += 1
+            queue_split(st, u, rnd, cfg.seed)
             continue
         pos = positions[slot]
         # Bob -> Alice: bin indices, his XOR sums, his checksum (Formula 1).
@@ -337,7 +379,8 @@ def apply_round_outcomes(
         new_csum = int((int(csum_a[slot]) + delta_sum) % (1 << KEY_BITS))
         if new_csum == int(csum_b[slot]):
             u.done = True
-    return bits
+            done[slot] = True
+    return bits, done
 
 
 def finalize_result(st: SessionState, plan: ProtocolPlan) -> ReconcileResult:
@@ -401,11 +444,11 @@ def reconcile(
 
         ok, err_positions = batched_decode(code, sk_a_all ^ sk_b_all)
 
-        round_bits += apply_round_outcomes(
+        reply_bits, _ = apply_round_outcomes(
             st, active, ok, err_positions, xors_a, xors_b, csum_a, csum_b,
             plan=plan, bin_seed=bin_seed, rnd=rnd,
         )
-        st.bytes_per_round.append((round_bits + 7) // 8)
+        st.bytes_per_round.append((round_bits + reply_bits + 7) // 8)
 
     return finalize_result(st, plan)
 

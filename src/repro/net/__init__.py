@@ -1,0 +1,39 @@
+"""Two-endpoint PBS reconciliation over real transports (DESIGN.md §9).
+
+``AliceEndpoint`` and ``BobEndpoint`` split the in-process
+``repro.recon.ReconcileServer`` into genuine peers that communicate *only*
+via ``repro.wire``-encoded bytes over a ``Transport``: an in-memory duplex
+for tests, a TCP loopback socket, or a simulated lossy/latent channel
+behind the stop-and-wait ``ReliableTransport``.  Each endpoint keeps
+driving the device-resident cohort pipeline for its own side — S
+concurrent sessions still batch into fused kernel launches per round — and
+both sides advance the *same* ``core.pbs`` round state machine, so
+per-session results and measured wire ledgers are byte-identical to
+``core.pbs.reconcile`` (asserted in tests/test_net_endpoints.py and
+tests/test_recon_batch.py).
+"""
+from .endpoint import AliceEndpoint, BobEndpoint, run_pair
+from .transport import (
+    FrameStream,
+    InMemoryDuplex,
+    ReliableTransport,
+    SimulatedChannel,
+    SocketTransport,
+    Transport,
+    TransportError,
+    tcp_loopback_pair,
+)
+
+__all__ = [
+    "AliceEndpoint",
+    "BobEndpoint",
+    "FrameStream",
+    "InMemoryDuplex",
+    "ReliableTransport",
+    "SimulatedChannel",
+    "SocketTransport",
+    "Transport",
+    "TransportError",
+    "run_pair",
+    "tcp_loopback_pair",
+]

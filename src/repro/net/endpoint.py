@@ -1,0 +1,505 @@
+"""Alice/Bob PBS endpoints: the wire-separated halves of the protocol.
+
+Each endpoint owns exactly one side's data and device pipeline:
+
+* ``AliceEndpoint`` holds the A sets, runs phase 0 (ToW sketch out, d_hat
+  numerator back), encodes her per-unit BCH sketches each round through the
+  single-side cohort executor (``recon.engine.encode_side`` over her
+  device-resident ``SessionBatch(sides=("a",))`` stores), applies the
+  shared ``core.pbs.apply_round_outcomes`` to Bob's reply frames, and ships
+  the checksum verdicts back as outcome frames.
+* ``BobEndpoint`` mirrors the session/unit state machine from the frames
+  alone: his own decode failures drive ``queue_split`` exactly like
+  Alice's, and her outcome frames supply the checksum-settled flags he
+  cannot compute (he never sees A).  His side batches the same way —
+  encode his sketches per cohort, XOR with the frame-decoded sketches,
+  ``bch_decode_batched`` for every unit of a cohort in one call.
+
+Byte ledgers are *measured*: every ``bytes_per_round`` entry an endpoint
+reports is derived from the frames that crossed the transport (via the
+``repro.wire`` ledger-bit helpers on decoded content), then asserted equal
+to the Formula-(1) accounting the in-process oracle computes — so
+``ReconcileResult.bytes_sent`` from this path is a wire measurement that
+happens to equal ``core.pbs.reconcile``'s ledger exactly.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import derive_seed
+from repro.core.pbs import (
+    PBSConfig,
+    ReconcileResult,
+    apply_round_outcomes,
+    checksum,
+    effective_set,
+    finalize_result,
+    new_session_state,
+    plan_from_d_known,
+    plan_from_estimate,
+    queue_split,
+)
+from repro.core.tow import estimate_numerator, tow_sketches
+from repro.kernels.ops import bch_decode_batched
+from repro.recon.engine import encode_side
+from repro.recon.session import CohortRoundPlan, ReconSession, SessionBatch
+from repro.wire import frames as wf
+from repro.wire.frames import ReplyUnit, WireError
+from repro.wire.varint import framed_len
+
+from .transport import FrameStream, Transport
+
+_EMPTY = np.zeros(0, dtype=np.uint32)
+
+_ROUND_ARRAY_KEYS = (
+    "row_map", "unit_valid", "seeds", "removed", "removed_cnt",
+    "added", "added_cnt", "fseeds", "fbins", "fcnt",
+)
+
+
+@dataclass
+class _SessionRows:
+    """One live session's slice of its cohort's device outputs this round."""
+
+    sess: ReconSession
+    active: list
+    bin_seed: int
+    sk: np.ndarray        # (U, t) syndromes
+    xors: np.ndarray      # (U, n) uint32 bin XOR folds
+    csum: np.ndarray      # (U,) uint32 unit checksums
+    plan: CohortRoundPlan
+
+
+class _Endpoint:
+    """Shared plumbing: submissions, cohort batch, side encode, tallies."""
+
+    side: str
+
+    def __init__(self, transport: Transport, *, interpret: bool | None = None):
+        self._stream = FrameStream(transport)
+        self._interpret = interpret
+        self._sessions: list[ReconSession | None] = []
+        self._est_queue: list[int] = []     # sids awaiting phase 0, in order
+        self._batch: SessionBatch | None = None
+        self._tally = {"estimator": 0, "protocol": 0, "verify": 0}
+        self.verified: list[bool] | None = None
+
+    # -- submission ------------------------------------------------------
+
+    def _submit(self, elems, cfg: PBSConfig | None, d_known: int | None):
+        cfg = cfg or PBSConfig()
+        elems = np.unique(np.asarray(elems, dtype=np.uint32))
+        sid = len(self._sessions)
+        if d_known is not None:
+            self._install(sid, elems, plan_from_d_known(cfg, d_known), append=True)
+        else:
+            self._sessions.append(None)
+            self._est_queue.append(sid)
+            self._pending_store(sid, elems, cfg)
+        return sid
+
+    def _install(self, sid, elems, plan, *, append: bool):
+        a, b = (elems, _EMPTY) if self.side == "a" else (_EMPTY, elems)
+        sess = ReconSession(sid=sid, plan=plan, state=new_session_state(a, b, plan))
+        if append:
+            self._sessions.append(sess)
+        else:
+            self._sessions[sid] = sess
+        return sess
+
+    def _pending_store(self, sid, elems, cfg):
+        raise NotImplementedError
+
+    # -- round machinery -------------------------------------------------
+
+    def _ensure_batch(self) -> SessionBatch:
+        if self._est_queue:
+            raise WireError("round traffic before phase 0 completed")
+        if self._batch is None:
+            self._batch = SessionBatch(self._sessions, sides=(self.side,))
+        return self._batch
+
+    def _encode_round(self, plans: list[CohortRoundPlan]) -> dict[int, _SessionRows]:
+        """Dispatch every cohort's single-side executor, then collect
+        per-session row slices (async dispatch overlaps cohorts)."""
+        inflight = []
+        for plan in plans:
+            store = plan.store
+            ss = store.sides[self.side]
+            out = encode_side(
+                ss.flat, ss.start, ss.cnt,
+                *(jnp.asarray(plan.arrays[k]) for k in _ROUND_ARRAY_KEYS),
+                n=store.n,
+                t=store.t,
+                width=plan.width_a if self.side == "a" else plan.width_b,
+                interpret=self._interpret,
+            )
+            inflight.append((plan, out))
+        per: dict[int, _SessionRows] = {}
+        for plan, out in inflight:
+            sk, xors, csum = (np.asarray(x) for x in jax.device_get(out))
+            for sess, base, active, bin_seed in plan.members:
+                rows = slice(base, base + len(active))
+                per[sess.sid] = _SessionRows(
+                    sess, active, bin_seed, sk[rows], xors[rows], csum[rows], plan
+                )
+        return per
+
+    @staticmethod
+    def _schema(per: dict[int, _SessionRows], live: list[int]):
+        return [
+            (len(per[sid].active), per[sid].plan.store.t, per[sid].plan.store.m)
+            for sid in live
+        ]
+
+    def _expect(self, msg_type: int) -> bytes:
+        got, payload = self._stream.recv()
+        if got != msg_type:
+            raise WireError(f"expected message 0x{msg_type:02x}, got 0x{got:02x}")
+        return payload
+
+    @property
+    def sessions(self) -> list[ReconSession]:
+        return self._sessions
+
+    @property
+    def wire_stats(self) -> dict:
+        """Measured wire traffic: exact framed bytes by category plus the
+        transport totals (which additionally see ARQ overhead, if any)."""
+        t = self._stream.transport
+        return {
+            "frames_out": self._stream.frames_out,
+            "frames_in": self._stream.frames_in,
+            "frame_bytes_out": self._stream.bytes_out,
+            "frame_bytes_in": self._stream.bytes_in,
+            "transport_bytes_out": t.bytes_out,
+            "transport_bytes_in": t.bytes_in,
+            "estimator_frame_bytes": self._tally["estimator"],
+            "protocol_frame_bytes": self._tally["protocol"],
+            "verify_frame_bytes": self._tally["verify"],
+        }
+
+
+class AliceEndpoint(_Endpoint):
+    """The initiating endpoint; learns A △ B for every submitted session."""
+
+    side = "a"
+
+    def __init__(self, transport: Transport, *, interpret: bool | None = None):
+        super().__init__(transport, interpret=interpret)
+        self._pending: dict[int, tuple] = {}   # sid -> (a, cfg)
+
+    def _pending_store(self, sid, elems, cfg):
+        self._pending[sid] = (elems, cfg)
+
+    def submit(self, set_a, cfg: PBSConfig | None = None, d_known: int | None = None) -> int:
+        """Enqueue one session (this endpoint holds ``set_a``); the peer
+        must ``submit`` the matching ``set_b`` with the same cfg/d_known in
+        the same order — session identity is positional, like the paper's
+        out-of-band-agreed hash functions."""
+        return self._submit(set_a, cfg, d_known)
+
+    def run(self) -> dict[int, ReconcileResult]:
+        """Drive every session to completion over the wire; sid -> result."""
+        self._phase0()
+        batch = self._ensure_batch()
+        rnd = 0
+        while True:
+            rnd += 1
+            plans = batch.plan_round(rnd)
+            if not plans:
+                break
+            per = self._encode_round(plans)
+            live = sorted(per)
+            schema = self._schema(per, live)
+
+            sk_frame = wf.encode_round_sketches(
+                rnd, [(per[sid].sk, per[sid].plan.store.m) for sid in live]
+            )
+            self._stream.send(sk_frame)
+            self._tally["protocol"] += len(sk_frame)
+
+            payload = self._expect(wf.MSG_ROUND_REPLY)
+            self._tally["protocol"] += _framed_len(payload)
+            got_rnd, entries = wf.decode_round_reply(payload, schema)
+            if got_rnd != rnd:
+                raise WireError(f"reply for round {got_rnd} during round {rnd}")
+
+            done_lists = []
+            for sid, (ok, units) in zip(live, entries):
+                row = per[sid]
+                st, plan = row.sess.state, row.sess.plan
+                u_cnt = len(row.active)
+                n, t, m = plan.n, plan.t, plan.m
+                xors_b = np.zeros((u_cnt, n), dtype=np.uint32)
+                csum_b = np.zeros(u_cnt, dtype=np.uint64)
+                positions = []
+                for slot in range(u_cnt):
+                    unit = units[slot]
+                    if unit is None:
+                        positions.append(np.zeros(0, dtype=np.int64))
+                        continue
+                    positions.append(unit.positions)
+                    xors_b[slot, unit.positions] = unit.xors
+                    csum_b[slot] = unit.csum
+                reply_bits, done = apply_round_outcomes(
+                    st, row.active, ok, positions,
+                    row.xors, xors_b, row.csum, csum_b,
+                    plan=plan, bin_seed=row.bin_seed, rnd=rnd,
+                )
+                # the measured ledger: sketch bits from what we framed,
+                # reply bits from what Bob's frame actually carried — must
+                # land exactly on the oracle's Formula-(1) accounting
+                measured = wf.sketches_ledger_bits(u_cnt, t, m)
+                measured += wf.reply_ledger_bits(ok, units, m)
+                if measured != u_cnt * (t * m + 1) + reply_bits:
+                    raise WireError(
+                        f"sid {sid} round {rnd}: measured {measured} bits != "
+                        f"accounted {u_cnt * (t * m + 1) + reply_bits}"
+                    )
+                st.bytes_per_round.append((measured + 7) // 8)
+                st.rounds = rnd
+                done_lists.append(done)
+
+            out_frame = wf.encode_round_outcome(rnd, done_lists)
+            self._stream.send(out_frame)
+            self._tally["protocol"] += len(out_frame)
+
+        self._verify()
+        # lossy-channel tail: keep ACKing the peer's retransmits until quiet
+        self._stream.transport.linger()
+        return {s.sid: finalize_result(s.state, s.plan) for s in self._sessions}
+
+    def _phase0(self):
+        if not self._est_queue:
+            return
+        sent = {}
+        for sid in self._est_queue:
+            a, cfg = self._pending[sid]
+            sk = tow_sketches(a, derive_seed(cfg.seed, 0x70), cfg.ell)
+            f = wf.encode_tow_sketch(sk, len(a))
+            self._stream.send(f)
+            sent[sid] = len(f)
+        for sid in list(self._est_queue):
+            a, cfg = self._pending.pop(sid)
+            payload = self._expect(wf.MSG_DHAT)
+            num = wf.decode_dhat(payload)
+            est_frames = sent[sid] + _framed_len(payload)
+            self._tally["estimator"] += est_frames
+            plan = plan_from_estimate(cfg, num, len(a))
+            if plan.est_bytes != est_frames:
+                raise WireError(
+                    f"sid {sid}: estimator frames measure {est_frames} B, "
+                    f"accounted {plan.est_bytes} B"
+                )
+            self._install(sid, a, plan, append=False)
+        self._est_queue.clear()
+
+    def _verify(self):
+        entries = []
+        for s in self._sessions:
+            success = all(u.done for u in s.state.units)
+            entries.append(
+                (success, checksum(effective_set(s.state.a, s.state.diff)))
+            )
+        f = wf.encode_verify(entries)
+        self._stream.send(f)
+        self._tally["verify"] += len(f)
+        payload = self._expect(wf.MSG_VERIFY_ACK)
+        self._tally["verify"] += _framed_len(payload)
+        self.verified = wf.decode_verify_ack(payload, len(self._sessions))
+
+
+class BobEndpoint(_Endpoint):
+    """The serving endpoint; holds the B sets and answers frames until the
+    final verification exchange, mirroring every session's unit queue."""
+
+    side = "b"
+
+    def __init__(self, transport: Transport, *, interpret: bool | None = None):
+        super().__init__(transport, interpret=interpret)
+        self._pending: dict[int, tuple] = {}   # sid -> (b, cfg)
+        self._rnd = 0                          # rounds whose sketches arrived
+        self._ctx = None                       # current round's (live, per-sid)
+
+    def _pending_store(self, sid, elems, cfg):
+        self._pending[sid] = (elems, cfg)
+
+    def submit(self, set_b, cfg: PBSConfig | None = None, d_known: int | None = None) -> int:
+        """Enqueue this endpoint's side of the next session (positional
+        pairing with the peer's ``submit`` order)."""
+        return self._submit(set_b, cfg, d_known)
+
+    def serve(self) -> None:
+        """Answer frames until the verification exchange completes."""
+        while True:
+            msg_type, payload = self._stream.recv()
+            if msg_type == wf.MSG_TOW_SKETCH:
+                self._handle_tow(payload)
+            elif msg_type == wf.MSG_ROUND_SKETCHES:
+                self._handle_sketches(payload)
+            elif msg_type == wf.MSG_ROUND_OUTCOME:
+                self._handle_outcome(payload)
+            elif msg_type == wf.MSG_VERIFY:
+                self._handle_verify(payload)
+                return
+            else:
+                raise WireError(f"unexpected message type 0x{msg_type:02x}")
+
+    def _handle_tow(self, payload: bytes) -> None:
+        if not self._est_queue:
+            raise WireError("ToW sketch frame with no estimator session pending")
+        sid = self._est_queue.pop(0)
+        b, cfg = self._pending.pop(sid)
+        set_size_a, sk_a = wf.decode_tow_sketch(payload)
+        if len(sk_a) != cfg.ell:
+            raise WireError(
+                f"sid {sid}: peer sent {len(sk_a)} ToW sketches, cfg.ell={cfg.ell}"
+            )
+        sk_b = tow_sketches(b, derive_seed(cfg.seed, 0x70), cfg.ell)
+        num = estimate_numerator(sk_a, sk_b)
+        reply = wf.encode_dhat(num)
+        self._stream.send(reply)
+        self._tally["estimator"] += _framed_len(payload) + len(reply)
+        self._install(sid, b, plan_from_estimate(cfg, num, set_size_a), append=False)
+
+    def _handle_sketches(self, payload: bytes) -> None:
+        if self._ctx is not None:
+            raise WireError("sketch frame while a round outcome is pending")
+        batch = self._ensure_batch()
+        rnd = self._rnd + 1
+        plans = batch.plan_round(rnd)
+        per = self._encode_round(plans)
+        live = sorted(per)
+        schema = self._schema(per, live)
+        got_rnd, blocks = wf.decode_round_sketches(payload, schema)
+        if got_rnd != rnd:
+            raise WireError(f"sketch frame for round {got_rnd}, expected {rnd}")
+        self._rnd = rnd
+        self._tally["protocol"] += _framed_len(payload)
+
+        # per cohort: place each session's frame sketches at its row slice,
+        # XOR with our device-resident side, decode every unit at once
+        # (padding rows carry zero sketches on both sides: trivially ok)
+        sk_a_of = dict(zip(live, blocks))
+        inflight = []
+        for plan in plans:
+            u_pad = plan.arrays["row_map"].shape[0]
+            sk_a = np.zeros((u_pad, plan.store.t), dtype=np.int32)
+            sk_b = np.zeros((u_pad, plan.store.t), dtype=np.int32)
+            for sess, base, active, _ in plan.members:
+                rows = slice(base, base + len(active))
+                sk_a[rows] = sk_a_of[sess.sid]
+                sk_b[rows] = per[sess.sid].sk
+            out = bch_decode_batched(
+                jnp.asarray(sk_a ^ sk_b, dtype=jnp.int32),
+                n=plan.store.n, t=plan.store.t,
+            )
+            inflight.append((plan, out))
+        entries = []
+        ctx = {}
+        for plan, out in inflight:
+            ok_pad, pos_pad, cnt_pad = (np.asarray(x) for x in jax.device_get(out))
+            for sess, base, active, bin_seed in plan.members:
+                rows = slice(base, base + len(active))
+                row = per[sess.sid]
+                ok = ok_pad[rows]
+                pos, cnt = pos_pad[rows], cnt_pad[rows]
+                units: list[ReplyUnit | None] = []
+                for slot in range(len(active)):
+                    if not ok[slot]:
+                        units.append(None)
+                        continue
+                    k = int(cnt[slot])
+                    p = pos[slot, :k].astype(np.int64)
+                    units.append(
+                        ReplyUnit(
+                            positions=p,
+                            xors=row.xors[slot, p],
+                            csum=int(row.csum[slot]),
+                        )
+                    )
+                ctx[sess.sid] = (sess, active, ok, bin_seed)
+                entries.append((sess.sid, (ok, units)))
+        entries = [e for _, e in sorted(entries, key=lambda x: x[0])]
+        reply = wf.encode_round_reply(rnd, entries, schema)
+        self._stream.send(reply)
+        self._tally["protocol"] += len(reply)
+        self._ctx = (live, ctx)
+
+    def _handle_outcome(self, payload: bytes) -> None:
+        if self._ctx is None:
+            raise WireError("outcome frame with no round in flight")
+        live, ctx = self._ctx
+        self._ctx = None
+        rnd = self._rnd
+        got_rnd, done_lists = wf.decode_round_outcome(
+            payload, [len(ctx[sid][1]) for sid in live]
+        )
+        if got_rnd != rnd:
+            raise WireError(f"outcome frame for round {got_rnd}, expected {rnd}")
+        self._tally["protocol"] += _framed_len(payload)
+        for sid, done in zip(live, done_lists):
+            sess, active, ok, _ = ctx[sid]
+            for slot, u in enumerate(active):
+                if not ok[slot]:
+                    # our decode failed: mirror Alice's 3-way split verbatim
+                    queue_split(sess.state, u, rnd, sess.plan.cfg.seed)
+                elif done[slot]:
+                    u.done = True
+            sess.state.rounds = rnd
+
+    def _handle_verify(self, payload: bytes) -> None:
+        entries = wf.decode_verify(payload, len(self._sessions))
+        self._tally["verify"] += _framed_len(payload)
+        flags = []
+        for sess, (success, csum_eff) in zip(self._sessions, entries):
+            # Alice's A △ D̂ must sum to our B when she really learned A △ B
+            flags.append(bool(success) and csum_eff == checksum(sess.state.b))
+        ack = wf.encode_verify_ack(flags)
+        self._stream.send(ack)
+        self._tally["verify"] += len(ack)
+        self.verified = flags
+
+
+def _framed_len(payload: bytes) -> int:
+    """Exact framed size of a received payload (envelope + type + body)."""
+    return framed_len(len(payload))
+
+
+def run_pair(alice: AliceEndpoint, bob: BobEndpoint) -> dict[int, ReconcileResult]:
+    """Drive a connected endpoint pair to completion: Bob serves on a
+    worker thread, Alice runs on the caller's; Bob's exceptions re-raise.
+
+    A failing serve() closes Bob's transport so a blocked Alice fails fast
+    instead of sitting out her recv timeout, and Bob's root-cause exception
+    takes precedence over the secondary transport error Alice then sees.
+    """
+    err: list[BaseException] = []
+
+    def _serve():
+        try:
+            bob.serve()
+        except BaseException as e:  # noqa: BLE001 - relayed to the caller
+            err.append(e)
+            bob._stream.transport.close()  # unblock the peer's recv
+
+    th = threading.Thread(target=_serve, name="bob-endpoint", daemon=True)
+    th.start()
+    try:
+        results = alice.run()
+    except BaseException:
+        th.join(timeout=5.0)
+        if err:
+            raise err[0]  # Bob's failure is the root cause, not Alice's
+        raise
+    th.join(timeout=60.0)
+    if err:
+        raise err[0]
+    return results

@@ -1,0 +1,349 @@
+"""Transports the PBS endpoints exchange encoded bytes over (DESIGN.md §9).
+
+Three concrete transports, one reliability wrapper, one framing helper:
+
+* ``InMemoryDuplex`` — a thread-safe in-process pipe pair; the default for
+  tests and the wire-byte measurement path in benchmarks.
+* ``SocketTransport`` / ``tcp_loopback_pair`` — a real TCP connection over
+  127.0.0.1; what the CI end-to-end job drives.
+* ``SimulatedChannel`` — datagram semantics with configurable loss
+  probability and one-way latency.  Lossy by construction, so endpoints
+  must run it under ``ReliableTransport``.
+* ``ReliableTransport`` — stop-and-wait ARQ (seq + ack + retransmit timer
+  + duplicate suppression) turning a lossy datagram channel back into a
+  reliable one; ``retransmits`` counts the recoveries.
+* ``FrameStream`` — varint length-framing over any reliable transport:
+  accumulates stream chunks and yields whole ``repro.wire`` frames.
+
+Every transport counts ``bytes_out``/``bytes_in``, so tests can assert the
+measured wire traffic of a full reconciliation, including ARQ overhead.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.wire.frames import split_frame
+from repro.wire.varint import decode_uvarint, encode_uvarint, framed_len
+
+
+class TransportError(Exception):
+    """Transport failure: closed peer, timeout, or retry exhaustion."""
+
+
+class Transport:
+    """Reliable duplex byte channel; concrete classes fill send/recv."""
+
+    def __init__(self) -> None:
+        self.bytes_out = 0
+        self.bytes_in = 0
+
+    def send(self, data: bytes) -> None:
+        raise NotImplementedError
+
+    def recv(self, timeout: float | None = None) -> bytes:
+        """One inbound chunk (stream segment or datagram); blocks until
+        available.  ``timeout`` None = block forever; raises TransportError
+        on timeout or closed-and-drained peer."""
+        raise NotImplementedError
+
+    def linger(self) -> None:
+        """Service the channel briefly after the last expected message.
+
+        No-op for inherently reliable transports.  An ARQ layer overrides
+        this to keep acknowledging retransmitted tails (the peer's final
+        datagram whose ack was lost) until the channel goes quiet —
+        otherwise the peer's last reliable ``send`` can never complete.
+        """
+
+    def close(self) -> None:
+        pass
+
+
+class InMemoryDuplex(Transport):
+    """In-process duplex pipe; ``pair()`` returns the two connected ends."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._rx: deque[bytes] = deque()
+        self._cond = threading.Condition()
+        self._closed = False
+        self.peer: InMemoryDuplex | None = None
+
+    @classmethod
+    def pair(cls) -> tuple["InMemoryDuplex", "InMemoryDuplex"]:
+        one, two = cls(), cls()
+        one.peer, two.peer = two, one
+        return one, two
+
+    def _deliver(self, data: bytes) -> None:
+        with self._cond:
+            self._rx.append(data)
+            self._cond.notify_all()
+
+    def send(self, data: bytes) -> None:
+        if self.peer is None or self.peer._closed:
+            raise TransportError("send on closed in-memory pipe")
+        self.bytes_out += len(data)
+        self.peer._deliver(bytes(data))
+
+    def recv(self, timeout: float | None = None) -> bytes:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while not self._rx:
+                # either end closing ends the conversation once drained
+                if self._closed or (self.peer is not None and self.peer._closed):
+                    raise TransportError("recv on closed in-memory pipe")
+                wait = None if deadline is None else deadline - time.monotonic()
+                if wait is not None and wait <= 0:
+                    raise TransportError("in-memory recv timeout")
+                self._cond.wait(wait)
+            data = self._rx.popleft()
+        self.bytes_in += len(data)
+        return data
+
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        if self.peer is not None:
+            with self.peer._cond:       # wake a peer blocked in recv
+                self.peer._cond.notify_all()
+
+
+class SocketTransport(Transport):
+    """A connected stream socket as a Transport."""
+
+    def __init__(self, sock: socket.socket) -> None:
+        super().__init__()
+        self._sock = sock
+
+    def send(self, data: bytes) -> None:
+        try:
+            self._sock.sendall(data)
+        except OSError as e:
+            raise TransportError(f"socket send failed: {e}") from e
+        self.bytes_out += len(data)
+
+    def recv(self, timeout: float | None = None) -> bytes:
+        self._sock.settimeout(timeout)
+        try:
+            data = self._sock.recv(65536)
+        except socket.timeout as e:
+            raise TransportError("socket recv timeout") from e
+        except OSError as e:
+            raise TransportError(f"socket recv failed: {e}") from e
+        if not data:
+            raise TransportError("socket closed by peer")
+        self.bytes_in += len(data)
+        return data
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+def tcp_loopback_pair() -> tuple[SocketTransport, SocketTransport]:
+    """A real TCP connection over 127.0.0.1 (ephemeral port)."""
+    listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    listener.bind(("127.0.0.1", 0))
+    listener.listen(1)
+    client = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    client.connect(listener.getsockname())
+    server, _ = listener.accept()
+    listener.close()
+    for s in (client, server):
+        s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    return SocketTransport(client), SocketTransport(server)
+
+
+class SimulatedChannel(Transport):
+    """Datagram channel with loss probability and one-way latency.
+
+    Each ``send`` is one datagram: dropped with probability ``loss``
+    (deterministic per ``seed``), otherwise delivered after ``latency``
+    seconds.  Unreliable by design — wrap both ends in
+    ``ReliableTransport`` to force the retransmit path.
+    """
+
+    def __init__(self, loss: float = 0.0, latency: float = 0.0, seed: int = 0) -> None:
+        super().__init__()
+        self._loss = float(loss)
+        self._latency = float(latency)
+        self._rng = np.random.default_rng(seed)
+        self._rx: deque[tuple[float, bytes]] = deque()  # (ready_time, data)
+        self._cond = threading.Condition()
+        self.peer: SimulatedChannel | None = None
+        self.dropped = 0
+
+    @classmethod
+    def pair(
+        cls, loss: float = 0.0, latency: float = 0.0, seed: int = 0
+    ) -> tuple["SimulatedChannel", "SimulatedChannel"]:
+        one = cls(loss, latency, seed)
+        two = cls(loss, latency, seed + 1)
+        one.peer, two.peer = two, one
+        return one, two
+
+    def send(self, data: bytes) -> None:
+        self.bytes_out += len(data)
+        if self._rng.random() < self._loss:
+            self.dropped += 1
+            return
+        ready = time.monotonic() + self._latency
+        peer = self.peer
+        with peer._cond:
+            peer._rx.append((ready, bytes(data)))
+            peer._cond.notify_all()
+
+    def recv(self, timeout: float | None = None) -> bytes:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while True:
+                now = time.monotonic()
+                if self._rx and self._rx[0][0] <= now:
+                    _, data = self._rx.popleft()
+                    self.bytes_in += len(data)
+                    return data
+                wait = self._rx[0][0] - now if self._rx else None
+                if deadline is not None:
+                    remain = deadline - now
+                    if remain <= 0:
+                        raise TransportError("simulated channel recv timeout")
+                    wait = remain if wait is None else min(wait, remain)
+                self._cond.wait(wait)
+
+
+_DATA, _ACK = 0x00, 0x01
+
+
+class ReliableTransport(Transport):
+    """Stop-and-wait ARQ over an unreliable datagram transport.
+
+    Datagram layout: ``kind byte (DATA/ACK) || uvarint(seq) || payload``.
+    ``send`` retransmits until the matching ACK arrives (handling any DATA
+    that lands in between); ``recv`` ACKs every DATA datagram and
+    suppresses duplicates by sequence number.
+    """
+
+    def __init__(
+        self,
+        channel: Transport,
+        *,
+        timeout: float = 0.05,
+        max_retries: int = 200,
+    ) -> None:
+        super().__init__()
+        self._ch = channel
+        self._timeout = timeout
+        self._max_retries = max_retries
+        self._tx_seq = 0
+        self._rx_next = 0
+        self._ready: deque[bytes] = deque()
+        self.retransmits = 0
+
+    def _handle(self, dgram: bytes, want_ack: int | None) -> bool:
+        """Process one inbound datagram; True iff it ACKs ``want_ack``."""
+        if not dgram:
+            raise TransportError("empty datagram")
+        kind = dgram[0]
+        seq, off = decode_uvarint(dgram, 1)
+        if kind == _ACK:
+            return want_ack is not None and seq == want_ack
+        if kind != _DATA:
+            raise TransportError(f"unknown datagram kind {kind}")
+        self._ch.send(bytes((_ACK,)) + encode_uvarint(seq))
+        if seq == self._rx_next:       # new in-order data; dupes just re-ACK
+            self._rx_next += 1
+            self._ready.append(dgram[off:])
+        return False
+
+    def send(self, data: bytes) -> None:
+        seq = self._tx_seq
+        self._tx_seq += 1
+        dgram = bytes((_DATA,)) + encode_uvarint(seq) + bytes(data)
+        self.bytes_out += len(data)
+        for attempt in range(self._max_retries):
+            self._ch.send(dgram)
+            if attempt:
+                self.retransmits += 1
+            deadline = time.monotonic() + self._timeout
+            while True:
+                remain = deadline - time.monotonic()
+                if remain <= 0:
+                    break
+                try:
+                    inbound = self._ch.recv(timeout=remain)
+                except TransportError:
+                    break
+                if self._handle(inbound, want_ack=seq):
+                    return
+        raise TransportError(f"no ACK for seq {seq} after {self._max_retries} tries")
+
+    def recv(self, timeout: float | None = None) -> bytes:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while not self._ready:
+            remain = None if deadline is None else deadline - time.monotonic()
+            if remain is not None and remain <= 0:
+                raise TransportError("reliable recv timeout")
+            self._handle(self._ch.recv(timeout=remain), want_ack=None)
+        data = self._ready.popleft()
+        self.bytes_in += len(data)
+        return data
+
+    def linger(self) -> None:
+        """Re-ACK retransmitted tails until the channel stays quiet for a
+        few timeout windows (the two-army tail: our ACK of the peer's last
+        datagram may have been lost while we no longer expect data)."""
+        while True:
+            try:
+                self._handle(self._ch.recv(timeout=4 * self._timeout), want_ack=None)
+            except TransportError:
+                return
+
+    def close(self) -> None:
+        self._ch.close()
+
+
+class FrameStream:
+    """Varint-framed ``repro.wire`` messages over a reliable Transport.
+
+    Counts protocol frames and their exact framed byte sizes in each
+    direction — the measured quantities the endpoint wire ledgers and the
+    benchmark's bytes-per-diff gate are built from.
+    """
+
+    def __init__(self, transport: Transport, *, recv_timeout: float | None = 60.0):
+        self.transport = transport
+        self._buf = bytearray()
+        self._off = 0
+        self._recv_timeout = recv_timeout
+        self.frames_out = 0
+        self.frames_in = 0
+        self.bytes_out = 0
+        self.bytes_in = 0
+
+    def send(self, frame_bytes: bytes) -> None:
+        self.frames_out += 1
+        self.bytes_out += len(frame_bytes)
+        self.transport.send(frame_bytes)
+
+    def recv(self) -> tuple[int, bytes]:
+        """Next whole frame as (msg_type, payload)."""
+        while True:
+            got = split_frame(self._buf, self._off)
+            if got is not None:
+                msg_type, payload, self._off = got
+                self.bytes_in += framed_len(len(payload))
+                self.frames_in += 1
+                if self._off == len(self._buf):
+                    self._buf.clear()
+                    self._off = 0
+                return msg_type, payload
+            self._buf += self.transport.recv(timeout=self._recv_timeout)

@@ -9,9 +9,15 @@ bin/sketch/decode in one call, and ``ReconcileServer`` dispatches all
 cohorts asynchronously while keeping per-session byte ledgers identical to
 ``core.pbs.reconcile``.
 """
-from .engine import execute_round
-from .server import ReconcileServer, reconcile_batch
-from .session import CohortRoundPlan, CohortStore, ReconSession, SessionBatch
+from .engine import encode_side, execute_round
+from .server import ReconcileServer, phase0_numerators, reconcile_batch
+from .session import (
+    CohortRoundPlan,
+    CohortStore,
+    ReconSession,
+    SessionBatch,
+    SideStore,
+)
 
 __all__ = [
     "CohortRoundPlan",
@@ -19,6 +25,9 @@ __all__ = [
     "ReconSession",
     "ReconcileServer",
     "SessionBatch",
+    "SideStore",
+    "encode_side",
     "execute_round",
+    "phase0_numerators",
     "reconcile_batch",
 ]

@@ -22,6 +22,12 @@ powers of two by the planner, so a serving loop settles into a bounded set
 of compiled variants per cohort code.  On TPU the per-round overlay buffers
 are donated — they are dead after the call, so XLA may reuse their memory
 for outputs.
+
+``encode_side`` is the single-side half of the same pass — one endpoint's
+row build + bin/sketch/checksum without the other side or the decode — used
+by the ``repro.net`` wire endpoints (DESIGN.md §9), which ship the sketches
+as frames and (on Bob's end) feed the frame-decoded XOR to the batched
+decoder.
 """
 from __future__ import annotations
 
@@ -74,6 +80,29 @@ def _apply_filters(elems, valid, fseeds, fbins, fcnt):
     return valid
 
 
+def _build_side(
+    flat, start, cnt, row_map, width, removed, removed_cnt, added, added_cnt,
+    unit_valid, fseeds, fbins, fcnt,
+):
+    """One side's full on-device unit-row build: CSR gather, diff overlay
+    (drop ``removed`` by value match, append ``added`` columns — both may be
+    zero-width, in which case the overlay ops vanish), split-filter chain,
+    and the padding-unit mask.  Shared by the fused two-side executor and
+    the single-side executor the wire endpoints drive."""
+    e, v = _build_rows(flat, start, cnt, row_map, width)
+    if removed.shape[1]:
+        rm_on = jnp.arange(removed.shape[1])[None, :] < removed_cnt[:, None]
+        hit = (e[:, :, None] == removed[:, None, :]) & rm_on[:, None, :]
+        v = v & ~jnp.any(hit, axis=-1)
+    if added.shape[1]:
+        e = jnp.concatenate([e, added], axis=1)
+        v = jnp.concatenate(
+            [v, jnp.arange(added.shape[1])[None, :] < added_cnt[:, None]], axis=1
+        )
+    v = _apply_filters(e, v, fseeds, fbins, fcnt)
+    return e, v & (unit_valid != 0)[:, None]
+
+
 def _pad_width(elems, valid, width):
     pad = width - elems.shape[1]
     if pad == 0:
@@ -114,25 +143,19 @@ def _execute_round(
     with -1, counts (U,), csum_a, csum_b (U,) uint32).
     """
     code = bch_code(n, t)
+    empty_overlay = jnp.zeros((row_map.shape[0], 0), jnp.uint32)
+    zero_cnt = jnp.zeros(row_map.shape[0], jnp.int32)
 
-    # --- Alice: store row + diff overlay --------------------------------
-    ea, va = _build_rows(flat_a, start_a, cnt_a, row_map, width_a)
-    rm_on = jnp.arange(removed.shape[1])[None, :] < removed_cnt[:, None]
-    hit = (ea[:, :, None] == removed[:, None, :]) & rm_on[:, None, :]
-    va = va & ~jnp.any(hit, axis=-1)
-    ea = jnp.concatenate([ea, added], axis=1)
-    va = jnp.concatenate(
-        [va, jnp.arange(added.shape[1])[None, :] < added_cnt[:, None]], axis=1
+    # --- Alice: store row + diff overlay; Bob: store row only -----------
+    ea, va = _build_side(
+        flat_a, start_a, cnt_a, row_map, width_a,
+        removed, removed_cnt, added, added_cnt, unit_valid, fseeds, fbins, fcnt,
     )
-
-    # --- Bob: store row only (his set never changes) --------------------
-    eb, vb = _build_rows(flat_b, start_b, cnt_b, row_map, width_b)
-
-    # --- split filters + padding-unit mask, both sides ------------------
-    va = _apply_filters(ea, va, fseeds, fbins, fcnt)
-    vb = _apply_filters(eb, vb, fseeds, fbins, fcnt)
-    uv = (unit_valid != 0)[:, None]
-    va, vb = va & uv, vb & uv
+    eb, vb = _build_side(
+        flat_b, start_b, cnt_b, row_map, width_b,
+        empty_overlay, zero_cnt, empty_overlay, zero_cnt,
+        unit_valid, fseeds, fbins, fcnt,
+    )
 
     # --- fused two-side encode: one bin launch, one sketch matmul -------
     width = max(ea.shape[1], eb.shape[1])
@@ -151,6 +174,47 @@ def _execute_round(
     u = row_map.shape[0]
     ok, pos, cnt = bch_decode_batched(sk2[:u] ^ sk2[u:], n=n, t=t)
     return xors2[:u], xors2[u:], ok, pos, cnt, csum2[:u], csum2[u:]
+
+
+def _encode_side(
+    flat: jax.Array,
+    start: jax.Array,
+    cnt: jax.Array,
+    row_map: jax.Array,
+    unit_valid: jax.Array,
+    seeds: jax.Array,
+    removed: jax.Array,
+    removed_cnt: jax.Array,
+    added: jax.Array,
+    added_cnt: jax.Array,
+    fseeds: jax.Array,
+    fbins: jax.Array,
+    fcnt: jax.Array,
+    *,
+    n: int,
+    t: int,
+    width: int,
+    interpret: bool | None = None,
+):
+    """Encode ONE side's U packed units: the wire-endpoint half of the round.
+
+    Same on-device row build + bin/sketch/checksum pass as the fused
+    executor, but for a single endpoint's resident store (Bob passes
+    zero-width overlays).  Returns (sketches (U, t), xors (U, n) uint32,
+    csum (U,) uint32); the sketches are what ``repro.wire`` bit-packs into
+    the round frames, and Bob feeds the frame-decoded XOR of both sides'
+    sketches to ``bch_decode_batched``.
+    """
+    code = bch_code(n, t)
+    e, v = _build_side(
+        flat, start, cnt, row_map, width,
+        removed, removed_cnt, added, added_cnt, unit_valid, fseeds, fbins, fcnt,
+    )
+    parity, xor_bits = bin_parity_xorsum_units(
+        e, v.astype(jnp.int32), seeds, n_bins=n, interpret=interpret
+    )
+    sk = sketch_groups(parity, code, interpret=interpret)
+    return sk, xor_bits_to_u32(xor_bits), _wrap_csum(e, v)
 
 
 # Per-round overlay buffers are dead after the call; donating them lets XLA
@@ -175,3 +239,16 @@ def execute_round(*args, **kwargs):
     """Jitted ``_execute_round``; the backend probe for buffer donation is
     deferred to call time so importing this module never initializes JAX."""
     return _jitted_executor(jax.default_backend() == "tpu")(*args, **kwargs)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_side_executor():
+    # No donation here: a wire endpoint re-reads nothing either, but the
+    # overlay buffers are tiny and the call count is one per cohort-round —
+    # keep the single-side path free of backend probes.
+    return jax.jit(_encode_side, static_argnames=("n", "t", "width", "interpret"))
+
+
+def encode_side(*args, **kwargs):
+    """Jitted ``_encode_side`` (the per-endpoint half of ``execute_round``)."""
+    return _jitted_side_executor()(*args, **kwargs)

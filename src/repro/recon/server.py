@@ -1,7 +1,10 @@
 """ReconcileServer: the traffic-serving facade over the batched engine.
 
 ``submit`` any number of Alice↔Bob pairs, then ``run`` drives every session's
-full PBS protocol concurrently.  Before round 1, each cohort's element store
+full PBS protocol concurrently.  Estimator sessions (unknown d) defer phase 0
+to ``run``, which batches every pending ToW estimate through the Pallas
+``tow_sketch`` kernel in one async-dispatched sweep (bit-identical to the
+host mirror — same hash family).  Before round 1, each cohort's element store
 uploads to the device once; each global round the SessionBatch planner emits
 only small gather/overlay arrays, **all cohorts dispatch before the first
 device_get** (JAX async dispatch overlaps their device work), and the host
@@ -30,17 +33,51 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.hashing import derive_seed
 from repro.core.pbs import (
     PBSConfig,
     ReconcileResult,
     apply_round_outcomes,
     finalize_result,
     new_session_state,
-    plan_protocol,
+    plan_from_d_known,
+    plan_from_estimate,
 )
+from repro.core.tow import tow_seeds
+from repro.kernels.tow_sketch import tow_sketch
 
 from .engine import execute_round
 from .session import CohortRoundPlan, ReconSession, SessionBatch
+
+
+def phase0_numerators(
+    pairs, seeds_list, *, interpret: bool | None = None
+) -> list[int]:
+    """Batched phase-0 d_hat numerators through the ToW Pallas kernel.
+
+    Dispatches every (A, B) pair's sketch kernels before the first readback
+    (JAX async dispatch overlaps the device work), then reduces the exact
+    integer numerator sum((Y_A - Y_B)^2) on the host.  Bit-identical to
+    ``core.tow.tow_sketches`` + ``estimate_numerator`` — same hash family —
+    so routing submit-time estimation through the device changes nothing
+    downstream.
+    """
+    inflight = []
+    for (a, b), seeds in zip(pairs, seeds_list):
+        sj = jnp.asarray(seeds)
+        inflight.append(
+            (
+                tow_sketch(jnp.asarray(a), sj, ell=len(seeds), interpret=interpret),
+                tow_sketch(jnp.asarray(b), sj, ell=len(seeds), interpret=interpret),
+            )
+        )
+    out = []
+    for ya, yb in inflight:
+        diff = np.asarray(jax.device_get(ya)).astype(np.int64) - np.asarray(
+            jax.device_get(yb)
+        ).astype(np.int64)
+        out.append(int(np.sum(diff * diff)))
+    return out
 
 
 class ReconcileServer:
@@ -52,9 +89,11 @@ class ReconcileServer:
 
     def __init__(self, *, interpret: bool | None = None):
         self._interpret = interpret
-        self._sessions: list[ReconSession] = []
+        self._sessions: list[ReconSession | None] = []
+        self._pending: dict[int, tuple] = {}   # sid -> (a, b, cfg), d unknown
         self._batch: SessionBatch | None = None
         self._stats: dict = {}
+        self._phase0_s = 0.0                   # accrued until the next run()
 
     def submit(
         self,
@@ -65,22 +104,53 @@ class ReconcileServer:
     ) -> int:
         """Enqueue one session (Alice holds ``set_a``); returns its sid.
 
-        Phase 0 (ToW estimate + parameter optimization) runs at submit time,
-        so cohort membership is known before the first round.
+        Known-d sessions pin their (n, t, g) immediately; estimator
+        sessions defer phase 0 so ``run`` can batch every pending ToW
+        sketch through the Pallas kernel in one async-dispatched sweep
+        instead of a per-session host loop over ell hash functions.
         """
         cfg = cfg or PBSConfig()
         a = np.unique(np.asarray(set_a, dtype=np.uint32))
         b = np.unique(np.asarray(set_b, dtype=np.uint32))
-        plan = plan_protocol(a, b, cfg, d_known)
         sid = len(self._sessions)
-        self._sessions.append(
-            ReconSession(sid=sid, plan=plan, state=new_session_state(a, b, plan))
-        )
+        if d_known is not None:
+            plan = plan_from_d_known(cfg, d_known)
+            self._sessions.append(
+                ReconSession(sid=sid, plan=plan, state=new_session_state(a, b, plan))
+            )
+        else:
+            self._sessions.append(None)        # placeholder until phase 0
+            self._pending[sid] = (a, b, cfg)
         self._batch = None  # new member: cohort stores must be rebuilt
         return sid
 
+    def _flush_phase0(self) -> None:
+        """Run deferred phase 0 for every estimator session (device-batched).
+
+        Wall time accrues into the ``phase0_s`` stat of the *next* ``run``,
+        so reading ``sessions`` early never drops the cost from the ledger.
+        """
+        if not self._pending:
+            return
+        t0 = time.perf_counter()
+        items = sorted(self._pending.items())
+        pairs = [(a, b) for _, (a, b, _) in items]
+        seeds_list = [
+            tow_seeds(derive_seed(cfg.seed, 0x70), cfg.ell)
+            for _, (_, _, cfg) in items
+        ]
+        nums = phase0_numerators(pairs, seeds_list, interpret=self._interpret)
+        for (sid, (a, b, cfg)), num in zip(items, nums):
+            plan = plan_from_estimate(cfg, num, len(a))
+            self._sessions[sid] = ReconSession(
+                sid=sid, plan=plan, state=new_session_state(a, b, plan)
+            )
+        self._pending.clear()
+        self._phase0_s += time.perf_counter() - t0
+
     @property
     def sessions(self) -> list[ReconSession]:
+        self._flush_phase0()
         return self._sessions
 
     @property
@@ -96,11 +166,14 @@ class ReconcileServer:
         nothing, and stores only build when a cohort has live work.
         """
         t_run = time.perf_counter()
+        self._flush_phase0()
+        phase0_s, self._phase0_s = self._phase0_s, 0.0
         if self._batch is None:
             self._batch = SessionBatch(self._sessions)
         batch = self._batch
         prior_store_bytes = batch.store_upload_bytes()
         st = {
+            "phase0_s": phase0_s,
             "rounds": 0,
             "cohort_rounds": 0,
             "h2d_round_bytes": 0,
@@ -153,12 +226,12 @@ class ReconcileServer:
         """Enqueue one cohort's fused round executor; returns device futures."""
         store = plan.store
         return execute_round(
-            store.flat_a,
-            store.start_a,
-            store.cnt_a,
-            store.flat_b,
-            store.start_b,
-            store.cnt_b,
+            store.a.flat,
+            store.a.start,
+            store.a.cnt,
+            store.b.flat,
+            store.b.start,
+            store.b.cnt,
             *(jnp.asarray(plan.arrays[k]) for k in (
                 "row_map", "unit_valid", "seeds", "removed", "removed_cnt",
                 "added", "added_cnt", "fseeds", "fbins", "fcnt",
@@ -183,8 +256,7 @@ class ReconcileServer:
         for sess, base, active, bin_seed in plan.members:
             k = len(active)
             rows = slice(base, base + k)
-            round_bits = k * sketch_bits
-            round_bits += apply_round_outcomes(
+            reply_bits, _ = apply_round_outcomes(
                 sess.state,
                 active,
                 ok[rows],
@@ -197,6 +269,7 @@ class ReconcileServer:
                 bin_seed=bin_seed,
                 rnd=rnd,
             )
+            round_bits = k * sketch_bits + reply_bits
             sess.state.bytes_per_round.append((round_bits + 7) // 8)
             sess.state.rounds = rnd
 

@@ -27,6 +27,11 @@ The per-unit element *sets* the executor reconstructs are exactly the
 ``slot_assignment`` sets of the single-session oracle (parity/XOR/checksum
 reductions are permutation-invariant), which is what keeps the batched
 engine unit-for-unit identical to ``core.pbs.reconcile``.
+
+Stores are built per *side*: the in-process server batches both sides; a
+``repro.net`` wire endpoint passes ``sides=("a",)`` or ``("b",)`` and gets
+the identical round plans over only its own resident elements
+(DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -38,7 +43,13 @@ import jax.numpy as jnp
 
 from repro.core.bch import bch_code
 from repro.core.hashing import derive_seed
-from repro.core.pbs import ProtocolPlan, SessionState, diff_overlay, group_view
+from repro.core.pbs import (
+    ProtocolPlan,
+    SessionState,
+    diff_overlay,
+    group_view,
+    session_live,
+)
 from repro.kernels.platform import ceil_to as _ceil_to
 from repro.kernels.platform import pow2_bucket
 
@@ -57,30 +68,52 @@ class ReconSession:
 
 
 @dataclass
+class SideStore:
+    """One side's slice of a cohort store: CSR flat elements + row extents.
+
+    A both-sides batch (the in-process ``ReconcileServer``) holds an "a" and
+    a "b" SideStore per cohort; a ``repro.net`` endpoint holds only its own
+    side — Alice never materializes Bob's elements and vice versa.
+    """
+
+    flat: jnp.ndarray              # (E_total,) uint32, device-resident
+    start: jnp.ndarray             # (G,) int32 row offsets into flat
+    cnt: jnp.ndarray               # (G,) int32 row element counts
+    cnt_host: np.ndarray           # host copy: gather widths + accounting
+    h2d_bytes: int                 # one-time upload cost of this side
+
+
+@dataclass
 class CohortStore:
     """One cohort's device-resident element store, uploaded once per run.
 
-    CSR layout — one flat element array per side plus per-row (start, count)
-    — so the one-time upload is the raw element bytes with no padding waste.
-    Row ``row_of[(sid, group)]`` is that session group's slice; the executor
-    gathers ``flat[start + iota]`` into padded unit rows *on device* and
-    derives the valid mask from the counts, so neither padded element
-    matrices nor valid matrices ever cross the host↔device boundary.
+    CSR layout — one flat element array per resident side plus per-row
+    (start, count) — so the one-time upload is the raw element bytes with no
+    padding waste.  Row ``row_of[(sid, group)]`` is that session group's
+    slice; the executor gathers ``flat[start + iota]`` into padded unit rows
+    *on device* and derives the valid mask from the counts, so neither
+    padded element matrices nor valid matrices ever cross the host↔device
+    boundary.  ``sides`` holds the resident ``SideStore``s: both for the
+    in-process server, exactly one for a wire endpoint.
     """
 
     n: int
     t: int
     m: int
     row_of: dict                   # (sid, group) -> store row index
-    flat_a: jnp.ndarray            # (Ea_total,) uint32, device-resident
-    start_a: jnp.ndarray           # (G,) int32 row offsets into flat_a
-    cnt_a: jnp.ndarray             # (G,) int32 row element counts
-    flat_b: jnp.ndarray            # (Eb_total,) uint32
-    start_b: jnp.ndarray           # (G,) int32
-    cnt_b: jnp.ndarray             # (G,) int32
-    cnt_a_host: np.ndarray         # host copies: per-round gather widths +
-    cnt_b_host: np.ndarray         #   legacy-traffic accounting
-    h2d_bytes: int = 0             # one-time upload cost of this store
+    sides: dict                    # "a"/"b" -> SideStore
+
+    @property
+    def a(self) -> SideStore:
+        return self.sides["a"]
+
+    @property
+    def b(self) -> SideStore:
+        return self.sides["b"]
+
+    @property
+    def h2d_bytes(self) -> int:
+        return sum(s.h2d_bytes for s in self.sides.values())
 
 
 @dataclass
@@ -124,8 +157,32 @@ def _by_group(vals: np.ndarray, g: int, seed_groups: int) -> dict:
     }
 
 
+def pack_csr(rows: list, col_align: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pack variable-length rows into (flat, start, cnt) CSR arrays.
+
+    Lane-pads the flat tail only: the device gather clamps past-end reads.
+    (No pow2 bucket — the store shape is fixed for the whole run, so it
+    costs one executor compile per cohort, not one per round; only
+    round-varying dims need bucketing.)
+    """
+    cnt = np.array([len(r) for r in rows], dtype=np.int32)
+    start = np.zeros(len(rows), dtype=np.int32)
+    np.cumsum(cnt[:-1], out=start[1:])
+    flat = (
+        np.concatenate(rows).astype(np.uint32) if rows else np.zeros(0, np.uint32)
+    )
+    flat = np.pad(flat, (0, _ceil_to(max(len(flat), 1), col_align) - len(flat)))
+    return flat, start, cnt
+
+
 class SessionBatch:
-    """Plans per-code cohorts: one resident store, small overlays per round."""
+    """Plans per-code cohorts: one resident store, small overlays per round.
+
+    ``sides`` selects which element stores this batch materializes: the
+    in-process server batches both ("a", "b"); a wire endpoint passes only
+    its own side, and the same planner then emits the same round arrays
+    minus the other side's store/widths.
+    """
 
     # alignment floors of the packed layouts: unit rows to the sublane unit,
     # element widths to the lane unit; pow2_bucket rounds up from there.
@@ -133,8 +190,9 @@ class SessionBatch:
     COL_ALIGN = 128
     OVERLAY_ALIGN = 8              # diff-overlay widths (removed/added cols)
 
-    def __init__(self, sessions: list[ReconSession]):
+    def __init__(self, sessions: list[ReconSession], sides: tuple = ("a", "b")):
         self.sessions = sessions
+        self.sides = tuple(sides)
         self._stores: dict[tuple[int, int], CohortStore] = {}
 
     # ---- upload-once element store -------------------------------------
@@ -161,56 +219,48 @@ class SessionBatch:
         return self._stores[key]
 
     def _build_store(self, n: int, t: int, members: list[ReconSession]) -> CohortStore:
-        rows_a: list[np.ndarray] = []
-        rows_b: list[np.ndarray] = []
+        rows: dict[str, list[np.ndarray]] = {side: [] for side in self.sides}
         row_of: dict = {}
+        nrows = 0
         for s in members:
             st, plan = s.state, s.plan
-            segs_a = _grouped_rows(st.a, st.order_a, st.bounds_a, plan.g)
-            segs_b = _grouped_rows(st.b, st.order_b, st.bounds_b, plan.g)
-            for grp, (sa, sb) in enumerate(zip(segs_a, segs_b)):
-                row_of[(s.sid, grp)] = len(rows_a)
-                rows_a.append(sa)
-                rows_b.append(sb)
+            segs = {
+                side: _grouped_rows(*(
+                    (st.a, st.order_a, st.bounds_a) if side == "a"
+                    else (st.b, st.order_b, st.bounds_b)
+                ), plan.g)
+                for side in self.sides
+            }
+            for grp in range(plan.g):
+                row_of[(s.sid, grp)] = nrows
+                nrows += 1
+                for side in self.sides:
+                    rows[side].append(next(segs[side]))
 
-        def pack(rows):
-            cnt = np.array([len(r) for r in rows], dtype=np.int32)
-            start = np.zeros(len(rows), dtype=np.int32)
-            np.cumsum(cnt[:-1], out=start[1:])
-            flat = (
-                np.concatenate(rows).astype(np.uint32)
-                if rows else np.zeros(0, np.uint32)
+        sides: dict[str, SideStore] = {}
+        for side in self.sides:
+            flat, start, cnt = pack_csr(rows[side], self.COL_ALIGN)
+            sides[side] = SideStore(
+                flat=jnp.asarray(flat), start=jnp.asarray(start),
+                cnt=jnp.asarray(cnt), cnt_host=cnt,
+                h2d_bytes=flat.nbytes + start.nbytes + cnt.nbytes,
             )
-            # lane-pad the flat tail only: the gather clamps past-end reads.
-            # (No pow2 bucket here — the store shape is fixed for the whole
-            # run, so it costs one executor compile per cohort, not one per
-            # round; only round-varying dims need bucketing.)
-            flat = np.pad(flat, (0, _ceil_to(max(len(flat), 1), self.COL_ALIGN) - len(flat)))
-            return flat, start, cnt
-
-        fa, sa, ca = pack(rows_a)
-        fb, sb, cb = pack(rows_b)
-        store = CohortStore(
-            n=n, t=t, m=bch_code(n, t).m, row_of=row_of,
-            flat_a=jnp.asarray(fa), start_a=jnp.asarray(sa), cnt_a=jnp.asarray(ca),
-            flat_b=jnp.asarray(fb), start_b=jnp.asarray(sb), cnt_b=jnp.asarray(cb),
-            cnt_a_host=ca, cnt_b_host=cb,
-            h2d_bytes=sum(x.nbytes for x in (fa, sa, ca, fb, sb, cb)),
-        )
-        return store
+        return CohortStore(n=n, t=t, m=bch_code(n, t).m, row_of=row_of, sides=sides)
 
     # ---- per-round overlay planning ------------------------------------
 
     def plan_round(self, rnd: int) -> list[CohortRoundPlan]:
-        """All cohorts with live work in round ``rnd`` (empty list = all done)."""
+        """All cohorts with live work in round ``rnd`` (empty list = all done).
+
+        Liveness is the shared ``core.pbs.session_live`` predicate — the
+        same rule both wire endpoints apply, so their cohort plans (and
+        frame schemas) line up without any membership negotiation.
+        """
         live: dict[tuple[int, int], list] = {}
         for s in self.sessions:
-            if rnd > s.plan.cfg.max_rounds:
-                continue  # session exhausted its budget: reported as failed
-            active = s.state.active_units()
-            if not active:
-                continue
-            live.setdefault(s.code_key, []).append((s, active))
+            if not session_live(s.state, s.plan.cfg, rnd):
+                continue  # budget exhausted (reported failed) or finished
+            live.setdefault(s.code_key, []).append((s, s.state.active_units()))
         return [
             self._plan_cohort(self.store_for(key), members, rnd)
             for key, members in sorted(live.items())
@@ -249,14 +299,18 @@ class SessionBatch:
             packed.append((s, base, active, bin_seed))
             base += len(active)
 
-        r_w = pow2_bucket(
-            max((len(r) for r in removed_of if r is not None), default=0),
-            self.OVERLAY_ALIGN,
-        )
-        x_w = pow2_bucket(
-            max((len(a) for a in added_of if a is not None), default=0),
-            self.OVERLAY_ALIGN,
-        )
+        # Overlay widths: a Bob-side batch (no "a" side) can never carry a
+        # diff overlay — zero width makes the executor's overlay ops vanish
+        # entirely.  An Alice-side batch keeps the aligned floor even in
+        # round 1 (empty overlay), so every round shares one executor shape
+        # per (U, Wa, Wb, F) instead of compiling a round-1-only variant.
+        if "a" in self.sides:
+            max_r = max((len(r) for r in removed_of if r is not None), default=0)
+            max_x = max((len(a) for a in added_of if a is not None), default=0)
+            r_w = pow2_bucket(max_r, self.OVERLAY_ALIGN)
+            x_w = pow2_bucket(max_x, self.OVERLAY_ALIGN)
+        else:
+            r_w = x_w = 0
         # zero-width when no unit carries a split filter: the executor's
         # statically-unrolled filter loop then vanishes for the common
         # no-split round instead of hashing both (U, W) sides for nothing
@@ -298,21 +352,30 @@ class SessionBatch:
             "fcnt": fcnt,
         }
         live_rows = row_map[:total]
+
+        def width(side: str) -> int:
+            if side not in store.sides:
+                return 0
+            return pow2_bucket(
+                int(store.sides[side].cnt_host[live_rows].max(initial=0)),
+                self.COL_ALIGN,
+            )
+
         plan = CohortRoundPlan(
             store=store,
             members=packed,
             units=total,
-            width_a=pow2_bucket(
-                int(store.cnt_a_host[live_rows].max(initial=0)), self.COL_ALIGN
-            ),
-            width_b=pow2_bucket(
-                int(store.cnt_b_host[live_rows].max(initial=0)), self.COL_ALIGN
-            ),
+            width_a=width("a"),
+            width_b=width("b"),
             arrays=arrays,
             h2d_bytes=sum(a.nbytes for a in arrays.values()),
-            legacy_h2d_bytes=self._legacy_round_bytes(
-                store, row_map[:total], removed_cnt[:total], added_cnt[:total],
-                fcnt[:total],
+            legacy_h2d_bytes=(
+                self._legacy_round_bytes(
+                    store, row_map[:total], removed_cnt[:total],
+                    added_cnt[:total], fcnt[:total],
+                )
+                if {"a", "b"} <= set(store.sides)
+                else 0
             ),
         )
         return plan
@@ -329,8 +392,8 @@ class SessionBatch:
         if not len(row_map):
             return 0
         shrink = np.power(3.0, fcnt.astype(np.float64))
-        na = (store.cnt_a_host[row_map] - removed_cnt + added_cnt) / shrink
-        nb = store.cnt_b_host[row_map] / shrink
+        na = (store.a.cnt_host[row_map] - removed_cnt + added_cnt) / shrink
+        nb = store.b.cnt_host[row_map] / shrink
         u_old = max(self.ROW_ALIGN, _ceil_to(len(row_map), self.ROW_ALIGN))
         wa_old = max(self.COL_ALIGN, _ceil_to(int(na.max()), self.COL_ALIGN))
         wb_old = max(self.COL_ALIGN, _ceil_to(int(nb.max()), self.COL_ALIGN))

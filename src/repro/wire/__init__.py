@@ -1,0 +1,80 @@
+"""Byte-exact wire codec for the PBS protocol (DESIGN.md §9).
+
+Every message the two endpoints of a PBS session exchange has a framed
+binary encoding here — phase-0 ToW sketch + d_hat reply, per-round
+syndrome-sketch frames, Bob's decode-outcome replies, Alice's
+checksum-outcome frames, and the final verification exchange — each with
+``encode``/``decode`` round-trip functions, varint length framing, and
+per-frame *ledger bits*: the exact Formula-(1) protocol-information bits a
+frame carries, derived from the decoded content (never from session-state
+formulas).  ``repro.net`` endpoints accumulate those measured bits into the
+per-session byte ledger and assert it equals ``core.pbs`` accounting
+bit-for-bit (tests/test_net_endpoints.py, tests/test_recon_batch.py).
+"""
+from .frames import (
+    MSG_DHAT,
+    MSG_ROUND_OUTCOME,
+    MSG_ROUND_REPLY,
+    MSG_ROUND_SKETCHES,
+    MSG_TOW_SKETCH,
+    MSG_VERIFY,
+    MSG_VERIFY_ACK,
+    ReplyUnit,
+    WireError,
+    WireTruncated,
+    decode_dhat,
+    decode_round_outcome,
+    decode_round_reply,
+    decode_round_sketches,
+    decode_tow_sketch,
+    decode_verify,
+    decode_verify_ack,
+    encode_dhat,
+    encode_round_outcome,
+    encode_round_reply,
+    encode_round_sketches,
+    encode_tow_sketch,
+    encode_verify,
+    encode_verify_ack,
+    frame,
+    reply_ledger_bits,
+    sketches_ledger_bits,
+    split_frame,
+)
+from .varint import decode_uvarint, encode_uvarint, unzigzag, uvarint_len, zigzag
+
+__all__ = [
+    "MSG_DHAT",
+    "MSG_ROUND_OUTCOME",
+    "MSG_ROUND_REPLY",
+    "MSG_ROUND_SKETCHES",
+    "MSG_TOW_SKETCH",
+    "MSG_VERIFY",
+    "MSG_VERIFY_ACK",
+    "ReplyUnit",
+    "WireError",
+    "WireTruncated",
+    "decode_dhat",
+    "decode_round_outcome",
+    "decode_round_reply",
+    "decode_round_sketches",
+    "decode_tow_sketch",
+    "decode_uvarint",
+    "decode_verify",
+    "decode_verify_ack",
+    "encode_dhat",
+    "encode_round_outcome",
+    "encode_round_reply",
+    "encode_round_sketches",
+    "encode_tow_sketch",
+    "encode_uvarint",
+    "encode_verify",
+    "encode_verify_ack",
+    "frame",
+    "reply_ledger_bits",
+    "sketches_ledger_bits",
+    "split_frame",
+    "unzigzag",
+    "uvarint_len",
+    "zigzag",
+]

@@ -1,0 +1,317 @@
+"""Frame codecs for every PBS protocol message (DESIGN.md §9).
+
+Envelope: ``uvarint(1 + len(payload)) || msg_type byte || payload``.  Each
+payload is a varint header plus an MSB-first bit stream zero-padded to the
+byte boundary, so framed sizes are ``header + ceil(payload_bits / 8)``.
+
+Sub-byte field widths come from the session's BCH code — m-bit syndromes
+and bin positions, 32-bit XOR folds and checksums — which is why the
+round-frame decoders take a *schema* (``(n_units, t, m)`` per live session)
+instead of shipping redundant structure: both endpoints derive the schema
+from the same deterministic round state machine, exactly like the paper's
+Formula (1) assumes.  ``*_ledger_bits`` report the protocol-information
+bits of a decoded frame per that accounting; structural bits (per-unit
+position counts, done flags, headers, padding) are measured separately by
+the endpoints as wire overhead.
+
+Every decoder is strict: truncated buffers, nonzero padding, trailing
+bytes, out-of-range positions/counts, and unknown message types all raise
+``WireError`` (property-tested in tests/test_wire.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .varint import (
+    BitReader,
+    BitWriter,
+    WireError,
+    WireTruncated,
+    decode_uvarint,
+    encode_uvarint,
+    unzigzag,
+    zigzag,
+)
+
+MSG_TOW_SKETCH = 0x01     # Alice -> Bob: phase-0 ToW sketch vector
+MSG_DHAT = 0x02           # Bob -> Alice: d_hat numerator (sum of squared diffs)
+MSG_ROUND_SKETCHES = 0x03  # Alice -> Bob: per-unit BCH syndrome sketches
+MSG_ROUND_REPLY = 0x04    # Bob -> Alice: ok flags, positions, XORs, checksums
+MSG_ROUND_OUTCOME = 0x05  # Alice -> Bob: per-unit checksum-settled flags
+MSG_VERIFY = 0x06         # Alice -> Bob: success + c(A xor D_hat) per session
+MSG_VERIFY_ACK = 0x07     # Bob -> Alice: per-session verification verdicts
+
+_KNOWN = frozenset(
+    (MSG_TOW_SKETCH, MSG_DHAT, MSG_ROUND_SKETCHES, MSG_ROUND_REPLY,
+     MSG_ROUND_OUTCOME, MSG_VERIFY, MSG_VERIFY_ACK)
+)
+
+KEY_BITS = 32  # element keys are 32-bit (core.pbs.KEY_BITS)
+
+
+# ---------------------------------------------------------------------------
+# Envelope
+# ---------------------------------------------------------------------------
+
+
+def frame(msg_type: int, payload: bytes) -> bytes:
+    return encode_uvarint(1 + len(payload)) + bytes((msg_type,)) + payload
+
+
+def split_frame(buf: bytes, off: int = 0):
+    """Parse one frame at ``off``: (msg_type, payload, next_off).
+
+    Returns None when the buffer holds only a frame prefix (stream
+    transports deliver partial reads); raises WireError on malformed input.
+    """
+    if off >= len(buf):
+        return None
+    try:
+        body_len, hdr_end = decode_uvarint(buf, off)
+    except WireTruncated:
+        return None
+    if body_len < 1:
+        raise WireError("frame with empty body")
+    if hdr_end + body_len > len(buf):
+        return None
+    msg_type = buf[hdr_end]
+    if msg_type not in _KNOWN:
+        raise WireError(f"unknown message type 0x{msg_type:02x}")
+    return msg_type, buf[hdr_end + 1 : hdr_end + body_len], hdr_end + body_len
+
+
+# ---------------------------------------------------------------------------
+# Phase 0: ToW sketch + d_hat reply
+# ---------------------------------------------------------------------------
+
+
+def tow_value_bits(set_size: int) -> int:
+    """Bits per sketch value: Y_i in [-|S|, |S|] (ceil(log2(2|S| + 1)))."""
+    return int(2 * set_size).bit_length()
+
+
+def encode_tow_sketch(values, set_size: int) -> bytes:
+    vals = np.asarray(values, dtype=np.int64)
+    bits = tow_value_bits(set_size)
+    w = BitWriter()
+    for v in vals:
+        z = zigzag(int(v))
+        if z > 2 * set_size:
+            raise WireError(f"sketch value {int(v)} exceeds set size {set_size}")
+        w.write(z, bits)
+    payload = encode_uvarint(set_size) + encode_uvarint(len(vals)) + w.getvalue()
+    return frame(MSG_TOW_SKETCH, payload)
+
+
+def decode_tow_sketch(payload: bytes) -> tuple[int, np.ndarray]:
+    set_size, off = decode_uvarint(payload)
+    ell, off = decode_uvarint(payload, off)
+    bits = tow_value_bits(set_size)
+    r = BitReader(payload, off)
+    out = np.zeros(ell, dtype=np.int64)
+    for i in range(ell):
+        z = r.read(bits)
+        if z > 2 * set_size:
+            raise WireError("sketch value out of range for declared set size")
+        out[i] = unzigzag(z)
+    r.finish()
+    return set_size, out
+
+
+def encode_dhat(numerator: int) -> bytes:
+    return frame(MSG_DHAT, encode_uvarint(int(numerator)))
+
+
+def decode_dhat(payload: bytes) -> int:
+    num, off = decode_uvarint(payload)
+    if off != len(payload):
+        raise WireError("trailing bytes after d_hat numerator")
+    return num
+
+
+# ---------------------------------------------------------------------------
+# Round frames
+# ---------------------------------------------------------------------------
+
+
+def sketches_ledger_bits(n_units: int, t: int, m: int) -> int:
+    """Formula-(1) bits of one session's sketch block: t*m per unit."""
+    return n_units * t * m
+
+
+def encode_round_sketches(rnd: int, blocks) -> bytes:
+    """``blocks``: per live session (schema order), (sketches (U, t), m)."""
+    w = BitWriter()
+    for sk, m in blocks:
+        sk = np.asarray(sk, dtype=np.int64)
+        if np.any(sk < 0) or np.any(sk >> m):
+            raise WireError(f"syndrome out of range for m={m}")
+        for row in sk:
+            for s in row:
+                w.write(int(s), m)
+    return frame(MSG_ROUND_SKETCHES, encode_uvarint(rnd) + w.getvalue())
+
+
+def decode_round_sketches(payload: bytes, schema) -> tuple[int, list[np.ndarray]]:
+    """``schema``: [(n_units, t, m)] per live session, both-endpoint-derived."""
+    rnd, off = decode_uvarint(payload)
+    r = BitReader(payload, off)
+    out = []
+    for n_units, t, m in schema:
+        sk = np.zeros((n_units, t), dtype=np.int64)
+        for u in range(n_units):
+            for j in range(t):
+                sk[u, j] = r.read(m)
+        out.append(sk)
+    r.finish()
+    return rnd, out
+
+
+@dataclass
+class ReplyUnit:
+    """Bob's per-unit decode outcome: located bins, his XOR folds, checksum."""
+
+    positions: np.ndarray  # (k,) int64 decoded bin indices, k <= t
+    xors: np.ndarray       # (k,) uint32 Bob's bin XOR fold at each position
+    csum: int              # Bob's unit checksum, 32-bit
+
+    def __eq__(self, other) -> bool:
+        return (
+            isinstance(other, ReplyUnit)
+            and np.array_equal(self.positions, other.positions)
+            and np.array_equal(self.xors, other.xors)
+            and self.csum == other.csum
+        )
+
+
+def reply_ledger_bits(ok, units, m: int) -> int:
+    """Formula-(1) bits of one session's reply: 1 ok flag per unit, plus
+    k*(m + 32) + 32 per decoded unit (positions + XOR sums + checksum)."""
+    bits = len(ok)
+    for flag, unit in zip(ok, units):
+        if flag:
+            bits += len(unit.positions) * (m + KEY_BITS) + KEY_BITS
+    return bits
+
+
+def encode_round_reply(rnd: int, entries, schema) -> bytes:
+    """``entries``: per session (ok flags, units with ``units[i] is None``
+    exactly where ``ok[i]`` is False); ``schema``: [(n_units, t, m)]."""
+    w = BitWriter()
+    cnt_bits_total = 0
+    for (ok, units), (n_units, t, m) in zip(entries, schema):
+        if len(ok) != n_units or len(units) != n_units:
+            raise WireError("reply entry does not match schema unit count")
+        cbits = t.bit_length()
+        for flag in ok:
+            w.write(1 if flag else 0, 1)
+        for flag, unit in zip(ok, units):
+            if not flag:
+                continue
+            k = len(unit.positions)
+            if k > t:
+                raise WireError(f"{k} positions exceed t={t}")
+            w.write(k, cbits)
+            cnt_bits_total += cbits
+            for p, x in zip(unit.positions, unit.xors):
+                if not 0 <= int(p) < (1 << m) - 1:
+                    raise WireError(f"bin position {int(p)} out of range for m={m}")
+                w.write(int(p), m)
+                w.write(int(x) & 0xFFFFFFFF, KEY_BITS)
+            w.write(int(unit.csum) & 0xFFFFFFFF, KEY_BITS)
+    return frame(MSG_ROUND_REPLY, encode_uvarint(rnd) + w.getvalue())
+
+
+def decode_round_reply(payload: bytes, schema):
+    rnd, off = decode_uvarint(payload)
+    r = BitReader(payload, off)
+    out = []
+    for n_units, t, m in schema:
+        cbits = t.bit_length()
+        n = (1 << m) - 1
+        ok = np.zeros(n_units, dtype=bool)
+        for u in range(n_units):
+            ok[u] = bool(r.read(1))
+        units: list[ReplyUnit | None] = [None] * n_units
+        for u in range(n_units):
+            if not ok[u]:
+                continue
+            k = r.read(cbits)
+            if k > t:
+                raise WireError(f"decoded position count {k} exceeds t={t}")
+            pos = np.zeros(k, dtype=np.int64)
+            xor = np.zeros(k, dtype=np.uint32)
+            for i in range(k):
+                p = r.read(m)
+                if p >= n:
+                    raise WireError(f"bin position {p} out of range for n={n}")
+                pos[i] = p
+                xor[i] = r.read(KEY_BITS)
+            units[u] = ReplyUnit(positions=pos, xors=xor, csum=r.read(KEY_BITS))
+        out.append((ok, units))
+    r.finish()
+    return rnd, out
+
+
+def encode_round_outcome(rnd: int, done_lists) -> bytes:
+    """Alice's checksum verdicts: 1 settled-bit per unit per live session.
+    Pure structure (0 ledger bits): it is what lets Bob mirror the unit
+    queue; Formula (1) folds it into the per-unit flag already counted."""
+    w = BitWriter()
+    for done in done_lists:
+        for flag in done:
+            w.write(1 if flag else 0, 1)
+    return frame(MSG_ROUND_OUTCOME, encode_uvarint(rnd) + w.getvalue())
+
+
+def decode_round_outcome(payload: bytes, unit_counts) -> tuple[int, list[np.ndarray]]:
+    rnd, off = decode_uvarint(payload)
+    r = BitReader(payload, off)
+    out = []
+    for n_units in unit_counts:
+        done = np.zeros(n_units, dtype=bool)
+        for u in range(n_units):
+            done[u] = bool(r.read(1))
+        out.append(done)
+    r.finish()
+    return rnd, out
+
+
+# ---------------------------------------------------------------------------
+# Final verification exchange
+# ---------------------------------------------------------------------------
+
+
+def encode_verify(entries) -> bytes:
+    """Per session (sid order): (success flag, c(A xor D_hat) checksum)."""
+    w = BitWriter()
+    for success, csum in entries:
+        w.write(1 if success else 0, 1)
+        w.write(int(csum) & 0xFFFFFFFF, KEY_BITS)
+    return frame(MSG_VERIFY, w.getvalue())
+
+
+def decode_verify(payload: bytes, n_sessions: int):
+    r = BitReader(payload)
+    out = []
+    for _ in range(n_sessions):
+        success = bool(r.read(1))
+        out.append((success, r.read(KEY_BITS)))
+    r.finish()
+    return out
+
+
+def encode_verify_ack(flags) -> bytes:
+    w = BitWriter()
+    for f in flags:
+        w.write(1 if f else 0, 1)
+    return frame(MSG_VERIFY_ACK, w.getvalue())
+
+
+def decode_verify_ack(payload: bytes, n_sessions: int) -> list[bool]:
+    r = BitReader(payload)
+    out = [bool(r.read(1)) for _ in range(n_sessions)]
+    r.finish()
+    return out

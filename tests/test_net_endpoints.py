@@ -1,0 +1,143 @@
+"""Two-endpoint reconciliation over real transports vs the numpy oracle.
+
+Alice and Bob run as separate ``repro.net`` endpoints exchanging only
+``repro.wire``-encoded bytes; every session's result — diff, rounds,
+per-round *measured* byte ledger, split/fake counters, estimator bytes —
+must be byte-identical to ``core.pbs.reconcile``, over the in-memory
+duplex, the TCP loopback socket, and a lossy simulated channel that forces
+the stop-and-wait retransmit path.
+"""
+import numpy as np
+import pytest
+
+from repro.core.pbs import PBSConfig, reconcile, true_diff
+from repro.core.simdata import make_pair, make_pair_two_sided
+from repro.net import (
+    AliceEndpoint,
+    BobEndpoint,
+    InMemoryDuplex,
+    ReliableTransport,
+    SimulatedChannel,
+    run_pair,
+    tcp_loopback_pair,
+)
+
+
+def _mixed_cases():
+    """Sessions spanning several cohorts, estimator path, two-sided diffs."""
+    cases = []
+    for i, d in enumerate((5, 50)):
+        a, b = make_pair(1500, d, np.random.default_rng(d))
+        cases.append((a, b, PBSConfig(seed=10 + i), d))
+    a, b = make_pair_two_sided(2000, 20, 12, np.random.default_rng(3))
+    cases.append((a, b, PBSConfig(seed=2), 32))
+    a, b = make_pair(2500, 40, np.random.default_rng(8))
+    cases.append((a, b, PBSConfig(seed=5), None))   # ToW phase 0 on the wire
+    return cases
+
+
+def _run_cases(cases, ta, tb):
+    alice, bob = AliceEndpoint(ta), BobEndpoint(tb)
+    for a, b, cfg, dk in cases:
+        alice.submit(a, cfg=cfg, d_known=dk)
+        bob.submit(b, cfg=cfg, d_known=dk)
+    return alice, bob, run_pair(alice, bob)
+
+
+def _assert_oracle(got, a, b, cfg, dk):
+    exp = reconcile(a, b, cfg, d_known=dk)
+    assert got.diff == exp.diff
+    assert got.bytes_per_round == exp.bytes_per_round  # measured == Formula (1)
+    assert got.bytes_sent == exp.bytes_sent
+    assert got.estimator_bytes == exp.estimator_bytes
+    assert got.rounds == exp.rounds
+    assert got.success == exp.success
+    assert got.decode_failures == exp.decode_failures
+    assert got.fake_rejections == exp.fake_rejections
+    return exp
+
+
+def test_endpoints_in_memory_match_oracle():
+    cases = _mixed_cases()
+    ta, tb = InMemoryDuplex.pair()
+    alice, bob, results = _run_cases(cases, ta, tb)
+    for sid, (a, b, cfg, dk) in enumerate(cases):
+        exp = _assert_oracle(results[sid], a, b, cfg, dk)
+        assert exp.success and exp.diff == true_diff(a, b)
+    # Bob verified every session end-to-end from c(A xor D_hat) == c(B)
+    assert alice.verified == bob.verified == [True] * len(cases)
+
+    # wire coherence: both ends measured the same frame traffic, and the
+    # framed protocol bytes exceed the pure ledger only by bounded structure
+    sa, sb = alice.wire_stats, bob.wire_stats
+    assert sa["frame_bytes_out"] == sb["frame_bytes_in"]
+    assert sa["frame_bytes_in"] == sb["frame_bytes_out"]
+    assert sa["protocol_frame_bytes"] == sb["protocol_frame_bytes"]
+    ledger = sum(results[s].bytes_sent for s in range(len(cases)))
+    assert sa["protocol_frame_bytes"] >= ledger
+    assert sa["protocol_frame_bytes"] - ledger < 32 * max(
+        r.rounds for r in results.values()
+    )
+    est = sum(results[s].estimator_bytes for s in range(len(cases)))
+    assert sa["estimator_frame_bytes"] == est
+
+
+def test_endpoints_loopback_socket_match_oracle():
+    cases = _mixed_cases()[:2]
+    ta, tb = tcp_loopback_pair()
+    try:
+        alice, bob, results = _run_cases(cases, ta, tb)
+        for sid, (a, b, cfg, dk) in enumerate(cases):
+            exp = _assert_oracle(results[sid], a, b, cfg, dk)
+            assert exp.success and exp.diff == true_diff(a, b)
+        assert bob.verified == [True] * len(cases)
+        # real sockets: the transport saw exactly the framed bytes
+        assert alice.wire_stats["transport_bytes_out"] == alice.wire_stats["frame_bytes_out"]
+    finally:
+        ta.close()
+        tb.close()
+
+
+def test_endpoints_overload_split_and_budget_failure():
+    """A BCH-overloaded session (3-way split on both sides of the wire) and
+    an undersized-budget session (failure reported identically) mixed with
+    a healthy neighbor."""
+    a1, b1 = make_pair(2000, 10, np.random.default_rng(7))
+    a2, b2 = make_pair(2500, 40, np.random.default_rng(17))
+    cfg2 = PBSConfig(seed=6, n_override=255, t_override=8, g_override=1, max_rounds=12)
+    a3, b3 = make_pair(2000, 30, np.random.default_rng(5))
+    cfg3 = PBSConfig(seed=4, n_override=63, t_override=2, g_override=1, max_rounds=2)
+    cases = [
+        (a1, b1, PBSConfig(seed=21), 10),
+        (a2, b2, cfg2, 40),
+        (a3, b3, cfg3, 30),
+    ]
+    ta, tb = InMemoryDuplex.pair()
+    alice, bob, results = _run_cases(cases, ta, tb)
+    for sid, (a, b, cfg, dk) in enumerate(cases):
+        _assert_oracle(results[sid], a, b, cfg, dk)
+    assert results[1].decode_failures >= 1 and results[1].success
+    assert not results[2].success                 # budget exhausted
+    assert bob.verified == [True, True, False]
+    # Bob mirrored the split queue purely from frames: same unit counts
+    assert len(bob.sessions[1].state.units) == len(alice.sessions[1].state.units)
+
+
+def test_endpoints_survive_lossy_channel_with_retransmits():
+    a, b = make_pair(1200, 15, np.random.default_rng(11))
+    cfg = PBSConfig(seed=9)
+    ca, cb = SimulatedChannel.pair(loss=0.3, latency=0.001, seed=77)
+    ra = ReliableTransport(ca, timeout=0.02)
+    rb = ReliableTransport(cb, timeout=0.02)
+    alice, bob = AliceEndpoint(ra), BobEndpoint(rb)
+    alice.submit(a, cfg=cfg, d_known=15)
+    bob.submit(b, cfg=cfg, d_known=15)
+    results = run_pair(alice, bob)
+    _assert_oracle(results[0], a, b, cfg, 15)
+    assert results[0].success and results[0].diff == true_diff(a, b)
+    assert ca.dropped + cb.dropped >= 1           # the channel really lost data
+    assert ra.retransmits + rb.retransmits >= 1   # and ARQ really recovered
+    # ARQ overhead is visible at the transport, invisible to the ledger
+    assert ca.bytes_out + cb.bytes_out > (
+        alice.wire_stats["frame_bytes_out"] + bob.wire_stats["frame_bytes_out"]
+    )

@@ -16,6 +16,7 @@ from repro.core.simdata import make_pair, make_pair_two_sided
 from repro.kernels import bin_parity_xorsum_units, xor_bits_to_u32
 from repro.kernels import ref as kref
 from repro.kernels.ops import bch_decode_batched, sketch_groups
+from repro.net import AliceEndpoint, BobEndpoint, InMemoryDuplex, run_pair, tcp_loopback_pair
 from repro.recon import ReconcileServer, reconcile_batch
 
 SIZES = {5: 1500, 50: 4000, 500: 8000}
@@ -89,6 +90,46 @@ def test_decode_failure_splits_without_perturbing_neighbors():
     # neighbors: byte-for-byte what they'd do in a batch of one
     for sid, (a, b, cfg, dk) in zip((0, 2), neighbors):
         _assert_matches_oracle(results[sid], a, b, cfg, dk)
+
+
+@pytest.mark.parametrize("transport", ["memory", "loopback"])
+def test_wire_endpoints_match_engine_and_oracle_across_d(transport):
+    """Acceptance gate for the wire subsystem: the full multi-session grid
+    (several code cohorts) with Alice and Bob as separate repro.net
+    endpoints exchanging only repro.wire-encoded bytes, over both the
+    in-memory duplex and the loopback socket.  Per-session results must be
+    byte-identical to ``core.pbs.reconcile`` and the *measured* wire ledger
+    equal to the legacy accounting for every session in the grid."""
+    cases = []
+    for i, d in enumerate(sorted(SIZES)):
+        a, b = make_pair(SIZES[d], d, np.random.default_rng(d))
+        cases.append((a, b, PBSConfig(seed=10 + i), d))
+
+    ta, tb = (
+        InMemoryDuplex.pair() if transport == "memory" else tcp_loopback_pair()
+    )
+    try:
+        alice, bob = AliceEndpoint(ta), BobEndpoint(tb)
+        for a, b, cfg, d in cases:
+            alice.submit(a, cfg=cfg, d_known=d)
+            bob.submit(b, cfg=cfg, d_known=d)
+        results = run_pair(alice, bob)
+    finally:
+        ta.close()
+        tb.close()
+
+    server = ReconcileServer()
+    for a, b, cfg, d in cases:
+        server.submit(a, b, cfg=cfg, d_known=d)
+    engine = server.run()
+
+    for sid, (a, b, cfg, d) in enumerate(cases):
+        exp = _assert_matches_oracle(results[sid], a, b, cfg, d)
+        assert exp.success and exp.diff == true_diff(a, b)
+        # wire ledger (measured from frames) == batched engine's accounting
+        assert results[sid].bytes_per_round == engine[sid].bytes_per_round
+        assert results[sid].bytes_sent == engine[sid].bytes_sent
+    assert bob.verified == [True] * len(cases)
 
 
 def test_session_exceeding_max_rounds_reports_failure():

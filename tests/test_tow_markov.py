@@ -5,7 +5,25 @@ import pytest
 from repro.core import markov
 from repro.core.hashing import derive_seed
 from repro.core.simdata import make_pair
-from repro.core.tow import estimate_d, planned_d, tow_sketches
+from repro.core.tow import estimate_d, planned_d, tow_seeds, tow_sketches
+
+
+def test_tow_host_mirror_matches_kernel_bitwise():
+    """core.tow.tow_sketches must equal the Pallas tow_sketch kernel bit for
+    bit — that identity is what lets repro.recon route phase 0 through the
+    device while staying byte-identical to the numpy oracle."""
+    import jax.numpy as jnp
+
+    from repro.kernels.tow_sketch import tow_sketch
+
+    rng = np.random.default_rng(0)
+    elems = rng.integers(1, 1 << 32, size=3001, dtype=np.uint64).astype(np.uint32)
+    for seed in (0, 7, 12345):
+        host = tow_sketches(elems, seed, ell=64)
+        dev = np.asarray(
+            tow_sketch(jnp.asarray(elems), jnp.asarray(tow_seeds(seed, 64)), ell=64)
+        )
+        np.testing.assert_array_equal(host, dev.astype(np.int64))
 
 
 def test_tow_unbiased_and_variance():

@@ -1,0 +1,338 @@
+"""repro.wire codec: round-trip properties, rejection paths, size mirrors.
+
+Every message type must satisfy ``decode(encode(m)) == m`` (hypothesis
+property tests over random message contents), reject truncated buffers and
+corrupted frames, and — for the phase-0 messages — produce framed lengths
+exactly equal to the numpy-pure mirrors in ``core.tow`` that the protocol's
+byte accounting uses.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.tow import dhat_bytes, sketch_bytes
+from repro.wire import frames as wf
+from repro.wire.frames import ReplyUnit, WireError, WireTruncated
+from repro.wire.varint import (
+    BitReader,
+    BitWriter,
+    decode_uvarint,
+    encode_uvarint,
+    unzigzag,
+    uvarint_len,
+    zigzag,
+)
+
+
+def _unframe(buf: bytes, expect_type: int) -> bytes:
+    got = wf.split_frame(buf)
+    assert got is not None, "whole frame must parse"
+    msg_type, payload, consumed = got
+    assert msg_type == expect_type
+    assert consumed == len(buf), "no trailing bytes"
+    return payload
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+@given(v=st.integers(min_value=0, max_value=2**63 - 1))
+@settings(max_examples=60, deadline=None)
+def test_uvarint_roundtrip(v):
+    buf = encode_uvarint(v)
+    assert len(buf) == uvarint_len(v)
+    got, off = decode_uvarint(buf)
+    assert got == v and off == len(buf)
+
+
+@given(n=st.integers(min_value=-(2**31), max_value=2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_zigzag_roundtrip(n):
+    z = zigzag(n)
+    assert z >= 0 and unzigzag(z) == n
+
+
+def test_uvarint_truncated_and_overlong():
+    with pytest.raises(WireTruncated):
+        decode_uvarint(b"\x80\x80")          # continuation bit, no terminator
+    with pytest.raises(WireError):
+        decode_uvarint(b"\xff" * 10 + b"\x01")  # > 64 bits
+
+
+@given(
+    fields=st.lists(
+        st.tuples(st.integers(min_value=0, max_value=2**20), st.integers(1, 21)),
+        max_size=40,
+    )
+)
+@settings(max_examples=40, deadline=None)
+def test_bitstream_roundtrip(fields):
+    w = BitWriter()
+    vals = [(v & ((1 << nb) - 1), nb) for v, nb in fields]
+    for v, nb in vals:
+        w.write(v, nb)
+    buf = w.getvalue()
+    assert len(buf) == (w.bit_length + 7) // 8
+    r = BitReader(buf)
+    for v, nb in vals:
+        assert r.read(nb) == v
+    r.finish()
+
+
+def test_bitstream_rejects_nonzero_padding():
+    r = BitReader(b"\x81")  # one flag bit + nonzero pad
+    assert r.read(1) == 1
+    with pytest.raises(WireError):
+        r.finish()
+
+
+# ---------------------------------------------------------------------------
+# frame envelope
+# ---------------------------------------------------------------------------
+
+
+def test_split_frame_incomplete_and_unknown_type():
+    f = wf.encode_dhat(12345)
+    assert wf.split_frame(f[:1]) is None          # header only
+    assert wf.split_frame(f[:-1]) is None         # body short by one byte
+    bad = bytearray(f)
+    bad[1] = 0x7F                                  # unknown message type
+    with pytest.raises(WireError):
+        wf.split_frame(bytes(bad))
+    with pytest.raises(WireError):
+        wf.split_frame(b"\x00")                    # zero-length body
+
+
+# ---------------------------------------------------------------------------
+# phase-0 frames
+# ---------------------------------------------------------------------------
+
+
+@given(
+    set_size=st.integers(min_value=0, max_value=50_000),
+    ell=st.integers(min_value=1, max_value=160),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_tow_sketch_roundtrip_and_size(set_size, ell, seed):
+    rng = np.random.default_rng(seed)
+    values = rng.integers(-set_size, set_size + 1, size=ell, dtype=np.int64)
+    buf = wf.encode_tow_sketch(values, set_size)
+    # the framed length is exactly what core.tow.sketch_bytes accounts
+    assert len(buf) == sketch_bytes(set_size, ell)
+    got_size, got_vals = wf.decode_tow_sketch(_unframe(buf, wf.MSG_TOW_SKETCH))
+    assert got_size == set_size
+    np.testing.assert_array_equal(got_vals, values)
+
+
+def test_tow_sketch_rejects_out_of_range_and_truncation():
+    with pytest.raises(WireError):
+        wf.encode_tow_sketch(np.array([11]), set_size=10)
+    buf = wf.encode_tow_sketch(np.arange(-3, 4), set_size=5)
+    payload = _unframe(buf, wf.MSG_TOW_SKETCH)
+    with pytest.raises(WireError):
+        wf.decode_tow_sketch(payload[:-2])         # truncated bit stream
+    with pytest.raises(WireError):
+        wf.decode_tow_sketch(payload + b"\x00")    # trailing garbage
+
+
+@given(num=st.integers(min_value=0, max_value=2**62))
+@settings(max_examples=40, deadline=None)
+def test_dhat_roundtrip_and_size(num):
+    buf = wf.encode_dhat(num)
+    assert len(buf) == dhat_bytes(num)
+    assert wf.decode_dhat(_unframe(buf, wf.MSG_DHAT)) == num
+
+
+def test_dhat_rejects_trailing_bytes():
+    with pytest.raises(WireError):
+        wf.decode_dhat(_unframe(wf.encode_dhat(7), wf.MSG_DHAT) + b"\x01")
+
+
+# ---------------------------------------------------------------------------
+# round frames (schema-driven)
+# ---------------------------------------------------------------------------
+
+
+def _random_schema(rng, max_sessions=4):
+    schema = []
+    for _ in range(rng.integers(1, max_sessions + 1)):
+        m = int(rng.integers(4, 11))
+        t = int(rng.integers(1, 9))
+        schema.append((int(rng.integers(1, 7)), t, m))
+    return schema
+
+
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_round_sketches_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    schema = _random_schema(rng)
+    rnd = int(rng.integers(1, 13))
+    blocks = [
+        (rng.integers(0, 1 << m, size=(u, t), dtype=np.int64), m)
+        for u, t, m in schema
+    ]
+    buf = wf.encode_round_sketches(rnd, blocks)
+    got_rnd, got = wf.decode_round_sketches(
+        _unframe(buf, wf.MSG_ROUND_SKETCHES), schema
+    )
+    assert got_rnd == rnd
+    for (sk, _), g, (u, t, m) in zip(blocks, got, schema):
+        np.testing.assert_array_equal(g, sk)
+        assert wf.sketches_ledger_bits(u, t, m) == u * t * m
+
+
+def _random_reply(rng, schema):
+    entries = []
+    for u, t, m in schema:
+        n = (1 << m) - 1
+        ok = rng.random(u) < 0.8
+        units = []
+        for slot in range(u):
+            if not ok[slot]:
+                units.append(None)
+                continue
+            k = int(rng.integers(0, t + 1))
+            units.append(
+                ReplyUnit(
+                    positions=np.sort(
+                        rng.choice(n, size=k, replace=False)
+                    ).astype(np.int64),
+                    xors=rng.integers(0, 1 << 32, size=k, dtype=np.uint64).astype(
+                        np.uint32
+                    ),
+                    csum=int(rng.integers(0, 1 << 32)),
+                )
+            )
+        entries.append((ok, units))
+    return entries
+
+
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_round_reply_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    schema = _random_schema(rng)
+    entries = _random_reply(rng, schema)
+    rnd = int(rng.integers(1, 13))
+    buf = wf.encode_round_reply(rnd, entries, schema)
+    got_rnd, got = wf.decode_round_reply(_unframe(buf, wf.MSG_ROUND_REPLY), schema)
+    assert got_rnd == rnd
+    for (ok, units), (gok, gunits), (u, t, m) in zip(entries, got, schema):
+        np.testing.assert_array_equal(gok, ok)
+        assert gunits == units
+        # ledger bits match Formula (1): 1/unit + k*(m+32) + 32 per decode
+        exp = u + sum(
+            len(x.positions) * (m + 32) + 32 for x in units if x is not None
+        )
+        assert wf.reply_ledger_bits(gok, gunits, m) == exp
+
+
+def test_round_reply_rejects_bad_counts_and_positions():
+    schema = [(1, 2, 4)]                           # n = 15
+    ok = np.array([True])
+    unit = ReplyUnit(
+        positions=np.array([3]), xors=np.array([7], np.uint32), csum=1
+    )
+    buf = wf.encode_round_reply(1, [(ok, [unit])], schema)
+    payload = _unframe(buf, wf.MSG_ROUND_REPLY)
+    # schema mismatch: t=1 makes the stored count 1 overflow cbits
+    with pytest.raises(WireError):
+        wf.decode_round_reply(payload, [(2, 2, 4)])
+    with pytest.raises(WireError):
+        wf.decode_round_reply(payload[:-1], schema)  # truncated
+    with pytest.raises(WireError):
+        wf.encode_round_reply(
+            1,
+            [(ok, [ReplyUnit(np.array([15]), np.array([0], np.uint32), 0)])],
+            schema,
+        )  # position == n is out of range
+    with pytest.raises(WireError):
+        wf.encode_round_reply(
+            1,
+            [(ok, [ReplyUnit(np.array([1, 2, 3]), np.zeros(3, np.uint32), 0)])],
+            schema,
+        )  # k > t
+
+
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_round_outcome_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    counts = [int(rng.integers(1, 9)) for _ in range(int(rng.integers(1, 5)))]
+    done = [rng.random(u) < 0.5 for u in counts]
+    rnd = int(rng.integers(1, 13))
+    buf = wf.encode_round_outcome(rnd, done)
+    got_rnd, got = wf.decode_round_outcome(_unframe(buf, wf.MSG_ROUND_OUTCOME), counts)
+    assert got_rnd == rnd
+    for d, g in zip(done, got):
+        np.testing.assert_array_equal(g, d)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_verify_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    n_sessions = int(rng.integers(1, 9))
+    entries = [
+        (bool(rng.random() < 0.5), int(rng.integers(0, 1 << 32)))
+        for _ in range(n_sessions)
+    ]
+    buf = wf.encode_verify(entries)
+    assert wf.decode_verify(_unframe(buf, wf.MSG_VERIFY), n_sessions) == entries
+    flags = [bool(rng.random() < 0.5) for _ in range(n_sessions)]
+    buf = wf.encode_verify_ack(flags)
+    assert wf.decode_verify_ack(_unframe(buf, wf.MSG_VERIFY_ACK), n_sessions) == flags
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5, 6, 7])
+def test_round_frames_roundtrip_seeded(seed):
+    """Deterministic mirror of the hypothesis properties (always runs, even
+    without the optional hypothesis dependency)."""
+    rng = np.random.default_rng(seed)
+    schema = _random_schema(rng)
+    blocks = [
+        (rng.integers(0, 1 << m, size=(u, t), dtype=np.int64), m)
+        for u, t, m in schema
+    ]
+    rnd = int(rng.integers(1, 13))
+    _, got = wf.decode_round_sketches(
+        _unframe(wf.encode_round_sketches(rnd, blocks), wf.MSG_ROUND_SKETCHES),
+        schema,
+    )
+    for (sk, _), g in zip(blocks, got):
+        np.testing.assert_array_equal(g, sk)
+
+    entries = _random_reply(rng, schema)
+    _, got = wf.decode_round_reply(
+        _unframe(wf.encode_round_reply(rnd, entries, schema), wf.MSG_ROUND_REPLY),
+        schema,
+    )
+    for (ok, units), (gok, gunits) in zip(entries, got):
+        np.testing.assert_array_equal(gok, ok)
+        assert gunits == units
+
+    set_size = int(rng.integers(0, 10_000))
+    ell = int(rng.integers(1, 160))
+    values = rng.integers(-set_size, set_size + 1, size=ell, dtype=np.int64)
+    buf = wf.encode_tow_sketch(values, set_size)
+    assert len(buf) == sketch_bytes(set_size, ell)
+    got_size, got_vals = wf.decode_tow_sketch(_unframe(buf, wf.MSG_TOW_SKETCH))
+    assert got_size == set_size
+    np.testing.assert_array_equal(got_vals, values)
+
+    num = int(rng.integers(0, 1 << 48))
+    buf = wf.encode_dhat(num)
+    assert len(buf) == dhat_bytes(num)
+    assert wf.decode_dhat(_unframe(buf, wf.MSG_DHAT)) == num
+
+
+def test_verify_rejects_wrong_session_count():
+    buf = _unframe(wf.encode_verify([(True, 5), (False, 9)]), wf.MSG_VERIFY)
+    with pytest.raises(WireError):
+        wf.decode_verify(buf, 3)                   # wants more than encoded
+    with pytest.raises(WireError):
+        wf.decode_verify(buf, 1)                   # leftover bytes

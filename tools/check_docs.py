@@ -1,9 +1,10 @@
 #!/usr/bin/env python
 """Fail if any docstring cites a DESIGN.md section anchor that doesn't exist.
 
-Module docstrings across the repo cite stable anchors like ``DESIGN.md §5``;
-this keeps those citations honest: every ``§N`` referenced next to a
-DESIGN.md mention must appear as a ``## §N`` heading in DESIGN.md.
+Module docstrings across the repo — and the README — cite stable anchors
+like ``DESIGN.md §5``; this keeps those citations honest: every ``§N``
+referenced next to a DESIGN.md mention must appear as a ``## §N`` heading
+in DESIGN.md, so README links can't silently drift when sections move.
 
 Usage: python tools/check_docs.py   (exit 1 on dangling anchors)
 """
@@ -15,6 +16,7 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+SCAN_DOCS = ("README.md",)
 CITE_RE = re.compile(r"DESIGN\.md[^§\n]{0,10}((?:§\d+[/,\s–—-]{0,3})+)")
 SECT_RE = re.compile(r"§(\d+)")
 
@@ -31,18 +33,23 @@ def design_anchors() -> set[str]:
 
 
 def cited_anchors() -> dict[str, list[str]]:
-    """anchor -> files citing it, from every .py file under the scan dirs."""
+    """anchor -> files citing it: every .py under the scan dirs plus the
+    root docs (README) that deep-link DESIGN.md sections."""
+    paths = [
+        path
+        for d in SCAN_DIRS
+        for path in (ROOT / d).rglob("*.py")
+        if "__pycache__" not in path.parts
+    ]
+    paths += [ROOT / doc for doc in SCAN_DOCS if (ROOT / doc).exists()]
     cites: dict[str, list[str]] = {}
-    for d in SCAN_DIRS:
-        for path in (ROOT / d).rglob("*.py"):
-            if "__pycache__" in path.parts:
-                continue
-            text = path.read_text(errors="replace")
-            for cm in CITE_RE.finditer(text):
-                for sm in SECT_RE.finditer(cm.group(1)):
-                    cites.setdefault(sm.group(1), []).append(
-                        str(path.relative_to(ROOT))
-                    )
+    for path in paths:
+        text = path.read_text(errors="replace")
+        for cm in CITE_RE.finditer(text):
+            for sm in SECT_RE.finditer(cm.group(1)):
+                cites.setdefault(sm.group(1), []).append(
+                    str(path.relative_to(ROOT))
+                )
     return cites
 
 
