@@ -22,7 +22,15 @@ full PBS protocol through the device-resident batched path, and reports
     (DESIGN.md §9; ``--no-wire`` skips),
   * the maximum per-session deviation of ``bytes_sent`` from the
     single-session ``core.pbs.reconcile`` oracle — the engine is the same
-    state machine, so this must be 0% (the run fails above 1%).
+    state machine, so this must be 0% (the run fails above 1%),
+  * with ``--peers N1,N2,...``: a multi-peer hub sweep (DESIGN.md §10) —
+    N real ``AliceEndpoint`` peers against one ``HubEndpoint`` over
+    mux-enveloped in-memory transports — recording peers/s, the fused
+    cross-peer launch ledger (2 encode + 1 decode launches per
+    cohort-round and one store upload per cohort, both asserted), and the
+    measured hub wire bytes per distinct element (gated by
+    ``--max-hub-bytes-per-diff``; looser than the pair gate because each
+    peer's frames can't amortize headers across its neighbors).
 
 The full grid is also written to ``BENCH_recon.json`` (``--json`` to move
 it, ``--no-json`` to skip) so CI tracks the perf trajectory; ``--min-h2d-
@@ -55,7 +63,14 @@ from repro.core.hashing import derive_seed
 from repro.core.pbs import PBSConfig, reconcile
 from repro.core.simdata import make_pair
 from repro.core.tow import ELL_DEFAULT, estimate_numerator, tow_seeds, tow_sketches
-from repro.net import AliceEndpoint, BobEndpoint, InMemoryDuplex, run_pair
+from repro.net import (
+    AliceEndpoint,
+    BobEndpoint,
+    HubEndpoint,
+    InMemoryDuplex,
+    run_hub,
+    run_pair,
+)
 from repro.recon import ReconcileServer, phase0_numerators
 
 
@@ -194,11 +209,94 @@ def bench_point(sessions: int, d: int, size: int, *, check: bool = True, seed: i
     return row, point
 
 
+def hub_bench_point(peers: int, d: int, size: int, *, seed: int = 0):
+    """One multi-peer hub point: N real peers against one ``HubEndpoint``
+    over in-memory transports, every frame mux-enveloped (DESIGN.md §10).
+
+    Reports peers/s, the fused-launch ledger (2 encode kernels + 1 decode
+    launch per cohort-round, shared across all peers — asserted), one store
+    upload per cohort (asserted), and the measured wire bytes per distinct
+    element including the mux-envelope overhead the hub adds.
+    """
+    hub = HubEndpoint(recv_deadline=300.0)
+    alices: dict[int, AliceEndpoint] = {}
+    for p in range(peers):
+        a, b = make_pair(size, d, np.random.default_rng(seed + 6007 * p + d))
+        cfg = PBSConfig(seed=seed + p)
+        ta, tb = InMemoryDuplex.pair()
+        ch = hub.add_peer(tb)
+        hub.submit(ch, b, cfg=cfg, d_known=d)
+        ep = AliceEndpoint(ta, channel=ch)
+        ep.submit(a, cfg=cfg, d_known=d)
+        alices[ch] = ep
+
+    t0 = time.perf_counter()
+    outcomes, results, errors = run_hub(hub, alices)
+    wall = time.perf_counter() - t0
+    if errors:
+        raise AssertionError(f"hub peers failed: {errors}")
+    if not all(o.ok and o.verified == [True] for o in outcomes.values()):
+        raise AssertionError("hub verification failed")
+
+    st = hub.stats
+    cohorts = {s.code_key for o in outcomes.values() for s in o.sessions}
+    if st["store_uploads"] != len(cohorts):
+        raise AssertionError(
+            f"{st['store_uploads']} store uploads for {len(cohorts)} cohorts"
+        )
+    if st["kernel_launches"] != 2 * st["cohort_rounds"]:
+        raise AssertionError("hub encode launches not fused (2/cohort-round)")
+
+    total_diff = sum(len(r[0].diff) for r in results.values())
+    proto = sum(o.wire_stats["protocol_frame_bytes"] for o in outcomes.values())
+    mux = sum(
+        o.wire_stats["mux_bytes_in"] + o.wire_stats["mux_bytes_out"]
+        for o in outcomes.values()
+    )
+    point = {
+        "hub": True,
+        "peers": peers,
+        "d": d,
+        "size": size,
+        "wall_s": round(wall, 4),
+        "peers_per_s": round(peers / wall, 3),
+        "rounds": st["rounds"],
+        "cohort_rounds": st["cohort_rounds"],
+        "kernel_launches": st["kernel_launches"],
+        "decode_launches": st["decode_launches"],
+        "fused_launches_per_round": round(
+            (st["kernel_launches"] + st["decode_launches"])
+            / max(1, st["rounds"]), 2
+        ),
+        "store_uploads": st["store_uploads"],
+        "h2d_store_bytes": st["h2d_store_bytes"],
+        "h2d_round_bytes": st["h2d_round_bytes"],
+        "wire_protocol_bytes": proto,
+        "wire_mux_overhead_bytes": mux,
+        "wire_bytes_per_diff": round(proto / max(1, total_diff), 2),
+    }
+    row = Row(
+        name=f"recon_throughput/hub_N{peers}_d{d}",
+        us_per_call=wall * 1e6 / peers,
+        derived=(
+            f"peers_per_s={point['peers_per_s']:.2f} "
+            f"cohort_rounds={st['cohort_rounds']} "
+            f"fused_launches_per_round={point['fused_launches_per_round']} "
+            f"store_uploads={st['store_uploads']} "
+            f"wire_bytes_per_diff={point['wire_bytes_per_diff']:.2f}"
+        ),
+    )
+    return row, point
+
+
 def write_json(points: list[dict], path: str) -> None:
     """BENCH_recon.json: the perf-trajectory artifact CI tracks per PR."""
     doc = {
         "bench": "recon_throughput",
-        "grid": [{"sessions": p["sessions"], "d": p["d"]} for p in points],
+        "grid": [
+            {k: p[k] for k in ("sessions", "peers", "d") if k in p}
+            for p in points
+        ],
         "points": points,
     }
     pathlib.Path(path).write_text(json.dumps(doc, indent=1) + "\n")
@@ -216,6 +314,9 @@ def run():
         row, point = bench_point(8, d, size=2000, check=True)
         rows.append(row)
         points.append(point)
+    row, point = hub_bench_point(4, 10, size=1200)
+    rows.append(row)
+    points.append(point)
     write_json(points, pathlib.Path(__file__).resolve().parents[1] / "BENCH_recon.json")
     return print_rows(rows)
 
@@ -232,14 +333,23 @@ def main(argv=None):
                     help="skip the per-session core.pbs byte validation")
     ap.add_argument("--no-wire", action="store_true",
                     help="skip the two-endpoint wire-byte measurement")
+    ap.add_argument("--peers", type=str, default="",
+                    help="comma-separated hub peer counts: each N runs a "
+                         "multi-peer HubEndpoint sweep (N real peers, mux "
+                         "envelopes, fused cross-peer launches asserted)")
     ap.add_argument("--json", type=str, default="BENCH_recon.json",
                     help="path for the JSON artifact (default BENCH_recon.json)")
     ap.add_argument("--no-json", action="store_true", help="skip the JSON artifact")
     ap.add_argument("--min-h2d-ratio", type=float, default=0.0,
                     help="fail if any point's H2D transfer win drops below this")
     ap.add_argument("--max-bytes-per-diff", type=float, default=0.0,
-                    help="fail if any point's MEASURED wire bytes per distinct "
-                         "element exceed this (4 B/diff = the 32-bit minimum)")
+                    help="fail if any pair point's MEASURED wire bytes per "
+                         "distinct element exceed this (4 B/diff = the "
+                         "32-bit minimum)")
+    ap.add_argument("--max-hub-bytes-per-diff", type=float, default=0.0,
+                    help="same gate for the hub sweep points; hub frames "
+                         "don't amortize headers across a peer's neighbors "
+                         "(one stream per peer), so the bound is looser")
     args = ap.parse_args(argv)
 
     grid_s = [int(x) for x in args.sessions.split(",")]
@@ -254,11 +364,21 @@ def main(argv=None):
             rows.append(row)
             points.append(point)
             print(row.csv(), flush=True)
+    if args.peers:
+        for peers in (int(x) for x in args.peers.split(",")):
+            for d in grid_d:
+                row, point = hub_bench_point(peers, d, args.size,
+                                             seed=args.seed)
+                rows.append(row)
+                points.append(point)
+                print(row.csv(), flush=True)
     if not args.no_json:
         write_json(points, args.json)
         print(f"# wrote {args.json}", flush=True)
+    pair_points = [p for p in points if not p.get("hub")]
+    hub_points = [p for p in points if p.get("hub")]
     if args.min_h2d_ratio:
-        worst = min(p["h2d_ratio"] for p in points)
+        worst = min(p["h2d_ratio"] for p in pair_points)
         if worst < args.min_h2d_ratio:
             raise AssertionError(
                 f"H2D transfer ratio {worst:.2f} < required {args.min_h2d_ratio}"
@@ -266,11 +386,18 @@ def main(argv=None):
     if args.max_bytes_per_diff:
         if args.no_wire:
             raise SystemExit("--max-bytes-per-diff needs the wire measurement")
-        worst = max(p["wire_bytes_per_diff"] for p in points)
+        worst = max(p["wire_bytes_per_diff"] for p in pair_points)
         if worst > args.max_bytes_per_diff:
             raise AssertionError(
                 f"measured wire bytes/diff {worst:.2f} > allowed "
                 f"{args.max_bytes_per_diff}"
+            )
+    if args.max_hub_bytes_per_diff and hub_points:
+        worst = max(p["wire_bytes_per_diff"] for p in hub_points)
+        if worst > args.max_hub_bytes_per_diff:
+            raise AssertionError(
+                f"measured hub wire bytes/diff {worst:.2f} > allowed "
+                f"{args.max_hub_bytes_per_diff}"
             )
     return rows
 

@@ -1,45 +1,105 @@
-"""The paper's motivating application (§1.3.4): blockchain transaction relay.
+"""The paper's motivating application (§1.3.4): blockchain transaction relay,
+now as a real multi-peer serving topology (DESIGN.md §10).
 
-Two peers hold mempools of transaction IDs that mostly overlap (they both
-receive most broadcasts).  Each relay round, a peer reconciles with a
-neighbor via PBS instead of announcing every txid (the Erlay [31] setting).
-We simulate a relay epoch and account bytes vs. (a) naive full announcement
-and (b) per-tx INV gossip, and demonstrate *piecewise reconciliability*: the
-first round already yields >95% of the missing transactions, which the peer
-can start fetching while stragglers finish.
+One relay node holds the canonical mempool and serves N downstream peers at
+once through a ``repro.net.HubEndpoint``: every peer is a real
+``AliceEndpoint`` exchanging mux-enveloped ``repro.wire`` bytes over its own
+transport (three in-memory pipes and one genuine TCP loopback socket below),
+and the relay fuses all peers' per-round work into shared cohort kernel
+launches — one element-store upload and 2 encode + 1 decode launches per
+cohort-round for the whole peer set, not per peer.
+
+Each peer's mempool has diverged from the relay's (missed broadcasts both
+ways, the Erlay [31] setting).  PBS reconciliation replaces announcing every
+txid: each peer learns its full symmetric difference for ~2x the bytes of an
+ideal INV gossip — per peer, byte-identical to what a dedicated pair of
+endpoints would have measured.
 
 Run:  PYTHONPATH=src python examples/blockchain_relay.py
 """
+import pathlib
+import sys
+import time
+
+if __name__ == "__main__":  # standalone: make src/ importable
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
 import numpy as np
 
-from repro.core.pbs import PBSConfig, reconcile, true_diff
+from repro.core.pbs import PBSConfig, true_diff
 from repro.core.simdata import random_set
+from repro.net import AliceEndpoint, HubEndpoint, InMemoryDuplex, run_hub, tcp_loopback_pair
+
+N_PEERS = 4
+MEMPOOL = 12_000             # txids in the relay's canonical mempool
+CHURN = 150                  # per direction, per peer
+
+
+def diverged_mempool(relay_pool: np.ndarray, rng: np.random.Generator):
+    """A peer's view: missed CHURN of the relay's txs, saw CHURN fresh ones."""
+    missed = rng.permutation(len(relay_pool))[:CHURN]
+    fresh = random_set(CHURN, rng)
+    peer = np.concatenate([np.delete(relay_pool, missed), fresh])
+    return np.unique(peer)
 
 
 def main():
     rng = np.random.default_rng(1)
-    mempool_size = 60_000        # txids held by each peer
-    churn = 800                  # new txs each peer saw that the other missed
+    relay_pool = random_set(MEMPOOL, rng)
 
-    base = random_set(mempool_size + 2 * churn, rng)
-    alice = np.concatenate([base[: mempool_size - churn], base[mempool_size : mempool_size + churn]])
-    bob = base[:mempool_size]
-    d = len(true_diff(alice, bob))
-    print(f"mempools: |A|={len(alice):,} |B|={len(bob):,}, diverged by d={d}")
+    hub = HubEndpoint(recv_deadline=300.0)
+    alices, pools = {}, {}
+    for p in range(N_PEERS):
+        peer_pool = diverged_mempool(relay_pool, rng)
+        d = len(true_diff(peer_pool, relay_pool))
+        # the last peer connects over a real TCP loopback socket
+        ta, tb = (
+            tcp_loopback_pair() if p == N_PEERS - 1 else InMemoryDuplex.pair()
+        )
+        cfg = PBSConfig(seed=3 + p)
+        ch = hub.add_peer(tb, label=f"peer{p}")
+        hub.submit(ch, relay_pool, cfg=cfg)          # estimator path: d unknown
+        ep = AliceEndpoint(ta, channel=ch)
+        ep.submit(peer_pool, cfg=cfg)
+        alices[ch] = ep
+        pools[ch] = (peer_pool, d, "tcp" if p == N_PEERS - 1 else "mem")
 
-    res = reconcile(alice, bob, PBSConfig(seed=3))
-    assert res.success
+    print(f"relay mempool |B|={MEMPOOL:,}; serving {N_PEERS} diverged peers")
+    t0 = time.perf_counter()
+    outcomes, results, errors = run_hub(hub, alices)
+    wall = time.perf_counter() - t0
+    assert not errors, errors
 
-    naive = 4 * len(bob)
-    inv_gossip = 4 * d  # ideal INV: only the diff, one announcement each
-    print(f"PBS relay: {res.rounds} rounds, {res.bytes_sent:,} B protocol "
-          f"+ {res.estimator_bytes} B estimator")
-    print(f"  vs full announcement: {naive:,} B  ({naive / res.bytes_sent:.0f}x saved)")
-    print(f"  vs ideal INV gossip : {inv_gossip:,} B "
-          f"(PBS pays {res.bytes_sent / inv_gossip:.2f}x the minimum)")
-    print(f"  round bytes: {res.bytes_per_round} "
-          f"(piecewise: round 1 carries ~{100 * res.bytes_per_round[0] / max(1, res.bytes_sent):.0f}% "
-          f"of the traffic and >95% of the discovered txids)")
+    print(f"\n{'ch':>3} {'link':<4} {'d':>4} {'rounds':>6} {'wire B':>7} "
+          f"{'est B':>6} {'vs INV':>7}  exact")
+    total_pbs = total_inv = 0
+    for ch, (peer_pool, d, link) in pools.items():
+        r = results[ch][0]
+        assert r.success and r.diff == true_diff(peer_pool, relay_pool)
+        assert outcomes[ch].ok and outcomes[ch].verified == [True]
+        inv = 4 * d            # ideal INV: one 4-byte announcement per diff
+        total_pbs += r.bytes_sent
+        total_inv += inv
+        print(f"{ch:>3} {link:<4} {d:>4} {r.rounds:>6} {r.bytes_sent:>7,} "
+              f"{r.estimator_bytes:>6} {r.bytes_sent / inv:>6.2f}x  ok")
+
+    naive = 4 * MEMPOOL * N_PEERS
+    st = hub.stats
+    print(f"\nrelay served {N_PEERS} peers in {wall:.1f}s "
+          f"({N_PEERS / wall:.2f} peers/s)")
+    print(f"  fusion: {st['store_uploads']} store upload(s) for "
+          f"{st['cohort_rounds']} cohort-rounds, "
+          f"{st['kernel_launches']} encode + {st['decode_launches']} decode "
+          f"launches shared across all peers")
+    print(f"  bytes: {total_pbs:,} B PBS vs {naive:,} B full announcement "
+          f"({naive / total_pbs:.0f}x saved), {total_pbs / total_inv:.2f}x "
+          f"the ideal INV minimum")
+    mux = sum(
+        o.wire_stats["mux_bytes_in"] + o.wire_stats["mux_bytes_out"]
+        for o in outcomes.values()
+    )
+    print(f"  multiplexing overhead: {mux:,} B of MSG_MUX envelopes "
+          f"({100 * mux / max(1, total_pbs):.1f}% of protocol bytes)")
 
 
 if __name__ == "__main__":

@@ -11,8 +11,14 @@ both sides advance the *same* ``core.pbs`` round state machine, so
 per-session results and measured wire ledgers are byte-identical to
 ``core.pbs.reconcile`` (asserted in tests/test_net_endpoints.py and
 tests/test_recon_batch.py).
+
+``HubEndpoint`` (DESIGN.md §10) scales the serving side to N concurrent
+peers on channel-multiplexed transports: all peers' sessions fuse into one
+shared cohort pipeline, with per-peer round-barrier deadlines so a
+straggler or mid-protocol disconnect fails only its own peer.
 """
 from .endpoint import AliceEndpoint, BobEndpoint, run_pair
+from .hub import HubEndpoint, PeerOutcome, run_hub
 from .transport import (
     FrameStream,
     InMemoryDuplex,
@@ -21,6 +27,7 @@ from .transport import (
     SocketTransport,
     Transport,
     TransportError,
+    TransportTimeout,
     tcp_loopback_pair,
 )
 
@@ -28,12 +35,16 @@ __all__ = [
     "AliceEndpoint",
     "BobEndpoint",
     "FrameStream",
+    "HubEndpoint",
     "InMemoryDuplex",
+    "PeerOutcome",
     "ReliableTransport",
     "SimulatedChannel",
     "SocketTransport",
     "Transport",
     "TransportError",
+    "TransportTimeout",
+    "run_hub",
     "run_pair",
     "tcp_loopback_pair",
 ]

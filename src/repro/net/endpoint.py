@@ -76,13 +76,188 @@ class _SessionRows:
     plan: CohortRoundPlan
 
 
+def encode_round_rows(
+    plans: list[CohortRoundPlan],
+    side: str,
+    interpret: bool | None,
+    launches: dict | None = None,
+) -> dict[int, _SessionRows]:
+    """Dispatch every cohort's single-side executor, then collect per-session
+    row slices (async dispatch overlaps cohorts).  Shared by the pair
+    endpoints and the multi-peer hub — the hub's ``plans`` span all peers'
+    sessions, so the two launches per cohort are fused across peers.
+
+    ``launches`` (if given) is bumped at the dispatch site — one
+    ``encode_side`` call is one bin-kernel launch plus one sketch matmul —
+    so the hub's fusion stats measure dispatches, not planner bookkeeping.
+    """
+    inflight = []
+    for plan in plans:
+        store = plan.store
+        ss = store.sides[side]
+        out = encode_side(
+            ss.flat, ss.start, ss.cnt,
+            *(jnp.asarray(plan.arrays[k]) for k in _ROUND_ARRAY_KEYS),
+            n=store.n,
+            t=store.t,
+            width=plan.width_a if side == "a" else plan.width_b,
+            interpret=interpret,
+        )
+        if launches is not None:
+            launches["kernel_launches"] = launches.get("kernel_launches", 0) + 2
+        inflight.append((plan, out))
+    per: dict[int, _SessionRows] = {}
+    for plan, out in inflight:
+        sk, xors, csum = (np.asarray(x) for x in jax.device_get(out))
+        for sess, base, active, bin_seed in plan.members:
+            rows = slice(base, base + len(active))
+            per[sess.sid] = _SessionRows(
+                sess, active, bin_seed, sk[rows], xors[rows], csum[rows], plan
+            )
+    return per
+
+
+def round_schema(per: dict[int, _SessionRows], live: list[int]):
+    """The frame schema for the given sids, in the given order: both wire
+    sides derive it from the same deterministic round state, so frames ship
+    no redundant structure (DESIGN.md §9)."""
+    return [
+        (len(per[sid].active), per[sid].plan.store.t, per[sid].plan.store.m)
+        for sid in live
+    ]
+
+
+def serve_phase0(payload: bytes, set_b, cfg: PBSConfig):
+    """Answer one peer's phase-0 ToW sketch frame (the serving side).
+
+    Returns (d_hat reply frame, the pinned ProtocolPlan, estimator ledger
+    bytes covering both framed messages).  Shared by ``BobEndpoint`` and
+    the multi-peer hub so the two serving paths cannot drift.
+    """
+    set_size_a, sk_a = wf.decode_tow_sketch(payload)
+    if len(sk_a) != cfg.ell:
+        raise WireError(
+            f"peer sent {len(sk_a)} ToW sketches, cfg.ell={cfg.ell}"
+        )
+    sk_b = tow_sketches(set_b, derive_seed(cfg.seed, 0x70), cfg.ell)
+    num = estimate_numerator(sk_a, sk_b)
+    reply = wf.encode_dhat(num)
+    est_bytes = _framed_len(payload) + len(reply)
+    return reply, plan_from_estimate(cfg, num, set_size_a), est_bytes
+
+
+def decode_side_b_round(
+    plans,
+    per: dict[int, _SessionRows],
+    sk_a_of: dict,
+    launches: dict | None = None,
+):
+    """The serving side's round completion: place each session's
+    frame-decoded sketches at its cohort rows, XOR with the resident side,
+    run ONE ``bch_decode_batched`` launch per cohort, and build every
+    session's reply entry.
+
+    ``sk_a_of`` maps sid -> (U, t) frame sketches; sessions absent from it
+    (an evicted hub peer) keep zero rows — padding decodes trivially-ok and
+    they are skipped in the result.  Returns (results: sid -> (ok, units),
+    ctx: sid -> (sess, active, ok, bin_seed)) — ``ctx`` is what the
+    outcome-frame mirror needs.  Shared by ``BobEndpoint`` and the hub; in
+    the hub's case ``plans`` span every peer, so the decode launch is fused
+    across peers.
+    """
+    inflight = []
+    for plan in plans:
+        u_pad = plan.arrays["row_map"].shape[0]
+        sk_a = np.zeros((u_pad, plan.store.t), dtype=np.int32)
+        sk_b = np.zeros((u_pad, plan.store.t), dtype=np.int32)
+        for sess, base, active, _ in plan.members:
+            if sess.sid not in sk_a_of:
+                continue
+            rows = slice(base, base + len(active))
+            sk_a[rows] = sk_a_of[sess.sid]
+            sk_b[rows] = per[sess.sid].sk
+        out = bch_decode_batched(
+            jnp.asarray(sk_a ^ sk_b, dtype=jnp.int32),
+            n=plan.store.n, t=plan.store.t,
+        )
+        if launches is not None:
+            launches["decode_launches"] = launches.get("decode_launches", 0) + 1
+        inflight.append((plan, out))
+    results: dict[int, tuple] = {}
+    ctx: dict[int, tuple] = {}
+    for plan, out in inflight:
+        ok_pad, pos_pad, cnt_pad = (np.asarray(x) for x in jax.device_get(out))
+        for sess, base, active, bin_seed in plan.members:
+            if sess.sid not in sk_a_of:
+                continue
+            rows = slice(base, base + len(active))
+            row = per[sess.sid]
+            ok = ok_pad[rows]
+            pos, cnt = pos_pad[rows], cnt_pad[rows]
+            units: list[ReplyUnit | None] = []
+            for slot in range(len(active)):
+                if not ok[slot]:
+                    units.append(None)
+                    continue
+                k = int(cnt[slot])
+                p = pos[slot, :k].astype(np.int64)
+                units.append(
+                    ReplyUnit(
+                        positions=p,
+                        xors=row.xors[slot, p],
+                        csum=int(row.csum[slot]),
+                    )
+                )
+            results[sess.sid] = (ok, units)
+            ctx[sess.sid] = (sess, active, ok, bin_seed)
+    return results, ctx
+
+
+def verify_ack_entries(payload: bytes, sessions):
+    """Decode a VERIFY frame and compute the serving side's verdicts:
+    the peer claims success AND c(A △ D̂) equals our c(B).  Returns
+    (ack frame, flags).  Shared by ``BobEndpoint`` and the hub."""
+    entries = wf.decode_verify(payload, len(sessions))
+    flags = [
+        bool(success) and csum_eff == checksum(sess.state.b)
+        for sess, (success, csum_eff) in zip(sessions, entries)
+    ]
+    return wf.encode_verify_ack(flags), flags
+
+
+def stream_wire_stats(stream: FrameStream, tally: dict) -> dict:
+    """Measured wire traffic of one stream: exact framed bytes by category
+    plus the transport totals (which additionally see ARQ and mux-envelope
+    overhead, if any)."""
+    t = stream.transport
+    return {
+        "frames_out": stream.frames_out,
+        "frames_in": stream.frames_in,
+        "frame_bytes_out": stream.bytes_out,
+        "frame_bytes_in": stream.bytes_in,
+        "transport_bytes_out": t.bytes_out,
+        "transport_bytes_in": t.bytes_in,
+        "mux_bytes_out": stream.mux_bytes_out,
+        "mux_bytes_in": stream.mux_bytes_in,
+        "estimator_frame_bytes": tally["estimator"],
+        "protocol_frame_bytes": tally["protocol"],
+        "verify_frame_bytes": tally["verify"],
+    }
+
+
 class _Endpoint:
     """Shared plumbing: submissions, cohort batch, side encode, tallies."""
 
     side: str
 
-    def __init__(self, transport: Transport, *, interpret: bool | None = None):
-        self._stream = FrameStream(transport)
+    def __init__(
+        self,
+        transport: Transport,
+        *,
+        interpret: bool | None = None,
+        channel: int | None = None,
+    ):
+        self._stream = FrameStream(transport, channel=channel)
         self._interpret = interpret
         self._sessions: list[ReconSession | None] = []
         self._est_queue: list[int] = []     # sids awaiting phase 0, in order
@@ -126,37 +301,11 @@ class _Endpoint:
         return self._batch
 
     def _encode_round(self, plans: list[CohortRoundPlan]) -> dict[int, _SessionRows]:
-        """Dispatch every cohort's single-side executor, then collect
-        per-session row slices (async dispatch overlaps cohorts)."""
-        inflight = []
-        for plan in plans:
-            store = plan.store
-            ss = store.sides[self.side]
-            out = encode_side(
-                ss.flat, ss.start, ss.cnt,
-                *(jnp.asarray(plan.arrays[k]) for k in _ROUND_ARRAY_KEYS),
-                n=store.n,
-                t=store.t,
-                width=plan.width_a if self.side == "a" else plan.width_b,
-                interpret=self._interpret,
-            )
-            inflight.append((plan, out))
-        per: dict[int, _SessionRows] = {}
-        for plan, out in inflight:
-            sk, xors, csum = (np.asarray(x) for x in jax.device_get(out))
-            for sess, base, active, bin_seed in plan.members:
-                rows = slice(base, base + len(active))
-                per[sess.sid] = _SessionRows(
-                    sess, active, bin_seed, sk[rows], xors[rows], csum[rows], plan
-                )
-        return per
+        return encode_round_rows(plans, self.side, self._interpret)
 
     @staticmethod
     def _schema(per: dict[int, _SessionRows], live: list[int]):
-        return [
-            (len(per[sid].active), per[sid].plan.store.t, per[sid].plan.store.m)
-            for sid in live
-        ]
+        return round_schema(per, live)
 
     def _expect(self, msg_type: int) -> bytes:
         got, payload = self._stream.recv()
@@ -172,18 +321,7 @@ class _Endpoint:
     def wire_stats(self) -> dict:
         """Measured wire traffic: exact framed bytes by category plus the
         transport totals (which additionally see ARQ overhead, if any)."""
-        t = self._stream.transport
-        return {
-            "frames_out": self._stream.frames_out,
-            "frames_in": self._stream.frames_in,
-            "frame_bytes_out": self._stream.bytes_out,
-            "frame_bytes_in": self._stream.bytes_in,
-            "transport_bytes_out": t.bytes_out,
-            "transport_bytes_in": t.bytes_in,
-            "estimator_frame_bytes": self._tally["estimator"],
-            "protocol_frame_bytes": self._tally["protocol"],
-            "verify_frame_bytes": self._tally["verify"],
-        }
+        return stream_wire_stats(self._stream, self._tally)
 
 
 class AliceEndpoint(_Endpoint):
@@ -191,8 +329,14 @@ class AliceEndpoint(_Endpoint):
 
     side = "a"
 
-    def __init__(self, transport: Transport, *, interpret: bool | None = None):
-        super().__init__(transport, interpret=interpret)
+    def __init__(
+        self,
+        transport: Transport,
+        *,
+        interpret: bool | None = None,
+        channel: int | None = None,
+    ):
+        super().__init__(transport, interpret=interpret, channel=channel)
         self._pending: dict[int, tuple] = {}   # sid -> (a, cfg)
 
     def _pending_store(self, sid, elems, cfg):
@@ -322,8 +466,14 @@ class BobEndpoint(_Endpoint):
 
     side = "b"
 
-    def __init__(self, transport: Transport, *, interpret: bool | None = None):
-        super().__init__(transport, interpret=interpret)
+    def __init__(
+        self,
+        transport: Transport,
+        *,
+        interpret: bool | None = None,
+        channel: int | None = None,
+    ):
+        super().__init__(transport, interpret=interpret, channel=channel)
         self._pending: dict[int, tuple] = {}   # sid -> (b, cfg)
         self._rnd = 0                          # rounds whose sketches arrived
         self._ctx = None                       # current round's (live, per-sid)
@@ -357,17 +507,10 @@ class BobEndpoint(_Endpoint):
             raise WireError("ToW sketch frame with no estimator session pending")
         sid = self._est_queue.pop(0)
         b, cfg = self._pending.pop(sid)
-        set_size_a, sk_a = wf.decode_tow_sketch(payload)
-        if len(sk_a) != cfg.ell:
-            raise WireError(
-                f"sid {sid}: peer sent {len(sk_a)} ToW sketches, cfg.ell={cfg.ell}"
-            )
-        sk_b = tow_sketches(b, derive_seed(cfg.seed, 0x70), cfg.ell)
-        num = estimate_numerator(sk_a, sk_b)
-        reply = wf.encode_dhat(num)
+        reply, plan, est_bytes = serve_phase0(payload, b, cfg)
         self._stream.send(reply)
-        self._tally["estimator"] += _framed_len(payload) + len(reply)
-        self._install(sid, b, plan_from_estimate(cfg, num, set_size_a), append=False)
+        self._tally["estimator"] += est_bytes
+        self._install(sid, b, plan, append=False)
 
     def _handle_sketches(self, payload: bytes) -> None:
         if self._ctx is not None:
@@ -387,48 +530,8 @@ class BobEndpoint(_Endpoint):
         # per cohort: place each session's frame sketches at its row slice,
         # XOR with our device-resident side, decode every unit at once
         # (padding rows carry zero sketches on both sides: trivially ok)
-        sk_a_of = dict(zip(live, blocks))
-        inflight = []
-        for plan in plans:
-            u_pad = plan.arrays["row_map"].shape[0]
-            sk_a = np.zeros((u_pad, plan.store.t), dtype=np.int32)
-            sk_b = np.zeros((u_pad, plan.store.t), dtype=np.int32)
-            for sess, base, active, _ in plan.members:
-                rows = slice(base, base + len(active))
-                sk_a[rows] = sk_a_of[sess.sid]
-                sk_b[rows] = per[sess.sid].sk
-            out = bch_decode_batched(
-                jnp.asarray(sk_a ^ sk_b, dtype=jnp.int32),
-                n=plan.store.n, t=plan.store.t,
-            )
-            inflight.append((plan, out))
-        entries = []
-        ctx = {}
-        for plan, out in inflight:
-            ok_pad, pos_pad, cnt_pad = (np.asarray(x) for x in jax.device_get(out))
-            for sess, base, active, bin_seed in plan.members:
-                rows = slice(base, base + len(active))
-                row = per[sess.sid]
-                ok = ok_pad[rows]
-                pos, cnt = pos_pad[rows], cnt_pad[rows]
-                units: list[ReplyUnit | None] = []
-                for slot in range(len(active)):
-                    if not ok[slot]:
-                        units.append(None)
-                        continue
-                    k = int(cnt[slot])
-                    p = pos[slot, :k].astype(np.int64)
-                    units.append(
-                        ReplyUnit(
-                            positions=p,
-                            xors=row.xors[slot, p],
-                            csum=int(row.csum[slot]),
-                        )
-                    )
-                ctx[sess.sid] = (sess, active, ok, bin_seed)
-                entries.append((sess.sid, (ok, units)))
-        entries = [e for _, e in sorted(entries, key=lambda x: x[0])]
-        reply = wf.encode_round_reply(rnd, entries, schema)
+        results, ctx = decode_side_b_round(plans, per, dict(zip(live, blocks)))
+        reply = wf.encode_round_reply(rnd, [results[sid] for sid in live], schema)
         self._stream.send(reply)
         self._tally["protocol"] += len(reply)
         self._ctx = (live, ctx)
@@ -456,13 +559,9 @@ class BobEndpoint(_Endpoint):
             sess.state.rounds = rnd
 
     def _handle_verify(self, payload: bytes) -> None:
-        entries = wf.decode_verify(payload, len(self._sessions))
+        # Alice's A △ D̂ must sum to our B when she really learned A △ B
+        ack, flags = verify_ack_entries(payload, self._sessions)
         self._tally["verify"] += _framed_len(payload)
-        flags = []
-        for sess, (success, csum_eff) in zip(self._sessions, entries):
-            # Alice's A △ D̂ must sum to our B when she really learned A △ B
-            flags.append(bool(success) and csum_eff == checksum(sess.state.b))
-        ack = wf.encode_verify_ack(flags)
         self._stream.send(ack)
         self._tally["verify"] += len(ack)
         self.verified = flags

@@ -1,0 +1,578 @@
+"""Multi-peer reconciliation hub: one endpoint serving N peers (DESIGN.md §10).
+
+``HubEndpoint`` is the serving (Bob) side of N concurrent PBS sessions'
+worth of peers: every peer connects over its own ``Transport``, is assigned
+a **channel id**, and exchanges ``repro.wire`` frames wrapped in the
+``MSG_MUX`` envelope tagged with that id — a frame carrying any other id
+(unknown, stale, zero, or unwrapped) is rejected and fails only that peer.
+Peers run stock ``AliceEndpoint``s constructed with ``channel=``; their
+protocol, ledgers, and results are byte-identical to the pair path.
+
+The point of the hub is *fusion*: all peers' sessions feed **one shared**
+``SessionBatch(sides=("b",))``, so a global round packs every peer's active
+units into the same per-code cohorts — one ``encode_side`` (one
+``bin_parity_xorsum_units`` launch + one GF(2) sketch matmul) and one
+``bch_decode_batched`` launch per cohort, shared across all N peers,
+instead of N independent pipelines.
+
+Scenario diversity the pair path never sees (all exercised in
+tests/test_hub.py and tests/test_protocol_conformance.py):
+
+* **peers joining between global rounds** — a session admitted after global
+  round k carries ``rnd0 = k``; all protocol-visible round arithmetic (bin
+  seeds, budget, frame round numbers) uses its *local* round, so a late
+  joiner is byte-identical to a pair that started alone;
+* **stragglers** — the round barrier polls every peer with a per-peer
+  deadline from barrier start; a peer whose frame does not arrive in time
+  is evicted (its sessions fail with the deadline ``TransportError``) and
+  the round proceeds with the survivors;
+* **mid-protocol disconnect** — any non-timeout transport failure or
+  malformed frame evicts just that peer, surfacing as a clean per-peer
+  error in its ``PeerOutcome`` while every other peer completes untouched;
+* **mixed known-d and estimator peers** — estimator sessions run their
+  phase-0 ToW exchange at admission, then share cohorts with known-d
+  sessions as usual.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.pbs import (
+    PBSConfig,
+    ReconcileResult,
+    new_session_state,
+    plan_from_d_known,
+    queue_split,
+    session_live,
+)
+from repro.recon.session import ReconSession, SessionBatch
+from repro.wire import frames as wf
+from repro.wire.frames import WireError
+from repro.wire.varint import framed_len
+
+from .endpoint import (
+    AliceEndpoint,
+    decode_side_b_round,
+    encode_round_rows,
+    round_schema,
+    serve_phase0,
+    stream_wire_stats,
+    verify_ack_entries,
+)
+from .transport import FrameStream, Transport, TransportError, TransportTimeout
+
+_EMPTY = np.zeros(0, dtype=np.uint32)
+_POLL_S = 0.02  # barrier round-robin slice: bounds one sweep over N peers
+
+
+@dataclass
+class PeerOutcome:
+    """One peer's final disposition after ``serve``."""
+
+    channel: int
+    ok: bool                            # verify exchange completed
+    verified: list[bool] | None         # per-session verdicts (ok peers)
+    error: BaseException | None         # eviction cause (failed peers)
+    sessions: list[ReconSession]        # the hub's mirrored session states
+    wire_stats: dict
+
+
+class _Peer:
+    """Hub-side connection state for one channel."""
+
+    def __init__(self, channel: int, transport: Transport, label: str | None):
+        self.channel = channel
+        self.label = label or f"peer{channel}"
+        self.transport = transport
+        self.stream = FrameStream(transport, channel=channel)
+        self.pending: list[tuple] = []      # (set_b, cfg, d_known) pre-admission
+        self.sessions: list[ReconSession] = []  # local-sid order
+        self.admitted = False
+        self.retired = False
+        self.verified: list[bool] | None = None
+        self.error: BaseException | None = None
+        self.tally = {"estimator": 0, "protocol": 0, "verify": 0}
+
+    def wire_stats(self) -> dict:
+        return stream_wire_stats(self.stream, self.tally)
+
+
+class HubEndpoint:
+    """One serving endpoint reconciling against N peers concurrently.
+
+    Usage::
+
+        hub = HubEndpoint()
+        ch = hub.add_peer(transport)          # one Transport per peer
+        hub.submit(ch, set_b, cfg=cfg, d_known=d)   # positional, like a pair
+        outcomes = hub.serve()                # dict channel -> PeerOutcome
+
+    ``add_peer``/``submit`` may also be called while ``serve`` runs (from
+    another thread, or from the ``on_barrier`` hook): the peer is admitted
+    at the next global-round barrier with ``rnd0`` = the completed round.
+    ``recv_deadline`` is the per-peer barrier deadline; ``on_barrier`` (if
+    set) is called with the just-completed global round number — the
+    deterministic injection point tests use for mid-run joins.
+    """
+
+    side = "b"
+
+    def __init__(
+        self,
+        *,
+        interpret: bool | None = None,
+        recv_deadline: float = 60.0,
+        on_barrier=None,
+    ):
+        self._interpret = interpret
+        self._deadline = recv_deadline
+        self.on_barrier = on_barrier
+        self._lock = threading.Lock()
+        self._peers: dict[int, _Peer] = {}
+        self._order: list[int] = []         # admission order of channels
+        self._joiners: list[int] = []       # added but not yet admitted
+        self._next_channel = 1
+        self.stale_channels: set[int] = set()
+        self._sessions: list[ReconSession] = []
+        self._batch = SessionBatch(self._sessions, sides=(self.side,))
+        self._stats: dict = {}
+
+    # -- registration ----------------------------------------------------
+
+    def add_peer(self, transport: Transport, *, label: str | None = None) -> int:
+        """Register a peer connection; returns its channel id (never 0,
+        never reused — a retired channel's id stays stale forever)."""
+        with self._lock:
+            ch = self._next_channel
+            self._next_channel += 1
+            self._peers[ch] = _Peer(ch, transport, label)
+            self._joiners.append(ch)
+        return ch
+
+    def submit(
+        self,
+        channel: int,
+        set_b,
+        cfg: PBSConfig | None = None,
+        d_known: int | None = None,
+    ) -> int:
+        """Enqueue this hub's side of the peer's next session (positional
+        pairing with the peer's ``submit`` order, like the pair path);
+        returns the peer-local sid.  Must precede the peer's admission."""
+        peer = self._peers[channel]
+        elems = np.unique(np.asarray(set_b, dtype=np.uint32))
+        with self._lock:
+            if peer.admitted:
+                raise RuntimeError(
+                    f"channel {channel} already admitted; submit before serve "
+                    "or from the on_barrier hook for late joiners"
+                )
+            peer.pending.append((elems, cfg or PBSConfig(), d_known))
+            return len(peer.pending) - 1
+
+    # -- eviction / retirement -------------------------------------------
+
+    def _evict(self, peer: _Peer, err: BaseException) -> None:
+        """Fail one peer: mark its sessions failed (they never plan again),
+        retire its channel as stale, and close its transport so a blocked
+        peer fails fast instead of hanging."""
+        peer.retired = True
+        if isinstance(err, TransportError):
+            peer.error = err
+        else:
+            peer.error = TransportError(f"{peer.label}: {err}")
+            peer.error.__cause__ = err
+        for sess in peer.sessions:
+            sess.failed = True
+        self.stale_channels.add(peer.channel)
+        self._stats["peers_failed"] = self._stats.get("peers_failed", 0) + 1
+        try:
+            peer.transport.close()
+        except Exception:
+            pass
+
+    def _finish_peer(self, peer: _Peer, payload: bytes) -> None:
+        """The final verification exchange (peer has no live work left)."""
+        try:
+            ack, flags = verify_ack_entries(payload, peer.sessions)
+            peer.tally["verify"] += framed_len(len(payload))
+            peer.stream.send(ack)
+            peer.tally["verify"] += len(ack)
+        except (TransportError, WireError) as e:
+            self._evict(peer, e)
+            return
+        peer.verified = flags
+        peer.retired = True
+        self.stale_channels.add(peer.channel)
+
+    # -- the shared peer poller -------------------------------------------
+
+    def _poll_peers(self, handlers: dict, phase: str) -> None:
+        """Round-robin-poll every peer in ``handlers`` (channel -> frame
+        handler) under ONE deadline from call start, so no single silent
+        peer can stall the others.  A handler receives each inbound
+        (peer, msg_type, payload), returns True when its peer needs no more
+        frames, and may raise ``WireError``/``TransportError`` to evict.
+        ``TransportTimeout`` on a poll slice keeps waiting; any other
+        transport failure evicts immediately; peers still pending when the
+        deadline passes with no progress are evicted with a deadline error.
+        This one loop carries the straggler semantics of both the admission
+        phase and the round barriers (DESIGN.md §10).
+        """
+        deadline_at = time.monotonic() + self._deadline
+        pending = dict(handlers)
+        while pending:
+            progressed = False
+            for ch in list(pending):
+                peer = self._peers[ch]
+                try:
+                    msg_type, payload = peer.stream.recv(timeout=_POLL_S)
+                except TransportTimeout:
+                    continue
+                except (TransportError, WireError) as e:
+                    self._evict(peer, e)
+                    del pending[ch]
+                    continue
+                progressed = True
+                try:
+                    if pending[ch](peer, msg_type, payload):
+                        del pending[ch]
+                except (TransportError, WireError) as e:
+                    self._evict(peer, e)
+                    del pending[ch]
+            if pending and not progressed and time.monotonic() >= deadline_at:
+                for ch in pending:
+                    self._evict(self._peers[ch], TransportError(
+                        f"{self._peers[ch].label}: no frame within the "
+                        f"{self._deadline}s {phase} deadline"
+                    ))
+                break
+
+    # -- admission (phase 0) ---------------------------------------------
+
+    def _admit(self, rnd: int) -> bool:
+        """Admit at round offset ``rnd`` every registered peer that has at
+        least one submitted session: pin known-d plans immediately, drive
+        the estimator sessions' phase-0 ToW exchanges through the shared
+        round-robin poller (one silent joiner cannot stall the others'
+        admission past the deadline), then join the survivors' sessions to
+        the shared batch.  A peer whose ``submit`` has not landed yet stays
+        queued for the next barrier — ``add_peer`` then ``submit`` from
+        another thread can never admit a session-less peer by racing the
+        barrier.  Returns True iff any peer was admitted."""
+        with self._lock:
+            joiners = [
+                ch for ch in self._joiners if self._peers[ch].pending
+            ]
+            self._joiners = [ch for ch in self._joiners if ch not in joiners]
+            pending_of = {ch: list(self._peers[ch].pending) for ch in joiners}
+        if not joiners:
+            return False
+        plans: dict[int, list] = {}
+        est_idx: dict[int, list[int]] = {}      # ch -> indices awaiting ToW
+        for ch in joiners:
+            peer = self._peers[ch]
+            if ch not in self._order:           # re-queued leftover submits
+                self._order.append(ch)
+                self._stats["peers"] = self._stats.get("peers", 0) + 1
+            plans[ch] = [
+                None if dk is None else plan_from_d_known(cfg, dk)
+                for _, cfg, dk in pending_of[ch]
+            ]
+            idxs = [i for i, p in enumerate(plans[ch]) if p is None]
+            if idxs:
+                est_idx[ch] = idxs
+
+        def _phase0_handler(ch):
+            def handle(peer, msg_type, payload):
+                if msg_type != wf.MSG_TOW_SKETCH:
+                    raise WireError(
+                        f"expected message 0x{wf.MSG_TOW_SKETCH:02x}, "
+                        f"got 0x{msg_type:02x}"
+                    )
+                idx = est_idx[ch][0]
+                set_b, cfg, _ = pending_of[ch][idx]
+                reply, plan, est_bytes = serve_phase0(payload, set_b, cfg)
+                peer.stream.send(reply)
+                peer.tally["estimator"] += est_bytes
+                plans[ch][idx] = plan
+                est_idx[ch].pop(0)
+                return not est_idx[ch]
+            return handle
+
+        self._poll_peers(
+            {ch: _phase0_handler(ch) for ch in est_idx}, phase="admission"
+        )
+
+        for ch in joiners:
+            peer = self._peers[ch]
+            if peer.retired:
+                continue
+            new = [
+                ReconSession(
+                    sid=len(self._sessions) + i,
+                    plan=plan,
+                    state=new_session_state(_EMPTY, set_b, plan),
+                    rnd0=rnd,
+                )
+                for i, (plan, (set_b, _, _)) in enumerate(
+                    zip(plans[ch], pending_of[ch])
+                )
+            ]
+            with self._lock:
+                # a submit that raced in after the snapshot stays pending
+                # and admits at the next barrier (its own rnd0)
+                peer.pending = peer.pending[len(pending_of[ch]):]
+                peer.admitted = True
+                if peer.pending:
+                    self._joiners.append(ch)
+            peer.sessions.extend(new)
+            self._batch.add_sessions(new)   # appends to self._sessions
+        return True
+
+    # -- the round barrier ------------------------------------------------
+
+    def _collect(self, expect: dict[int, int]) -> dict[int, bytes]:
+        """One frame from each peer in ``expect`` (channel -> msg type) via
+        the shared poller; timed-out, disconnected, or misbehaving peers
+        are evicted and simply absent from the result."""
+        got: dict[int, bytes] = {}
+
+        def _handler(ch, want):
+            def handle(peer, msg_type, payload):
+                if msg_type != want:
+                    raise WireError(
+                        f"expected message 0x{want:02x}, got 0x{msg_type:02x}"
+                    )
+                got[ch] = payload
+                return True
+            return handle
+
+        self._poll_peers(
+            {ch: _handler(ch, want) for ch, want in expect.items()},
+            phase="round-barrier",
+        )
+        return got
+
+    def _peer_live(self, peer: _Peer, rnd: int) -> bool:
+        """Mirror of the peer's own ``plan_round(local) != []`` check."""
+        return any(
+            not s.failed and session_live(s.state, s.plan.cfg, rnd - s.rnd0)
+            for s in peer.sessions
+        )
+
+    # -- serve -------------------------------------------------------------
+
+    def serve(self) -> dict[int, PeerOutcome]:
+        """Drive every peer's sessions to completion; channel -> outcome."""
+        st = self._stats = {
+            "rounds": 0, "cohort_rounds": 0,
+            "kernel_launches": 0, "decode_launches": 0,
+            "h2d_round_bytes": 0,
+            "peers": self._stats.get("peers", 0),
+            "peers_failed": self._stats.get("peers_failed", 0),
+        }
+        rnd = 0
+        hook_fired_at = -1
+        self._admit(rnd)
+        while True:
+            active = [
+                self._peers[ch] for ch in self._order
+                if not self._peers[ch].retired
+            ]
+            if not active:
+                # fire the barrier hook at most once per round number, even
+                # when the round-end firing below already covered this rnd
+                if self.on_barrier is not None and hook_fired_at != rnd:
+                    hook_fired_at = rnd
+                    self.on_barrier(rnd)
+                if not self._admit(rnd):
+                    break
+                continue
+            rnd += 1
+
+            # barrier phase 1: live peers owe ROUND_SKETCHES, finished
+            # peers owe VERIFY — collect both in one round-robin sweep
+            expect = {
+                p.channel: (
+                    wf.MSG_ROUND_SKETCHES if self._peer_live(p, rnd)
+                    else wf.MSG_VERIFY
+                )
+                for p in active
+            }
+            frames = self._collect(expect)
+            for ch, payload in list(frames.items()):
+                if expect[ch] == wf.MSG_VERIFY:
+                    self._finish_peer(self._peers[ch], payload)
+                    del frames[ch]
+
+            # shared plan over every surviving live session (evictions
+            # above already marked their sessions failed), then the fused
+            # single-side encode: 2 kernel launches per cohort, all peers
+            plans = self._batch.plan_round(rnd)
+            # launch counters are bumped at the dispatch sites inside the
+            # helpers, so the fusion stats measure dispatches — one encode
+            # and one decode per cohort regardless of peer count — rather
+            # than echoing the planner's own bookkeeping
+            per = encode_round_rows(plans, self.side, self._interpret,
+                                    launches=st)
+            if plans:
+                st["rounds"] = rnd
+            st["cohort_rounds"] += len(plans)
+            st["h2d_round_bytes"] += sum(p.h2d_bytes for p in plans)
+
+            round_ctx = self._apply_sketches(rnd, frames, plans, per)
+
+            # barrier phase 2: the per-peer checksum-outcome frames
+            outcomes = self._collect({
+                ch: wf.MSG_ROUND_OUTCOME for ch in round_ctx
+            })
+            for ch, payload in outcomes.items():
+                self._apply_outcome(self._peers[ch], rnd, payload,
+                                    *round_ctx[ch])
+
+            if self.on_barrier is not None:
+                hook_fired_at = rnd
+                self.on_barrier(rnd)
+            self._admit(rnd)
+
+        st["store_uploads"] = self._batch.store_builds
+        st["h2d_store_bytes"] = self._batch.store_build_bytes
+        st["h2d_bytes"] = st["h2d_store_bytes"] + st["h2d_round_bytes"]
+        return {
+            ch: PeerOutcome(
+                channel=ch,
+                ok=self._peers[ch].error is None,
+                verified=self._peers[ch].verified,
+                error=self._peers[ch].error,
+                sessions=self._peers[ch].sessions,
+                wire_stats=self._peers[ch].wire_stats(),
+            )
+            for ch in self._order
+        }
+
+    @property
+    def stats(self) -> dict:
+        """Fusion ledger of the last ``serve``: global rounds, cohort
+        rounds, kernel/decode launches (2 + 1 per cohort-round, shared
+        across all peers), and the store-upload accounting."""
+        return dict(self._stats)
+
+    # -- round internals ---------------------------------------------------
+
+    def _apply_sketches(self, rnd: int, frames: dict[int, bytes], plans, per):
+        """Decode every peer's sketch frame against its schema, run ONE
+        batched BCH decode per cohort across all peers' units, and send
+        each surviving peer its reply frame.  Returns the per-peer outcome
+        context for barrier phase 2."""
+        # per peer: her live sessions in local-sid order + decoded blocks
+        sk_a_of: dict[int, np.ndarray] = {}     # global sid -> (U, t)
+        peer_live: dict[int, list[int]] = {}    # channel -> global sids
+        for ch, payload in frames.items():
+            peer = self._peers[ch]
+            live_g = [s.sid for s in peer.sessions if s.sid in per]
+            try:
+                got_rnd, blocks = wf.decode_round_sketches(
+                    payload, round_schema(per, live_g)
+                )
+                local = rnd - (peer.sessions[0].rnd0 if peer.sessions else 0)
+                if got_rnd != local:
+                    raise WireError(
+                        f"sketch frame for round {got_rnd}, expected {local}"
+                    )
+            except WireError as e:
+                self._evict(peer, e)
+                continue
+            peer.tally["protocol"] += framed_len(len(payload))
+            peer_live[ch] = live_g
+            sk_a_of.update(zip(live_g, blocks))
+
+        # one decode launch per cohort, all peers' units stacked; sessions
+        # of peers evicted after planning keep zero rows and are skipped
+        results, ctx = decode_side_b_round(plans, per, sk_a_of,
+                                           launches=self._stats)
+
+        round_ctx: dict[int, tuple] = {}
+        for ch, live_g in peer_live.items():
+            peer = self._peers[ch]
+            local = rnd - (peer.sessions[0].rnd0 if peer.sessions else 0)
+            reply = wf.encode_round_reply(
+                local, [results[g] for g in live_g], round_schema(per, live_g)
+            )
+            try:
+                peer.stream.send(reply)
+            except TransportError as e:
+                self._evict(peer, e)
+                continue
+            peer.tally["protocol"] += len(reply)
+            round_ctx[ch] = (live_g, ctx)
+        return round_ctx
+
+    def _apply_outcome(self, peer: _Peer, rnd: int, payload: bytes,
+                       live_g: list[int], ctx: dict[int, tuple]) -> None:
+        """Mirror one peer's unit-queue evolution from her outcome frame:
+        our decode failures drive the same deterministic 3-way split, her
+        flags settle the checksums we cannot compute (we never see A)."""
+        try:
+            got_rnd, done_lists = wf.decode_round_outcome(
+                payload, [len(ctx[g][1]) for g in live_g]
+            )
+            local = rnd - (peer.sessions[0].rnd0 if peer.sessions else 0)
+            if got_rnd != local:
+                raise WireError(
+                    f"outcome frame for round {got_rnd}, expected {local}"
+                )
+        except WireError as e:
+            self._evict(peer, e)
+            return
+        peer.tally["protocol"] += framed_len(len(payload))
+        for g, done in zip(live_g, done_lists):
+            sess, active, ok, _ = ctx[g]
+            local = rnd - sess.rnd0
+            for slot, u in enumerate(active):
+                if not ok[slot]:
+                    queue_split(sess.state, u, local, sess.plan.cfg.seed)
+                elif done[slot]:
+                    u.done = True
+            sess.state.rounds = local
+
+
+def run_hub(
+    hub: HubEndpoint,
+    alices: dict[int, AliceEndpoint],
+    *,
+    join_timeout: float = 120.0,
+):
+    """Drive a hub and its connected peers concurrently: each Alice on a
+    worker thread, the hub on the caller's thread.
+
+    Returns ``(outcomes, results, errors)``: the hub's per-channel
+    ``PeerOutcome``s, per-channel Alice results (``sid -> ReconcileResult``)
+    for peers whose ``run`` completed, and per-channel exceptions for peers
+    whose ``run`` raised (evicted stragglers see their transport closed, so
+    they fail fast with ``TransportError`` instead of hanging).
+    """
+    results: dict[int, dict[int, ReconcileResult]] = {}
+    errors: dict[int, BaseException] = {}
+
+    def _drive(ch: int, ep: AliceEndpoint):
+        try:
+            results[ch] = ep.run()
+        except BaseException as e:  # noqa: BLE001 - reported per peer
+            errors[ch] = e
+
+    threads = [
+        threading.Thread(target=_drive, args=(ch, ep),
+                         name=f"peer-{ch}", daemon=True)
+        for ch, ep in alices.items()
+    ]
+    for th in threads:
+        th.start()
+    outcomes = hub.serve()
+    for th in threads:
+        th.join(timeout=join_timeout)
+    return outcomes, results, errors

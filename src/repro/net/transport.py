@@ -27,12 +27,25 @@ from collections import deque
 
 import numpy as np
 
-from repro.wire.frames import split_frame
+from repro.wire import frames as wire_frames
+from repro.wire.frames import WireError, split_frame
 from repro.wire.varint import decode_uvarint, encode_uvarint, framed_len
+
+_UNSET = object()  # sentinel: FrameStream.recv falls back to its default timeout
 
 
 class TransportError(Exception):
     """Transport failure: closed peer, timeout, or retry exhaustion."""
+
+
+class TransportTimeout(TransportError):
+    """A ``recv`` deadline elapsed with no data.
+
+    Distinct from other ``TransportError``s so pollers (the hub's
+    round-barrier loop) can tell "nothing arrived yet" from "peer is gone":
+    a timeout keeps the peer's deadline clock running, any other transport
+    failure evicts immediately.
+    """
 
 
 class Transport:
@@ -100,7 +113,7 @@ class InMemoryDuplex(Transport):
                     raise TransportError("recv on closed in-memory pipe")
                 wait = None if deadline is None else deadline - time.monotonic()
                 if wait is not None and wait <= 0:
-                    raise TransportError("in-memory recv timeout")
+                    raise TransportTimeout("in-memory recv timeout")
                 self._cond.wait(wait)
             data = self._rx.popleft()
         self.bytes_in += len(data)
@@ -134,7 +147,7 @@ class SocketTransport(Transport):
         try:
             data = self._sock.recv(65536)
         except socket.timeout as e:
-            raise TransportError("socket recv timeout") from e
+            raise TransportTimeout("socket recv timeout") from e
         except OSError as e:
             raise TransportError(f"socket recv failed: {e}") from e
         if not data:
@@ -215,7 +228,7 @@ class SimulatedChannel(Transport):
                 if deadline is not None:
                     remain = deadline - now
                     if remain <= 0:
-                        raise TransportError("simulated channel recv timeout")
+                        raise TransportTimeout("simulated channel recv timeout")
                     wait = remain if wait is None else min(wait, remain)
                 self._cond.wait(wait)
 
@@ -291,7 +304,7 @@ class ReliableTransport(Transport):
         while not self._ready:
             remain = None if deadline is None else deadline - time.monotonic()
             if remain is not None and remain <= 0:
-                raise TransportError("reliable recv timeout")
+                raise TransportTimeout("reliable recv timeout")
             self._handle(self._ch.recv(timeout=remain), want_ack=None)
         data = self._ready.popleft()
         self.bytes_in += len(data)
@@ -317,10 +330,26 @@ class FrameStream:
     Counts protocol frames and their exact framed byte sizes in each
     direction — the measured quantities the endpoint wire ledgers and the
     benchmark's bytes-per-diff gate are built from.
+
+    With ``channel`` set (hub multiplexing, DESIGN.md §10), every outbound
+    frame is wrapped in a ``MSG_MUX`` envelope tagged with that channel id
+    and every inbound frame must arrive so wrapped with the *same* id — a
+    missing envelope or any other id (unknown, stale, zero) raises
+    ``WireError``.  Byte counters keep ledger semantics: ``bytes_out`` /
+    ``bytes_in`` count the *inner* framed bytes (what the protocol ledger
+    sees); the envelope's extra bytes accrue to ``mux_bytes_out`` /
+    ``mux_bytes_in`` — transport-level overhead, exactly like ARQ bytes.
     """
 
-    def __init__(self, transport: Transport, *, recv_timeout: float | None = 60.0):
+    def __init__(
+        self,
+        transport: Transport,
+        *,
+        recv_timeout: float | None = 60.0,
+        channel: int | None = None,
+    ):
         self.transport = transport
+        self.channel = channel
         self._buf = bytearray()
         self._off = 0
         self._recv_timeout = recv_timeout
@@ -328,22 +357,53 @@ class FrameStream:
         self.frames_in = 0
         self.bytes_out = 0
         self.bytes_in = 0
+        self.mux_bytes_out = 0
+        self.mux_bytes_in = 0
 
     def send(self, frame_bytes: bytes) -> None:
         self.frames_out += 1
         self.bytes_out += len(frame_bytes)
+        if self.channel is not None:
+            wrapped = wire_frames.encode_mux(self.channel, frame_bytes)
+            self.mux_bytes_out += len(wrapped) - len(frame_bytes)
+            frame_bytes = wrapped
         self.transport.send(frame_bytes)
 
-    def recv(self) -> tuple[int, bytes]:
-        """Next whole frame as (msg_type, payload)."""
+    def recv(self, timeout: float | None = _UNSET) -> tuple[int, bytes]:
+        """Next whole frame as (msg_type, payload).
+
+        ``timeout`` overrides the stream's default recv timeout for this
+        call only (the hub's per-peer round-barrier deadline) and bounds
+        the WHOLE frame, not each transport chunk — a peer trickling bytes
+        cannot hold the call open past the deadline (partial data stays
+        buffered for the next call).
+        """
+        if timeout is _UNSET:
+            timeout = self._recv_timeout
+        deadline = None if timeout is None else time.monotonic() + timeout
         while True:
             got = split_frame(self._buf, self._off)
             if got is not None:
                 msg_type, payload, self._off = got
-                self.bytes_in += framed_len(len(payload))
-                self.frames_in += 1
                 if self._off == len(self._buf):
                     self._buf.clear()
                     self._off = 0
+                if self.channel is not None:
+                    if msg_type != wire_frames.MSG_MUX:
+                        raise WireError(
+                            "unmultiplexed frame on a channel-tagged stream"
+                        )
+                    outer_len = framed_len(len(payload))
+                    ch, msg_type, payload = wire_frames.decode_mux(payload)
+                    if ch != self.channel:
+                        raise WireError(
+                            f"frame for channel {ch} on channel {self.channel}"
+                        )
+                    self.mux_bytes_in += outer_len - framed_len(len(payload))
+                self.bytes_in += framed_len(len(payload))
+                self.frames_in += 1
                 return msg_type, payload
-            self._buf += self.transport.recv(timeout=self._recv_timeout)
+            remain = None if deadline is None else deadline - time.monotonic()
+            if remain is not None and remain <= 0:
+                raise TransportTimeout("frame recv deadline elapsed")
+            self._buf += self.transport.recv(timeout=remain)

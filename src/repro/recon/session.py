@@ -56,11 +56,23 @@ from repro.kernels.platform import pow2_bucket
 
 @dataclass
 class ReconSession:
-    """One submitted Alice↔Bob pair: its plan (phase 0) + mutable round state."""
+    """One submitted Alice↔Bob pair: its plan (phase 0) + mutable round state.
+
+    ``rnd0`` is the session's global-round offset: a hub peer admitted
+    between global rounds runs its *local* protocol rounds 1, 2, … at global
+    rounds ``rnd0 + 1, rnd0 + 2, …`` (DESIGN.md §10).  All protocol-visible
+    round arithmetic — bin seeds, the round budget, frame round numbers —
+    uses the local round, so a late joiner is byte-identical to a pair that
+    started alone.  ``failed`` excludes a session from all future planning
+    (hub eviction: straggler deadline or peer disconnect) without touching
+    its cohort's device-resident store.
+    """
 
     sid: int
     plan: ProtocolPlan
     state: SessionState
+    rnd0: int = 0
+    failed: bool = False
 
     @property
     def code_key(self) -> tuple[int, int]:
@@ -194,6 +206,8 @@ class SessionBatch:
         self.sessions = sessions
         self.sides = tuple(sides)
         self._stores: dict[tuple[int, int], CohortStore] = {}
+        self.store_builds = 0          # cohort-store builds incl. rebuilds
+        self.store_build_bytes = 0     # cumulative H2D bytes of those builds
 
     # ---- upload-once element store -------------------------------------
 
@@ -201,6 +215,19 @@ class SessionBatch:
         """One-time H2D cost of the stores built so far (0 if none yet) —
         accounting only, never forces a build."""
         return sum(s.h2d_bytes for s in self._stores.values())
+
+    def add_sessions(self, new: list[ReconSession]) -> None:
+        """Admit sessions mid-run (hub peers joining between global rounds).
+
+        Appends to the shared session list and invalidates the cohort
+        stores of the affected code keys: those cohorts rebuild (and
+        re-upload) on next live use with the union of old live and new
+        members.  Untouched cohorts keep their resident stores.
+        """
+        keys = {s.code_key for s in new}
+        self.sessions.extend(new)
+        for key in keys:
+            self._stores.pop(key, None)
 
     def store_for(self, key: tuple[int, int]) -> CohortStore:
         """This code's store, built (and uploaded) on first live use only.
@@ -213,7 +240,7 @@ class SessionBatch:
         if key not in self._stores:
             members = [
                 s for s in self.sessions
-                if s.code_key == key and s.state.active_units()
+                if s.code_key == key and not s.failed and s.state.active_units()
             ]
             self._stores[key] = self._build_store(*key, members)
         return self._stores[key]
@@ -245,20 +272,28 @@ class SessionBatch:
                 cnt=jnp.asarray(cnt), cnt_host=cnt,
                 h2d_bytes=flat.nbytes + start.nbytes + cnt.nbytes,
             )
-        return CohortStore(n=n, t=t, m=bch_code(n, t).m, row_of=row_of, sides=sides)
+        store = CohortStore(n=n, t=t, m=bch_code(n, t).m, row_of=row_of, sides=sides)
+        self.store_builds += 1
+        self.store_build_bytes += store.h2d_bytes
+        return store
 
     # ---- per-round overlay planning ------------------------------------
 
     def plan_round(self, rnd: int) -> list[CohortRoundPlan]:
-        """All cohorts with live work in round ``rnd`` (empty list = all done).
+        """All cohorts with live work in global round ``rnd`` (empty = done).
 
         Liveness is the shared ``core.pbs.session_live`` predicate — the
         same rule both wire endpoints apply, so their cohort plans (and
-        frame schemas) line up without any membership negotiation.
+        frame schemas) line up without any membership negotiation.  Each
+        session is evaluated at its *local* round ``rnd - rnd0`` (non-hub
+        batches have ``rnd0 == 0`` everywhere, so local == global); failed
+        (hub-evicted) sessions never plan again.
         """
         live: dict[tuple[int, int], list] = {}
         for s in self.sessions:
-            if not session_live(s.state, s.plan.cfg, rnd):
+            if s.failed or rnd <= s.rnd0:
+                continue  # evicted, or not yet admitted at this round
+            if not session_live(s.state, s.plan.cfg, rnd - s.rnd0):
                 continue  # budget exhausted (reported failed) or finished
             live.setdefault(s.code_key, []).append((s, s.state.active_units()))
         return [
@@ -283,7 +318,7 @@ class SessionBatch:
         base = 0
         for s, active in members:
             st, plan = s.state, s.plan
-            bin_seed = derive_seed(plan.cfg.seed, 2, rnd)
+            bin_seed = derive_seed(plan.cfg.seed, 2, rnd - s.rnd0)
             assert 0 <= bin_seed < 1 << 32, bin_seed
             removed, added = diff_overlay(st)
             rem_by_grp = _by_group(removed, plan.g, plan.seed_groups)

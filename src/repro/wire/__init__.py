@@ -10,9 +10,12 @@ frame carries, derived from the decoded content (never from session-state
 formulas).  ``repro.net`` endpoints accumulate those measured bits into the
 per-session byte ledger and assert it equals ``core.pbs`` accounting
 bit-for-bit (tests/test_net_endpoints.py, tests/test_recon_batch.py).
+The ``MSG_MUX`` envelope (DESIGN.md §10) channel-tags complete frames for
+the multi-peer hub; its bytes are transport overhead, never ledger bits.
 """
 from .frames import (
     MSG_DHAT,
+    MSG_MUX,
     MSG_ROUND_OUTCOME,
     MSG_ROUND_REPLY,
     MSG_ROUND_SKETCHES,
@@ -23,6 +26,7 @@ from .frames import (
     WireError,
     WireTruncated,
     decode_dhat,
+    decode_mux,
     decode_round_outcome,
     decode_round_reply,
     decode_round_sketches,
@@ -30,6 +34,7 @@ from .frames import (
     decode_verify,
     decode_verify_ack,
     encode_dhat,
+    encode_mux,
     encode_round_outcome,
     encode_round_reply,
     encode_round_sketches,
@@ -37,6 +42,7 @@ from .frames import (
     encode_verify,
     encode_verify_ack,
     frame,
+    mux_overhead_bytes,
     reply_ledger_bits,
     sketches_ledger_bits,
     split_frame,
@@ -45,6 +51,7 @@ from .varint import decode_uvarint, encode_uvarint, unzigzag, uvarint_len, zigza
 
 __all__ = [
     "MSG_DHAT",
+    "MSG_MUX",
     "MSG_ROUND_OUTCOME",
     "MSG_ROUND_REPLY",
     "MSG_ROUND_SKETCHES",
@@ -55,6 +62,7 @@ __all__ = [
     "WireError",
     "WireTruncated",
     "decode_dhat",
+    "decode_mux",
     "decode_round_outcome",
     "decode_round_reply",
     "decode_round_sketches",
@@ -63,6 +71,7 @@ __all__ = [
     "decode_verify",
     "decode_verify_ack",
     "encode_dhat",
+    "encode_mux",
     "encode_round_outcome",
     "encode_round_reply",
     "encode_round_sketches",
@@ -71,6 +80,7 @@ __all__ = [
     "encode_verify",
     "encode_verify_ack",
     "frame",
+    "mux_overhead_bytes",
     "reply_ledger_bits",
     "sketches_ledger_bits",
     "split_frame",

@@ -32,6 +32,7 @@ from .varint import (
     decode_uvarint,
     encode_uvarint,
     unzigzag,
+    uvarint_len,
     zigzag,
 )
 
@@ -42,10 +43,11 @@ MSG_ROUND_REPLY = 0x04    # Bob -> Alice: ok flags, positions, XORs, checksums
 MSG_ROUND_OUTCOME = 0x05  # Alice -> Bob: per-unit checksum-settled flags
 MSG_VERIFY = 0x06         # Alice -> Bob: success + c(A xor D_hat) per session
 MSG_VERIFY_ACK = 0x07     # Bob -> Alice: per-session verification verdicts
+MSG_MUX = 0x08            # either direction: channel-tagged envelope (hub)
 
 _KNOWN = frozenset(
     (MSG_TOW_SKETCH, MSG_DHAT, MSG_ROUND_SKETCHES, MSG_ROUND_REPLY,
-     MSG_ROUND_OUTCOME, MSG_VERIFY, MSG_VERIFY_ACK)
+     MSG_ROUND_OUTCOME, MSG_VERIFY, MSG_VERIFY_ACK, MSG_MUX)
 )
 
 KEY_BITS = 32  # element keys are 32-bit (core.pbs.KEY_BITS)
@@ -80,6 +82,55 @@ def split_frame(buf: bytes, off: int = 0):
     if msg_type not in _KNOWN:
         raise WireError(f"unknown message type 0x{msg_type:02x}")
     return msg_type, buf[hdr_end + 1 : hdr_end + body_len], hdr_end + body_len
+
+
+# ---------------------------------------------------------------------------
+# Multiplexing envelope (repro.net.hub, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def encode_mux(channel: int, inner: bytes) -> bytes:
+    """Wrap one complete frame in a channel-tagged envelope.
+
+    Payload: ``uvarint(channel) || inner frame`` where ``inner`` is a full
+    frame (envelope + type + payload) — the hub demultiplexes N peers by
+    this tag and rejects frames whose tag is not the peer's assigned
+    channel.  Channel 0 is reserved (never assigned), so a zero tag is
+    always a protocol error at the hub.
+    """
+    if channel < 1:
+        raise WireError(f"mux channel {channel} out of range (must be >= 1)")
+    return frame(MSG_MUX, encode_uvarint(channel) + inner)
+
+
+def decode_mux(payload: bytes) -> tuple[int, int, bytes]:
+    """(channel, inner msg_type, inner payload); strict.
+
+    The inner frame must parse completely (no trailing bytes) and must not
+    itself be a mux envelope — nesting is rejected.
+    """
+    channel, off = decode_uvarint(payload)
+    if channel < 1:
+        raise WireError(f"mux channel {channel} out of range (must be >= 1)")
+    got = split_frame(payload, off)
+    if got is None:
+        raise WireTruncated("mux envelope holds an incomplete inner frame")
+    msg_type, inner_payload, end = got
+    if msg_type == MSG_MUX:
+        raise WireError("nested mux envelope")
+    if end != len(payload):
+        raise WireError(
+            f"{len(payload) - end} trailing bytes after mux inner frame"
+        )
+    return channel, msg_type, inner_payload
+
+
+def mux_overhead_bytes(channel: int, inner_len: int) -> int:
+    """Envelope bytes ``encode_mux`` adds on top of the inner frame — the
+    transport-level cost of hub multiplexing (excluded from the protocol
+    ledger exactly like ARQ overhead)."""
+    payload_len = uvarint_len(channel) + inner_len
+    return uvarint_len(1 + payload_len) + 1 + uvarint_len(channel)
 
 
 # ---------------------------------------------------------------------------

@@ -33,6 +33,7 @@ def _run_steps(compression, steps=8):
     return losses, opt
 
 
+@pytest.mark.slow  # needs the model-scaffold jax tier (jax.sharding.AxisType)
 def test_compression_converges_and_feedback_bounded():
     dense, _ = _run_steps(None)
     comp, opt = _run_steps(CCFG)

@@ -9,6 +9,8 @@ import sys
 
 import numpy as np
 import pytest
+pytestmark = pytest.mark.slow  # distribution tier: subprocess mesh sweeps, full-suite job only
+
 
 SCRIPT = r"""
 import os, sys, json

@@ -1,0 +1,360 @@
+"""Fault injection for repro.net.transport and the hub's failure paths.
+
+Covers the ARQ state machine under adversarial datagrams (duplicates,
+stale ACKs), every transport's typed timeout path, endpoint behavior when
+the peer closes mid-protocol (a clean ``TransportError``, never a hang),
+and the hub's per-peer eviction when one of N peers drops at each protocol
+phase while a healthy neighbor completes byte-identically.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.pbs import PBSConfig, reconcile, true_diff
+from repro.core.simdata import make_pair
+from repro.net import (
+    AliceEndpoint,
+    BobEndpoint,
+    HubEndpoint,
+    InMemoryDuplex,
+    ReliableTransport,
+    SimulatedChannel,
+    Transport,
+    TransportError,
+    TransportTimeout,
+    run_hub,
+    run_pair,
+)
+from repro.net.transport import FrameStream
+from repro.wire.varint import decode_uvarint, encode_uvarint
+
+_DATA, _ACK = 0x00, 0x01
+
+
+def _dgram(kind: int, seq: int, payload: bytes = b"") -> bytes:
+    return bytes((kind,)) + encode_uvarint(seq) + payload
+
+
+def _parse(dgram: bytes):
+    kind = dgram[0]
+    seq, off = decode_uvarint(dgram, 1)
+    return kind, seq, dgram[off:]
+
+
+# ---------------------------------------------------------------------------
+# ReliableTransport vs adversarial datagrams
+# ---------------------------------------------------------------------------
+
+
+def test_duplicated_data_datagrams_are_suppressed_and_reacked():
+    raw, side = InMemoryDuplex.pair()
+    rt = ReliableTransport(side, timeout=0.05)
+    raw.send(_dgram(_DATA, 0, b"hello"))
+    raw.send(_dgram(_DATA, 0, b"hello"))      # duplicate of the same seq
+    assert rt.recv(timeout=0.5) == b"hello"
+    # the duplicate is suppressed: nothing further is delivered
+    with pytest.raises(TransportTimeout):
+        rt.recv(timeout=0.2)
+    # but BOTH copies were ACKed (the dupe re-ACK is what heals a lost ack)
+    acks = [_parse(raw.recv(timeout=0.5)) for _ in range(2)]
+    assert acks == [(_ACK, 0, b""), (_ACK, 0, b"")]
+
+
+def test_stale_data_seq_after_progress_is_reacked_not_delivered():
+    raw, side = InMemoryDuplex.pair()
+    rt = ReliableTransport(side, timeout=0.05)
+    raw.send(_dgram(_DATA, 0, b"one"))
+    raw.send(_dgram(_DATA, 1, b"two"))
+    assert rt.recv(timeout=0.5) == b"one"
+    assert rt.recv(timeout=0.5) == b"two"
+    raw.send(_dgram(_DATA, 0, b"one"))        # stale retransmit from the past
+    with pytest.raises(TransportTimeout):
+        rt.recv(timeout=0.2)
+    kinds = [_parse(raw.recv(timeout=0.5)) for _ in range(3)]
+    assert kinds == [(_ACK, 0, b""), (_ACK, 1, b""), (_ACK, 0, b"")]
+
+
+def test_stale_ack_does_not_complete_send():
+    """An ACK for the wrong sequence number must not satisfy an in-flight
+    send — the sender keeps retransmitting until the *matching* ACK."""
+    raw, side = InMemoryDuplex.pair()
+    rt = ReliableTransport(side, timeout=0.05, max_retries=50)
+    done = threading.Event()
+
+    def _send():
+        rt.send(b"payload")
+        done.set()
+
+    th = threading.Thread(target=_send, daemon=True)
+    th.start()
+    kind, seq, payload = _parse(raw.recv(timeout=1.0))
+    assert (kind, seq, payload) == (_DATA, 0, b"payload")
+    raw.send(_dgram(_ACK, 99))                # stale/foreign ack: ignored
+    # the sender must retransmit (stale ack did not complete the send)
+    kind2, seq2, _ = _parse(raw.recv(timeout=1.0))
+    assert (kind2, seq2) == (_DATA, 0)
+    assert not done.is_set()
+    raw.send(_dgram(_ACK, 0))                 # the genuine ack
+    assert done.wait(1.0)
+    th.join(1.0)
+    assert rt.retransmits >= 1
+
+
+def test_ack_exhaustion_raises_transport_error():
+    raw, side = InMemoryDuplex.pair()
+    rt = ReliableTransport(side, timeout=0.01, max_retries=3)
+    with pytest.raises(TransportError, match="no ACK"):
+        rt.send(b"into the void")
+
+
+# ---------------------------------------------------------------------------
+# typed timeout paths
+# ---------------------------------------------------------------------------
+
+
+def test_recv_timeouts_are_typed_across_transports():
+    mem, _ = InMemoryDuplex.pair()
+    with pytest.raises(TransportTimeout):
+        mem.recv(timeout=0.05)
+
+    ch, _ = SimulatedChannel.pair(latency=0.0)
+    with pytest.raises(TransportTimeout):
+        ch.recv(timeout=0.05)
+
+    raw, side = InMemoryDuplex.pair()
+    rt = ReliableTransport(side, timeout=0.05)
+    with pytest.raises(TransportTimeout):
+        rt.recv(timeout=0.05)
+
+    # FrameStream propagates the typed timeout (the hub's poll signal)
+    stream = FrameStream(InMemoryDuplex.pair()[0])
+    with pytest.raises(TransportTimeout):
+        stream.recv(timeout=0.05)
+
+
+class _Trickle(Transport):
+    """Delivers a frame one byte at a time with a delay per chunk — a peer
+    trying to hold a recv open forever by always sending *something*."""
+
+    def __init__(self, frame_bytes: bytes, delay: float):
+        super().__init__()
+        self._data = frame_bytes
+        self._pos = 0
+        self._delay = delay
+
+    def send(self, data: bytes) -> None:
+        pass
+
+    def recv(self, timeout: float | None = None) -> bytes:
+        import time as _time
+
+        if timeout is not None and timeout < self._delay:
+            _time.sleep(max(0.0, timeout))
+            raise TransportTimeout("trickle")
+        _time.sleep(self._delay)
+        b = self._data[self._pos : self._pos + 1]
+        self._pos += 1
+        return b
+
+
+def test_frame_recv_deadline_bounds_whole_frame_not_chunks():
+    """A trickling peer (1 byte per 30ms, forever) must not hold
+    FrameStream.recv open past its deadline — the timeout bounds the whole
+    frame, and partial data stays buffered."""
+    import time as _time
+    from repro.wire import frames as wf
+
+    frame = wf.encode_dhat(1 << 40)           # several bytes long
+    stream = FrameStream(_Trickle(frame, delay=0.03))
+    t0 = _time.monotonic()
+    with pytest.raises(TransportTimeout):
+        stream.recv(timeout=0.1)
+    assert _time.monotonic() - t0 < 0.5       # not one-timeout-per-chunk
+
+
+def test_closed_pipe_is_not_a_timeout():
+    a, b = InMemoryDuplex.pair()
+    b.close()
+    with pytest.raises(TransportError) as ei:
+        a.recv(timeout=0.5)
+    assert not isinstance(ei.value, TransportTimeout)
+
+
+# ---------------------------------------------------------------------------
+# close mid-protocol: errors, never hangs
+# ---------------------------------------------------------------------------
+
+
+class _CloseAfter(Transport):
+    """Pass through ``n_sends`` frames, then close and fail."""
+
+    def __init__(self, inner: Transport, n_sends: int):
+        super().__init__()
+        self._inner = inner
+        self._left = n_sends
+
+    def send(self, data: bytes) -> None:
+        if self._left <= 0:
+            self._inner.close()
+            raise TransportError("simulated mid-protocol disconnect")
+        self._left -= 1
+        self._inner.send(data)
+
+    def recv(self, timeout: float | None = None) -> bytes:
+        return self._inner.recv(timeout)
+
+    def close(self) -> None:
+        self._inner.close()
+
+    @property
+    def bytes_out(self) -> int:  # type: ignore[override]
+        return self._inner.bytes_out
+
+    @property
+    def bytes_in(self) -> int:  # type: ignore[override]
+        return self._inner.bytes_in
+
+    @bytes_out.setter
+    def bytes_out(self, v):
+        pass
+
+    @bytes_in.setter
+    def bytes_in(self, v):
+        pass
+
+
+def test_close_mid_serve_raises_transport_error_not_hang():
+    """Alice vanishing after her round-1 sketches must surface as a
+    TransportError from run_pair on both sides' plumbing — not a hang."""
+    a, b = make_pair(600, 6, np.random.default_rng(3))
+    ta, tb = InMemoryDuplex.pair()
+    alice = AliceEndpoint(_CloseAfter(ta, n_sends=1))
+    bob = BobEndpoint(tb)
+    alice.submit(a, cfg=PBSConfig(seed=2), d_known=6)
+    bob.submit(b, cfg=PBSConfig(seed=2), d_known=6)
+    with pytest.raises(TransportError):
+        run_pair(alice, bob)
+
+
+# ---------------------------------------------------------------------------
+# hub: one of N peers drops at each protocol phase
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "mode,n_sends,phase",
+    [
+        ("known", 0, "before round 1"),
+        ("known", 1, "after round-1 sketches, before outcome"),
+        ("known", 2, "after round 1, at the verify exchange"),
+        ("est", 0, "before the phase-0 ToW sketch"),
+        ("est", 1, "after phase 0, before round 1"),
+    ],
+)
+def test_hub_peer_drop_at_each_phase(mode, n_sends, phase):
+    """Whatever phase a peer vanishes in, the hub fails exactly that peer
+    with a TransportError outcome and the healthy neighbor reconciles
+    byte-identically to the oracle."""
+    hub = HubEndpoint(recv_deadline=15.0)
+
+    ah, bh = make_pair(600, 6, np.random.default_rng(11))
+    cfg_h = PBSConfig(seed=21)
+    th_a, th_b = InMemoryDuplex.pair()
+    ch_ok = hub.add_peer(th_b, label="healthy")
+    hub.submit(ch_ok, bh, cfg=cfg_h, d_known=6)
+    ep_ok = AliceEndpoint(th_a, channel=ch_ok)
+    ep_ok.submit(ah, cfg=cfg_h, d_known=6)
+
+    ad, bd = make_pair(600, 5, np.random.default_rng(13))
+    cfg_d = PBSConfig(seed=31)
+    td_a, td_b = InMemoryDuplex.pair()
+    ch_bad = hub.add_peer(td_b, label="dropper")
+    dk = 5 if mode == "known" else None
+    hub.submit(ch_bad, bd, cfg=cfg_d, d_known=dk)
+    ep_bad = AliceEndpoint(_CloseAfter(td_a, n_sends=n_sends), channel=ch_bad)
+    ep_bad.submit(ad, cfg=cfg_d, d_known=dk)
+
+    outcomes, results, errors = run_hub(hub, {ch_ok: ep_ok, ch_bad: ep_bad})
+
+    exp = reconcile(ah, bh, cfg_h, d_known=6)
+    got = results[ch_ok][0]
+    assert got.diff == exp.diff == true_diff(ah, bh), phase
+    assert got.bytes_per_round == exp.bytes_per_round, phase
+    assert outcomes[ch_ok].ok and outcomes[ch_ok].verified == [True], phase
+
+    assert not outcomes[ch_bad].ok, phase
+    assert isinstance(outcomes[ch_bad].error, TransportError), phase
+    assert all(s.failed for s in outcomes[ch_bad].sessions), phase
+    assert isinstance(errors.get(ch_bad), TransportError), phase
+    assert ch_bad in hub.stale_channels
+
+
+def test_hub_admission_straggler_does_not_stall_other_joiners():
+    """A silent estimator joiner must not delay the other peers' phase-0
+    admission: the ToW exchanges are polled round-robin, so the healthy
+    estimator peer completes while the silent one eats only its own
+    deadline."""
+    hub = HubEndpoint(recv_deadline=2.0)
+
+    # silent estimator peer: registered FIRST, never sends its ToW sketch
+    ts_a, ts_b = InMemoryDuplex.pair()
+    ch_silent = hub.add_peer(ts_b, label="silent-est")
+    a0, b0 = make_pair(500, 5, np.random.default_rng(29))
+    hub.submit(ch_silent, b0, cfg=PBSConfig(seed=51))
+
+    # healthy estimator peer registered after it
+    ah, bh = make_pair(700, 9, np.random.default_rng(31))
+    cfg_h = PBSConfig(seed=53)
+    th_a, th_b = InMemoryDuplex.pair()
+    ch_ok = hub.add_peer(th_b, label="healthy-est")
+    hub.submit(ch_ok, bh, cfg=cfg_h)
+    ep_ok = AliceEndpoint(th_a, channel=ch_ok)
+    ep_ok.submit(ah, cfg=cfg_h)
+
+    outcomes, results, errors = run_hub(hub, {ch_ok: ep_ok})
+
+    exp = reconcile(ah, bh, cfg_h)
+    got = results[ch_ok][0]
+    assert got.diff == exp.diff == true_diff(ah, bh)
+    assert got.bytes_per_round == exp.bytes_per_round
+    assert got.estimator_bytes == exp.estimator_bytes
+    assert outcomes[ch_ok].ok and outcomes[ch_ok].verified == [True]
+
+    assert not outcomes[ch_silent].ok
+    assert isinstance(outcomes[ch_silent].error, TransportError)
+    assert "admission deadline" in str(outcomes[ch_silent].error)
+
+
+def test_hub_straggler_on_lossy_simulated_channel():
+    """A peer behind a 100%-loss SimulatedChannel (from round 1 on) is a
+    straggler: the hub's barrier deadline evicts it; the in-memory peer is
+    untouched."""
+    hub = HubEndpoint(recv_deadline=2.0)
+
+    ah, bh = make_pair(600, 6, np.random.default_rng(19))
+    cfg_h = PBSConfig(seed=41)
+    th_a, th_b = InMemoryDuplex.pair()
+    ch_ok = hub.add_peer(th_b)
+    hub.submit(ch_ok, bh, cfg=cfg_h, d_known=6)
+    ep_ok = AliceEndpoint(th_a, channel=ch_ok)
+    ep_ok.submit(ah, cfg=cfg_h, d_known=6)
+
+    # the straggler's channel drops EVERY datagram: its ARQ retransmits
+    # pointlessly; from the hub's side the peer is silent
+    ca, cb = SimulatedChannel.pair(loss=1.0, seed=7)
+    rt_hub = ReliableTransport(cb, timeout=0.02, max_retries=5)
+    ch_slow = hub.add_peer(rt_hub, label="straggler")
+    a2, b2 = make_pair(600, 5, np.random.default_rng(23))
+    hub.submit(ch_slow, b2, cfg=PBSConfig(seed=43), d_known=5)
+
+    outcomes, results, errors = run_hub(hub, {ch_ok: ep_ok})
+
+    exp = reconcile(ah, bh, cfg_h, d_known=6)
+    assert results[ch_ok][0].diff == exp.diff
+    assert results[ch_ok][0].bytes_per_round == exp.bytes_per_round
+    assert outcomes[ch_ok].ok
+
+    assert not outcomes[ch_slow].ok
+    assert isinstance(outcomes[ch_slow].error, TransportError)
+    assert "deadline" in str(outcomes[ch_slow].error)

@@ -35,6 +35,7 @@ def test_dynamic_quantization_relative_error(scale_exp, spread, signed, seed):
     assert np.all(rel[covered] < 0.07), rel[covered].max()
 
 
+@pytest.mark.slow  # needs the model-scaffold jax tier (jax.sharding.AxisType)
 def test_int8_states_track_fp32():
     mesh = jax.make_mesh((1, 1), ("data", "model"),
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,299 @@
+"""Property-based protocol conformance: wire paths vs the core.pbs oracle.
+
+Three layers of conformance, all anchored on ``core.pbs.reconcile``:
+
+1. **generated set pairs through the real wire** — random |A △ B|,
+   duplicate-free sets, random seeds/configs driven through ``run_pair``
+   and through a ``HubEndpoint`` serving several peers at once; per-session
+   results and per-round *measured* wire ledgers must be byte-identical to
+   the oracle (the endpoints additionally self-check measured == Formula
+   (1) on every frame, so a pass here pins the whole codec stack);
+2. **stateful traces over the shared round state machine** — random
+   (ok, checksum-settled) trace matrices pushed through Alice's
+   ``apply_round_outcomes`` and Bob's frame-mirror rule
+   (``queue_split`` + done flags) on two independent states: the unit
+   queues must evolve identically (uid-for-uid, filter-for-filter), the
+   ``session_live`` predicate must agree on both sides every round, and
+   budget exhaustion must land on the same round;
+3. **hypothesis-generated variants** of both (skipped cleanly when
+   hypothesis is not installed; the seeded versions above always run).
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.pbs import (
+    PBSConfig,
+    apply_round_outcomes,
+    plan_from_d_known,
+    new_session_state,
+    queue_split,
+    reconcile,
+    session_live,
+    true_diff,
+)
+from repro.core.simdata import make_pair, make_pair_two_sided, random_set
+from repro.net import (
+    AliceEndpoint,
+    BobEndpoint,
+    HubEndpoint,
+    InMemoryDuplex,
+    run_hub,
+    run_pair,
+)
+
+_EMPTY = np.zeros(0, dtype=np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# generators
+# ---------------------------------------------------------------------------
+
+
+def _gen_case(rng: np.random.Generator):
+    """One random session: duplicate-free sets, random d, random config."""
+    size = int(rng.integers(300, 1200))
+    kind = rng.integers(0, 3)
+    if kind == 0:
+        d = int(rng.integers(1, 30))
+        a, b = make_pair(size, d, rng)
+    elif kind == 1:
+        da, db = int(rng.integers(1, 15)), int(rng.integers(1, 15))
+        a, b = make_pair_two_sided(size, da, db, rng)
+        d = da + db
+    else:                       # fully independent draws (random overlap)
+        base = random_set(size + 20, rng)
+        a = base[: size]
+        b = np.unique(np.concatenate([a[: size - 10], base[size:]]))
+        d = len(true_diff(a, b))
+    cfg = PBSConfig(seed=int(rng.integers(0, 1 << 16)))
+    d_known = None if rng.random() < 0.3 else max(1, d)
+    return a, b, cfg, d_known
+
+
+def _assert_oracle(got, a, b, cfg, d_known):
+    exp = reconcile(a, b, cfg, d_known=d_known)
+    assert got.diff == exp.diff
+    assert got.bytes_per_round == exp.bytes_per_round
+    assert got.bytes_sent == exp.bytes_sent
+    assert got.estimator_bytes == exp.estimator_bytes
+    assert got.rounds == exp.rounds
+    assert got.success == exp.success
+    assert got.decode_failures == exp.decode_failures
+    assert got.fake_rejections == exp.fake_rejections
+    return exp
+
+
+# ---------------------------------------------------------------------------
+# 1) generated pairs through the real wire (always run, seeded)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [101, 202])
+def test_generated_sessions_pair_path_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    cases = [_gen_case(rng) for _ in range(3)]
+    ta, tb = InMemoryDuplex.pair()
+    alice, bob = AliceEndpoint(ta), BobEndpoint(tb)
+    for a, b, cfg, dk in cases:
+        alice.submit(a, cfg=cfg, d_known=dk)
+        bob.submit(b, cfg=cfg, d_known=dk)
+    results = run_pair(alice, bob)
+    for sid, (a, b, cfg, dk) in enumerate(cases):
+        _assert_oracle(results[sid], a, b, cfg, dk)
+    assert alice.verified == bob.verified
+
+
+@pytest.mark.parametrize("seed", [303])
+def test_generated_sessions_hub_path_matches_oracle(seed):
+    """The same generated workload, but split across hub peers — per-peer
+    results and measured ledgers must still be byte-identical, with the
+    encode/decode launches fused across peers."""
+    rng = np.random.default_rng(seed)
+    hub = HubEndpoint(recv_deadline=30.0)
+    alices, cases = {}, {}
+    for _ in range(3):
+        a, b, cfg, dk = _gen_case(rng)
+        ta, tb = InMemoryDuplex.pair()
+        ch = hub.add_peer(tb)
+        hub.submit(ch, b, cfg=cfg, d_known=dk)
+        ep = AliceEndpoint(ta, channel=ch)
+        ep.submit(a, cfg=cfg, d_known=dk)
+        alices[ch] = ep
+        cases[ch] = (a, b, cfg, dk)
+    outcomes, results, errors = run_hub(hub, alices)
+    assert not errors
+    for ch, (a, b, cfg, dk) in cases.items():
+        exp = _assert_oracle(results[ch][0], a, b, cfg, dk)
+        assert outcomes[ch].ok
+        assert outcomes[ch].verified == [exp.success]
+    st_ = hub.stats
+    assert st_["kernel_launches"] == 2 * st_["cohort_rounds"]
+    assert st_["store_uploads"] == len(
+        {s.code_key for o in outcomes.values() for s in o.sessions}
+    )
+
+
+# ---------------------------------------------------------------------------
+# 2) stateful traces over queue_split / apply_round_outcomes
+# ---------------------------------------------------------------------------
+
+
+def _queue_fingerprint(st_):
+    return [(u.uid, u.group, u.filters, u.done) for u in st_.units]
+
+
+def _run_trace(rng: np.random.Generator, cfg: PBSConfig, d: int):
+    """Drive Alice's state machine and Bob's frame-mirror rule with one
+    random (ok, checksum-settled) trace; their queues must stay identical.
+
+    Alice applies the full ``apply_round_outcomes`` (empty decoded
+    positions, checksums forced equal or unequal per the trace); Bob
+    applies exactly what ``_handle_outcome`` does with the wire-visible
+    (ok, done) — decode failure -> the same deterministic ``queue_split``,
+    done flag -> retire the unit.
+    """
+    plan = plan_from_d_known(cfg, d)
+    st_a = new_session_state(_EMPTY, _EMPTY, plan)
+    st_b = new_session_state(_EMPTY, _EMPTY, plan)
+    n = plan.n
+
+    budget_hit_round = None
+    for rnd in range(1, cfg.max_rounds + 3):
+        live_a = session_live(st_a, cfg, rnd)
+        live_b = session_live(st_b, cfg, rnd)
+        assert live_a == live_b, f"liveness diverged at round {rnd}"
+        if not live_a:
+            budget_hit_round = rnd
+            break
+        active_a = st_a.active_units()
+        active_b = st_b.active_units()
+        k = len(active_a)
+        ok = rng.random(k) > 0.3          # ~30% simulated BCH overloads
+        settle = rng.random(k) > 0.4      # ~60% of decodes settle checksums
+
+        csum_a = np.zeros(k, dtype=np.uint64)
+        csum_b = np.where(settle, 0, 1).astype(np.uint64)  # equal iff settle
+        _, done = apply_round_outcomes(
+            st_a, active_a, ok, [np.zeros(0, dtype=np.int64)] * k,
+            np.zeros((k, n), np.uint32), np.zeros((k, n), np.uint32),
+            csum_a, csum_b, plan=plan,
+            bin_seed=0, rnd=rnd,
+        )
+        # the Bob mirror: only (ok, done) crossed the wire
+        for slot, u in enumerate(active_b):
+            if not ok[slot]:
+                queue_split(st_b, u, rnd, cfg.seed)
+            elif done[slot]:
+                u.done = True
+        st_a.rounds = st_b.rounds = rnd
+
+        assert _queue_fingerprint(st_a) == _queue_fingerprint(st_b), (
+            f"unit queues diverged at round {rnd}"
+        )
+        # settled units are exactly the trace's (ok and settle) slots
+        assert done == list(ok & settle)
+    return budget_hit_round, st_a
+
+
+@pytest.mark.parametrize("seed", [7, 42, 1234])
+def test_trace_alice_and_bob_mirrors_stay_identical(seed):
+    rng = np.random.default_rng(seed)
+    cfg = PBSConfig(seed=seed, n_override=127, t_override=5, g_override=4,
+                    max_rounds=6)
+    budget_round, st_a = _run_trace(rng, cfg, d=20)
+    assert budget_round is not None      # trace always terminates
+    # split bookkeeping: uids unique and consecutive from g
+    uids = [u.uid for u in st_a.units]
+    assert len(set(uids)) == len(uids)
+    assert sorted(uids) == list(range(len(uids)))
+    # every split child carries a filter chain; every split appended
+    # exactly 3 children, so the queue length pins the failure counter
+    for u in st_a.units:
+        if u.uid >= cfg.g_override:      # a split descendant
+            assert len(u.filters) >= 1
+    assert len(st_a.units) == cfg.g_override + 3 * st_a.decode_failures
+
+
+def test_trace_budget_exhaustion_ordering():
+    """A state whose trace never settles must go dead on the same round on
+    both sides: max_rounds + 1, with unreconciled units still queued."""
+    cfg = PBSConfig(seed=1, n_override=63, t_override=2, g_override=2,
+                    max_rounds=3)
+    plan = plan_from_d_known(cfg, 6)
+    st_a = new_session_state(_EMPTY, _EMPTY, plan)
+    st_b = new_session_state(_EMPTY, _EMPTY, plan)
+    for rnd in range(1, cfg.max_rounds + 1):
+        assert session_live(st_a, cfg, rnd) and session_live(st_b, cfg, rnd)
+        active = st_a.active_units()
+        k = len(active)
+        ok = np.zeros(k, dtype=bool)      # every decode overloads
+        _, done = apply_round_outcomes(
+            st_a, active, ok, [np.zeros(0, dtype=np.int64)] * k,
+            np.zeros((k, plan.n), np.uint32), np.zeros((k, plan.n), np.uint32),
+            np.zeros(k, np.uint64), np.zeros(k, np.uint64),
+            plan=plan, bin_seed=0, rnd=rnd,
+        )
+        assert done == [False] * k
+        for slot, u in enumerate(st_b.active_units()):
+            queue_split(st_b, u, rnd, cfg.seed)
+    # budget exhausted on round max_rounds + 1, identically
+    assert not session_live(st_a, cfg, cfg.max_rounds + 1)
+    assert not session_live(st_b, cfg, cfg.max_rounds + 1)
+    assert st_a.active_units() and st_b.active_units()   # work left undone
+    assert _queue_fingerprint(st_a) == _queue_fingerprint(st_b)
+    # every overload tripled the queue: 2 -> 6 -> 18 -> 54 active leaves
+    assert len(st_a.active_units()) == 2 * 3 ** cfg.max_rounds
+
+
+# ---------------------------------------------------------------------------
+# 3) hypothesis variants (collected as skips when hypothesis is missing)
+# ---------------------------------------------------------------------------
+
+
+def _pair_roundtrip(seed: int, d: int, size: int, know_d: bool):
+    """One generated session through the real wire vs the oracle — the
+    shared body of the seeded and the hypothesis-driven variants."""
+    d = max(1, min(d, size // 4))
+    rng = np.random.default_rng(seed)
+    a, b = make_pair(max(size, 4 * d), d, rng)
+    cfg = PBSConfig(seed=seed & 0xFFFF)
+    dk = d if know_d else None
+    ta, tb = InMemoryDuplex.pair()
+    alice, bob = AliceEndpoint(ta), BobEndpoint(tb)
+    alice.submit(a, cfg=cfg, d_known=dk)
+    bob.submit(b, cfg=cfg, d_known=dk)
+    results = run_pair(alice, bob)
+    _assert_oracle(results[0], a, b, cfg, dk)
+
+
+@pytest.mark.parametrize(
+    "seed,d,size,know_d", [(5150, 7, 500, True), (9091, 33, 700, False)]
+)
+def test_seeded_pair_roundtrip(seed, d, size, know_d):
+    _pair_roundtrip(seed, d, size, know_d)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    d=st.integers(min_value=1, max_value=40),
+    size=st.integers(min_value=200, max_value=900),
+    know_d=st.booleans(),
+)
+def test_hypothesis_pair_matches_oracle(seed, d, size, know_d):
+    _pair_roundtrip(seed, d, size, know_d)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    g=st.integers(min_value=1, max_value=6),
+    max_rounds=st.integers(min_value=1, max_value=8),
+)
+def test_hypothesis_trace_mirrors(seed, g, max_rounds):
+    rng = np.random.default_rng(seed)
+    cfg = PBSConfig(seed=seed & 0xFFFF, n_override=63, t_override=3,
+                    g_override=g, max_rounds=max_rounds)
+    budget_round, _ = _run_trace(rng, cfg, d=3 * g)
+    assert budget_round is not None and budget_round <= max_rounds + 1

@@ -9,6 +9,8 @@ from repro.configs import get_smoke_config
 from repro.optim import OptConfig
 from repro.serve import make_serve_fns
 from repro.train import init_train_state, make_train_step
+pytestmark = pytest.mark.slow  # serve-scaffold tier: heavy decode sweeps, full-suite job only
+
 
 B, T, ENC = 2, 32, 32
 

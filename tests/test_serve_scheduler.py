@@ -7,6 +7,8 @@ from repro.configs import get_smoke_config
 from repro.optim import OptConfig
 from repro.serve.scheduler import BatchScheduler, Request
 from repro.train import init_train_state, make_train_step
+pytestmark = pytest.mark.slow  # serve-scaffold tier: heavy decode sweeps, full-suite job only
+
 
 
 @pytest.fixture(scope="module")

@@ -14,6 +14,8 @@ from repro.serve import make_serve_fns
 from repro.train import init_train_state, make_train_step
 
 B, T, ENC = 2, 64, 32
+pytestmark = pytest.mark.slow  # model-scaffold tier: multi-minute per-arch sweeps, full-suite job only
+
 
 
 @pytest.fixture(scope="module")

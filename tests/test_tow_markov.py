@@ -78,6 +78,68 @@ def test_transition_matrix_vs_monte_carlo():
     assert np.abs(emp - M[x, :14]).max() < 0.01
 
 
+def _simulate_bad_ball_chain(rng, n: int, x: int, r: int) -> bool:
+    """One App. E chain trajectory: throw the bad balls into n bins each
+    round; balls sharing a bin stay bad.  True iff zero bad balls within r
+    rounds — the event ``success_prob`` integrates analytically."""
+    state = x
+    for _ in range(r):
+        if state == 0:
+            return True
+        bins = rng.integers(0, n, size=state)
+        _, counts = np.unique(bins, return_counts=True)
+        state = int(counts[counts > 1].sum())
+    return state == 0
+
+
+def test_success_prob_vs_monte_carlo():
+    """Pr[x ⇝ 0 within r rounds] from the App. E dynamic program must match
+    a seeded chain simulation for small (n, t, x, r)."""
+    rng = np.random.default_rng(11)
+    n, t, trials = 63, 5, 3000
+    for x in (2, 4, 5):
+        for r in (1, 2, 3):
+            analytic = markov.success_prob(n, t, x, r)
+            hits = sum(
+                _simulate_bad_ball_chain(rng, n, x, r) for _ in range(trials)
+            )
+            mc = hits / trials
+            se = np.sqrt(max(analytic * (1 - analytic), 1e-4) / trials)
+            assert abs(mc - analytic) < max(4 * se, 0.02), (x, r, mc, analytic)
+
+
+def test_alpha_and_overall_bound_vs_monte_carlo():
+    """App. F's per-group success probability alpha (X ~ Binomial(d, 1/g),
+    truncated at x > t) and the overall lower bound pinned by simulation."""
+    rng = np.random.default_rng(13)
+    n, t, d, g, r, trials = 63, 5, 12, 3, 2, 4000
+    analytic = markov.alpha(n, t, d, g, r, convention="truncate")
+    hits = 0
+    for _ in range(trials):
+        x = int(rng.binomial(d, 1.0 / g))
+        if x > t:
+            continue            # the paper's truncation: x > t counts failed
+        hits += _simulate_bad_ball_chain(rng, n, x, r)
+    mc = hits / trials
+    se = np.sqrt(max(analytic * (1 - analytic), 1e-4) / trials)
+    assert abs(mc - analytic) < max(4 * se, 0.02), (mc, analytic)
+    # the bound is exactly 1 - 2(1 - alpha^g) of that alpha (App. F / [29])
+    bound = markov.overall_lower_bound(n, t, d, g, r, convention="truncate")
+    assert abs(bound - (1.0 - 2.0 * (1.0 - analytic**g))) < 1e-12
+    # and the simulated alpha reproduces it to MC accuracy
+    assert abs(bound - (1.0 - 2.0 * (1.0 - mc**g))) < 0.08
+
+
+def test_success_prob_degenerate_and_truncation_conventions():
+    """x = 0 is certain, x > t is impossible under the paper's convention,
+    and one analytic cross-check: success within 1 round == isolation."""
+    assert markov.success_prob(63, 5, 0, 3) == 1.0
+    assert markov.success_prob(63, 5, 6, 3) == 0.0
+    n, x = 63, 4
+    iso = np.prod([(n - k) / n for k in range(x)])
+    assert abs(markov.success_prob(n, 5, x, 1) - iso) < 1e-12
+
+
 def test_paper_ideal_case_probability():
     """§1.3.1: d=5, n=255 -> ideal case prob 0.96."""
     p = np.prod([(255 - k) / 255 for k in range(5)])

@@ -336,3 +336,38 @@ def test_verify_rejects_wrong_session_count():
         wf.decode_verify(buf, 3)                   # wants more than encoded
     with pytest.raises(WireError):
         wf.decode_verify(buf, 1)                   # leftover bytes
+
+
+# ---------------------------------------------------------------------------
+# mux envelope (hub multiplexing, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("channel", [1, 2, 127, 128, 70000])
+def test_mux_roundtrip_and_overhead(channel):
+    inner = wf.encode_dhat(123456)
+    buf = wf.encode_mux(channel, inner)
+    payload = _unframe(buf, wf.MSG_MUX)
+    ch, msg_type, inner_payload = wf.decode_mux(payload)
+    assert ch == channel and msg_type == wf.MSG_DHAT
+    assert wf.decode_dhat(inner_payload) == 123456
+    assert len(buf) - len(inner) == wf.mux_overhead_bytes(channel, len(inner))
+
+
+def test_mux_rejects_zero_channel_nesting_and_trailing():
+    inner = wf.encode_dhat(7)
+    with pytest.raises(WireError, match="channel 0"):
+        wf.encode_mux(0, inner)
+    # nested mux envelopes are rejected
+    nested = wf.encode_mux(3, wf.encode_mux(2, inner))
+    with pytest.raises(WireError, match="nested"):
+        wf.decode_mux(_unframe(nested, wf.MSG_MUX))
+    # trailing bytes after the inner frame are rejected
+    buf = wf.encode_mux(3, inner)
+    payload = _unframe(buf, wf.MSG_MUX) + b"\x00"
+    with pytest.raises(WireError, match="trailing"):
+        wf.decode_mux(payload)
+    # a truncated inner frame is a truncation error
+    payload = _unframe(buf, wf.MSG_MUX)
+    with pytest.raises(WireTruncated):
+        wf.decode_mux(payload[:-1])
