@@ -23,6 +23,12 @@ full PBS protocol through the device-resident batched path, and reports
   * the maximum per-session deviation of ``bytes_sent`` from the
     single-session ``core.pbs.reconcile`` oracle — the engine is the same
     state machine, so this must be 0% (the run fails above 1%),
+  * with ``--epochs N --churn c``: a continuous-sync sweep (DESIGN.md
+    §11) — each session-count point runs N mutation epochs over ONE set
+    of delta-patched device stores, recording epochs/s and the cumulative
+    delta-H2D bytes against the full-rebuild equivalent
+    (``delta_h2d_frac``, gated by ``--max-delta-h2d-frac``; zero store
+    rebuilds after epoch 0 and per-epoch oracle byte-identity asserted),
   * with ``--peers N1,N2,...``: a multi-peer hub sweep (DESIGN.md §10) —
     N real ``AliceEndpoint`` peers against one ``HubEndpoint`` over
     mux-enveloped in-memory transports — recording peers/s, the fused
@@ -289,6 +295,98 @@ def hub_bench_point(peers: int, d: int, size: int, *, seed: int = 0):
     return row, point
 
 
+def epoch_bench_point(sessions: int, size: int, epochs: int, churn: float,
+                      *, seed: int = 0, check: bool = True):
+    """Continuous-sync sweep (DESIGN.md §11): S long-lived sessions driven
+    through ``epochs`` reconciliation epochs with ``churn``·|B| elements
+    replaced between epochs, all over ONE set of device-resident stores.
+
+    Records epochs/s and the delta ledger the delta-mutable stores are
+    optimizing: cumulative delta-H2D bytes vs what rebuilding (and
+    re-uploading) the stores every epoch would have shipped
+    (``delta_h2d_frac``, gated by ``--max-delta-h2d-frac``).  Asserts zero
+    store rebuilds after epoch 0 and, with ``check``, per-epoch
+    byte-identity against the ``core.pbs.reconcile`` oracle.
+    """
+    d = max(2, 2 * round(churn * size / 2))     # per-epoch symmetric diff
+    rng = np.random.default_rng(seed + 4099)
+    server = ReconcileServer(continuous=True)
+    for s in range(sessions):
+        a, b = make_pair(size, d, np.random.default_rng(seed + 5881 * s))
+        server.submit(a, b, cfg=PBSConfig(seed=seed + s), d_known=d)
+    server.run()
+    store_bytes = server.stats["h2d_store_bytes"]
+
+    delta_bytes = rounds = total_bytes = total_diff = 0
+    t0 = time.perf_counter()
+    for _ in range(epochs):
+        muts = {}
+        for s in range(sessions):
+            b_cur = server.sessions[s].state.b
+            k_rem = d // 2
+            muts[s] = (
+                np.zeros(0, np.uint32), np.zeros(0, np.uint32),
+                rng.integers(1, 1 << 32, size=d - k_rem,
+                             dtype=np.uint64).astype(np.uint32),
+                rng.permutation(b_cur)[:k_rem],
+            )
+        server.advance_epoch(muts)
+        results = server.run()
+        st = server.stats
+        if st["store_builds"]:
+            raise AssertionError(
+                f"{st['store_builds']} store rebuilds on the delta path"
+            )
+        delta_bytes += st["h2d_delta_bytes"]
+        rounds += st["rounds"]
+        for s in range(sessions):
+            r = results[s]
+            total_bytes += r.bytes_sent
+            total_diff += len(r.diff)
+            if check:
+                sess = server.sessions[s]
+                oracle = reconcile(sess.state.a, sess.state.b,
+                                   PBSConfig(seed=seed + s), d_known=d)
+                if (r.diff != oracle.diff
+                        or r.bytes_per_round != oracle.bytes_per_round):
+                    raise AssertionError(
+                        f"sid {s}: epoch result diverged from core.pbs"
+                    )
+    wall = time.perf_counter() - t0
+
+    rebuild_bytes = epochs * store_bytes        # the path delta replaces
+    frac = delta_bytes / max(1, rebuild_bytes)
+    point = {
+        "epochs": epochs,
+        "churn": churn,
+        "sessions": sessions,
+        "d": d,
+        "size": size,
+        "wall_s": round(wall, 4),
+        "epochs_per_s": round(epochs / wall, 3),
+        "rounds": rounds,
+        "store_bytes": store_bytes,
+        "delta_h2d_bytes": delta_bytes,
+        "full_rebuild_bytes": rebuild_bytes,
+        "delta_h2d_frac": round(frac, 4),
+        "store_builds_after_epoch0": 0,
+        "bytes_per_diff": round(total_bytes / max(1, total_diff), 2),
+        "checked": check,
+    }
+    row = Row(
+        name=f"recon_throughput/epochs{epochs}_S{sessions}_c{churn}",
+        us_per_call=wall * 1e6 / epochs,
+        derived=(
+            f"epochs_per_s={point['epochs_per_s']:.2f} "
+            f"delta_h2d_frac={frac:.3f} "
+            f"delta_h2d_bytes={delta_bytes} "
+            f"bytes_per_diff={point['bytes_per_diff']:.2f} "
+            + ("oracle-checked" if check else "unchecked")
+        ),
+    )
+    return row, point
+
+
 def write_json(points: list[dict], path: str) -> None:
     """BENCH_recon.json: the perf-trajectory artifact CI tracks per PR."""
     doc = {
@@ -317,6 +415,9 @@ def run():
     row, point = hub_bench_point(4, 10, size=1200)
     rows.append(row)
     points.append(point)
+    row, point = epoch_bench_point(4, size=1500, epochs=3, churn=0.05)
+    rows.append(row)
+    points.append(point)
     write_json(points, pathlib.Path(__file__).resolve().parents[1] / "BENCH_recon.json")
     return print_rows(rows)
 
@@ -337,6 +438,13 @@ def main(argv=None):
                     help="comma-separated hub peer counts: each N runs a "
                          "multi-peer HubEndpoint sweep (N real peers, mux "
                          "envelopes, fused cross-peer launches asserted)")
+    ap.add_argument("--epochs", type=int, default=0,
+                    help="continuous-sync sweep: drive each session-count "
+                         "point through N mutation epochs over one set of "
+                         "delta-patched device stores (0 = skip)")
+    ap.add_argument("--churn", type=float, default=0.05,
+                    help="fraction of |B| replaced between epochs for the "
+                         "--epochs sweep (default 0.05)")
     ap.add_argument("--json", type=str, default="BENCH_recon.json",
                     help="path for the JSON artifact (default BENCH_recon.json)")
     ap.add_argument("--no-json", action="store_true", help="skip the JSON artifact")
@@ -350,6 +458,10 @@ def main(argv=None):
                     help="same gate for the hub sweep points; hub frames "
                          "don't amortize headers across a peer's neighbors "
                          "(one stream per peer), so the bound is looser")
+    ap.add_argument("--max-delta-h2d-frac", type=float, default=0.0,
+                    help="fail if any --epochs point's cumulative delta-H2D "
+                         "bytes exceed this fraction of rebuilding the "
+                         "stores every epoch (the O(churn)-vs-O(|B|) gate)")
     args = ap.parse_args(argv)
 
     grid_s = [int(x) for x in args.sessions.split(",")]
@@ -372,10 +484,20 @@ def main(argv=None):
                 rows.append(row)
                 points.append(point)
                 print(row.csv(), flush=True)
+    if args.epochs:
+        for sessions in grid_s:
+            row, point = epoch_bench_point(sessions, args.size, args.epochs,
+                                           args.churn, seed=args.seed,
+                                           check=not args.no_check)
+            rows.append(row)
+            points.append(point)
+            print(row.csv(), flush=True)
     if not args.no_json:
         write_json(points, args.json)
         print(f"# wrote {args.json}", flush=True)
-    pair_points = [p for p in points if not p.get("hub")]
+    pair_points = [
+        p for p in points if not p.get("hub") and "delta_h2d_frac" not in p
+    ]
     hub_points = [p for p in points if p.get("hub")]
     if args.min_h2d_ratio:
         worst = min(p["h2d_ratio"] for p in pair_points)
@@ -398,6 +520,14 @@ def main(argv=None):
             raise AssertionError(
                 f"measured hub wire bytes/diff {worst:.2f} > allowed "
                 f"{args.max_hub_bytes_per_diff}"
+            )
+    epoch_points = [p for p in points if "delta_h2d_frac" in p]
+    if args.max_delta_h2d_frac and epoch_points:
+        worst = max(p["delta_h2d_frac"] for p in epoch_points)
+        if worst > args.max_delta_h2d_frac:
+            raise AssertionError(
+                f"delta-H2D fraction {worst:.3f} of full rebuild > allowed "
+                f"{args.max_delta_h2d_frac}"
             )
     return rows
 

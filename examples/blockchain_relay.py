@@ -15,8 +15,17 @@ txid: each peer learns its full symmetric difference for ~2x the bytes of an
 ideal INV gossip — per peer, byte-identical to what a dedicated pair of
 endpoints would have measured.
 
-Run:  PYTHONPATH=src python examples/blockchain_relay.py
+With ``--epochs N`` (default 3) the relay then keeps serving: mempools
+churn continuously — blocks mine txids out, fresh ones gossip in on both
+ends — and each epoch reconciles only the drift over the SAME sessions,
+channels, and device-resident stores (DESIGN.md §11): the ``MSG_EPOCH``
+handshake re-syncs d̂, and the stores take an O(churn) in-place delta
+patch instead of a rebuild (the per-epoch ledger below shows delta-H2D
+bytes and rebuild counts).
+
+Run:  PYTHONPATH=src python examples/blockchain_relay.py [--epochs N]
 """
+import argparse
 import pathlib
 import sys
 import time
@@ -28,11 +37,20 @@ import numpy as np
 
 from repro.core.pbs import PBSConfig, true_diff
 from repro.core.simdata import random_set
-from repro.net import AliceEndpoint, HubEndpoint, InMemoryDuplex, run_hub, tcp_loopback_pair
+from repro.net import (
+    AliceEndpoint,
+    HubEndpoint,
+    InMemoryDuplex,
+    run_hub,
+    run_hub_epoch,
+    tcp_loopback_pair,
+)
+from repro.recon.session import apply_churn
 
 N_PEERS = 4
 MEMPOOL = 12_000             # txids in the relay's canonical mempool
-CHURN = 150                  # per direction, per peer
+CHURN = 150                  # per direction, per peer (admission epoch)
+EPOCH_CHURN = 75             # mempool drift per side between epochs
 
 
 def diverged_mempool(relay_pool: np.ndarray, rng: np.random.Generator):
@@ -44,10 +62,15 @@ def diverged_mempool(relay_pool: np.ndarray, rng: np.random.Generator):
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--epochs", type=int, default=3,
+                    help="total reconciliation epochs (1 = one-shot relay)")
+    args = ap.parse_args()
+
     rng = np.random.default_rng(1)
     relay_pool = random_set(MEMPOOL, rng)
 
-    hub = HubEndpoint(recv_deadline=300.0)
+    hub = HubEndpoint(recv_deadline=300.0, continuous=True)
     alices, pools = {}, {}
     for p in range(N_PEERS):
         peer_pool = diverged_mempool(relay_pool, rng)
@@ -59,7 +82,7 @@ def main():
         cfg = PBSConfig(seed=3 + p)
         ch = hub.add_peer(tb, label=f"peer{p}")
         hub.submit(ch, relay_pool, cfg=cfg)          # estimator path: d unknown
-        ep = AliceEndpoint(ta, channel=ch)
+        ep = AliceEndpoint(ta, channel=ch, continuous=True)
         ep.submit(peer_pool, cfg=cfg)
         alices[ch] = ep
         pools[ch] = (peer_pool, d, "tcp" if p == N_PEERS - 1 else "mem")
@@ -100,6 +123,51 @@ def main():
     )
     print(f"  multiplexing overhead: {mux:,} B of MSG_MUX envelopes "
           f"({100 * mux / max(1, total_pbs):.1f}% of protocol bytes)")
+
+    # ---- continuous sync: the mempool keeps churning (DESIGN.md §11) ----
+    if args.epochs <= 1:
+        return
+    peer_churn = EPOCH_CHURN // 2
+    d_nom = 2 * (EPOCH_CHURN + peer_churn)   # the relay's churn budget
+    store_bytes = hub._batch.store_upload_bytes()
+    print(f"\ncontinuous sync: {args.epochs - 1} more epochs of mempool "
+          f"churn ({EPOCH_CHURN} txids/side relay, {peer_churn}/side peer; "
+          f"resident stores = {store_bytes:,} B)")
+    print(f"{'epoch':>5} {'d tot':>6} {'wire B':>8} {'B/diff':>7} "
+          f"{'delta-H2D':>9} {'rebuilds':>8} {'wall s':>7}")
+    for e in range(1, args.epochs):
+        mined = rng.permutation(relay_pool)[:EPOCH_CHURN]
+        fresh = random_set(EPOCH_CHURN, rng)
+        relay_pool = apply_churn(relay_pool, fresh, mined)
+        hub_muts = {}
+        for ch, ep in alices.items():
+            hub_muts[ch] = {0: (fresh, mined)}
+            # the peer converged to the relay's previous pool, then drifts
+            peer_pool = ep.sessions[0].state.a
+            peer_mined = rng.permutation(peer_pool)[:peer_churn]
+            peer_fresh = random_set(peer_churn, rng)
+            ep.advance_epoch({0: (peer_fresh, peer_mined)},
+                             d_known={0: d_nom})
+        hub.advance_epoch(hub_muts, d_known={
+            ch: {0: d_nom} for ch in alices
+        })
+        t0 = time.perf_counter()
+        outcomes, results, errors = run_hub_epoch(hub, alices)
+        wall = time.perf_counter() - t0
+        assert not errors, errors
+        st = hub.stats
+        d_tot = wire = 0
+        for ch, ep in alices.items():
+            r = results[ch][0]
+            assert r.success and outcomes[ch].verified == [True]
+            assert r.diff == true_diff(ep.sessions[0].state.a, relay_pool)
+            d_tot += len(r.diff)
+            wire += r.bytes_sent
+        print(f"{e:>5} {d_tot:>6} {wire:>8,} {wire / max(1, d_tot):>7.2f} "
+              f"{st['h2d_delta_bytes']:>9,} {st['store_builds']:>8} "
+              f"{wall:>7.2f}")
+    print(f"  (epoch 1 re-plans the pinned churn-budget code — one counted "
+          f"rebuild; every later epoch is a pure O(churn) delta patch)")
 
 
 if __name__ == "__main__":

@@ -63,6 +63,20 @@ def main():
     total = sum(results[s].bytes_sent for s, *_ in workload)
     print(f"total protocol bytes: {total:,}")
 
+    # the transfer/launch ledger of the device-resident pipeline
+    # (DESIGN.md §5): element stores upload once, rounds ship only small
+    # gather/overlay arrays, and the fused two-side encode halves launches
+    st = server.stats
+    print(f"device ledger: {st['h2d_store_bytes']:,} B store upload + "
+          f"{st['h2d_round_bytes']:,} B round overlays "
+          f"({st['h2d_ratio']:.1f}x less H2D than re-packing per round)")
+    print(f"  {st['kernel_launches']} fused kernel launches vs "
+          f"{st['legacy_kernel_launches']} legacy over "
+          f"{st['cohort_rounds']} cohort-rounds; "
+          f"phase0 {st['phase0_s'] * 1e3:.0f} ms, "
+          f"device {st['device_s'] * 1e3:.0f} ms, "
+          f"host {st['host_s'] * 1e3:.0f} ms")
+
 
 if __name__ == "__main__":
     main()

@@ -16,9 +16,15 @@ tests/test_recon_batch.py).
 peers on channel-multiplexed transports: all peers' sessions fuse into one
 shared cohort pipeline, with per-peer round-barrier deadlines so a
 straggler or mid-protocol disconnect fails only its own peer.
+
+With ``continuous=True`` every endpoint also reconciles *divergent
+replicas continuously* (DESIGN.md §11): ``advance_epoch`` stages the next
+epoch's set mutations, ``run_epoch``/``serve_epoch``/``serve`` exchange the
+``MSG_EPOCH`` d̂ handshake and delta-patch the device-resident stores in
+place, so a long-lived peer pays O(churn) — not O(|set|) — per epoch.
 """
-from .endpoint import AliceEndpoint, BobEndpoint, run_pair
-from .hub import HubEndpoint, PeerOutcome, run_hub
+from .endpoint import AliceEndpoint, BobEndpoint, run_pair, run_pair_epoch
+from .hub import HubEndpoint, PeerOutcome, run_hub, run_hub_epoch
 from .transport import (
     FrameStream,
     InMemoryDuplex,
@@ -45,6 +51,8 @@ __all__ = [
     "TransportError",
     "TransportTimeout",
     "run_hub",
+    "run_hub_epoch",
     "run_pair",
+    "run_pair_epoch",
     "tcp_loopback_pair",
 ]

@@ -48,7 +48,13 @@ from repro.core.pbs import (
 from repro.core.tow import estimate_numerator, tow_sketches
 from repro.kernels.ops import bch_decode_batched
 from repro.recon.engine import encode_side
-from repro.recon.session import CohortRoundPlan, ReconSession, SessionBatch
+from repro.recon.session import (
+    CohortRoundPlan,
+    ReconSession,
+    SessionBatch,
+    advance_session,
+    apply_churn,
+)
 from repro.wire import frames as wf
 from repro.wire.frames import ReplyUnit, WireError
 from repro.wire.varint import framed_len
@@ -144,6 +150,54 @@ def serve_phase0(payload: bytes, set_b, cfg: PBSConfig):
     reply = wf.encode_dhat(num)
     est_bytes = _framed_len(payload) + len(reply)
     return reply, plan_from_estimate(cfg, num, set_size_a), est_bytes
+
+
+def serve_epoch_frame(payload: bytes, expected_epoch: int, pending: dict,
+                      plans: dict, cfg_of, stream, tally: dict) -> bool:
+    """Serve one inbound ``MSG_EPOCH`` frame (the serving side's half of
+    the epoch handshake, DESIGN.md §11); returns True when the peer owes
+    no more epoch frames.
+
+    ``pending`` maps sid -> (staged set, d convention) for the staged
+    epoch; estimator sids (convention None) are served in sorted order —
+    the same positional contract as ``submit`` — each wrapped ToW sketch
+    answered with a wrapped d̂ reply through the shared ``serve_phase0``,
+    recording the plan in ``plans``.  A bare epoch-open is only legal
+    when nothing re-estimates, and is answered bare.  Ledger mirrors
+    ``MSG_MUX``: inner phase-0 bits to the estimator tally, envelope
+    bytes to the epoch tally.  Shared by ``BobEndpoint`` and the hub so
+    the two serving paths cannot drift.
+    """
+    e, ity, ipayload = wf.decode_epoch(payload)
+    if e != expected_epoch:
+        raise WireError(f"epoch frame for epoch {e}, expected {expected_epoch}")
+    est = [
+        sid for sid in sorted(pending)
+        if pending[sid][1] is None and sid not in plans
+    ]
+    if ity is None:
+        if est:
+            raise WireError("bare epoch-open with estimator sessions pending")
+        reply = wf.encode_epoch(e)
+        stream.send(reply)
+        tally["epoch"] += _framed_len(payload) + len(reply)
+        return True
+    if ity != wf.MSG_TOW_SKETCH:
+        raise WireError(f"unexpected epoch inner frame type 0x{ity:02x}")
+    if not est:
+        raise WireError("epoch ToW frame with no estimator session pending")
+    sid = est[0]
+    elems, _ = pending[sid]
+    inner_reply, plan, est_bytes = serve_phase0(ipayload, elems, cfg_of(sid))
+    reply = wf.encode_epoch(e, inner_reply)
+    stream.send(reply)
+    tally["estimator"] += est_bytes
+    tally["epoch"] += (
+        _framed_len(payload) - framed_len(len(ipayload))
+        + len(reply) - len(inner_reply)
+    )
+    plans[sid] = plan
+    return len(est) == 1
 
 
 def decode_side_b_round(
@@ -242,6 +296,7 @@ def stream_wire_stats(stream: FrameStream, tally: dict) -> dict:
         "estimator_frame_bytes": tally["estimator"],
         "protocol_frame_bytes": tally["protocol"],
         "verify_frame_bytes": tally["verify"],
+        "epoch_envelope_bytes": tally.get("epoch", 0),
     }
 
 
@@ -256,13 +311,18 @@ class _Endpoint:
         *,
         interpret: bool | None = None,
         channel: int | None = None,
+        continuous: bool = False,
     ):
         self._stream = FrameStream(transport, channel=channel)
         self._interpret = interpret
+        self._continuous = continuous
         self._sessions: list[ReconSession | None] = []
         self._est_queue: list[int] = []     # sids awaiting phase 0, in order
         self._batch: SessionBatch | None = None
-        self._tally = {"estimator": 0, "protocol": 0, "verify": 0}
+        self._tally = {"estimator": 0, "protocol": 0, "verify": 0, "epoch": 0}
+        self._d_known: dict[int, int | None] = {}
+        self._epoch = 0
+        self._epoch_pending: dict[int, tuple] | None = None  # sid -> (set, dk)
         self.verified: list[bool] | None = None
 
     # -- submission ------------------------------------------------------
@@ -271,6 +331,7 @@ class _Endpoint:
         cfg = cfg or PBSConfig()
         elems = np.unique(np.asarray(elems, dtype=np.uint32))
         sid = len(self._sessions)
+        self._d_known[sid] = d_known
         if d_known is not None:
             self._install(sid, elems, plan_from_d_known(cfg, d_known), append=True)
         else:
@@ -297,8 +358,54 @@ class _Endpoint:
         if self._est_queue:
             raise WireError("round traffic before phase 0 completed")
         if self._batch is None:
-            self._batch = SessionBatch(self._sessions, sides=(self.side,))
+            self._batch = SessionBatch(
+                self._sessions, sides=(self.side,), mutable=self._continuous
+            )
         return self._batch
+
+    # -- continuous sync (DESIGN.md §11) ---------------------------------
+
+    def advance_epoch(self, mutations: dict | None = None, *,
+                      d_known: dict | None = None) -> int:
+        """Stage the next epoch's sets: the initiating side folds its
+        learned diff (replica convergence), then this side's local churn
+        from ``mutations`` (sid -> (added, removed)) applies.  ``d_known``
+        (sid -> int | None) *rebinds* a session's d convention from this
+        epoch on — an int pins d for this and later epochs, ``None``
+        returns the session to re-running the d̂ handshake over the wire;
+        sessions not mentioned keep their current convention (initially
+        the submit-time one).  The epoch itself runs on the next
+        ``run_epoch``/``serve_epoch``, which patches the resident stores
+        with the net delta in place.  Requires ``continuous=True`` (stores
+        packed with mutation lanes).
+        """
+        if not self._continuous:
+            raise RuntimeError("advance_epoch needs continuous=True")
+        if self._est_queue or any(s is None for s in self._sessions):
+            raise RuntimeError("advance_epoch before the admission epoch ran")
+        if self._epoch_pending is not None:
+            raise RuntimeError(f"epoch {self._epoch} is already staged")
+        muts = mutations or {}
+        unknown = (set(muts) | set(d_known or {})) - set(range(len(self._sessions)))
+        if unknown:
+            # a typo'd sid must not silently drop the caller's churn
+            raise KeyError(f"unknown sid(s) {sorted(unknown)} in epoch advance")
+        if d_known:
+            self._d_known.update(d_known)
+        self._epoch += 1
+        pending: dict[int, tuple] = {}
+        for s in self._sessions:
+            added, removed = muts.get(s.sid, (_EMPTY, _EMPTY))
+            pending[s.sid] = (
+                apply_churn(self._epoch_base(s), added, removed),
+                self._d_known[s.sid],
+            )
+        self._epoch_pending = pending
+        return self._epoch
+
+    def _epoch_base(self, sess: ReconSession) -> np.ndarray:
+        """This side's set going into the next epoch, before local churn."""
+        raise NotImplementedError
 
     def _encode_round(self, plans: list[CohortRoundPlan]) -> dict[int, _SessionRows]:
         return encode_round_rows(plans, self.side, self._interpret)
@@ -335,9 +442,12 @@ class AliceEndpoint(_Endpoint):
         *,
         interpret: bool | None = None,
         channel: int | None = None,
+        continuous: bool = False,
     ):
-        super().__init__(transport, interpret=interpret, channel=channel)
+        super().__init__(transport, interpret=interpret, channel=channel,
+                         continuous=continuous)
         self._pending: dict[int, tuple] = {}   # sid -> (a, cfg)
+        self._fold_diff = True
 
     def _pending_store(self, sid, elems, cfg):
         self._pending[sid] = (elems, cfg)
@@ -349,9 +459,98 @@ class AliceEndpoint(_Endpoint):
         out-of-band-agreed hash functions."""
         return self._submit(set_a, cfg, d_known)
 
+    def advance_epoch(self, mutations: dict | None = None, *,
+                      d_known: dict | None = None,
+                      fold_diff: bool = True) -> int:
+        """Stage the next epoch (see ``_Endpoint.advance_epoch``); with
+        ``fold_diff`` (the default) each session first folds its learned
+        diff into A — replica convergence: A ← A △ D̂ = B — before this
+        side's local churn applies."""
+        self._fold_diff = fold_diff
+        return super().advance_epoch(mutations, d_known=d_known)
+
+    def _epoch_base(self, sess: ReconSession) -> np.ndarray:
+        st = sess.state
+        return effective_set(st.a, st.diff) if self._fold_diff else st.a
+
+    def run_epoch(self) -> dict[int, ReconcileResult]:
+        """Drive one staged epoch over the wire: the ``MSG_EPOCH``
+        handshake (epoch id + d̂ re-estimation through the phase-0 codecs),
+        an in-place delta patch of the resident stores, then the same
+        round/verify machinery as ``run`` — per-epoch results are
+        byte-identical to a fresh session over the epoch's sets."""
+        if self._epoch_pending is None:
+            raise RuntimeError("no epoch staged: call advance_epoch first")
+        pending, self._epoch_pending = self._epoch_pending, None
+        e = self._epoch
+        batch = self._ensure_batch()
+
+        est_sids = [sid for sid in sorted(pending) if pending[sid][1] is None]
+        sent = {}
+        if est_sids:
+            for sid in est_sids:
+                elems, _ = pending[sid]
+                cfg = self._sessions[sid].plan.cfg
+                sk = tow_sketches(elems, derive_seed(cfg.seed, 0x70), cfg.ell)
+                inner = wf.encode_tow_sketch(sk, len(elems))
+                f = wf.encode_epoch(e, inner)
+                self._stream.send(f)
+                self._tally["epoch"] += len(f) - len(inner)
+                sent[sid] = len(inner)
+        else:
+            f = wf.encode_epoch(e)
+            self._stream.send(f)
+            self._tally["epoch"] += len(f)
+
+        plans = {}
+        for sid in est_sids:
+            payload = self._expect(wf.MSG_EPOCH)
+            got_e, ity, ipayload = wf.decode_epoch(payload)
+            if got_e != e:
+                raise WireError(f"epoch frame for epoch {got_e} during epoch {e}")
+            if ity != wf.MSG_DHAT:
+                raise WireError(
+                    f"expected d_hat inside the epoch reply, got {ity}"
+                )
+            inner_len = framed_len(len(ipayload))
+            self._tally["epoch"] += _framed_len(payload) - inner_len
+            est_frames = sent[sid] + inner_len
+            self._tally["estimator"] += est_frames
+            elems, _ = pending[sid]
+            plan = plan_from_estimate(
+                self._sessions[sid].plan.cfg, wf.decode_dhat(ipayload), len(elems)
+            )
+            if plan.est_bytes != est_frames:
+                raise WireError(
+                    f"sid {sid}: epoch estimator frames measure {est_frames} B, "
+                    f"accounted {plan.est_bytes} B"
+                )
+            plans[sid] = plan
+        if not est_sids:
+            payload = self._expect(wf.MSG_EPOCH)
+            got_e, ity, _ = wf.decode_epoch(payload)
+            if got_e != e or ity is not None:
+                raise WireError(f"bad epoch-open ack for epoch {e}")
+            self._tally["epoch"] += _framed_len(payload)
+
+        for sid in sorted(pending):
+            elems, dk = pending[sid]
+            sess = self._sessions[sid]
+            plan = plans.get(sid) or plan_from_d_known(sess.plan.cfg, dk)
+            advance_session(batch, sess, plan, new_a=elems, rnd0=0)
+        return self._run_rounds()
+
     def run(self) -> dict[int, ReconcileResult]:
         """Drive every session to completion over the wire; sid -> result."""
+        if self._epoch_pending is not None:
+            raise RuntimeError(
+                f"epoch {self._epoch} is staged: call run_epoch, not run"
+            )
         self._phase0()
+        self._ensure_batch()
+        return self._run_rounds()
+
+    def _run_rounds(self) -> dict[int, ReconcileResult]:
         batch = self._ensure_batch()
         rnd = 0
         while True:
@@ -472,19 +671,34 @@ class BobEndpoint(_Endpoint):
         *,
         interpret: bool | None = None,
         channel: int | None = None,
+        continuous: bool = False,
     ):
-        super().__init__(transport, interpret=interpret, channel=channel)
+        super().__init__(transport, interpret=interpret, channel=channel,
+                         continuous=continuous)
         self._pending: dict[int, tuple] = {}   # sid -> (b, cfg)
         self._rnd = 0                          # rounds whose sketches arrived
         self._ctx = None                       # current round's (live, per-sid)
+        self._epoch_plans: dict[int, object] = {}
 
     def _pending_store(self, sid, elems, cfg):
         self._pending[sid] = (elems, cfg)
+
+    def _epoch_base(self, sess: ReconSession) -> np.ndarray:
+        return sess.state.b
 
     def submit(self, set_b, cfg: PBSConfig | None = None, d_known: int | None = None) -> int:
         """Enqueue this endpoint's side of the next session (positional
         pairing with the peer's ``submit`` order)."""
         return self._submit(set_b, cfg, d_known)
+
+    def serve_epoch(self) -> None:
+        """Serve one staged epoch: the peer's ``MSG_EPOCH`` handshake
+        (validated against the locally staged epoch id), the in-place
+        store delta patch, then frames until the epoch's verification
+        exchange completes."""
+        if self._epoch_pending is None:
+            raise RuntimeError("no epoch staged: call advance_epoch first")
+        self.serve()
 
     def serve(self) -> None:
         """Answer frames until the verification exchange completes."""
@@ -492,6 +706,8 @@ class BobEndpoint(_Endpoint):
             msg_type, payload = self._stream.recv()
             if msg_type == wf.MSG_TOW_SKETCH:
                 self._handle_tow(payload)
+            elif msg_type == wf.MSG_EPOCH:
+                self._handle_epoch(payload)
             elif msg_type == wf.MSG_ROUND_SKETCHES:
                 self._handle_sketches(payload)
             elif msg_type == wf.MSG_ROUND_OUTCOME:
@@ -501,6 +717,35 @@ class BobEndpoint(_Endpoint):
                 return
             else:
                 raise WireError(f"unexpected message type 0x{msg_type:02x}")
+
+    def _handle_epoch(self, payload: bytes) -> None:
+        """One step of the peer's epoch handshake (the shared
+        ``serve_epoch_frame`` state machine); once every staged session
+        has its plan, fold the epoch in: delta-patch the resident store
+        and reset the round state machine."""
+        if self._epoch_pending is None:
+            raise WireError("epoch frame with no epoch advance staged")
+        done = serve_epoch_frame(
+            payload, self._epoch, self._epoch_pending, self._epoch_plans,
+            lambda sid: self._sessions[sid].plan.cfg,
+            self._stream, self._tally,
+        )
+        if done:
+            self._install_epoch()
+
+    def _install_epoch(self) -> None:
+        batch = self._ensure_batch()
+        pending, self._epoch_pending = self._epoch_pending, None
+        for sid in sorted(pending):
+            elems, dk = pending[sid]
+            sess = self._sessions[sid]
+            plan = self._epoch_plans.get(sid) or plan_from_d_known(
+                sess.plan.cfg, dk
+            )
+            advance_session(batch, sess, plan, new_b=elems, rnd0=0)
+        self._epoch_plans = {}
+        self._rnd = 0
+        self._ctx = None
 
     def _handle_tow(self, payload: bytes) -> None:
         if not self._est_queue:
@@ -515,6 +760,8 @@ class BobEndpoint(_Endpoint):
     def _handle_sketches(self, payload: bytes) -> None:
         if self._ctx is not None:
             raise WireError("sketch frame while a round outcome is pending")
+        if self._epoch_pending is not None:
+            raise WireError("round traffic before the staged epoch handshake")
         batch = self._ensure_batch()
         rnd = self._rnd + 1
         plans = batch.plan_round(rnd)
@@ -572,19 +819,14 @@ def _framed_len(payload: bytes) -> int:
     return framed_len(len(payload))
 
 
-def run_pair(alice: AliceEndpoint, bob: BobEndpoint) -> dict[int, ReconcileResult]:
-    """Drive a connected endpoint pair to completion: Bob serves on a
-    worker thread, Alice runs on the caller's; Bob's exceptions re-raise.
-
-    A failing serve() closes Bob's transport so a blocked Alice fails fast
-    instead of sitting out her recv timeout, and Bob's root-cause exception
-    takes precedence over the secondary transport error Alice then sees.
-    """
+def _drive_pair(alice, bob, alice_call, bob_call) -> dict[int, ReconcileResult]:
+    """Run one Alice step against one Bob step on a worker thread, with
+    Bob's root-cause exception taking precedence (see ``run_pair``)."""
     err: list[BaseException] = []
 
     def _serve():
         try:
-            bob.serve()
+            bob_call()
         except BaseException as e:  # noqa: BLE001 - relayed to the caller
             err.append(e)
             bob._stream.transport.close()  # unblock the peer's recv
@@ -592,7 +834,7 @@ def run_pair(alice: AliceEndpoint, bob: BobEndpoint) -> dict[int, ReconcileResul
     th = threading.Thread(target=_serve, name="bob-endpoint", daemon=True)
     th.start()
     try:
-        results = alice.run()
+        results = alice_call()
     except BaseException:
         th.join(timeout=5.0)
         if err:
@@ -602,3 +844,21 @@ def run_pair(alice: AliceEndpoint, bob: BobEndpoint) -> dict[int, ReconcileResul
     if err:
         raise err[0]
     return results
+
+
+def run_pair(alice: AliceEndpoint, bob: BobEndpoint) -> dict[int, ReconcileResult]:
+    """Drive a connected endpoint pair to completion: Bob serves on a
+    worker thread, Alice runs on the caller's; Bob's exceptions re-raise.
+
+    A failing serve() closes Bob's transport so a blocked Alice fails fast
+    instead of sitting out her recv timeout, and Bob's root-cause exception
+    takes precedence over the secondary transport error Alice then sees.
+    """
+    return _drive_pair(alice, bob, alice.run, bob.serve)
+
+
+def run_pair_epoch(alice: AliceEndpoint, bob: BobEndpoint) -> dict[int, ReconcileResult]:
+    """Drive one staged continuous-sync epoch over a connected pair (both
+    sides must have called ``advance_epoch``); same threading and error
+    semantics as ``run_pair``."""
+    return _drive_pair(alice, bob, alice.run_epoch, bob.serve_epoch)

@@ -31,7 +31,14 @@ tests/test_hub.py and tests/test_protocol_conformance.py):
   error in its ``PeerOutcome`` while every other peer completes untouched;
 * **mixed known-d and estimator peers** — estimator sessions run their
   phase-0 ToW exchange at admission, then share cohorts with known-d
-  sessions as usual.
+  sessions as usual;
+* **continuous epochs** (``continuous=True``, DESIGN.md §11) — after every
+  peer's epoch settles, ``advance_epoch`` stages each side's churn, the
+  next ``serve`` opens with a ``MSG_EPOCH`` handshake barrier (epoch id +
+  per-estimator-session d̂ re-estimation), and the shared cohort stores
+  take an in-place O(churn) delta patch instead of a rebuild — sessions,
+  channels, and device residency all survive across epochs
+  (tests/test_sync_churn.py soaks ≥20 epochs against the oracle).
 """
 from __future__ import annotations
 
@@ -49,7 +56,12 @@ from repro.core.pbs import (
     queue_split,
     session_live,
 )
-from repro.recon.session import ReconSession, SessionBatch
+from repro.recon.session import (
+    ReconSession,
+    SessionBatch,
+    advance_session,
+    apply_churn,
+)
 from repro.wire import frames as wf
 from repro.wire.frames import WireError
 from repro.wire.varint import framed_len
@@ -59,6 +71,7 @@ from .endpoint import (
     decode_side_b_round,
     encode_round_rows,
     round_schema,
+    serve_epoch_frame,
     serve_phase0,
     stream_wire_stats,
     verify_ack_entries,
@@ -95,7 +108,10 @@ class _Peer:
         self.retired = False
         self.verified: list[bool] | None = None
         self.error: BaseException | None = None
-        self.tally = {"estimator": 0, "protocol": 0, "verify": 0}
+        self.tally = {"estimator": 0, "protocol": 0, "verify": 0, "epoch": 0}
+        self.d_known: list[int | None] = []     # per local sid, epoch default
+        self.epoch_pending: dict[int, tuple] | None = None  # sid -> (set_b, dk)
+        self.epoch_plans: dict[int, object] = {}
 
     def wire_stats(self) -> dict:
         return stream_wire_stats(self.stream, self.tally)
@@ -127,10 +143,12 @@ class HubEndpoint:
         interpret: bool | None = None,
         recv_deadline: float = 60.0,
         on_barrier=None,
+        continuous: bool = False,
     ):
         self._interpret = interpret
         self._deadline = recv_deadline
         self.on_barrier = on_barrier
+        self._continuous = continuous
         self._lock = threading.Lock()
         self._peers: dict[int, _Peer] = {}
         self._order: list[int] = []         # admission order of channels
@@ -138,8 +156,12 @@ class HubEndpoint:
         self._next_channel = 1
         self.stale_channels: set[int] = set()
         self._sessions: list[ReconSession] = []
-        self._batch = SessionBatch(self._sessions, sides=(self.side,))
+        self._batch = SessionBatch(
+            self._sessions, sides=(self.side,), mutable=continuous
+        )
         self._stats: dict = {}
+        self._epoch = 0
+        self._epoch_open = False
 
     # -- registration ----------------------------------------------------
 
@@ -172,6 +194,7 @@ class HubEndpoint:
                     "or from the on_barrier hook for late joiners"
                 )
             peer.pending.append((elems, cfg or PBSConfig(), d_known))
+            peer.d_known.append(d_known)
             return len(peer.pending) - 1
 
     # -- eviction / retirement -------------------------------------------
@@ -207,7 +230,10 @@ class HubEndpoint:
             return
         peer.verified = flags
         peer.retired = True
-        self.stale_channels.add(peer.channel)
+        if not self._continuous:
+            # a continuous-sync peer comes back next epoch; only one-shot
+            # completion retires the channel id for good
+            self.stale_channels.add(peer.channel)
 
     # -- the shared peer poller -------------------------------------------
 
@@ -334,6 +360,117 @@ class HubEndpoint:
             self._batch.add_sessions(new)   # appends to self._sessions
         return True
 
+    # -- continuous sync (DESIGN.md §11) ----------------------------------
+
+    def advance_epoch(self, mutations: dict | None = None, *,
+                      d_known: dict | None = None) -> int:
+        """Open the next epoch for every surviving peer; returns its number.
+
+        ``mutations``: channel -> {local sid: (added, removed)} — this
+        side's per-session churn on B (the hub never folds a diff; B is
+        the canonical replica its peers converge to).  ``d_known``:
+        channel -> {local sid: d | None} *rebinds* a session's d
+        convention from this epoch on (an int pins d for this and later
+        epochs, ``None`` returns it to estimation); unmentioned sessions
+        keep their current convention (initially the submit-time one), so
+        estimator sessions re-run the d̂ handshake when their peer opens
+        the epoch.
+        Evicted peers stay retired; everyone else un-retires and the next
+        ``serve`` starts with the ``MSG_EPOCH`` handshake barrier, patches
+        the resident stores in place, and drives the epoch's rounds.
+        Requires ``HubEndpoint(continuous=True)``.
+        """
+        if not self._continuous:
+            raise RuntimeError("advance_epoch needs HubEndpoint(continuous=True)")
+        if self._epoch_open:
+            raise RuntimeError(
+                f"epoch {self._epoch} is already staged; serve it first"
+            )
+        muts = mutations or {}
+        dks = d_known or {}
+        # a typo'd channel or local sid must not silently drop churn
+        for name, by_ch in (("mutations", muts), ("d_known", dks)):
+            for ch, per_sid in by_ch.items():
+                if ch not in self._peers:
+                    raise KeyError(f"unknown channel {ch} in epoch {name}")
+                bad = set(per_sid or {}) - set(
+                    range(len(self._peers[ch].sessions))
+                )
+                if bad:
+                    raise KeyError(
+                        f"unknown sid(s) {sorted(bad)} for channel {ch} "
+                        f"in epoch {name}"
+                    )
+        self._epoch += 1
+        self._epoch_open = True
+        for ch in self._order:
+            peer = self._peers[ch]
+            if peer.error is not None:
+                continue                    # evicted peers never come back
+            for i, dk in (dks.get(ch) or {}).items():
+                peer.d_known[i] = dk
+            pend = {}
+            for i, sess in enumerate(peer.sessions):
+                added, removed = (muts.get(ch) or {}).get(i, (_EMPTY, _EMPTY))
+                pend[i] = (
+                    apply_churn(sess.state.b, added, removed),
+                    peer.d_known[i],
+                )
+            peer.epoch_pending = pend
+            peer.epoch_plans = {}
+            peer.retired = False
+            peer.verified = None
+        return self._epoch
+
+    def _epoch_handshake(self) -> None:
+        """The epoch-open barrier: every surviving peer owes its
+        ``MSG_EPOCH`` frames — one wrapped ToW sketch per estimator
+        session (answered with a wrapped d̂ reply through the shared
+        ``serve_phase0``), or a single bare epoch-open when the peer has
+        none — under the usual per-peer deadline; a silent peer is evicted
+        here exactly like at a round barrier.  Survivors' sessions then
+        fold the epoch in: fresh plans and round states, resident stores
+        delta-patched in place (zero rebuilds on the pure delta path).
+        """
+        self._epoch_open = False
+        active = [
+            self._peers[ch] for ch in self._order
+            if not self._peers[ch].retired and self._peers[ch].epoch_pending
+        ]
+
+        def _handler(ch):
+            def handle(peer, msg_type, payload):
+                if msg_type != wf.MSG_EPOCH:
+                    raise WireError(
+                        f"expected message 0x{wf.MSG_EPOCH:02x}, "
+                        f"got 0x{msg_type:02x}"
+                    )
+                return serve_epoch_frame(
+                    payload, self._epoch, peer.epoch_pending,
+                    peer.epoch_plans,
+                    lambda i: peer.sessions[i].plan.cfg,
+                    peer.stream, peer.tally,
+                )
+            return handle
+
+        self._poll_peers(
+            {p.channel: _handler(p.channel) for p in active},
+            phase="epoch-handshake",
+        )
+        for peer in active:
+            if peer.retired:                # evicted during the handshake
+                peer.epoch_pending = None
+                continue
+            pend, peer.epoch_pending = peer.epoch_pending, None
+            for i in sorted(pend):
+                set_b, dk = pend[i]
+                sess = peer.sessions[i]
+                plan = peer.epoch_plans.get(i) or plan_from_d_known(
+                    sess.plan.cfg, dk
+                )
+                advance_session(self._batch, sess, plan, new_b=set_b, rnd0=0)
+            peer.epoch_plans = {}
+
     # -- the round barrier ------------------------------------------------
 
     def _collect(self, expect: dict[int, int]) -> dict[int, bytes]:
@@ -370,14 +507,18 @@ class HubEndpoint:
     def serve(self) -> dict[int, PeerOutcome]:
         """Drive every peer's sessions to completion; channel -> outcome."""
         st = self._stats = {
+            "epoch": self._epoch,
             "rounds": 0, "cohort_rounds": 0,
             "kernel_launches": 0, "decode_launches": 0,
             "h2d_round_bytes": 0,
             "peers": self._stats.get("peers", 0),
             "peers_failed": self._stats.get("peers_failed", 0),
         }
+        prior = self._batch.counters()
         rnd = 0
         hook_fired_at = -1
+        if self._epoch_open:
+            self._epoch_handshake()
         self._admit(rnd)
         while True:
             active = [
@@ -441,8 +582,22 @@ class HubEndpoint:
             self._admit(rnd)
 
         st["store_uploads"] = self._batch.store_builds
-        st["h2d_store_bytes"] = self._batch.store_build_bytes
-        st["h2d_bytes"] = st["h2d_store_bytes"] + st["h2d_round_bytes"]
+        # per-serve continuous-sync ledger: store uploads, rebuilds, and
+        # delta-patch bytes THIS epoch paid for (DESIGN.md §11) — a
+        # zero-rebuild epoch shows store_builds == 0, zero store bytes,
+        # and only O(churn) delta bytes (store_uploads stays cumulative:
+        # the one-per-cohort fusion contract the acceptance test asserts)
+        delta = {
+            k: v - prior[k] for k, v in self._batch.counters().items()
+        }
+        st["h2d_store_bytes"] = delta["store_build_bytes"]
+        st["store_builds"] = delta["store_builds"]
+        st["store_compactions"] = delta["store_compactions"]
+        st["h2d_delta_bytes"] = delta["store_delta_bytes"]
+        st["h2d_bytes"] = (
+            st["h2d_store_bytes"] + st["h2d_round_bytes"]
+            + st["h2d_delta_bytes"]
+        )
         return {
             ch: PeerOutcome(
                 channel=ch,
@@ -541,6 +696,34 @@ class HubEndpoint:
             sess.state.rounds = local
 
 
+def _drive_hub(
+    hub: HubEndpoint,
+    peer_calls: dict[int, object],
+    join_timeout: float,
+):
+    """Run one hub ``serve`` against one callable per peer channel."""
+    results: dict[int, dict[int, ReconcileResult]] = {}
+    errors: dict[int, BaseException] = {}
+
+    def _drive(ch: int, call):
+        try:
+            results[ch] = call()
+        except BaseException as e:  # noqa: BLE001 - reported per peer
+            errors[ch] = e
+
+    threads = [
+        threading.Thread(target=_drive, args=(ch, call),
+                         name=f"peer-{ch}", daemon=True)
+        for ch, call in peer_calls.items()
+    ]
+    for th in threads:
+        th.start()
+    outcomes = hub.serve()
+    for th in threads:
+        th.join(timeout=join_timeout)
+    return outcomes, results, errors
+
+
 def run_hub(
     hub: HubEndpoint,
     alices: dict[int, AliceEndpoint],
@@ -556,23 +739,22 @@ def run_hub(
     whose ``run`` raised (evicted stragglers see their transport closed, so
     they fail fast with ``TransportError`` instead of hanging).
     """
-    results: dict[int, dict[int, ReconcileResult]] = {}
-    errors: dict[int, BaseException] = {}
+    return _drive_hub(
+        hub, {ch: ep.run for ch, ep in alices.items()}, join_timeout
+    )
 
-    def _drive(ch: int, ep: AliceEndpoint):
-        try:
-            results[ch] = ep.run()
-        except BaseException as e:  # noqa: BLE001 - reported per peer
-            errors[ch] = e
 
-    threads = [
-        threading.Thread(target=_drive, args=(ch, ep),
-                         name=f"peer-{ch}", daemon=True)
-        for ch, ep in alices.items()
-    ]
-    for th in threads:
-        th.start()
-    outcomes = hub.serve()
-    for th in threads:
-        th.join(timeout=join_timeout)
-    return outcomes, results, errors
+def run_hub_epoch(
+    hub: HubEndpoint,
+    alices: dict[int, AliceEndpoint],
+    *,
+    join_timeout: float = 120.0,
+):
+    """Drive one staged continuous-sync epoch (DESIGN.md §11): the hub and
+    every surviving peer must have called ``advance_epoch``; each Alice
+    runs ``run_epoch`` on a worker thread against one hub ``serve``.  Same
+    return shape and per-peer error semantics as ``run_hub``.
+    """
+    return _drive_hub(
+        hub, {ch: ep.run_epoch for ch, ep in alices.items()}, join_timeout
+    )

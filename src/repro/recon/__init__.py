@@ -8,6 +8,11 @@ once and emits only small gather/overlay arrays per round, a fused jitted
 bin/sketch/decode in one call, and ``ReconcileServer`` dispatches all
 cohorts asynchronously while keeping per-session byte ledgers identical to
 ``core.pbs.reconcile``.
+
+``ReconcileServer(continuous=True)`` extends the same machinery to
+continuous epoch reconciliation (DESIGN.md §11): ``advance_epoch`` folds
+learned diffs and local churn into delta-mutable stores patched in place,
+so a long-lived session pays O(churn) H2D per epoch instead of a rebuild.
 """
 from .engine import encode_side, execute_round
 from .server import ReconcileServer, phase0_numerators, reconcile_batch
@@ -17,6 +22,9 @@ from .session import (
     ReconSession,
     SessionBatch,
     SideStore,
+    StoreCapacityError,
+    advance_session,
+    apply_churn,
 )
 
 __all__ = [
@@ -26,6 +34,9 @@ __all__ = [
     "ReconcileServer",
     "SessionBatch",
     "SideStore",
+    "StoreCapacityError",
+    "advance_session",
+    "apply_churn",
     "encode_side",
     "execute_round",
     "phase0_numerators",

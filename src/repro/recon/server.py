@@ -38,6 +38,7 @@ from repro.core.pbs import (
     PBSConfig,
     ReconcileResult,
     apply_round_outcomes,
+    effective_set,
     finalize_result,
     new_session_state,
     plan_from_d_known,
@@ -47,7 +48,15 @@ from repro.core.tow import tow_seeds
 from repro.kernels.tow_sketch import tow_sketch
 
 from .engine import execute_round
-from .session import CohortRoundPlan, ReconSession, SessionBatch
+from .session import (
+    CohortRoundPlan,
+    ReconSession,
+    SessionBatch,
+    advance_session,
+    apply_churn,
+)
+
+_EMPTY = np.zeros(0, dtype=np.uint32)
 
 
 def phase0_numerators(
@@ -87,13 +96,17 @@ class ReconcileServer:
     (interpreter off-TPU, compiled on TPU).
     """
 
-    def __init__(self, *, interpret: bool | None = None):
+    def __init__(self, *, interpret: bool | None = None, continuous: bool = False):
         self._interpret = interpret
+        self._continuous = continuous
         self._sessions: list[ReconSession | None] = []
         self._pending: dict[int, tuple] = {}   # sid -> (a, b, cfg), d unknown
+        self._d_known: dict[int, int | None] = {}
         self._batch: SessionBatch | None = None
         self._stats: dict = {}
         self._phase0_s = 0.0                   # accrued until the next run()
+        self._epoch = 0
+        self._counter_mark: dict = {}          # batch counters at last run end
 
     def submit(
         self,
@@ -121,7 +134,11 @@ class ReconcileServer:
         else:
             self._sessions.append(None)        # placeholder until phase 0
             self._pending[sid] = (a, b, cfg)
+        self._d_known[sid] = d_known
         self._batch = None  # new member: cohort stores must be rebuilt
+        # the discarded batch's counters die with it: reset the stats mark
+        # so the next run's per-epoch ledger diffs against the new batch
+        self._counter_mark = {}
         return sid
 
     def _flush_phase0(self) -> None:
@@ -169,10 +186,11 @@ class ReconcileServer:
         self._flush_phase0()
         phase0_s, self._phase0_s = self._phase0_s, 0.0
         if self._batch is None:
-            self._batch = SessionBatch(self._sessions)
+            self._batch = SessionBatch(self._sessions, mutable=self._continuous)
         batch = self._batch
         prior_store_bytes = batch.store_upload_bytes()
         st = {
+            "epoch": self._epoch,
             "phase0_s": phase0_s,
             "rounds": 0,
             "cohort_rounds": 0,
@@ -206,9 +224,21 @@ class ReconcileServer:
                 st["kernel_launches"] += 2       # fused bin launch + sketch matmul
                 st["legacy_kernel_launches"] += 4  # 2x bin + 2x sketch, per side
 
-        # stores built during *this* run (cached ones re-upload nothing)
+        # stores built during *this* run (cached ones re-upload nothing);
+        # the delta ledger additionally covers the advance_epoch patches
+        # applied since the previous run — the epoch they paid for is this
+        # one, so zero-rebuild epochs show store_builds == 0 and only their
+        # O(churn) scatter bytes (DESIGN.md §11)
         st["h2d_store_bytes"] = batch.store_upload_bytes() - prior_store_bytes
-        st["h2d_bytes"] = st["h2d_store_bytes"] + st["h2d_round_bytes"]
+        counters = batch.counters()
+        delta = {k: v - self._counter_mark.get(k, 0) for k, v in counters.items()}
+        st["store_builds"] = delta["store_builds"]
+        st["store_compactions"] = delta["store_compactions"]
+        st["h2d_delta_bytes"] = delta["store_delta_bytes"]
+        self._counter_mark = counters
+        st["h2d_bytes"] = (
+            st["h2d_store_bytes"] + st["h2d_round_bytes"] + st["h2d_delta_bytes"]
+        )
         st["legacy_h2d_bytes"] = st["legacy_h2d_round_bytes"]
         rounds = max(1, st["rounds"])
         st["h2d_bytes_per_round"] = st["h2d_bytes"] / rounds
@@ -221,6 +251,90 @@ class ReconcileServer:
             # ledger of the run that actually drove rounds
             self._stats = st
         return {s.sid: finalize_result(s.state, s.plan) for s in self._sessions}
+
+    def advance_epoch(
+        self,
+        mutations: dict | None = None,
+        *,
+        d_known: dict | None = None,
+        fold_diff: bool = True,
+    ) -> int:
+        """Open the next reconciliation epoch over the same resident stores
+        (continuous sync, DESIGN.md §11); returns the new epoch number.
+
+        Per session: Alice folds the learned diff into her set (replica
+        convergence, A ← A △ D̂; ``fold_diff=False`` keeps A), then both
+        sides apply the caller's local churn from ``mutations`` —
+        sid -> (added_a, removed_a, added_b, removed_b).  Sessions whose d
+        is pinned re-plan with that d; estimator sessions re-run phase 0
+        through the same batched ToW kernel sweep submit-time estimation
+        uses.  ``d_known`` (sid -> int | None) *rebinds* a session's
+        convention from this epoch on — an int pins d for this and later
+        epochs, ``None`` returns it to estimation; unmentioned sessions
+        keep their current convention (initially the submit-time one).
+        Each changed side's *net* element delta is patched into the
+        device-resident cohort stores in place — the next ``run`` drives
+        the epoch with zero store rebuilds (``stats["store_builds"]``) and
+        only O(churn) delta-H2D bytes (``stats["h2d_delta_bytes"]``).
+
+        Requires ``ReconcileServer(continuous=True)`` — one-shot batches
+        pack their stores without the mutation lanes the delta path
+        patches into.
+        """
+        if not self._continuous:
+            raise RuntimeError(
+                "advance_epoch needs ReconcileServer(continuous=True)"
+            )
+        self._flush_phase0()
+        if self._batch is None:
+            self._batch = SessionBatch(self._sessions, mutable=True)
+        muts = mutations or {}
+        dk_over = d_known or {}
+        unknown = (set(muts) | set(dk_over)) - set(range(len(self._sessions)))
+        if unknown:
+            # a typo'd sid must not silently drop the caller's churn
+            raise KeyError(f"unknown sid(s) {sorted(unknown)} in epoch advance")
+        self._epoch += 1
+
+        new_sets: dict[int, tuple] = {}
+        for s in self._sessions:
+            st = s.state
+            base_a = effective_set(st.a, st.diff) if fold_diff else st.a
+            aa, ra, ab, rb = muts.get(s.sid, (_EMPTY,) * 4)
+            new_sets[s.sid] = (
+                apply_churn(base_a, aa, ra), apply_churn(st.b, ab, rb)
+            )
+
+        if dk_over:
+            self._d_known.update(dk_over)
+        est = [s for s in self._sessions if self._d_known[s.sid] is None]
+        plans = {
+            s.sid: plan_from_d_known(s.plan.cfg, self._d_known[s.sid])
+            for s in self._sessions
+            if self._d_known[s.sid] is not None
+        }
+        if est:
+            t0 = time.perf_counter()
+            nums = phase0_numerators(
+                [new_sets[s.sid] for s in est],
+                [
+                    tow_seeds(derive_seed(s.plan.cfg.seed, 0x70), s.plan.cfg.ell)
+                    for s in est
+                ],
+                interpret=self._interpret,
+            )
+            for s, num in zip(est, nums):
+                plans[s.sid] = plan_from_estimate(
+                    s.plan.cfg, num, len(new_sets[s.sid][0])
+                )
+            self._phase0_s += time.perf_counter() - t0
+
+        for s in self._sessions:
+            new_a, new_b = new_sets[s.sid]
+            advance_session(
+                self._batch, s, plans[s.sid], new_a=new_a, new_b=new_b, rnd0=0
+            )
+        return self._epoch
 
     def _dispatch(self, plan: CohortRoundPlan):
         """Enqueue one cohort's fused round executor; returns device futures."""

@@ -32,6 +32,15 @@ Stores are built per *side*: the in-process server batches both sides; a
 ``repro.net`` wire endpoint passes ``sides=("a",)`` or ``("b",)`` and gets
 the identical round plans over only its own resident elements
 (DESIGN.md §9).
+
+A **mutable** batch (``SessionBatch(mutable=True)``, DESIGN.md §11) is the
+continuous-sync variant: rows are packed with per-row capacity slack, and
+``apply_mutations`` patches the device-resident CSR *in place* between
+epochs — removals back-fill each hole with the row's tail element (a
+tombstone immediately reclaimed), additions append into the row's free
+lane — shipping only O(churn) scatter indices/values instead of rebuilding
+and re-uploading the whole store.  A row that outgrows its lane triggers a
+compaction (one counted cohort rebuild with fresh slack).
 """
 from __future__ import annotations
 
@@ -48,10 +57,16 @@ from repro.core.pbs import (
     SessionState,
     diff_overlay,
     group_view,
+    new_session_state,
     session_live,
 )
 from repro.kernels.platform import ceil_to as _ceil_to
 from repro.kernels.platform import pow2_bucket
+
+
+class StoreCapacityError(RuntimeError):
+    """A delta mutation would overflow a row's capacity lane: the caller
+    must compact (rebuild the cohort store with fresh slack)."""
 
 
 @dataclass
@@ -86,6 +101,12 @@ class SideStore:
     A both-sides batch (the in-process ``ReconcileServer``) holds an "a" and
     a "b" SideStore per cohort; a ``repro.net`` endpoint holds only its own
     side — Alice never materializes Bob's elements and vice versa.
+
+    Mutable stores (continuous sync, DESIGN.md §11) additionally keep host
+    mirrors: ``flat_host`` (the element lanes), ``cap_host`` (each row's
+    allocated lane capacity, ``cnt_host <= cap_host``).  The executor never
+    sees the lanes — it gathers ``offs < cnt`` exactly as for a one-shot
+    store, so delta mutations change *no* device code path.
     """
 
     flat: jnp.ndarray              # (E_total,) uint32, device-resident
@@ -93,6 +114,9 @@ class SideStore:
     cnt: jnp.ndarray               # (G,) int32 row element counts
     cnt_host: np.ndarray           # host copy: gather widths + accounting
     h2d_bytes: int                 # one-time upload cost of this side
+    start_host: np.ndarray | None = None
+    flat_host: np.ndarray | None = None   # mutable stores only
+    cap_host: np.ndarray | None = None    # mutable stores only
 
 
 @dataclass
@@ -114,6 +138,7 @@ class CohortStore:
     m: int
     row_of: dict                   # (sid, group) -> store row index
     sides: dict                    # "a"/"b" -> SideStore
+    generation: int = 0            # bumped per in-place delta patch
 
     @property
     def a(self) -> SideStore:
@@ -126,6 +151,82 @@ class CohortStore:
     @property
     def h2d_bytes(self) -> int:
         return sum(s.h2d_bytes for s in self.sides.values())
+
+    def apply_side_mutations(self, side: str, row_updates: dict) -> int:
+        """Patch one side's CSR rows in place; returns the delta-H2D bytes.
+
+        ``row_updates`` maps store row -> (added values, removed values),
+        both duplicate-free and disjoint from each other.  Removals
+        back-fill each hole with an element from the row's live tail (a
+        tombstone reclaimed in the same pass), additions append into the
+        row's free lane, so the live elements stay a ``[start, start+cnt)``
+        prefix and the executor's gather mask needs no changes.  The device
+        update is two scatters (flat slots, row counts); only their index
+        and value arrays cross the host↔device boundary.
+
+        Raises ``StoreCapacityError`` (capacity overflow, the compaction
+        trigger) or ``ValueError`` (removing a non-resident element) —
+        both checked up front, before any mirror or device state changes.
+        """
+        ss = self.sides[side]
+        if ss.flat_host is None or ss.cap_host is None:
+            raise StoreCapacityError("store was built without mutation lanes")
+        for row, (added, removed) in row_updates.items():
+            if ss.cnt_host[row] - len(removed) + len(added) > ss.cap_host[row]:
+                raise StoreCapacityError(
+                    f"row {row}: {ss.cnt_host[row]} - {len(removed)} + "
+                    f"{len(added)} elements exceed the {ss.cap_host[row]} lane"
+                )
+            if removed:
+                seg = ss.flat_host[
+                    ss.start_host[row] : ss.start_host[row] + ss.cnt_host[row]
+                ]
+                missing = len(removed) - int(np.isin(seg, removed).sum())
+                if missing:
+                    raise ValueError(
+                        f"row {row}: {missing} removed elements not resident"
+                    )
+        idx_out: list[int] = []
+        val_out: list[int] = []
+        rows_out: list[int] = []
+        cnt_out: list[int] = []
+        for row in sorted(row_updates):
+            added, removed = row_updates[row]
+            s, c = int(ss.start_host[row]), int(ss.cnt_host[row])
+            if len(removed):
+                seg = ss.flat_host[s : s + c]
+                hole = np.isin(seg, removed)
+                k = len(removed)
+                # holes below the new extent take the tail's live elements
+                dst = np.nonzero(hole[: c - k])[0]
+                src = seg[c - k :][~hole[c - k :]]
+                for p, v in zip(dst, src):
+                    ss.flat_host[s + p] = v
+                    idx_out.append(s + int(p))
+                    val_out.append(int(v))
+                c -= k
+            for v in added:
+                ss.flat_host[s + c] = v
+                idx_out.append(s + c)
+                val_out.append(int(v))
+                c += 1
+            if c != int(ss.cnt_host[row]):
+                ss.cnt_host[row] = c
+                rows_out.append(row)
+                cnt_out.append(c)
+        delta = 0
+        if idx_out:
+            idx = np.asarray(idx_out, dtype=np.int32)
+            val = np.asarray(val_out, dtype=np.uint32)
+            ss.flat = ss.flat.at[jnp.asarray(idx)].set(jnp.asarray(val))
+            delta += idx.nbytes + val.nbytes
+        if rows_out:
+            rows = np.asarray(rows_out, dtype=np.int32)
+            cnts = np.asarray(cnt_out, dtype=np.int32)
+            ss.cnt = ss.cnt.at[jnp.asarray(rows)].set(jnp.asarray(cnts))
+            delta += rows.nbytes + cnts.nbytes
+        self.generation += 1
+        return delta
 
 
 @dataclass
@@ -169,22 +270,36 @@ def _by_group(vals: np.ndarray, g: int, seed_groups: int) -> dict:
     }
 
 
-def pack_csr(rows: list, col_align: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Pack variable-length rows into (flat, start, cnt) CSR arrays.
+def pack_csr(
+    rows: list, col_align: int, slack: bool = False
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Pack variable-length rows into (flat, start, cnt, cap) CSR arrays.
 
     Lane-pads the flat tail only: the device gather clamps past-end reads.
     (No pow2 bucket — the store shape is fixed for the whole run, so it
     costs one executor compile per cohort, not one per round; only
     round-varying dims need bucketing.)
+
+    With ``slack`` (mutable stores, DESIGN.md §11) each row's allocated
+    capacity ``cap`` exceeds its element count by ~25% plus an 8-slot
+    floor, leaving a free lane that in-place delta mutations append into;
+    without it ``cap == cnt`` and the layout is byte-identical to the
+    one-shot path.
     """
     cnt = np.array([len(r) for r in rows], dtype=np.int32)
+    cap = _ceil_to(cnt + (cnt >> 2) + 8, 8).astype(np.int32) if slack else cnt
     start = np.zeros(len(rows), dtype=np.int32)
-    np.cumsum(cnt[:-1], out=start[1:])
-    flat = (
-        np.concatenate(rows).astype(np.uint32) if rows else np.zeros(0, np.uint32)
-    )
-    flat = np.pad(flat, (0, _ceil_to(max(len(flat), 1), col_align) - len(flat)))
-    return flat, start, cnt
+    np.cumsum(cap[:-1], out=start[1:])
+    total = int(cap.sum())
+    flat = np.zeros(_ceil_to(max(total, 1), col_align), dtype=np.uint32)
+    if slack:
+        for i, r in enumerate(rows):
+            flat[start[i] : start[i] + len(r)] = r
+    elif rows:
+        # tight layout (cap == cnt): rows are contiguous, one vectorized fill
+        packed = np.concatenate(rows).astype(np.uint32)
+        flat[: len(packed)] = packed
+    return flat, start, cnt, cap
 
 
 class SessionBatch:
@@ -194,6 +309,10 @@ class SessionBatch:
     in-process server batches both ("a", "b"); a wire endpoint passes only
     its own side, and the same planner then emits the same round arrays
     minus the other side's store/widths.
+
+    ``mutable`` (continuous sync, DESIGN.md §11) packs stores with per-row
+    capacity slack so ``apply_mutations`` can patch them in place between
+    epochs; one-shot batches keep the exact tight layout.
     """
 
     # alignment floors of the packed layouts: unit rows to the sublane unit,
@@ -202,12 +321,21 @@ class SessionBatch:
     COL_ALIGN = 128
     OVERLAY_ALIGN = 8              # diff-overlay widths (removed/added cols)
 
-    def __init__(self, sessions: list[ReconSession], sides: tuple = ("a", "b")):
+    def __init__(
+        self,
+        sessions: list[ReconSession],
+        sides: tuple = ("a", "b"),
+        mutable: bool = False,
+    ):
         self.sessions = sessions
         self.sides = tuple(sides)
+        self.mutable = mutable
         self._stores: dict[tuple[int, int], CohortStore] = {}
         self.store_builds = 0          # cohort-store builds incl. rebuilds
         self.store_build_bytes = 0     # cumulative H2D bytes of those builds
+        self.store_delta_bytes = 0     # cumulative delta-patch H2D bytes
+        self.store_patches = 0         # apply_mutations calls that patched
+        self.store_compactions = 0     # capacity overflows -> forced rebuilds
 
     # ---- upload-once element store -------------------------------------
 
@@ -215,6 +343,18 @@ class SessionBatch:
         """One-time H2D cost of the stores built so far (0 if none yet) —
         accounting only, never forces a build."""
         return sum(s.h2d_bytes for s in self._stores.values())
+
+    def counters(self) -> dict:
+        """Snapshot of the cumulative store-ledger counters.  Diff two
+        snapshots to attribute builds/compactions/delta bytes to one run —
+        the shared mechanism behind ``ReconcileServer.stats`` and
+        ``HubEndpoint.stats`` per-epoch ledgers (DESIGN.md §11)."""
+        return {
+            "store_builds": self.store_builds,
+            "store_compactions": self.store_compactions,
+            "store_delta_bytes": self.store_delta_bytes,
+            "store_build_bytes": self.store_build_bytes,
+        }
 
     def add_sessions(self, new: list[ReconSession]) -> None:
         """Admit sessions mid-run (hub peers joining between global rounds).
@@ -229,21 +369,72 @@ class SessionBatch:
         for key in keys:
             self._stores.pop(key, None)
 
-    def store_for(self, key: tuple[int, int]) -> CohortStore:
+    def store_for(self, key: tuple[int, int], live=None) -> CohortStore:
         """This code's store, built (and uploaded) on first live use only.
 
         Members are the sessions of this code that still have live units at
         build time, so a rebuilt batch never re-uploads elements for
-        sessions that already finished; sessions only ever *finish*, so
-        every later round's live set is a subset of the rows built here.
+        sessions that already finished; within one epoch sessions only ever
+        *finish*, so every later round's live set is a subset of the rows
+        built here.  A continuous-sync epoch *resurrects* finished
+        sessions, so ``live`` (the sessions about to plan against the
+        store) guards membership: a resident store missing any of them —
+        e.g. a session whose plan migrated into this cohort between epochs
+        — is discarded and rebuilt with the union.
         """
-        if key not in self._stores:
+        store = self._stores.get(key)
+        if store is not None and live is not None and any(
+            (s.sid, 0) not in store.row_of for s in live
+        ):
+            self._stores.pop(key)
+            store = None
+        if store is None:
             members = [
                 s for s in self.sessions
                 if s.code_key == key and not s.failed and s.state.active_units()
             ]
-            self._stores[key] = self._build_store(*key, members)
-        return self._stores[key]
+            store = self._stores[key] = self._build_store(*key, members)
+        return store
+
+    def apply_mutations(self, sess: ReconSession, side: str, added, removed):
+        """Patch one session's side of its resident cohort store in place.
+
+        ``added``/``removed`` are the *net* element changes of that side's
+        set (disjoint; ``removed`` ⊆ the resident elements).  Partitions
+        them by the session's round-invariant groups, patches the affected
+        CSR rows through ``CohortStore.apply_side_mutations`` (O(churn)
+        H2D scatter bytes, ledgered in ``store_delta_bytes``), and bumps
+        the store generation — ``_build_store`` is never on this path.  A
+        capacity overflow discards the store instead (a **compaction**:
+        the next live use rebuilds it, with fresh slack, from the session
+        states — which the caller is about to refresh).  No-op when the
+        cohort store isn't resident yet.
+        """
+        if side not in self.sides or not (len(added) or len(removed)):
+            return
+        store = self._stores.get(sess.code_key)
+        if store is None:
+            return                      # next store_for builds from state
+        if (sess.sid, 0) not in store.row_of:
+            # session not in the resident build (joined after it): compact
+            self._stores.pop(sess.code_key)
+            self.store_compactions += 1
+            return
+        plan = sess.plan
+        updates: dict[int, tuple[list, list]] = {}
+        for vals, lane in ((added, 0), (removed, 1)):
+            grouped = _by_group(
+                np.asarray(vals, dtype=np.uint32), plan.g, plan.seed_groups
+            )
+            for grp, gv in grouped.items():
+                row = store.row_of[(sess.sid, grp)]
+                updates.setdefault(row, ([], []))[lane].extend(int(v) for v in gv)
+        try:
+            self.store_delta_bytes += store.apply_side_mutations(side, updates)
+            self.store_patches += 1
+        except StoreCapacityError:
+            self._stores.pop(sess.code_key, None)
+            self.store_compactions += 1
 
     def _build_store(self, n: int, t: int, members: list[ReconSession]) -> CohortStore:
         rows: dict[str, list[np.ndarray]] = {side: [] for side in self.sides}
@@ -266,11 +457,16 @@ class SessionBatch:
 
         sides: dict[str, SideStore] = {}
         for side in self.sides:
-            flat, start, cnt = pack_csr(rows[side], self.COL_ALIGN)
+            flat, start, cnt, cap = pack_csr(
+                rows[side], self.COL_ALIGN, slack=self.mutable
+            )
             sides[side] = SideStore(
                 flat=jnp.asarray(flat), start=jnp.asarray(start),
                 cnt=jnp.asarray(cnt), cnt_host=cnt,
                 h2d_bytes=flat.nbytes + start.nbytes + cnt.nbytes,
+                start_host=start,
+                flat_host=flat if self.mutable else None,
+                cap_host=cap if self.mutable else None,
             )
         store = CohortStore(n=n, t=t, m=bch_code(n, t).m, row_of=row_of, sides=sides)
         self.store_builds += 1
@@ -297,7 +493,9 @@ class SessionBatch:
                 continue  # budget exhausted (reported failed) or finished
             live.setdefault(s.code_key, []).append((s, s.state.active_units()))
         return [
-            self._plan_cohort(self.store_for(key), members, rnd)
+            self._plan_cohort(
+                self.store_for(key, live=[s for s, _ in members]), members, rnd
+            )
             for key, members in sorted(live.items())
         ]
 
@@ -434,3 +632,77 @@ class SessionBatch:
         wb_old = max(self.COL_ALIGN, _ceil_to(int(nb.max()), self.COL_ALIGN))
         # elems (4B) + valid (4B) per cell, both sides, + uint32 seeds
         return u_old * (wa_old + wb_old) * 8 + u_old * 4
+
+
+# ---------------------------------------------------------------------------
+# Continuous-sync epoch helpers (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def apply_churn(base: np.ndarray, added, removed) -> np.ndarray:
+    """One side's next-epoch set: ``(base \\ removed) ∪ added``, unique and
+    sorted like every other element array in the stack.  Removing an absent
+    element or re-adding a present one is a no-op, matching set semantics."""
+    out = np.setdiff1d(
+        np.asarray(base, dtype=np.uint32), np.asarray(removed, dtype=np.uint32)
+    )
+    return np.unique(
+        np.concatenate([out, np.asarray(added, dtype=np.uint32)])
+    )
+
+
+def advance_session(
+    batch: SessionBatch,
+    sess: ReconSession,
+    plan: ProtocolPlan,
+    *,
+    new_a: np.ndarray | None = None,
+    new_b: np.ndarray | None = None,
+    rnd0: int = 0,
+) -> ReconSession:
+    """Move one session into its next epoch over the same resident store.
+
+    Installs the epoch's plan and a fresh round state (units reset, diff
+    empty — byte-identical to a session freshly submitted with the new
+    sets), and delta-patches the batch's resident cohort store with each
+    changed side's *net* element changes instead of rebuilding it.  When
+    the new plan's store layout differs — (n, t), g, or the group seed
+    changed, so the CSR grouping itself moved — the resident store can't be
+    patched: the session's old cohort is invalidated (when the key is
+    unchanged) and the next live use rebuilds, which the batch counts as a
+    build, keeping the zero-rebuild assertion of the pure delta path
+    honest.  ``new_a``/``new_b`` = None keeps that side's set unchanged.
+    """
+    old = sess.plan
+    a = sess.state.a if new_a is None else np.unique(
+        np.asarray(new_a, dtype=np.uint32)
+    )
+    b = sess.state.b if new_b is None else np.unique(
+        np.asarray(new_b, dtype=np.uint32)
+    )
+    layout_same = (plan.n, plan.t, plan.g, plan.seed_groups) == (
+        old.n, old.t, old.g, old.seed_groups
+    )
+    if layout_same:
+        for side, new, cur in (("a", new_a, sess.state.a),
+                               ("b", new_b, sess.state.b)):
+            if new is None:
+                continue
+            arr = a if side == "a" else b
+            batch.apply_mutations(
+                sess, side, np.setdiff1d(arr, cur), np.setdiff1d(cur, arr)
+            )
+    else:
+        # the row layout moved: the session's resident rows are stale in
+        # BOTH cohorts it touches.  Drop the old key (its rows hold the
+        # previous epoch's elements — a later migration back would
+        # otherwise pass store_for's membership guard and reconcile over
+        # them) and the new key (a resident target store has no rows for
+        # this session, or stale ones from an earlier stint); both rebuild
+        # on next live use from the refreshed states, as counted builds.
+        batch._stores.pop((old.n, old.t), None)
+        batch._stores.pop((plan.n, plan.t), None)
+    sess.plan = plan
+    sess.state = new_session_state(a, b, plan)
+    sess.rnd0 = rnd0
+    return sess

@@ -1,0 +1,60 @@
+"""Continuous epoch reconciliation for divergent replicas (DESIGN.md §11).
+
+``repro.sync`` is the facade over the continuous-sync machinery that lives
+with each layer it extends: sets mutate between **epochs** and only deltas
+move — in H2D traffic (the device-resident CSR stores are patched in
+place through tombstone-reclaiming swap-remove + append lanes instead of
+rebuilt) and on the wire (the ``MSG_EPOCH`` envelope carries the epoch id
+plus the d̂ re-estimation handshake through the phase-0 codecs).
+
+The pieces, in dependency order:
+
+* ``SessionBatch(mutable=True)`` + ``apply_mutations`` / ``advance_session``
+  / ``apply_churn`` (``repro.recon.session``) — delta-mutable cohort
+  stores with per-row capacity lanes and compaction on overflow;
+* ``ReconcileServer(continuous=True).advance_epoch`` (``repro.recon``) —
+  the in-process epoch loop, re-estimating d through the batched ToW
+  kernel path and folding learned diffs for replica convergence;
+* ``encode_epoch`` / ``decode_epoch`` (``repro.wire``) — the epoch
+  envelope, mirroring ``MSG_MUX``'s ledger rules (inner bits per Formula
+  (1), envelope bytes as transport overhead);
+* ``AliceEndpoint`` / ``BobEndpoint`` / ``HubEndpoint`` with
+  ``continuous=True`` plus the ``run_pair_epoch`` / ``run_hub_epoch``
+  drivers (``repro.net``) — epochs over real transports, reusing live
+  sessions and channels with no re-admission.
+
+Locked down by tests/test_sync_properties.py (delta path ≡ from-scratch
+rebuild, byte for byte) and tests/test_sync_churn.py (multi-epoch hub soak
+under churn against the ``core.pbs.reconcile`` oracle).
+"""
+from repro.net import (
+    AliceEndpoint,
+    BobEndpoint,
+    HubEndpoint,
+    run_hub_epoch,
+    run_pair_epoch,
+)
+from repro.recon.server import ReconcileServer
+from repro.recon.session import (
+    SessionBatch,
+    StoreCapacityError,
+    advance_session,
+    apply_churn,
+)
+from repro.wire import decode_epoch, encode_epoch, epoch_overhead_bytes
+
+__all__ = [
+    "AliceEndpoint",
+    "BobEndpoint",
+    "HubEndpoint",
+    "ReconcileServer",
+    "SessionBatch",
+    "StoreCapacityError",
+    "advance_session",
+    "apply_churn",
+    "decode_epoch",
+    "encode_epoch",
+    "epoch_overhead_bytes",
+    "run_hub_epoch",
+    "run_pair_epoch",
+]

@@ -11,10 +11,13 @@ formulas).  ``repro.net`` endpoints accumulate those measured bits into the
 per-session byte ledger and assert it equals ``core.pbs`` accounting
 bit-for-bit (tests/test_net_endpoints.py, tests/test_recon_batch.py).
 The ``MSG_MUX`` envelope (DESIGN.md §10) channel-tags complete frames for
-the multi-peer hub; its bytes are transport overhead, never ledger bits.
+the multi-peer hub, and the ``MSG_EPOCH`` envelope (DESIGN.md §11) opens a
+continuous-sync epoch carrying the epoch id + d̂ re-estimation handshake;
+both envelopes' bytes are transport overhead, never ledger bits.
 """
 from .frames import (
     MSG_DHAT,
+    MSG_EPOCH,
     MSG_MUX,
     MSG_ROUND_OUTCOME,
     MSG_ROUND_REPLY,
@@ -26,6 +29,7 @@ from .frames import (
     WireError,
     WireTruncated,
     decode_dhat,
+    decode_epoch,
     decode_mux,
     decode_round_outcome,
     decode_round_reply,
@@ -34,6 +38,7 @@ from .frames import (
     decode_verify,
     decode_verify_ack,
     encode_dhat,
+    encode_epoch,
     encode_mux,
     encode_round_outcome,
     encode_round_reply,
@@ -41,6 +46,7 @@ from .frames import (
     encode_tow_sketch,
     encode_verify,
     encode_verify_ack,
+    epoch_overhead_bytes,
     frame,
     mux_overhead_bytes,
     reply_ledger_bits,
@@ -51,6 +57,7 @@ from .varint import decode_uvarint, encode_uvarint, unzigzag, uvarint_len, zigza
 
 __all__ = [
     "MSG_DHAT",
+    "MSG_EPOCH",
     "MSG_MUX",
     "MSG_ROUND_OUTCOME",
     "MSG_ROUND_REPLY",
@@ -62,6 +69,7 @@ __all__ = [
     "WireError",
     "WireTruncated",
     "decode_dhat",
+    "decode_epoch",
     "decode_mux",
     "decode_round_outcome",
     "decode_round_reply",
@@ -71,6 +79,7 @@ __all__ = [
     "decode_verify",
     "decode_verify_ack",
     "encode_dhat",
+    "encode_epoch",
     "encode_mux",
     "encode_round_outcome",
     "encode_round_reply",
@@ -79,6 +88,7 @@ __all__ = [
     "encode_uvarint",
     "encode_verify",
     "encode_verify_ack",
+    "epoch_overhead_bytes",
     "frame",
     "mux_overhead_bytes",
     "reply_ledger_bits",

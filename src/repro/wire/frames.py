@@ -44,10 +44,11 @@ MSG_ROUND_OUTCOME = 0x05  # Alice -> Bob: per-unit checksum-settled flags
 MSG_VERIFY = 0x06         # Alice -> Bob: success + c(A xor D_hat) per session
 MSG_VERIFY_ACK = 0x07     # Bob -> Alice: per-session verification verdicts
 MSG_MUX = 0x08            # either direction: channel-tagged envelope (hub)
+MSG_EPOCH = 0x09          # either direction: epoch-open envelope (continuous sync)
 
 _KNOWN = frozenset(
     (MSG_TOW_SKETCH, MSG_DHAT, MSG_ROUND_SKETCHES, MSG_ROUND_REPLY,
-     MSG_ROUND_OUTCOME, MSG_VERIFY, MSG_VERIFY_ACK, MSG_MUX)
+     MSG_ROUND_OUTCOME, MSG_VERIFY, MSG_VERIFY_ACK, MSG_MUX, MSG_EPOCH)
 )
 
 KEY_BITS = 32  # element keys are 32-bit (core.pbs.KEY_BITS)
@@ -131,6 +132,63 @@ def mux_overhead_bytes(channel: int, inner_len: int) -> int:
     ledger exactly like ARQ overhead)."""
     payload_len = uvarint_len(channel) + inner_len
     return uvarint_len(1 + payload_len) + 1 + uvarint_len(channel)
+
+
+# ---------------------------------------------------------------------------
+# Epoch envelope (continuous sync, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def encode_epoch(epoch: int, inner: bytes = b"") -> bytes:
+    """Wrap one continuous-sync epoch-handshake step in an epoch-tagged
+    envelope.
+
+    Payload: ``uvarint(epoch) || inner`` where ``inner`` is either empty —
+    a bare epoch-open, sent when the epoch needs no d̂ re-estimation — or
+    exactly one complete phase-0 frame (``MSG_TOW_SKETCH`` outbound,
+    ``MSG_DHAT`` on the reply), so the d̂ handshake rides the same codecs
+    admission uses.  Epoch 0 is the admission epoch (plain ``submit`` +
+    phase 0), so an epoch tag below 1 is always a protocol error.  The
+    ledger mirrors ``MSG_MUX``: the inner frame's bits count per Formula
+    (1) (estimator bytes), the envelope's extra bytes are transport
+    overhead.
+    """
+    if epoch < 1:
+        raise WireError(f"epoch {epoch} out of range (must be >= 1)")
+    return frame(MSG_EPOCH, encode_uvarint(epoch) + inner)
+
+
+def decode_epoch(payload: bytes) -> tuple[int, int | None, bytes | None]:
+    """(epoch, inner msg_type | None, inner payload | None); strict.
+
+    A non-empty inner region must parse as exactly one complete frame (no
+    trailing bytes) and must not itself be an envelope — nested
+    ``MSG_EPOCH`` or ``MSG_MUX`` is rejected (the mux wrap, when present,
+    goes *outside* the epoch envelope).
+    """
+    epoch, off = decode_uvarint(payload)
+    if epoch < 1:
+        raise WireError(f"epoch {epoch} out of range (must be >= 1)")
+    if off == len(payload):
+        return epoch, None, None
+    got = split_frame(payload, off)
+    if got is None:
+        raise WireTruncated("epoch envelope holds an incomplete inner frame")
+    msg_type, inner_payload, end = got
+    if msg_type in (MSG_EPOCH, MSG_MUX):
+        raise WireError(f"nested envelope 0x{msg_type:02x} in epoch frame")
+    if end != len(payload):
+        raise WireError(
+            f"{len(payload) - end} trailing bytes after epoch inner frame"
+        )
+    return epoch, msg_type, inner_payload
+
+
+def epoch_overhead_bytes(epoch: int, inner_len: int) -> int:
+    """Envelope bytes ``encode_epoch`` adds on top of the inner frame —
+    transport overhead, excluded from the protocol ledger like mux/ARQ."""
+    payload_len = uvarint_len(epoch) + inner_len
+    return uvarint_len(1 + payload_len) + 1 + uvarint_len(epoch)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,171 @@
+"""Churn soak: a 4-peer continuous-sync hub under multi-epoch churn.
+
+The ISSUE 5 acceptance scenario: one ``HubEndpoint(continuous=True)``
+serving 4 peers (mixed known-d and estimator sessions) across many epochs
+with random add/remove churn between epochs — including an epoch with
+d = 0 (no churn at all) and one straggler evicted mid-epoch — where
+
+* every *surviving* peer's per-epoch results are byte-identical to a fresh
+  ``core.pbs.reconcile`` oracle over that epoch's sets (diff, rounds,
+  per-round measured wire ledger, estimator bytes);
+* the stats ledger proves the delta path: **zero cohort store rebuilds
+  after epoch 0** and cumulative delta-H2D bytes ≤ 25% of what rebuilding
+  the stores every epoch would have uploaded;
+* the straggler fails alone, at its barrier deadline, without perturbing
+  the other peers' epoch.
+
+The full ≥20-epoch soak is marked ``slow`` (CI's non-blocking full-suite
+job); the seeded 3-epoch variant — same machinery, same assertions, d = 0
+epoch included — runs in the blocking fast tier.
+"""
+import numpy as np
+import pytest
+
+from repro.core.pbs import PBSConfig, reconcile, true_diff
+from repro.core.simdata import make_pair
+from repro.net import (
+    AliceEndpoint,
+    HubEndpoint,
+    InMemoryDuplex,
+    run_hub,
+    run_hub_epoch,
+)
+from repro.recon.session import apply_churn
+
+_EMPTY = np.zeros(0, dtype=np.uint32)
+
+
+class _SilentMidEpoch(AliceEndpoint):
+    """A straggler: completes the epoch handshake, then never sends a round
+    frame — the hub must evict it at the round-barrier deadline while the
+    other peers' epoch proceeds."""
+
+    silent = False
+
+    def _run_rounds(self):
+        if self.silent:
+            return {}
+        return super()._run_rounds()
+
+
+def _fresh_elems(rng, k):
+    return rng.integers(1, 1 << 32, size=k, dtype=np.uint64).astype(np.uint32)
+
+
+def _churn_soak(epochs, *, straggle_at=None, d0_at=None, seed=0,
+                deadline=20.0):
+    """Drive the soak; returns (hub, per-epoch delta bytes, store bytes)."""
+    peers = 4
+    d = 20
+    rng = np.random.default_rng(seed)
+    hub = HubEndpoint(recv_deadline=deadline, continuous=True)
+    alices: dict[int, AliceEndpoint] = {}
+    cfgs: dict[int, PBSConfig] = {}
+    dks: dict[int, int | None] = {}
+    for p in range(peers):
+        a, b = make_pair(700, d, np.random.default_rng(seed + 101 * p))
+        # peer 3 re-estimates d̂ over the wire each epoch; the pinned
+        # (n, t, g) keeps every layout epoch-stable => pure delta path
+        dk = None if p == 3 else d
+        cfg = PBSConfig(seed=seed + p, n_override=127, t_override=7,
+                        g_override=4)
+        ta, tb = InMemoryDuplex.pair()
+        ch = hub.add_peer(tb, label=f"peer{p}")
+        hub.submit(ch, b, cfg=cfg, d_known=dk)
+        cls = _SilentMidEpoch if p == 1 else AliceEndpoint
+        ep = cls(ta, channel=ch, continuous=True)
+        ep.submit(a, cfg=cfg, d_known=dk)
+        alices[ch] = ep
+        cfgs[ch], dks[ch] = cfg, dk
+
+    outcomes, results, errors = run_hub(hub, alices)
+    assert not errors and all(o.ok for o in outcomes.values())
+    uploads0 = hub.stats["store_uploads"]
+    assert uploads0 == 1                    # one cohort across all peers
+    store_bytes = hub._batch.store_upload_bytes()
+    assert store_bytes > 0
+    delta_per_epoch = []
+
+    evicted: set[int] = set()
+    for e in range(1, epochs + 1):
+        quiet = e == d0_at
+        hub_muts: dict[int, dict] = {}
+        alice_muts: dict[int, dict] = {}
+        for ch, ep in alices.items():
+            if ch in evicted or quiet:
+                continue
+            b_cur = hub._peers[ch].sessions[0].state.b
+            hub_muts[ch] = {0: (_fresh_elems(rng, 8),
+                                rng.permutation(b_cur)[:8])}
+            a_base = ep.sessions[0].state.a
+            alice_muts[ch] = {0: (_fresh_elems(rng, 2),
+                                  rng.permutation(a_base)[:2])}
+        hub.advance_epoch(hub_muts)
+        for ch, ep in alices.items():
+            if ch in evicted:
+                continue
+            ep.advance_epoch(alice_muts.get(ch, {}))
+            if straggle_at == e and isinstance(ep, _SilentMidEpoch):
+                ep.silent = True
+
+        live = {ch: ep for ch, ep in alices.items() if ch not in evicted}
+        outcomes, results, errors = run_hub_epoch(hub, live)
+        st = hub.stats
+
+        # the delta-path contract: zero rebuilds after epoch 0, O(churn)
+        # scatter traffic only (and literally zero when nothing churned)
+        assert st["store_builds"] == 0, (e, st)
+        assert st["store_compactions"] == 0, (e, st)
+        assert st["store_uploads"] == uploads0
+        if quiet:
+            assert st["h2d_delta_bytes"] == 0
+        else:
+            assert 0 < st["h2d_delta_bytes"] < store_bytes
+        delta_per_epoch.append(st["h2d_delta_bytes"])
+
+        for ch, ep in live.items():
+            if straggle_at == e and isinstance(ep, _SilentMidEpoch):
+                # evicted at the round barrier: clean per-peer error, its
+                # sessions failed, everyone else untouched
+                assert not outcomes[ch].ok
+                assert outcomes[ch].error is not None
+                assert all(s.failed for s in outcomes[ch].sessions)
+                evicted.add(ch)
+                continue
+            assert ch not in errors, errors.get(ch)
+            assert outcomes[ch].ok and outcomes[ch].verified == [True]
+            a_e = ep.sessions[0].state.a
+            b_e = hub._peers[ch].sessions[0].state.b
+            r = results[ch][0]
+            oracle = reconcile(a_e, b_e, cfgs[ch], d_known=dks[ch])
+            td = true_diff(a_e, b_e)
+            if quiet:
+                assert td == set()
+            assert r.success and r.diff == oracle.diff == td, (e, ch)
+            assert r.rounds == oracle.rounds
+            assert r.bytes_per_round == oracle.bytes_per_round, (e, ch)
+            assert r.bytes_sent == oracle.bytes_sent
+            assert r.estimator_bytes == oracle.estimator_bytes
+            assert (r.n, r.t, r.g, r.d_est) == (
+                oracle.n, oracle.t, oracle.g, oracle.d_est
+            )
+
+    # the headline acceptance gate: O(churn) H2D per epoch, not O(|B|) —
+    # cumulative delta bytes ≤ 25% of rebuilding the store every epoch
+    frac = sum(delta_per_epoch) / (epochs * store_bytes)
+    assert frac <= 0.25, (frac, delta_per_epoch, store_bytes)
+    if straggle_at is not None:
+        assert evicted, "straggler epoch never ran"
+    return hub
+
+
+def test_churn_epochs_fast():
+    """3 seeded epochs (d = 0 epoch included): the fast-tier variant."""
+    _churn_soak(3, d0_at=2, seed=42)
+
+
+@pytest.mark.slow
+def test_churn_soak_20_epochs():
+    """The full acceptance soak: ≥20 epochs at ~5% churn with a d = 0
+    epoch and a mid-epoch straggler eviction."""
+    _churn_soak(20, straggle_at=5, d0_at=10, seed=7, deadline=6.0)

@@ -1,0 +1,425 @@
+"""Property-based parity for the continuous-sync delta path (DESIGN.md §11).
+
+The delta-mutable store machinery must be *invisible*: after any trace of
+epoch mutations through ``apply_mutations``/``advance_session``, the
+mutated batch must plan and reconcile byte-identically to a from-scratch
+rebuild over the same current sets.
+
+Three layers:
+
+1. **plan parity** — after each epoch advance, every cohort round plan of
+   the long-lived (delta-patched) ``SessionBatch`` is compared
+   field-for-field and array-for-array against a freshly built batch over
+   the same session states, and every store row's *effective element set*
+   (the live CSR prefix) must match the fresh pack;
+2. **result parity** — each epoch's reconciliation results are
+   byte-identical to the ``core.pbs.reconcile`` oracle over the epoch's
+   sets, with ``stats["store_builds"] == 0`` asserting the pure delta path
+   never rebuilt (layout pinned), and a layout-shifting variant asserting
+   rebuilds are *counted* when d̂ swings re-plan the cohort;
+3. **store-level units** — ``apply_side_mutations`` edge semantics
+   (swap-remove backfill, lane append, capacity overflow -> compaction,
+   absent-removal rejection) plus the direct ``SessionBatch.add_sessions``
+   invalidation and ``store_builds``/``store_upload_bytes`` counter
+   coverage that previously only the hub acceptance test exercised.
+
+Seeded variants always run; hypothesis widens the trace space when the
+``[test]`` extra is installed (tests/_hypothesis_compat.py).
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.pbs import (
+    PBSConfig,
+    new_session_state,
+    plan_from_d_known,
+    reconcile,
+    true_diff,
+)
+from repro.core.simdata import make_pair
+from repro.recon import ReconcileServer
+from repro.recon.session import (
+    ReconSession,
+    SessionBatch,
+    StoreCapacityError,
+    apply_churn,
+)
+
+_EMPTY = np.zeros(0, dtype=np.uint32)
+
+
+def _fresh_elems(rng, k):
+    return rng.integers(1, 1 << 32, size=k, dtype=np.uint64).astype(np.uint32)
+
+
+def _churn(rng, base, n_add, n_remove):
+    removed = rng.permutation(base)[:n_remove]
+    added = _fresh_elems(rng, n_add)
+    return added, removed
+
+
+def _fresh_batch_like(batch):
+    """A from-scratch SessionBatch over the same current session states."""
+    sessions = [
+        ReconSession(
+            sid=s.sid,
+            plan=s.plan,
+            state=new_session_state(s.state.a, s.state.b, s.plan),
+            rnd0=s.rnd0,
+            failed=s.failed,
+        )
+        for s in batch.sessions
+    ]
+    return SessionBatch(sessions, sides=batch.sides, mutable=batch.mutable)
+
+
+def _assert_store_rows_equal(mutated, fresh):
+    """Every row's live element *set* in the patched store must equal the
+    freshly packed store's (slot order is free: the reductions are
+    permutation-invariant)."""
+    assert mutated.row_of == fresh.row_of
+    for side in mutated.sides:
+        ms, fs = mutated.sides[side], fresh.sides[side]
+        np.testing.assert_array_equal(ms.cnt_host, fs.cnt_host)
+        for row in range(len(ms.cnt_host)):
+            m_row = ms.flat_host[
+                ms.start_host[row] : ms.start_host[row] + ms.cnt_host[row]
+            ]
+            f_row = fs.flat_host[
+                fs.start_host[row] : fs.start_host[row] + fs.cnt_host[row]
+            ]
+            np.testing.assert_array_equal(np.sort(m_row), np.sort(f_row))
+            # device mirror matches the host mirror at every patched slot
+            np.testing.assert_array_equal(
+                np.asarray(ms.flat)[
+                    ms.start_host[row] : ms.start_host[row] + ms.cnt_host[row]
+                ],
+                m_row,
+            )
+
+
+def _assert_plan_parity(batch):
+    """The mutated batch's round-1 plans must be byte-identical to a
+    from-scratch rebuild's: same cohorts, members, widths, and overlay
+    arrays (the executor sees no difference beyond store slot order)."""
+    fresh = _fresh_batch_like(batch)
+    plans_m = batch.plan_round(1)
+    plans_f = fresh.plan_round(1)
+    assert len(plans_m) == len(plans_f)
+    for pm, pf in zip(plans_m, plans_f):
+        assert (pm.store.n, pm.store.t, pm.store.m) == (
+            pf.store.n, pf.store.t, pf.store.m
+        )
+        assert pm.units == pf.units
+        assert (pm.width_a, pm.width_b) == (pf.width_a, pf.width_b)
+        assert [
+            (s.sid, base, len(active), seed)
+            for s, base, active, seed in pm.members
+        ] == [
+            (s.sid, base, len(active), seed)
+            for s, base, active, seed in pf.members
+        ]
+        assert pm.arrays.keys() == pf.arrays.keys()
+        for key in pm.arrays:
+            np.testing.assert_array_equal(
+                pm.arrays[key], pf.arrays[key], err_msg=key
+            )
+        _assert_store_rows_equal(pm.store, pf.store)
+
+
+def _run_trace(seed, epochs, *, sessions=2, size=500, d=12, pinned=True):
+    """Drive a random epoch-mutation trace through the continuous server,
+    asserting plan parity, oracle result parity, and the build ledger."""
+    rng = np.random.default_rng(seed)
+    server = ReconcileServer(continuous=True)
+    cfgs, dks = [], []
+    for s in range(sessions):
+        a, b = make_pair(size, d, np.random.default_rng(seed + 31 * s))
+        # mix known-d and estimator sessions; pinned layouts keep the
+        # delta path rebuild-free, unpinned ones re-optimize per epoch
+        dk = d if s % 2 == 0 else None
+        cfg = (
+            PBSConfig(seed=seed + s, n_override=127, t_override=7,
+                      g_override=3)
+            if pinned
+            else PBSConfig(seed=seed + s)
+        )
+        server.submit(a, b, cfg=cfg, d_known=dk)
+        cfgs.append(cfg)
+        dks.append(dk)
+    results = server.run()
+    assert server.stats["store_builds"] > 0        # epoch 0 pays the upload
+
+    for _ in range(epochs):
+        muts = {}
+        for s in range(sessions):
+            st = server.sessions[s].state
+            muts[s] = (
+                *_churn(rng, st.a, int(rng.integers(0, 6)),
+                        int(rng.integers(0, 6))),
+                *_churn(rng, st.b, int(rng.integers(0, 6)),
+                        int(rng.integers(0, 6))),
+            )
+        server.advance_epoch(muts)
+        if pinned:
+            _assert_plan_parity(server._batch)
+        results = server.run()
+        stats = server.stats
+        if pinned:
+            # the pure delta path: zero rebuilds, only O(churn) H2D bytes
+            assert stats["store_builds"] == 0, stats
+            assert stats["store_compactions"] == 0, stats
+            assert stats["h2d_delta_bytes"] > 0
+            assert stats["h2d_store_bytes"] == 0
+        for s in range(sessions):
+            sess = server.sessions[s]
+            a_e, b_e = sess.state.a, sess.state.b
+            oracle = reconcile(a_e, b_e, cfgs[s], d_known=dks[s])
+            r = results[s]
+            assert r.success and r.diff == oracle.diff == true_diff(a_e, b_e)
+            assert r.bytes_per_round == oracle.bytes_per_round
+            assert r.bytes_sent == oracle.bytes_sent
+            assert r.estimator_bytes == oracle.estimator_bytes
+            assert (r.n, r.t, r.g, r.d_est) == (
+                oracle.n, oracle.t, oracle.g, oracle.d_est
+            )
+    return server
+
+
+# ---------------------------------------------------------------------------
+# seeded always-run variants
+# ---------------------------------------------------------------------------
+
+
+def test_delta_trace_matches_rebuild_seeded():
+    _run_trace(2001, epochs=3, pinned=True)
+
+
+def test_delta_trace_unpinned_counts_rebuilds():
+    """Without pinned layouts the estimator session re-plans per epoch;
+    results must stay oracle-identical and any layout shift must surface
+    as a *counted* rebuild instead of silent corruption."""
+    server = _run_trace(2002, epochs=2, sessions=2, pinned=False)
+    batch = server._batch
+    # every store build was ledgered with its upload bytes
+    assert batch.store_builds >= 1
+    assert batch.store_build_bytes > 0
+
+
+def test_epoch_with_zero_churn_is_d0():
+    """An epoch with no mutations reconciles d = 0 byte-identically."""
+    server = ReconcileServer(continuous=True)
+    a, b = make_pair(400, 10, np.random.default_rng(5))
+    cfg = PBSConfig(seed=3, n_override=127, t_override=7, g_override=2)
+    server.submit(a, b, cfg=cfg, d_known=10)
+    server.run()
+    server.advance_epoch()                   # fold only: A becomes B
+    results = server.run()
+    sess = server.sessions[0]
+    assert np.array_equal(np.sort(sess.state.a), np.sort(sess.state.b))
+    oracle = reconcile(sess.state.a, sess.state.b, cfg, d_known=10)
+    assert results[0].diff == oracle.diff == set()
+    assert results[0].bytes_per_round == oracle.bytes_per_round
+    assert server.stats["store_builds"] == 0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis variants (skip cleanly without the [test] extra)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**20))
+def test_delta_trace_matches_rebuild_hypothesis(seed):
+    _run_trace(seed, epochs=2, sessions=1, size=350, d=8, pinned=True)
+
+
+# ---------------------------------------------------------------------------
+# store-level units: mutation lanes, compaction, counters
+# ---------------------------------------------------------------------------
+
+
+def _one_session_batch(size=300, d=8, seed=0, mutable=True, g=2):
+    a, b = make_pair(size, d, np.random.default_rng(seed))
+    cfg = PBSConfig(seed=seed, n_override=127, t_override=7, g_override=g)
+    plan = plan_from_d_known(cfg, d)
+    sess = ReconSession(sid=0, plan=plan, state=new_session_state(a, b, plan))
+    return SessionBatch([sess], mutable=mutable), sess
+
+
+def test_apply_mutations_patches_in_place():
+    batch, sess = _one_session_batch()
+    store = batch.store_for(sess.code_key)
+    gen0 = store.generation
+    flat_id = id(store.sides["a"].flat_host)
+    rng = np.random.default_rng(1)
+    removed = rng.permutation(sess.state.a)[:5]
+    added = _fresh_elems(rng, 5)
+    batch.apply_mutations(sess, "a", added, removed)
+    assert batch.store_for(sess.code_key) is store     # same store object
+    assert store.generation > gen0
+    assert id(store.sides["a"].flat_host) == flat_id   # patched, not repacked
+    assert batch.store_builds == 1
+    assert batch.store_patches == 1
+    assert batch.store_delta_bytes > 0
+    # the live rows now hold exactly the churned set
+    new_a = apply_churn(sess.state.a, added, removed)
+    ss = store.sides["a"]
+    live = np.concatenate([
+        ss.flat_host[ss.start_host[r] : ss.start_host[r] + ss.cnt_host[r]]
+        for r in range(len(ss.cnt_host))
+    ])
+    np.testing.assert_array_equal(np.sort(live), new_a)
+
+
+def test_apply_mutations_rejects_absent_removal():
+    batch, sess = _one_session_batch()
+    store = batch.store_for(sess.code_key)
+    absent = np.setdiff1d(
+        _fresh_elems(np.random.default_rng(9), 64), sess.state.a
+    )[:1]
+    with pytest.raises(ValueError, match="not resident"):
+        batch.apply_mutations(sess, "a", _EMPTY, absent)
+    assert store.generation == 0
+
+
+def test_capacity_overflow_triggers_compaction():
+    batch, sess = _one_session_batch(size=64, g=1)
+    store = batch.store_for(sess.code_key)
+    cap = int(store.sides["a"].cap_host[0])
+    # overflow row 0's lane: more additions than its free slots
+    added = _fresh_elems(np.random.default_rng(2), cap)
+    batch.apply_mutations(sess, "a", added, _EMPTY)
+    assert batch.store_compactions == 1
+    assert sess.code_key not in batch._stores          # discarded, not patched
+    # next use rebuilds (a counted build) from the session state
+    sess.state = new_session_state(
+        apply_churn(sess.state.a, added, _EMPTY), sess.state.b, sess.plan
+    )
+    rebuilt = batch.store_for(sess.code_key)
+    assert batch.store_builds == 2
+    assert rebuilt is not store
+
+
+def test_submit_after_epochs_resets_stats_marks():
+    """submit() discards the batch (and its counters): the next run's
+    per-epoch ledger must diff against the NEW batch — the full rebuild is
+    visible as store_builds > 0 and delta bytes never go negative."""
+    server = ReconcileServer(continuous=True)
+    cfg = PBSConfig(seed=9, n_override=127, t_override=7, g_override=2)
+    a, b = make_pair(300, 8, np.random.default_rng(8))
+    server.submit(a, b, cfg=cfg, d_known=8)
+    server.run()
+    server.advance_epoch({0: (*_churn(np.random.default_rng(1), a, 3, 3),
+                              _EMPTY, _EMPTY)})
+    server.run()
+    assert server.stats["h2d_delta_bytes"] > 0
+    a2, b2 = make_pair(300, 8, np.random.default_rng(18))
+    server.submit(a2, b2, cfg=cfg, d_known=8)
+    server.run()
+    st = server.stats
+    assert st["store_builds"] >= 1          # the fresh batch's build shows
+    assert st["h2d_delta_bytes"] == 0       # never negative after the reset
+
+
+def test_cohort_round_trip_migration_rebuilds_fresh():
+    """A session that migrates out of a cohort and later back in must not
+    reuse the stale resident rows it left behind: both cohorts' stores are
+    invalidated at each layout change, so the return rebuilds from the
+    *current* state (regression for the store_for membership guard, which
+    only checks presence)."""
+    from repro.recon.session import advance_session
+
+    a, b = make_pair(300, 8, np.random.default_rng(3))
+    cfg1 = PBSConfig(seed=1, n_override=127, t_override=7, g_override=2)
+    cfg2 = PBSConfig(seed=1, n_override=255, t_override=8, g_override=2)
+    plan1, plan2 = plan_from_d_known(cfg1, 8), plan_from_d_known(cfg2, 8)
+    sess = ReconSession(sid=0, plan=plan1, state=new_session_state(a, b, plan1))
+    batch = SessionBatch([sess], mutable=True)
+    key1, key2 = sess.code_key, (plan2.n, plan2.t)
+    batch.store_for(key1)                       # epoch-0 store, elements E1
+
+    rng = np.random.default_rng(4)
+    a2 = apply_churn(a, _fresh_elems(rng, 5), rng.permutation(a)[:5])
+    advance_session(batch, sess, plan2, new_a=a2)    # migrate K1 -> K2
+    assert key1 not in batch._stores            # stale E1 rows dropped
+    batch.store_for(key2)                       # K2 store over E2
+
+    a3 = apply_churn(a2, _fresh_elems(rng, 5), rng.permutation(a2)[:5])
+    advance_session(batch, sess, plan1, new_a=a3)    # ...and back: K2 -> K1
+    assert key1 not in batch._stores and key2 not in batch._stores
+    store = batch.store_for(key1)               # rebuilt from current state
+    ss = store.sides["a"]
+    live = np.concatenate([
+        ss.flat_host[ss.start_host[r] : ss.start_host[r] + ss.cnt_host[r]]
+        for r in range(len(ss.cnt_host))
+    ])
+    np.testing.assert_array_equal(np.sort(live), np.sort(a3))
+
+
+def test_one_shot_store_has_no_mutation_lanes():
+    batch, sess = _one_session_batch(mutable=False)
+    store = batch.store_for(sess.code_key)
+    assert store.sides["a"].flat_host is None
+    with pytest.raises(StoreCapacityError, match="without mutation lanes"):
+        store.apply_side_mutations("a", {0: ([1], [])})
+
+
+# ---------------------------------------------------------------------------
+# direct add_sessions invalidation + counter coverage (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+
+
+def _session_for(sid, size, d, seed, n, t):
+    cfg = PBSConfig(seed=seed, n_override=n, t_override=t, g_override=2)
+    plan = plan_from_d_known(cfg, d)
+    a, b = make_pair(size, d, np.random.default_rng(seed))
+    return ReconSession(sid=sid, plan=plan, state=new_session_state(a, b, plan))
+
+
+def test_add_sessions_invalidates_only_affected_cohorts():
+    s0 = _session_for(0, 300, 8, seed=1, n=127, t=7)
+    s1 = _session_for(1, 300, 8, seed=2, n=255, t=8)
+    batch = SessionBatch([s0, s1])
+    assert batch.store_upload_bytes() == 0      # accounting never builds
+    assert batch.store_builds == 0
+    store0 = batch.store_for(s0.code_key)
+    store1 = batch.store_for(s1.code_key)
+    assert batch.store_builds == 2
+    assert batch.store_upload_bytes() == store0.h2d_bytes + store1.h2d_bytes
+    assert batch.store_build_bytes == batch.store_upload_bytes()
+
+    # a joiner in s0's cohort invalidates exactly that cohort's store
+    s2 = _session_for(2, 300, 8, seed=3, n=127, t=7)
+    batch.add_sessions([s2])
+    assert batch.sessions == [s0, s1, s2]
+    assert s1.code_key in batch._stores         # untouched cohort survives
+    assert s0.code_key not in batch._stores     # affected cohort dropped
+    assert batch.store_for(s1.code_key) is store1   # cached, no rebuild
+    assert batch.store_builds == 2
+
+    # the rebuild includes the joiner's rows and re-ups the counters
+    rebuilt = batch.store_for(s0.code_key)
+    assert rebuilt is not store0
+    assert batch.store_builds == 3
+    assert (s2.sid, 0) in rebuilt.row_of and (s0.sid, 0) in rebuilt.row_of
+    assert batch.store_upload_bytes() == rebuilt.h2d_bytes + store1.h2d_bytes
+    # build bytes accumulate across rebuilds; upload bytes track residency
+    assert batch.store_build_bytes == (
+        store0.h2d_bytes + store1.h2d_bytes + rebuilt.h2d_bytes
+    )
+
+
+def test_add_sessions_rebuild_skips_finished_sessions():
+    s0 = _session_for(0, 300, 8, seed=4, n=127, t=7)
+    s1 = _session_for(1, 300, 8, seed=5, n=127, t=7)
+    batch = SessionBatch([s0, s1])
+    batch.store_for(s0.code_key)
+    for u in s1.state.units:                    # s1 finishes: all units done
+        u.done = True
+    s2 = _session_for(2, 300, 8, seed=6, n=127, t=7)
+    batch.add_sessions([s2])
+    rebuilt = batch.store_for(s0.code_key)
+    assert (s0.sid, 0) in rebuilt.row_of and (s2.sid, 0) in rebuilt.row_of
+    assert (s1.sid, 0) not in rebuilt.row_of    # finished rows never re-upload

@@ -371,3 +371,54 @@ def test_mux_rejects_zero_channel_nesting_and_trailing():
     payload = _unframe(buf, wf.MSG_MUX)
     with pytest.raises(WireTruncated):
         wf.decode_mux(payload[:-1])
+
+
+# ---------------------------------------------------------------------------
+# epoch envelope (continuous sync, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("epoch", [1, 2, 127, 128, 70000])
+def test_epoch_roundtrip_and_overhead(epoch):
+    # wrapped d̂ handshake frame: inner ledger bits, envelope overhead
+    inner = wf.encode_dhat(4242)
+    buf = wf.encode_epoch(epoch, inner)
+    e, msg_type, inner_payload = wf.decode_epoch(_unframe(buf, wf.MSG_EPOCH))
+    assert e == epoch and msg_type == wf.MSG_DHAT
+    assert wf.decode_dhat(inner_payload) == 4242
+    assert len(buf) - len(inner) == wf.epoch_overhead_bytes(epoch, len(inner))
+    # bare epoch-open: no inner frame at all
+    bare = wf.encode_epoch(epoch)
+    assert wf.decode_epoch(_unframe(bare, wf.MSG_EPOCH)) == (epoch, None, None)
+    assert len(bare) == wf.epoch_overhead_bytes(epoch, 0)
+
+
+def test_epoch_rejects_zero_epoch_nesting_and_trailing():
+    inner = wf.encode_dhat(9)
+    # epoch 0 is the admission epoch: never carried by MSG_EPOCH
+    with pytest.raises(WireError, match="epoch 0"):
+        wf.encode_epoch(0, inner)
+    with pytest.raises(WireError, match="epoch 0"):
+        wf.decode_epoch(b"\x00" + inner)
+    # nested envelopes are rejected in both flavors
+    nested = wf.encode_epoch(3, wf.encode_epoch(2, inner))
+    with pytest.raises(WireError, match="nested"):
+        wf.decode_epoch(_unframe(nested, wf.MSG_EPOCH))
+    muxed = wf.encode_epoch(3, wf.encode_mux(2, inner))
+    with pytest.raises(WireError, match="nested"):
+        wf.decode_epoch(_unframe(muxed, wf.MSG_EPOCH))
+    # trailing bytes after the inner frame are rejected
+    buf = wf.encode_epoch(3, inner)
+    payload = _unframe(buf, wf.MSG_EPOCH) + b"\x00"
+    with pytest.raises(WireError, match="trailing"):
+        wf.decode_epoch(payload)
+    # a truncated inner frame is a truncation error
+    payload = _unframe(buf, wf.MSG_EPOCH)
+    with pytest.raises(WireTruncated):
+        wf.decode_epoch(payload[:-1])
+    # the mux wrap goes outside: MSG_EPOCH inside MSG_MUX is legal
+    ch, msg_type, ip = wf.decode_mux(
+        _unframe(wf.encode_mux(5, buf), wf.MSG_MUX)
+    )
+    assert ch == 5 and msg_type == wf.MSG_EPOCH
+    assert wf.decode_epoch(ip)[0] == 3
