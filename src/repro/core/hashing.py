@@ -37,6 +37,44 @@ def derive_seed(master: int, *streams: int) -> int:
     return int(s)
 
 
+def mix32_seeded(x: np.ndarray, seeds: np.ndarray) -> np.ndarray:
+    """``mix32`` with a *per-element* seed array (same wrap-around uint32
+    arithmetic, so element i equals ``mix32(x[i], int(seeds[i]))`` exactly).
+
+    This is what lets the batched planner (DESIGN.md §12) evaluate S
+    sessions' independently-seeded hash functions in one numpy pass instead
+    of S scalar calls."""
+    x = np.asarray(x, dtype=np.uint32) + np.asarray(seeds, dtype=np.uint32) * _GOLDEN
+    x ^= x >> np.uint32(16)
+    x *= _C1
+    x ^= x >> np.uint32(13)
+    x *= _C2
+    x ^= x >> np.uint32(16)
+    return x
+
+
+def derive_seed_seeded(masters: np.ndarray, *stream_cols: np.ndarray) -> np.ndarray:
+    """Vectorized ``derive_seed``: chain ``mix32_seeded`` over per-element
+    stream columns.  ``derive_seed_seeded(m, s1, s2)[i] ==
+    derive_seed(int(m[i]), int(s1[i]), int(s2[i]))`` by construction."""
+    s = np.asarray(masters, dtype=np.uint32)
+    for col in stream_cols:
+        s = mix32_seeded(np.asarray(col, dtype=np.uint32), s)
+    return s
+
+
+def hash_to_range_seeded(
+    x: np.ndarray, sizes: np.ndarray, seeds: np.ndarray
+) -> np.ndarray:
+    """Vectorized ``hash_to_range`` with per-element range sizes and seeds:
+    the multiply-shift reduction ``(mix32(x, seed) * size) >> 32`` element
+    by element — exact match of the scalar form for every element."""
+    h = mix32_seeded(x, seeds)
+    return (
+        (h.astype(np.uint64) * np.asarray(sizes, dtype=np.uint64)) >> np.uint64(32)
+    ).astype(np.int64)
+
+
 def hash_to_range(x: np.ndarray, size: int, seed: int) -> np.ndarray:
     """Uniform hash of uint32 keys into [0, size) (size need not be a power of 2)."""
     h = mix32(x, seed)

@@ -230,7 +230,9 @@ def diff_overlay(st: SessionState) -> tuple[np.ndarray, np.ndarray]:
         empty = np.zeros(0, dtype=np.uint32)
         return empty, empty
     d = np.fromiter(st.diff, dtype=np.uint32, count=len(st.diff))
-    in_a = np.isin(d, st.a)
+    # membership via the session's resident a_set: same split as
+    # np.isin(d, st.a) without re-sorting |A| elements every round
+    in_a = np.fromiter((int(v) in st.a_set for v in d), dtype=bool, count=len(d))
     return d[in_a], d[~in_a]
 
 

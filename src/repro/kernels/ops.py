@@ -32,6 +32,7 @@ from repro.core.gf2m import get_field
 
 from .bin_xorsum import bin_parity_xorsum, bin_parity_xorsum_units, xor_bits_to_u32
 from .gf2_matmul import gf2_matmul
+from .platform import count_retrace
 from .tow_sketch import tow_sketch
 
 
@@ -106,6 +107,7 @@ def bch_decode_batched(sketches: jax.Array, *, n: int, t: int):
     overload (paper §3.2 -> 3-way split).  GF ops run on log/exp tables in
     int32 lanes; BM is a fixed-trip fori_loop (no data-dependent control).
     """
+    count_retrace("bch_decode_batched")
     code = bch_code(n, t)
     gf = code.field
     m = code.m

@@ -5,10 +5,81 @@ resolves from the JAX backend at trace time: off-TPU (CPU/GPU) the kernel
 body runs under the Pallas interpreter — bit-exact dataflow validation on
 any host — while on TPU it compiles for the MXU/VPU.  Passing an explicit
 bool still pins the mode (the kernel tests pin ``interpret=True`` shapes).
+
+This module also hosts the **retrace ledger** (DESIGN.md §12): every jitted
+entry point of the serving stack calls ``count_retrace(name)`` from inside
+its traced Python body.  A jit body only executes when JAX traces a new
+(shape, static-arg) signature, so the counter is an exact census of
+compilations — the serving loops diff it across a run and publish the delta
+as ``stats["retraces"]``, turning "the shape buckets held" from a hope into
+an assertable number.  ``enable_persistent_cache`` additionally wires JAX's
+on-disk compilation cache so re-traced signatures at least skip XLA
+compilation across processes.
 """
 from __future__ import annotations
 
+import os
+import tempfile
+
 import jax
+
+_RETRACES: dict = {"total": 0, "by_fn": {}}
+
+
+def count_retrace(name: str) -> None:
+    """Record one trace of jitted entry point ``name``.
+
+    Call this from *inside* the function handed to ``jax.jit`` — the body
+    runs once per cache-missing signature, never on a cache hit — guarded
+    so an eager (un-jitted) call of the same body does not count.
+    """
+    _RETRACES["total"] += 1
+    _RETRACES["by_fn"][name] = _RETRACES["by_fn"].get(name, 0) + 1
+
+
+def retrace_count() -> int:
+    """Monotone total of jit traces so far; diff two reads to attribute
+    traces to one run (the ``stats["retraces"]`` mechanism)."""
+    return _RETRACES["total"]
+
+
+def retrace_counts() -> dict:
+    """Per-entry-point trace totals (diagnostic view of the same ledger)."""
+    return dict(_RETRACES["by_fn"])
+
+
+_CACHE_DIR: str | None = None
+
+
+def enable_persistent_cache(path: str | None = None) -> str | None:
+    """Point JAX's persistent compilation cache at an on-disk directory.
+
+    Idempotent and best-effort: the first call wires the cache (default
+    location under the system temp dir, overridable via ``path`` or the
+    ``REPRO_JAX_CACHE_DIR`` env var; set the env var to ``off`` to disable),
+    later calls return the already-wired directory.  Backends that do not
+    support the cache simply ignore it — retrace *avoidance* comes from the
+    pow2 shape buckets, the cache only de-duplicates XLA compilation time
+    across processes.  Returns the cache dir, or None when disabled.
+    """
+    global _CACHE_DIR
+    if _CACHE_DIR is not None:
+        return _CACHE_DIR
+    if path is None:
+        path = os.environ.get("REPRO_JAX_CACHE_DIR")
+    if path is not None and path.lower() in ("", "0", "off", "disable"):
+        return None
+    if path is None:
+        path = os.path.join(tempfile.gettempdir(), "repro-pbs-jax-cache")
+    try:
+        os.makedirs(path, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", path)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except Exception:           # unsupported backend/config: shape buckets
+        return None             # still bound compiles, so just carry on
+    _CACHE_DIR = path
+    return path
 
 
 def resolve_interpret(flag: bool | None = None) -> bool:

@@ -16,7 +16,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .bin_xorsum import mix32_jnp
-from .platform import resolve_interpret
+from .platform import count_retrace, resolve_interpret
 
 
 def _kernel(elems_ref, valid_ref, seeds_ref, o_ref, acc_ref, *, nt: int):
@@ -45,19 +45,29 @@ def _kernel(elems_ref, valid_ref, seeds_ref, o_ref, acc_ref, *, nt: int):
 def tow_sketch(
     elems: jax.Array,
     seeds: jax.Array,
+    valid: jax.Array | None = None,
     *,
     ell: int = 128,
     tile: int = 2048,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """ℓ ToW sketches Y_i = Σ_s f_i(s) of a uint32 key set."""
+    """ℓ ToW sketches Y_i = Σ_s f_i(s) of a uint32 key set.
+
+    ``valid`` (optional, same shape as ``elems``) marks which entries are
+    real set members: callers that pad their sets to a shape bucket — the
+    warm-cache phase-0 path (DESIGN.md §12) — pass an explicit 0/1 mask so
+    the jit signature depends only on the padded length, not the set size.
+    Omitted, every element counts (the original exact-length behavior).
+    """
+    count_retrace("tow_sketch")
     interpret = resolve_interpret(interpret)
     e = elems.astype(jnp.uint32)
     E = e.shape[0]
     Ep = max(tile, ((E + tile - 1) // tile) * tile)
     pad = Ep - E
     e_p = jnp.concatenate([e, jnp.zeros(pad, jnp.uint32)])
-    valid = jnp.concatenate([jnp.ones(E, jnp.int32), jnp.zeros(pad, jnp.int32)])
+    v = jnp.ones(E, jnp.int32) if valid is None else valid.astype(jnp.int32)
+    valid = jnp.concatenate([v, jnp.zeros(pad, jnp.int32)])
     nt = Ep // tile
     out = pl.pallas_call(
         functools.partial(_kernel, nt=nt),

@@ -62,6 +62,7 @@ from repro.recon.session import (
     advance_session,
     apply_churn,
 )
+from repro.kernels.platform import enable_persistent_cache, retrace_count
 from repro.wire import frames as wf
 from repro.wire.frames import WireError
 from repro.wire.varint import framed_len
@@ -145,6 +146,7 @@ class HubEndpoint:
         on_barrier=None,
         continuous: bool = False,
     ):
+        enable_persistent_cache()
         self._interpret = interpret
         self._deadline = recv_deadline
         self.on_barrier = on_barrier
@@ -515,6 +517,7 @@ class HubEndpoint:
             "peers_failed": self._stats.get("peers_failed", 0),
         }
         prior = self._batch.counters()
+        retrace_mark = retrace_count()
         rnd = 0
         hook_fired_at = -1
         if self._epoch_open:
@@ -598,6 +601,10 @@ class HubEndpoint:
             st["h2d_store_bytes"] + st["h2d_round_bytes"]
             + st["h2d_delta_bytes"]
         )
+        # jit cache-miss ledger (DESIGN.md §12): compilations THIS serve
+        # triggered across every kernel entry point — a warm hub epoch
+        # re-uses the pow2-bucketed signatures and reports 0
+        st["retraces"] = retrace_count() - retrace_mark
         return {
             ch: PeerOutcome(
                 channel=ch,

@@ -44,6 +44,18 @@ from repro.kernels.bin_xorsum import (
     xor_bits_to_u32,
 )
 from repro.kernels.ops import bch_decode_batched, sketch_groups
+from repro.kernels.platform import count_retrace
+
+
+def _count_trace(name: str, probe) -> None:
+    """Ledger one jit trace of this executor (DESIGN.md §12).
+
+    The body of a jitted function runs exactly once per cache-missing
+    signature; the Tracer guard keeps eager (un-jitted) calls of the same
+    body — the kernel unit tests — out of the serving-loop retrace count.
+    """
+    if isinstance(probe, jax.core.Tracer):
+        count_retrace(name)
 
 
 def _wrap_csum(elems: jax.Array, valid: jax.Array) -> jax.Array:
@@ -142,6 +154,7 @@ def _execute_round(
     Returns (xors_a, xors_b (U, n) uint32, ok (U,), positions (U, t) padded
     with -1, counts (U,), csum_a, csum_b (U,) uint32).
     """
+    _count_trace("execute_round", flat_a)
     code = bch_code(n, t)
     empty_overlay = jnp.zeros((row_map.shape[0], 0), jnp.uint32)
     zero_cnt = jnp.zeros(row_map.shape[0], jnp.int32)
@@ -205,6 +218,7 @@ def _encode_side(
     the round frames, and Bob feeds the frame-decoded XOR of both sides'
     sketches to ``bch_decode_batched``.
     """
+    _count_trace("encode_side", flat)
     code = bch_code(n, t)
     e, v = _build_side(
         flat, start, cnt, row_map, width,

@@ -27,6 +27,7 @@ round (fused two-side encode = 2 vs 4), and the host-ms vs device-ms split.
 from __future__ import annotations
 
 import time
+from collections import deque
 
 import numpy as np
 
@@ -45,6 +46,11 @@ from repro.core.pbs import (
     plan_from_estimate,
 )
 from repro.core.tow import tow_seeds
+from repro.kernels.platform import (
+    enable_persistent_cache,
+    pow2_bucket,
+    retrace_count,
+)
 from repro.kernels.tow_sketch import tow_sketch
 
 from .engine import execute_round
@@ -59,6 +65,58 @@ from .session import (
 _EMPTY = np.zeros(0, dtype=np.uint32)
 
 
+_TOW_TILE = 2048  # tow_sketch's tile: also the phase-0 shape-bucket floor
+
+
+def _tow_bucketed(elems, seeds_j, interpret):
+    """One set's ToW sketch dispatch at a warm jit signature (DESIGN.md §12).
+
+    Pads the set to ``pow2_bucket(|S|, tile)`` with an explicit 0/1 valid
+    mask, so the kernel's trace signature depends on the shape *bucket*
+    instead of the exact set size — phase 0 stops retracing per distinct
+    set size and the padding lanes contribute nothing to the sums.
+    """
+    e = np.asarray(elems, dtype=np.uint32)
+    ep = pow2_bucket(len(e), _TOW_TILE)
+    buf = np.zeros(ep, dtype=np.uint32)
+    buf[: len(e)] = e
+    valid = np.zeros(ep, dtype=np.int32)
+    valid[: len(e)] = 1
+    return tow_sketch(
+        jnp.asarray(buf), seeds_j, jnp.asarray(valid),
+        ell=seeds_j.shape[0], interpret=interpret,
+    )
+
+
+def phase0_dispatch(pairs, seeds_list, *, interpret: bool | None = None) -> list:
+    """Enqueue every (A, B) pair's ToW sketch kernels; returns the in-flight
+    device futures.  Split from the readback so callers can overlap host
+    work — epoch staging, known-d session advances — with the device sweep
+    (the cross-epoch half of the DESIGN.md §12 overlap pipeline)."""
+    inflight = []
+    for (a, b), seeds in zip(pairs, seeds_list):
+        sj = jnp.asarray(seeds)
+        inflight.append(
+            (
+                _tow_bucketed(a, sj, interpret),
+                _tow_bucketed(b, sj, interpret),
+            )
+        )
+    return inflight
+
+
+def phase0_collect(inflight) -> list[int]:
+    """Block on the in-flight sketches and reduce the exact integer
+    numerators sum((Y_A - Y_B)^2) on the host."""
+    out = []
+    for ya, yb in inflight:
+        diff = np.asarray(jax.device_get(ya)).astype(np.int64) - np.asarray(
+            jax.device_get(yb)
+        ).astype(np.int64)
+        out.append(int(np.sum(diff * diff)))
+    return out
+
+
 def phase0_numerators(
     pairs, seeds_list, *, interpret: bool | None = None
 ) -> list[int]:
@@ -67,26 +125,11 @@ def phase0_numerators(
     Dispatches every (A, B) pair's sketch kernels before the first readback
     (JAX async dispatch overlaps the device work), then reduces the exact
     integer numerator sum((Y_A - Y_B)^2) on the host.  Bit-identical to
-    ``core.tow.tow_sketches`` + ``estimate_numerator`` — same hash family —
-    so routing submit-time estimation through the device changes nothing
-    downstream.
+    ``core.tow.tow_sketches`` + ``estimate_numerator`` — same hash family,
+    and the shape-bucket padding is masked out — so routing estimation
+    through the device changes nothing downstream.
     """
-    inflight = []
-    for (a, b), seeds in zip(pairs, seeds_list):
-        sj = jnp.asarray(seeds)
-        inflight.append(
-            (
-                tow_sketch(jnp.asarray(a), sj, ell=len(seeds), interpret=interpret),
-                tow_sketch(jnp.asarray(b), sj, ell=len(seeds), interpret=interpret),
-            )
-        )
-    out = []
-    for ya, yb in inflight:
-        diff = np.asarray(jax.device_get(ya)).astype(np.int64) - np.asarray(
-            jax.device_get(yb)
-        ).astype(np.int64)
-        out.append(int(np.sum(diff * diff)))
-    return out
+    return phase0_collect(phase0_dispatch(pairs, seeds_list, interpret=interpret))
 
 
 class ReconcileServer:
@@ -97,6 +140,7 @@ class ReconcileServer:
     """
 
     def __init__(self, *, interpret: bool | None = None, continuous: bool = False):
+        enable_persistent_cache()
         self._interpret = interpret
         self._continuous = continuous
         self._sessions: list[ReconSession | None] = []
@@ -181,8 +225,18 @@ class ReconcileServer:
         The SessionBatch (and its device-resident stores) is kept across
         ``run`` calls: a second ``run`` with no new sessions re-uploads
         nothing, and stores only build when a cohort has live work.
+
+        The round loop is a per-cohort software pipeline (DESIGN.md §12):
+        each cohort's round r+1 depends only on its *own* round-r outcomes
+        (cohort membership is fixed for the run and all round state is
+        session-local), so as soon as cohort X's outcomes are applied, its
+        next round is planned and dispatched — while the other cohorts'
+        rounds are still executing on the device.  Host planning of round
+        r+1 thus overlaps device execution of round r, extending the
+        dispatch-before-``device_get`` pattern across rounds.
         """
         t_run = time.perf_counter()
+        retrace_mark = retrace_count()
         self._flush_phase0()
         phase0_s, self._phase0_s = self._phase0_s, 0.0
         if self._batch is None:
@@ -200,29 +254,29 @@ class ReconcileServer:
             "legacy_kernel_launches": 0,
             "device_s": 0.0,
         }
-        rnd = 0
-        while True:
-            rnd += 1
-            plans = batch.plan_round(rnd)
-            if not plans:
-                break
-            st["rounds"] = rnd
-            st["cohort_rounds"] += len(plans)
-            # dispatch every cohort before the first device_get: JAX async
-            # dispatch lets cohort k+1's device work overlap cohort k's.
-            # Dispatch itself (upload, tracing, compiles) is host work; only
-            # the blocking readback window counts as device time.
-            inflight = [(plan, self._dispatch(plan)) for plan in plans]
-            for plan, out in inflight:
-                t0 = time.perf_counter()
-                out = jax.device_get(out)
-                st["device_s"] += time.perf_counter() - t0
-                self._apply_cohort(plan, out, rnd)
-            for plan in plans:
-                st["h2d_round_bytes"] += plan.h2d_bytes
-                st["legacy_h2d_round_bytes"] += plan.legacy_h2d_bytes
-                st["kernel_launches"] += 2       # fused bin launch + sketch matmul
-                st["legacy_kernel_launches"] += 4  # 2x bin + 2x sketch, per side
+        by_code = batch.sessions_by_code()
+        # prime the pipeline: every cohort's round 1, dispatched before the
+        # first readback (JAX async dispatch overlaps their device work)
+        inflight: deque = deque()
+        for key in sorted(by_code):
+            plan = batch.plan_cohort(key, by_code[key], 1)
+            if plan is not None:
+                inflight.append((key, 1, plan, self._dispatch(plan)))
+        while inflight:
+            key, rnd, plan, fut = inflight.popleft()
+            t0 = time.perf_counter()
+            out = jax.device_get(fut)
+            st["device_s"] += time.perf_counter() - t0
+            self._apply_cohort(plan, out, rnd)
+            st["rounds"] = max(st["rounds"], rnd)
+            st["cohort_rounds"] += 1
+            st["h2d_round_bytes"] += plan.h2d_bytes
+            st["legacy_h2d_round_bytes"] += plan.legacy_h2d_bytes
+            st["kernel_launches"] += 2       # fused bin launch + sketch matmul
+            st["legacy_kernel_launches"] += 4  # 2x bin + 2x sketch, per side
+            nxt = batch.plan_cohort(key, by_code[key], rnd + 1)
+            if nxt is not None:
+                inflight.append((key, rnd + 1, nxt, self._dispatch(nxt)))
 
         # stores built during *this* run (cached ones re-upload nothing);
         # the delta ledger additionally covers the advance_epoch patches
@@ -246,6 +300,9 @@ class ReconcileServer:
         st["h2d_ratio"] = st["legacy_h2d_bytes"] / max(1, st["h2d_bytes"])
         st["total_s"] = time.perf_counter() - t_run
         st["host_s"] = st["total_s"] - st["device_s"]
+        # jit traces attributed to this run: 0 once the shape buckets are
+        # warm — the assertable warm-cache contract (DESIGN.md §12)
+        st["retraces"] = retrace_count() - retrace_mark
         if st["rounds"] or not self._stats:
             # an idempotent re-run that did no work keeps the meaningful
             # ledger of the run that actually drove rounds
@@ -313,9 +370,13 @@ class ReconcileServer:
             for s in self._sessions
             if self._d_known[s.sid] is not None
         }
+        # cross-epoch overlap (DESIGN.md §12): dispatch the estimator ToW
+        # sweep first, advance every pinned session while those kernels run
+        # on the device, then collect the numerators and advance the rest.
+        inflight = None
         if est:
             t0 = time.perf_counter()
-            nums = phase0_numerators(
+            inflight = phase0_dispatch(
                 [new_sets[s.sid] for s in est],
                 [
                     tow_seeds(derive_seed(s.plan.cfg.seed, 0x70), s.plan.cfg.ell)
@@ -323,17 +384,30 @@ class ReconcileServer:
                 ],
                 interpret=self._interpret,
             )
+            self._phase0_s += time.perf_counter() - t0
+
+        est_sids = {s.sid for s in est}
+        for s in self._sessions:
+            if s.sid in est_sids:
+                continue
+            new_a, new_b = new_sets[s.sid]
+            advance_session(
+                self._batch, s, plans[s.sid], new_a=new_a, new_b=new_b, rnd0=0
+            )
+
+        if est:
+            t0 = time.perf_counter()
+            nums = phase0_collect(inflight)
             for s, num in zip(est, nums):
                 plans[s.sid] = plan_from_estimate(
                     s.plan.cfg, num, len(new_sets[s.sid][0])
                 )
             self._phase0_s += time.perf_counter() - t0
-
-        for s in self._sessions:
-            new_a, new_b = new_sets[s.sid]
-            advance_session(
-                self._batch, s, plans[s.sid], new_a=new_a, new_b=new_b, rnd0=0
-            )
+            for s in est:
+                new_a, new_b = new_sets[s.sid]
+                advance_session(
+                    self._batch, s, plans[s.sid], new_a=new_a, new_b=new_b, rnd0=0
+                )
         return self._epoch
 
     def _dispatch(self, plan: CohortRoundPlan):

@@ -51,7 +51,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.bch import bch_code
-from repro.core.hashing import derive_seed
+from repro.core.hashing import derive_seed_seeded, hash_to_range_seeded
 from repro.core.pbs import (
     ProtocolPlan,
     SessionState,
@@ -139,6 +139,9 @@ class CohortStore:
     row_of: dict                   # (sid, group) -> store row index
     sides: dict                    # "a"/"b" -> SideStore
     generation: int = 0            # bumped per in-place delta patch
+    # rows are contiguous per member session (row_of[(sid, g)] == base + g);
+    # the vectorized planner turns S×g dict lookups into one add over this
+    row_base: dict = field(default_factory=dict)   # sid -> first store row
 
     @property
     def a(self) -> SideStore:
@@ -250,10 +253,50 @@ class CohortRoundPlan:
     legacy_h2d_bytes: int = 0      # what the re-pack-per-round path would ship
 
 
-def _grouped_rows(elems: np.ndarray, order: np.ndarray, bounds: np.ndarray, g: int):
-    """Yield each group's elements (slot order) from a cached group view."""
-    for grp in range(g):
-        yield elems[order[bounds[grp] : bounds[grp + 1]]].astype(np.uint32)
+def _group_overlay(parts, per_sess, g_of, gseed_of, row_key, gmax):
+    """Batch-wide overlay grouping: ``_by_group`` for S sessions in one pass.
+
+    ``parts`` holds each session's overlay values (diff_overlay output
+    order), ``per_sess`` their lengths.  Group ids come from the seeded
+    multiply-shift hash (exactly ``hash_to_range`` per element), and one
+    stable lexsort on (session, group) reproduces every session's stable
+    ``group_view`` ordering at once.  Returns ``(row_len, fill)``: row_len
+    is each unit row's overlay length (0 when its (session, group) segment
+    is empty — the scalar planner's ``None``), and ``fill(target)``
+    scatters the grouped values into the padded overlay matrix with one
+    fancy-index assignment; ``fill`` is None when no session has overlay
+    values (DESIGN.md §12).
+    """
+    nrows = len(row_key)
+    row_len = np.zeros(nrows, dtype=np.int64)
+    if not int(per_sess.sum()):
+        return row_len, None
+    vals = np.concatenate([p for p in parts if len(p)])
+    vsess = np.repeat(np.arange(len(per_sess)), per_sess)
+    grp = hash_to_range_seeded(vals, g_of[vsess], gseed_of[vsess])
+    order = np.lexsort((grp, vsess))  # stable: in-order within (sess, group)
+    sv = vals[order]
+    key = vsess[order] * gmax + grp[order]
+    change = np.empty(len(key), dtype=bool)
+    change[0] = True
+    np.not_equal(key[1:], key[:-1], out=change[1:])
+    seg_at = np.nonzero(change)[0]               # segment starts into sv
+    seg_key = key[seg_at]                        # ascending by construction
+    seg_len = np.diff(np.append(seg_at, len(key)))
+    pos = np.searchsorted(seg_key, row_key)
+    pc = np.minimum(pos, len(seg_key) - 1)
+    has = seg_key[pc] == row_key
+    row_len[has] = seg_len[pc[has]]
+    row_src = np.where(has, seg_at[pc], 0)
+
+    def fill(target: np.ndarray) -> None:
+        rows_rep = np.repeat(np.arange(nrows), row_len)
+        within = np.arange(int(row_len.sum())) - np.repeat(
+            np.cumsum(row_len) - row_len, row_len
+        )
+        target[rows_rep, within] = sv[np.repeat(row_src, row_len) + within]
+
+    return row_len, fill
 
 
 def _by_group(vals: np.ndarray, g: int, seed_groups: int) -> dict:
@@ -287,18 +330,36 @@ def pack_csr(
     one-shot path.
     """
     cnt = np.array([len(r) for r in rows], dtype=np.int32)
+    vals = (
+        np.concatenate(rows).astype(np.uint32)
+        if rows else np.zeros(0, dtype=np.uint32)
+    )
+    return _csr_layout(vals, cnt, col_align, slack)
+
+
+def _csr_layout(
+    vals: np.ndarray, cnt: np.ndarray, col_align: int, slack: bool
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """``pack_csr`` over pre-concatenated row values (``vals`` holds every
+    row's elements back to back, ``cnt`` the per-row lengths) — the whole
+    layout, including the slack-lane scatter, is numpy passes with no
+    per-row Python (DESIGN.md §12)."""
+    cnt = np.asarray(cnt, dtype=np.int32)
     cap = _ceil_to(cnt + (cnt >> 2) + 8, 8).astype(np.int32) if slack else cnt
-    start = np.zeros(len(rows), dtype=np.int32)
+    start = np.zeros(len(cnt), dtype=np.int32)
     np.cumsum(cap[:-1], out=start[1:])
     total = int(cap.sum())
     flat = np.zeros(_ceil_to(max(total, 1), col_align), dtype=np.uint32)
     if slack:
-        for i, r in enumerate(rows):
-            flat[start[i] : start[i] + len(r)] = r
-    elif rows:
+        if len(vals):
+            # scatter each row's values into its lane: start[row] + offset
+            within = np.arange(len(vals)) - np.repeat(
+                np.cumsum(cnt) - cnt, cnt
+            )
+            flat[np.repeat(start, cnt) + within] = vals
+    else:
         # tight layout (cap == cnt): rows are contiguous, one vectorized fill
-        packed = np.concatenate(rows).astype(np.uint32)
-        flat[: len(packed)] = packed
+        flat[: len(vals)] = vals
     return flat, start, cnt, cap
 
 
@@ -437,28 +498,38 @@ class SessionBatch:
             self.store_compactions += 1
 
     def _build_store(self, n: int, t: int, members: list[ReconSession]) -> CohortStore:
-        rows: dict[str, list[np.ndarray]] = {side: [] for side in self.sides}
+        # per member, per side: ONE gather puts the session's elements in
+        # group-sorted slot order (the cached group view's stable argsort),
+        # and the per-row counts are the view's bound diffs — the
+        # group-by-group slicing of the scalar build collapses into a
+        # concatenation (byte-identical rows: elems[order] is exactly the
+        # per-group segments back to back)
+        vals: dict[str, list[np.ndarray]] = {side: [] for side in self.sides}
+        cnts: dict[str, list[np.ndarray]] = {side: [] for side in self.sides}
         row_of: dict = {}
+        row_base: dict = {}
         nrows = 0
         for s in members:
             st, plan = s.state, s.plan
-            segs = {
-                side: _grouped_rows(*(
+            row_base[s.sid] = nrows
+            row_of.update(((s.sid, grp), nrows + grp) for grp in range(plan.g))
+            nrows += plan.g
+            for side in self.sides:
+                elems, order, bounds = (
                     (st.a, st.order_a, st.bounds_a) if side == "a"
                     else (st.b, st.order_b, st.bounds_b)
-                ), plan.g)
-                for side in self.sides
-            }
-            for grp in range(plan.g):
-                row_of[(s.sid, grp)] = nrows
-                nrows += 1
-                for side in self.sides:
-                    rows[side].append(next(segs[side]))
+                )
+                vals[side].append(elems[order].astype(np.uint32))
+                cnts[side].append(np.diff(bounds))
 
         sides: dict[str, SideStore] = {}
         for side in self.sides:
-            flat, start, cnt, cap = pack_csr(
-                rows[side], self.COL_ALIGN, slack=self.mutable
+            flat, start, cnt, cap = _csr_layout(
+                np.concatenate(vals[side]) if vals[side]
+                else np.zeros(0, dtype=np.uint32),
+                np.concatenate(cnts[side]) if cnts[side]
+                else np.zeros(0, dtype=np.int64),
+                self.COL_ALIGN, slack=self.mutable,
             )
             sides[side] = SideStore(
                 flat=jnp.asarray(flat), start=jnp.asarray(start),
@@ -468,7 +539,10 @@ class SessionBatch:
                 flat_host=flat if self.mutable else None,
                 cap_host=cap if self.mutable else None,
             )
-        store = CohortStore(n=n, t=t, m=bch_code(n, t).m, row_of=row_of, sides=sides)
+        store = CohortStore(
+            n=n, t=t, m=bch_code(n, t).m,
+            row_of=row_of, sides=sides, row_base=row_base,
+        )
         self.store_builds += 1
         self.store_build_bytes += store.h2d_bytes
         return store
@@ -499,38 +573,105 @@ class SessionBatch:
             for key, members in sorted(live.items())
         ]
 
+    def plan_cohort(
+        self, key: tuple[int, int], sessions, rnd: int
+    ) -> CohortRoundPlan | None:
+        """One cohort's plan for round ``rnd`` over its candidate sessions,
+        or None when none of them are live — the per-cohort entry the
+        pipelined server drives so cohort X's round r+1 can be planned and
+        dispatched while other cohorts' round-r work is still on the device
+        (DESIGN.md §12).  ``plan_cohort`` over a full code partition of the
+        batch emits exactly the plans ``plan_round`` would."""
+        members = [
+            (s, s.state.active_units())
+            for s in sessions
+            if not s.failed and rnd > s.rnd0
+            and session_live(s.state, s.plan.cfg, rnd - s.rnd0)
+        ]
+        if not members:
+            return None
+        return self._plan_cohort(
+            self.store_for(key, live=[s for s, _ in members]), members, rnd
+        )
+
+    def sessions_by_code(self) -> dict:
+        """Current sessions partitioned by cohort code, in session order —
+        the fixed cohort membership the pipelined server iterates."""
+        by: dict[tuple[int, int], list] = {}
+        for s in self.sessions:
+            by.setdefault(s.code_key, []).append(s)
+        return by
+
     def _plan_cohort(self, store: CohortStore, members, rnd: int) -> CohortRoundPlan:
-        total = sum(len(active) for _, active in members)
+        """Vectorized cohort planning (DESIGN.md §12): every per-unit array
+        is built by whole-batch numpy passes — per-session hash chains via
+        the seeded ``mix32`` forms, overlay grouping via one stable lexsort
+        over (session, group) composite keys, row fills via repeat/arange
+        scatters.  Byte-identical to the scalar reference planner
+        (tests/_planner_reference.py, asserted by the differential suite)."""
+        S = len(members)
+        counts = np.fromiter(
+            (len(active) for _, active in members), np.int64, count=S
+        )
+        total = int(counts.sum())
         u_pad = pow2_bucket(total, self.ROW_ALIGN)
+        bases = np.zeros(S, dtype=np.int64)
+        np.cumsum(counts[:-1], out=bases[1:])
+
+        # per-session scalars, one derive_seed chain for the whole cohort
+        cfg_seeds = np.fromiter(
+            (s.plan.cfg.seed for s, _ in members), np.uint32, count=S
+        )
+        rloc = np.fromiter((rnd - s.rnd0 for s, _ in members), np.uint32, count=S)
+        bin_seeds = derive_seed_seeded(
+            cfg_seeds, np.full(S, 2, dtype=np.uint32), rloc
+        )
+
+        # per-unit metadata (one cheap attribute pass; everything numeric
+        # downstream of it is vectorized)
+        groups = np.fromiter(
+            (u.group for _, active in members for u in active),
+            np.int64, count=total,
+        )
+        filters_rows = [
+            (int(base) + slot, u.filters)
+            for (_, active), base in zip(members, bases)
+            for slot, u in enumerate(active)
+            if u.filters
+        ]
 
         row_map = np.zeros(u_pad, dtype=np.int32)
         unit_valid = np.zeros(u_pad, dtype=np.int32)
-        # built uint32 end-to-end: derive_seed yields uint32-range ints by
-        # construction (asserted per session below), no dtype churn.
         seeds = np.zeros(u_pad, dtype=np.uint32)
-        removed_of: list[np.ndarray | None] = [None] * u_pad
-        added_of: list[np.ndarray | None] = [None] * u_pad
-        filters_of: list[tuple] = [()] * u_pad
+        sbase = np.fromiter(
+            (store.row_base[s.sid] for s, _ in members), np.int64, count=S
+        )
+        row_map[:total] = np.repeat(sbase, counts) + groups
+        unit_valid[:total] = 1
+        seeds[:total] = np.repeat(bin_seeds, counts)
 
-        packed = []
-        base = 0
-        for s, active in members:
-            st, plan = s.state, s.plan
-            bin_seed = derive_seed(plan.cfg.seed, 2, rnd - s.rnd0)
-            assert 0 <= bin_seed < 1 << 32, bin_seed
-            removed, added = diff_overlay(st)
-            rem_by_grp = _by_group(removed, plan.g, plan.seed_groups)
-            add_by_grp = _by_group(added, plan.g, plan.seed_groups)
-            for slot, u in enumerate(active):
-                row = base + slot
-                row_map[row] = store.row_of[(s.sid, u.group)]
-                unit_valid[row] = 1
-                seeds[row] = bin_seed
-                removed_of[row] = rem_by_grp.get(u.group)
-                added_of[row] = add_by_grp.get(u.group)
-                filters_of[row] = u.filters
-            packed.append((s, base, active, bin_seed))
-            base += len(active)
+        # diff overlays: tiny per-session arrays, grouped/scattered batch-wide
+        rem_parts, add_parts = [], []
+        rem_per_s = np.zeros(S, dtype=np.int64)
+        add_per_s = np.zeros(S, dtype=np.int64)
+        for i, (s, _) in enumerate(members):
+            removed, added = diff_overlay(s.state)
+            rem_parts.append(removed)
+            add_parts.append(added)
+            rem_per_s[i] = len(removed)
+            add_per_s[i] = len(added)
+        g_of = np.fromiter((s.plan.g for s, _ in members), np.int64, count=S)
+        gseed_of = np.fromiter(
+            (s.plan.seed_groups for s, _ in members), np.uint32, count=S
+        )
+        gmax = int(g_of.max()) + 1
+        row_key = np.repeat(np.arange(S), counts) * gmax + groups
+        rem_len, rem_fill = _group_overlay(
+            rem_parts, rem_per_s, g_of, gseed_of, row_key, gmax
+        )
+        add_len, add_fill = _group_overlay(
+            add_parts, add_per_s, g_of, gseed_of, row_key, gmax
+        )
 
         # Overlay widths: a Bob-side batch (no "a" side) can never carry a
         # diff overlay — zero width makes the executor's overlay ops vanish
@@ -538,39 +679,38 @@ class SessionBatch:
         # round 1 (empty overlay), so every round shares one executor shape
         # per (U, Wa, Wb, F) instead of compiling a round-1-only variant.
         if "a" in self.sides:
-            max_r = max((len(r) for r in removed_of if r is not None), default=0)
-            max_x = max((len(a) for a in added_of if a is not None), default=0)
-            r_w = pow2_bucket(max_r, self.OVERLAY_ALIGN)
-            x_w = pow2_bucket(max_x, self.OVERLAY_ALIGN)
+            r_w = pow2_bucket(int(rem_len.max(initial=0)), self.OVERLAY_ALIGN)
+            x_w = pow2_bucket(int(add_len.max(initial=0)), self.OVERLAY_ALIGN)
         else:
             r_w = x_w = 0
         # zero-width when no unit carries a split filter: the executor's
         # statically-unrolled filter loop then vanishes for the common
         # no-split round instead of hashing both (U, W) sides for nothing
-        max_f = max((len(f) for f in filters_of), default=0)
+        max_f = max((len(f) for _, f in filters_rows), default=0)
         f_w = pow2_bucket(max_f, 1) if max_f else 0
 
         removed_arr = np.zeros((u_pad, r_w), dtype=np.uint32)
         removed_cnt = np.zeros(u_pad, dtype=np.int32)
+        removed_cnt[:total] = rem_len
+        if rem_fill is not None:
+            rem_fill(removed_arr)
         added_arr = np.zeros((u_pad, x_w), dtype=np.uint32)
         added_cnt = np.zeros(u_pad, dtype=np.int32)
+        added_cnt[:total] = add_len
+        if add_fill is not None:
+            add_fill(added_arr)
         fseeds = np.zeros((u_pad, f_w), dtype=np.uint32)
         fbins = np.zeros((u_pad, f_w), dtype=np.int32)
         fcnt = np.zeros(u_pad, dtype=np.int32)
-        for row in range(total):
-            r = removed_of[row]
-            if r is not None:
-                removed_arr[row, : len(r)] = r
-                removed_cnt[row] = len(r)
-            a = added_of[row]
-            if a is not None:
-                added_arr[row, : len(a)] = a
-                added_cnt[row] = len(a)
-            flt = filters_of[row]
-            if flt:
-                fseeds[row, : len(flt)] = [fs for fs, _ in flt]
-                fbins[row, : len(flt)] = [fi for _, fi in flt]
-                fcnt[row] = len(flt)
+        for row, flt in filters_rows:  # splits are rare: sparse scalar fills
+            fseeds[row, : len(flt)] = [fs for fs, _ in flt]
+            fbins[row, : len(flt)] = [fi for _, fi in flt]
+            fcnt[row] = len(flt)
+
+        packed = [
+            (s, int(base), active, int(bin_seed))
+            for (s, active), base, bin_seed in zip(members, bases, bin_seeds)
+        ]
 
         arrays = {
             "row_map": row_map,

@@ -14,6 +14,14 @@ bits of a decoded frame per that accounting; structural bits (per-unit
 position counts, done flags, headers, padding) are measured separately by
 the endpoints as wire overhead.
 
+The public codecs are **numpy-batched** (DESIGN.md §12): every fixed-width
+field of a frame is packed/unpacked in whole-frame ``np.packbits`` /
+``np.unpackbits`` passes (MSB-first, final-byte zero padding — exactly the
+``BitWriter``/``BitReader`` stream), instead of one Python bit loop per
+unit row.  The original per-bit codecs are kept under ``*_scalar`` names as
+the differential oracle for tests/test_wire_batch.py, which asserts the two
+are byte-for-byte interchangeable on random and adversarial frames.
+
 Every decoder is strict: truncated buffers, nonzero padding, trailing
 bytes, out-of-range positions/counts, and unknown message types all raise
 ``WireError`` (property-tested in tests/test_wire.py).
@@ -192,6 +200,69 @@ def epoch_overhead_bytes(epoch: int, inner_len: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Batched bit-stream helpers (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+# widest fixed field the int64 weight vectors handle exactly; wider ToW
+# value fields (astronomical declared set sizes) fall back to the scalar
+# codec, which reads them with Python integers
+_MAX_FIELD_BITS = 48
+
+
+def _bit_array(payload: bytes, off: int) -> np.ndarray:
+    """MSB-first 0/1 uint8 view of ``payload[off:]`` — the whole remaining
+    bit stream in one ``np.unpackbits`` pass."""
+    return np.unpackbits(np.frombuffer(payload, dtype=np.uint8, offset=off))
+
+
+def _weights(nbits: int) -> np.ndarray:
+    """MSB-first bit weights: dot a (N, nbits) 0/1 matrix to get values."""
+    return np.left_shift(
+        np.int64(1), np.arange(nbits - 1, -1, -1, dtype=np.int64)
+    )
+
+
+def _field_bits(values, nbits: int) -> np.ndarray:
+    """(N,) non-negative ints -> (N*nbits,) MSB-first bits."""
+    v = np.asarray(values, dtype=np.uint64).reshape(-1, 1)
+    sh = np.arange(nbits - 1, -1, -1, dtype=np.uint64)
+    return ((v >> sh) & np.uint64(1)).astype(np.uint8).ravel()
+
+
+def _read_fields(bits: np.ndarray, offsets: np.ndarray, nbits: int) -> np.ndarray:
+    """Gather one nbits-wide MSB-first value at each bit offset."""
+    if nbits == 0:
+        return np.zeros(len(offsets), dtype=np.int64)
+    idx = np.asarray(offsets, dtype=np.int64)[:, None] + np.arange(
+        nbits, dtype=np.int64
+    )
+    return bits[idx].astype(np.int64) @ _weights(nbits)
+
+
+def _pack_payload(header: bytes, bit_segments: list) -> bytes:
+    """Header + the concatenated bit segments packed MSB-first, final byte
+    zero-padded — byte-identical to ``BitWriter.getvalue()``."""
+    if not bit_segments:
+        return header
+    bits = np.concatenate(bit_segments)
+    if not len(bits):
+        return header
+    return header + np.packbits(bits).tobytes()
+
+
+def _finish_bits(bits: np.ndarray, used: int, payload: bytes, off: int) -> None:
+    """``BitReader.finish`` semantics over the batched view: the payload
+    must be exactly ``ceil(used / 8)`` bytes past ``off`` and every pad bit
+    zero (corrupted/over-long frame rejection)."""
+    avail = len(payload) - off
+    need = (used + 7) // 8
+    if avail > need:
+        raise WireError(f"{avail - need} unconsumed bytes after bit stream")
+    if used < need * 8 and np.any(bits[used : need * 8]):
+        raise WireError("nonzero padding bits at end of bit stream")
+
+
+# ---------------------------------------------------------------------------
 # Phase 0: ToW sketch + d_hat reply
 # ---------------------------------------------------------------------------
 
@@ -202,6 +273,25 @@ def tow_value_bits(set_size: int) -> int:
 
 
 def encode_tow_sketch(values, set_size: int) -> bytes:
+    vals = np.asarray(values, dtype=np.int64)
+    bits = tow_value_bits(set_size)
+    if bits > _MAX_FIELD_BITS:
+        return encode_tow_sketch_scalar(values, set_size)
+    # arithmetic-shift zigzag works for both signs: n>>63 is 0 or -1
+    z = (vals << 1) ^ (vals >> 63)
+    bad = z > 2 * set_size
+    if np.any(bad):
+        v = int(vals[int(np.argmax(bad))])
+        raise WireError(f"sketch value {v} exceeds set size {set_size}")
+    payload = _pack_payload(
+        encode_uvarint(set_size) + encode_uvarint(len(vals)),
+        [_field_bits(z, bits)] if len(vals) else [],
+    )
+    return frame(MSG_TOW_SKETCH, payload)
+
+
+def encode_tow_sketch_scalar(values, set_size: int) -> bytes:
+    """Per-value ``BitWriter`` form of ``encode_tow_sketch`` (test oracle)."""
     vals = np.asarray(values, dtype=np.int64)
     bits = tow_value_bits(set_size)
     w = BitWriter()
@@ -215,6 +305,28 @@ def encode_tow_sketch(values, set_size: int) -> bytes:
 
 
 def decode_tow_sketch(payload: bytes) -> tuple[int, np.ndarray]:
+    set_size, off = decode_uvarint(payload)
+    ell, off = decode_uvarint(payload, off)
+    bits = tow_value_bits(set_size)
+    if bits > _MAX_FIELD_BITS:
+        return decode_tow_sketch_scalar(payload)
+    bstream = _bit_array(payload, off)
+    total = ell * bits
+    if total > len(bstream):
+        raise WireTruncated("bit field runs past end of buffer")
+    z = (
+        bstream[:total].reshape(ell, bits).astype(np.int64) @ _weights(bits)
+        if ell
+        else np.zeros(0, dtype=np.int64)
+    )
+    if np.any(z > 2 * set_size):
+        raise WireError("sketch value out of range for declared set size")
+    _finish_bits(bstream, total, payload, off)
+    return set_size, (z >> 1) ^ -(z & 1)
+
+
+def decode_tow_sketch_scalar(payload: bytes) -> tuple[int, np.ndarray]:
+    """Per-value ``BitReader`` form of ``decode_tow_sketch`` (test oracle)."""
     set_size, off = decode_uvarint(payload)
     ell, off = decode_uvarint(payload, off)
     bits = tow_value_bits(set_size)
@@ -251,7 +363,21 @@ def sketches_ledger_bits(n_units: int, t: int, m: int) -> int:
 
 
 def encode_round_sketches(rnd: int, blocks) -> bytes:
-    """``blocks``: per live session (schema order), (sketches (U, t), m)."""
+    """``blocks``: per live session (schema order), (sketches (U, t), m).
+
+    All of a block's m-bit syndromes bit-pack in one vectorized pass."""
+    segs = []
+    for sk, m in blocks:
+        sk = np.asarray(sk, dtype=np.int64)
+        if np.any(sk < 0) or np.any(sk >> m):
+            raise WireError(f"syndrome out of range for m={m}")
+        if sk.size:
+            segs.append(_field_bits(sk.ravel(), m))
+    return frame(MSG_ROUND_SKETCHES, _pack_payload(encode_uvarint(rnd), segs))
+
+
+def encode_round_sketches_scalar(rnd: int, blocks) -> bytes:
+    """Per-bit ``BitWriter`` form of ``encode_round_sketches`` (test oracle)."""
     w = BitWriter()
     for sk, m in blocks:
         sk = np.asarray(sk, dtype=np.int64)
@@ -265,6 +391,29 @@ def encode_round_sketches(rnd: int, blocks) -> bytes:
 
 def decode_round_sketches(payload: bytes, schema) -> tuple[int, list[np.ndarray]]:
     """``schema``: [(n_units, t, m)] per live session, both-endpoint-derived."""
+    rnd, off = decode_uvarint(payload)
+    bits = _bit_array(payload, off)
+    total = sum(n_units * t * m for n_units, t, m in schema)
+    if total > len(bits):
+        raise WireTruncated("bit field runs past end of buffer")
+    out = []
+    pos = 0
+    for n_units, t, m in schema:
+        nb = n_units * t * m
+        blk = (
+            bits[pos : pos + nb].reshape(n_units * t, m).astype(np.int64)
+            @ _weights(m)
+        )
+        out.append(blk.reshape(n_units, t))
+        pos += nb
+    _finish_bits(bits, total, payload, off)
+    return rnd, out
+
+
+def decode_round_sketches_scalar(
+    payload: bytes, schema
+) -> tuple[int, list[np.ndarray]]:
+    """Per-bit ``BitReader`` form of ``decode_round_sketches`` (test oracle)."""
     rnd, off = decode_uvarint(payload)
     r = BitReader(payload, off)
     out = []
@@ -307,9 +456,73 @@ def reply_ledger_bits(ok, units, m: int) -> int:
 
 def encode_round_reply(rnd: int, entries, schema) -> bytes:
     """``entries``: per session (ok flags, units with ``units[i] is None``
-    exactly where ``ok[i]`` is False); ``schema``: [(n_units, t, m)]."""
+    exactly where ``ok[i]`` is False); ``schema``: [(n_units, t, m)].
+
+    Per session, every count/position/XOR/checksum field lands at a
+    precomputed bit offset via vectorized scatters — no per-unit bit loop.
+    """
+    segs = []
+    for (ok, units), (n_units, t, m) in zip(entries, schema):
+        if len(ok) != n_units or len(units) != n_units:
+            raise WireError("reply entry does not match schema unit count")
+        cbits = t.bit_length()
+        if n_units:
+            segs.append(
+                np.fromiter((1 if f else 0 for f in ok), np.uint8, count=n_units)
+            )
+        sel = [u for f, u in zip(ok, units) if f]
+        if not sel:
+            continue
+        ks = np.fromiter((len(u.positions) for u in sel), np.int64, count=len(sel))
+        bad = ks > t
+        if np.any(bad):
+            raise WireError(f"{int(ks[int(np.argmax(bad))])} positions exceed t={t}")
+        em = m + KEY_BITS
+        body_len = cbits + ks * em + KEY_BITS
+        starts = np.cumsum(body_len) - body_len
+        arr = np.zeros(int(body_len.sum()), dtype=np.uint8)
+        cnt_idx = (starts[:, None] + np.arange(cbits, dtype=np.int64)).ravel()
+        arr[cnt_idx] = _field_bits(ks, cbits)
+        total_p = int(ks.sum())
+        if total_p:
+            pos_all = np.concatenate(
+                [np.asarray(u.positions, dtype=np.int64) for u in sel]
+            )
+            bad_p = (pos_all < 0) | (pos_all >= (1 << m) - 1)
+            if np.any(bad_p):
+                p = int(pos_all[int(np.argmax(bad_p))])
+                raise WireError(f"bin position {p} out of range for m={m}")
+            xor_all = np.concatenate(
+                [
+                    np.asarray(u.xors, dtype=np.uint32).astype(np.int64)
+                    for u in sel
+                ]
+            )
+            ent_unit = np.repeat(np.arange(len(sel)), ks)
+            within = np.arange(total_p) - np.repeat(np.cumsum(ks) - ks, ks)
+            ent_off = starts[ent_unit] + cbits + within * em
+            arr[(ent_off[:, None] + np.arange(m, dtype=np.int64)).ravel()] = (
+                _field_bits(pos_all, m)
+            )
+            arr[
+                (
+                    ent_off[:, None] + m + np.arange(KEY_BITS, dtype=np.int64)
+                ).ravel()
+            ] = _field_bits(xor_all, KEY_BITS)
+        csums = np.fromiter(
+            (int(u.csum) & 0xFFFFFFFF for u in sel), np.int64, count=len(sel)
+        )
+        cs_off = starts + cbits + ks * em
+        arr[(cs_off[:, None] + np.arange(KEY_BITS, dtype=np.int64)).ravel()] = (
+            _field_bits(csums, KEY_BITS)
+        )
+        segs.append(arr)
+    return frame(MSG_ROUND_REPLY, _pack_payload(encode_uvarint(rnd), segs))
+
+
+def encode_round_reply_scalar(rnd: int, entries, schema) -> bytes:
+    """Per-bit ``BitWriter`` form of ``encode_round_reply`` (test oracle)."""
     w = BitWriter()
-    cnt_bits_total = 0
     for (ok, units), (n_units, t, m) in zip(entries, schema):
         if len(ok) != n_units or len(units) != n_units:
             raise WireError("reply entry does not match schema unit count")
@@ -323,7 +536,6 @@ def encode_round_reply(rnd: int, entries, schema) -> bytes:
             if k > t:
                 raise WireError(f"{k} positions exceed t={t}")
             w.write(k, cbits)
-            cnt_bits_total += cbits
             for p, x in zip(unit.positions, unit.xors):
                 if not 0 <= int(p) < (1 << m) - 1:
                     raise WireError(f"bin position {int(p)} out of range for m={m}")
@@ -334,6 +546,66 @@ def encode_round_reply(rnd: int, entries, schema) -> bytes:
 
 
 def decode_round_reply(payload: bytes, schema):
+    """Two-pass batched decode: a light sequential scan reads only the
+    data-dependent per-unit count fields (they gate where the next unit's
+    body begins), then every position/XOR/checksum field of the session is
+    gathered in one vectorized pass at the scanned offsets."""
+    rnd, off = decode_uvarint(payload)
+    bits = _bit_array(payload, off)
+    nb = len(bits)
+    pos_b = 0
+    out = []
+    for n_units, t, m in schema:
+        cbits = t.bit_length()
+        n = (1 << m) - 1
+        em = m + KEY_BITS
+        if pos_b + n_units > nb:
+            raise WireTruncated("bit field runs past end of buffer")
+        ok = bits[pos_b : pos_b + n_units].astype(bool)
+        pos_b += n_units
+        ok_idx = np.nonzero(ok)[0]
+        cw = _weights(cbits)
+        ks = np.zeros(len(ok_idx), dtype=np.int64)
+        body = np.zeros(len(ok_idx), dtype=np.int64)
+        for i in range(len(ok_idx)):
+            if pos_b + cbits > nb:
+                raise WireTruncated("bit field runs past end of buffer")
+            k = int(bits[pos_b : pos_b + cbits] @ cw)
+            if k > t:
+                raise WireError(f"decoded position count {k} exceeds t={t}")
+            pos_b += cbits
+            body[i] = pos_b
+            ks[i] = k
+            pos_b += k * em + KEY_BITS
+        if pos_b > nb:
+            raise WireTruncated("bit field runs past end of buffer")
+        units: list[ReplyUnit | None] = [None] * n_units
+        if len(ok_idx):
+            total_p = int(ks.sum())
+            ent_unit = np.repeat(np.arange(len(ok_idx)), ks)
+            within = np.arange(total_p) - np.repeat(np.cumsum(ks) - ks, ks)
+            ent_off = body[ent_unit] + within * em
+            pvals = _read_fields(bits, ent_off, m)
+            over = pvals >= n
+            if np.any(over):
+                p = int(pvals[int(np.argmax(over))])
+                raise WireError(f"bin position {p} out of range for n={n}")
+            xvals = _read_fields(bits, ent_off + m, KEY_BITS).astype(np.uint32)
+            csums = _read_fields(bits, body + ks * em, KEY_BITS)
+            bnds = np.cumsum(ks)[:-1]
+            psplit = np.split(pvals, bnds)
+            xsplit = np.split(xvals, bnds)
+            for i, u in enumerate(ok_idx):
+                units[int(u)] = ReplyUnit(
+                    positions=psplit[i], xors=xsplit[i], csum=int(csums[i])
+                )
+        out.append((ok, units))
+    _finish_bits(bits, pos_b, payload, off)
+    return rnd, out
+
+
+def decode_round_reply_scalar(payload: bytes, schema):
+    """Per-bit ``BitReader`` form of ``decode_round_reply`` (test oracle)."""
     rnd, off = decode_uvarint(payload)
     r = BitReader(payload, off)
     out = []
@@ -368,6 +640,16 @@ def encode_round_outcome(rnd: int, done_lists) -> bytes:
     """Alice's checksum verdicts: 1 settled-bit per unit per live session.
     Pure structure (0 ledger bits): it is what lets Bob mirror the unit
     queue; Formula (1) folds it into the per-unit flag already counted."""
+    segs = [
+        np.asarray(done, dtype=bool).astype(np.uint8)
+        for done in done_lists
+        if len(done)
+    ]
+    return frame(MSG_ROUND_OUTCOME, _pack_payload(encode_uvarint(rnd), segs))
+
+
+def encode_round_outcome_scalar(rnd: int, done_lists) -> bytes:
+    """Per-bit ``BitWriter`` form of ``encode_round_outcome`` (test oracle)."""
     w = BitWriter()
     for done in done_lists:
         for flag in done:
@@ -376,6 +658,26 @@ def encode_round_outcome(rnd: int, done_lists) -> bytes:
 
 
 def decode_round_outcome(payload: bytes, unit_counts) -> tuple[int, list[np.ndarray]]:
+    rnd, off = decode_uvarint(payload)
+    counts = list(unit_counts)
+    bits = _bit_array(payload, off)
+    total = sum(counts)
+    if total > len(bits):
+        raise WireTruncated("bit field runs past end of buffer")
+    flat = bits[:total].astype(bool)
+    out = []
+    pos = 0
+    for n_units in counts:
+        out.append(flat[pos : pos + n_units])
+        pos += n_units
+    _finish_bits(bits, total, payload, off)
+    return rnd, out
+
+
+def decode_round_outcome_scalar(
+    payload: bytes, unit_counts
+) -> tuple[int, list[np.ndarray]]:
+    """Per-bit ``BitReader`` form of ``decode_round_outcome`` (test oracle)."""
     rnd, off = decode_uvarint(payload)
     r = BitReader(payload, off)
     out = []
@@ -395,6 +697,27 @@ def decode_round_outcome(payload: bytes, unit_counts) -> tuple[int, list[np.ndar
 
 def encode_verify(entries) -> bytes:
     """Per session (sid order): (success flag, c(A xor D_hat) checksum)."""
+    items = list(entries)
+    span = 1 + KEY_BITS
+    arr = np.zeros(len(items) * span, dtype=np.uint8)
+    if items:
+        arr[::span] = np.fromiter(
+            (1 if s else 0 for s, _ in items), np.uint8, count=len(items)
+        )
+        csums = np.fromiter(
+            (int(c) & 0xFFFFFFFF for _, c in items), np.int64, count=len(items)
+        )
+        idx = (
+            np.arange(len(items), dtype=np.int64)[:, None] * span
+            + 1
+            + np.arange(KEY_BITS, dtype=np.int64)
+        ).ravel()
+        arr[idx] = _field_bits(csums, KEY_BITS)
+    return frame(MSG_VERIFY, _pack_payload(b"", [arr]))
+
+
+def encode_verify_scalar(entries) -> bytes:
+    """Per-bit ``BitWriter`` form of ``encode_verify`` (test oracle)."""
     w = BitWriter()
     for success, csum in entries:
         w.write(1 if success else 0, 1)
@@ -403,6 +726,21 @@ def encode_verify(entries) -> bytes:
 
 
 def decode_verify(payload: bytes, n_sessions: int):
+    bits = _bit_array(payload, 0)
+    span = 1 + KEY_BITS
+    total = n_sessions * span
+    if total > len(bits):
+        raise WireTruncated("bit field runs past end of buffer")
+    succ = bits[0:total:span].astype(bool)
+    csums = _read_fields(
+        bits, np.arange(n_sessions, dtype=np.int64) * span + 1, KEY_BITS
+    )
+    _finish_bits(bits, total, payload, 0)
+    return [(bool(s), int(c)) for s, c in zip(succ, csums)]
+
+
+def decode_verify_scalar(payload: bytes, n_sessions: int):
+    """Per-bit ``BitReader`` form of ``decode_verify`` (test oracle)."""
     r = BitReader(payload)
     out = []
     for _ in range(n_sessions):
@@ -413,6 +751,12 @@ def decode_verify(payload: bytes, n_sessions: int):
 
 
 def encode_verify_ack(flags) -> bytes:
+    arr = np.asarray(list(flags), dtype=bool).astype(np.uint8)
+    return frame(MSG_VERIFY_ACK, _pack_payload(b"", [arr]) if len(arr) else b"")
+
+
+def encode_verify_ack_scalar(flags) -> bytes:
+    """Per-bit ``BitWriter`` form of ``encode_verify_ack`` (test oracle)."""
     w = BitWriter()
     for f in flags:
         w.write(1 if f else 0, 1)
@@ -420,6 +764,16 @@ def encode_verify_ack(flags) -> bytes:
 
 
 def decode_verify_ack(payload: bytes, n_sessions: int) -> list[bool]:
+    bits = _bit_array(payload, 0)
+    if n_sessions > len(bits):
+        raise WireTruncated("bit field runs past end of buffer")
+    out = [bool(b) for b in bits[:n_sessions]]
+    _finish_bits(bits, n_sessions, payload, 0)
+    return out
+
+
+def decode_verify_ack_scalar(payload: bytes, n_sessions: int) -> list[bool]:
+    """Per-bit ``BitReader`` form of ``decode_verify_ack`` (test oracle)."""
     r = BitReader(payload)
     out = [bool(r.read(1)) for _ in range(n_sessions)]
     r.finish()

@@ -1,0 +1,160 @@
+"""Pre-PR-6 *scalar* cohort planner, kept verbatim as a test-only oracle.
+
+This is the per-session/per-unit Python-loop implementation of
+``SessionBatch._plan_cohort`` exactly as it shipped before the vectorized
+planner landed (DESIGN.md §12).  ``tests/test_planner_vectorized.py`` runs
+both planners over identical session batches and asserts the emitted
+``CohortRoundPlan``s are byte-identical — row_map, seeds, overlays, widths,
+member packing — which is what licenses the numpy rewrite to claim
+"same plans, orders of magnitude less host time".
+
+Do not "optimize" this module: its value is being the old code.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hashing import derive_seed
+from repro.core.pbs import diff_overlay, group_view, session_live
+from repro.kernels.platform import pow2_bucket
+from repro.recon.session import CohortRoundPlan, SessionBatch
+
+
+def _by_group(vals: np.ndarray, g: int, seed_groups: int) -> dict:
+    """Partition a small value array by its (round-invariant) group id,
+    through the same canonical ``group_view`` the oracle partitions with."""
+    if not len(vals):
+        return {}
+    _, order, bounds = group_view(vals, g, seed_groups)
+    sv = vals[order]
+    return {
+        gi: sv[bounds[gi] : bounds[gi + 1]]
+        for gi in range(g)
+        if bounds[gi + 1] > bounds[gi]
+    }
+
+
+def reference_plan_cohort(
+    batch: SessionBatch, store, members, rnd: int
+) -> CohortRoundPlan:
+    """The pre-vectorization ``_plan_cohort`` body, unchanged."""
+    total = sum(len(active) for _, active in members)
+    u_pad = pow2_bucket(total, batch.ROW_ALIGN)
+
+    row_map = np.zeros(u_pad, dtype=np.int32)
+    unit_valid = np.zeros(u_pad, dtype=np.int32)
+    seeds = np.zeros(u_pad, dtype=np.uint32)
+    removed_of: list[np.ndarray | None] = [None] * u_pad
+    added_of: list[np.ndarray | None] = [None] * u_pad
+    filters_of: list[tuple] = [()] * u_pad
+
+    packed = []
+    base = 0
+    for s, active in members:
+        st, plan = s.state, s.plan
+        bin_seed = derive_seed(plan.cfg.seed, 2, rnd - s.rnd0)
+        assert 0 <= bin_seed < 1 << 32, bin_seed
+        removed, added = diff_overlay(st)
+        rem_by_grp = _by_group(removed, plan.g, plan.seed_groups)
+        add_by_grp = _by_group(added, plan.g, plan.seed_groups)
+        for slot, u in enumerate(active):
+            row = base + slot
+            row_map[row] = store.row_of[(s.sid, u.group)]
+            unit_valid[row] = 1
+            seeds[row] = bin_seed
+            removed_of[row] = rem_by_grp.get(u.group)
+            added_of[row] = add_by_grp.get(u.group)
+            filters_of[row] = u.filters
+        packed.append((s, base, active, bin_seed))
+        base += len(active)
+
+    if "a" in batch.sides:
+        max_r = max((len(r) for r in removed_of if r is not None), default=0)
+        max_x = max((len(a) for a in added_of if a is not None), default=0)
+        r_w = pow2_bucket(max_r, batch.OVERLAY_ALIGN)
+        x_w = pow2_bucket(max_x, batch.OVERLAY_ALIGN)
+    else:
+        r_w = x_w = 0
+    max_f = max((len(f) for f in filters_of), default=0)
+    f_w = pow2_bucket(max_f, 1) if max_f else 0
+
+    removed_arr = np.zeros((u_pad, r_w), dtype=np.uint32)
+    removed_cnt = np.zeros(u_pad, dtype=np.int32)
+    added_arr = np.zeros((u_pad, x_w), dtype=np.uint32)
+    added_cnt = np.zeros(u_pad, dtype=np.int32)
+    fseeds = np.zeros((u_pad, f_w), dtype=np.uint32)
+    fbins = np.zeros((u_pad, f_w), dtype=np.int32)
+    fcnt = np.zeros(u_pad, dtype=np.int32)
+    for row in range(total):
+        r = removed_of[row]
+        if r is not None:
+            removed_arr[row, : len(r)] = r
+            removed_cnt[row] = len(r)
+        a = added_of[row]
+        if a is not None:
+            added_arr[row, : len(a)] = a
+            added_cnt[row] = len(a)
+        flt = filters_of[row]
+        if flt:
+            fseeds[row, : len(flt)] = [fs for fs, _ in flt]
+            fbins[row, : len(flt)] = [fi for _, fi in flt]
+            fcnt[row] = len(flt)
+
+    arrays = {
+        "row_map": row_map,
+        "unit_valid": unit_valid,
+        "seeds": seeds,
+        "removed": removed_arr,
+        "removed_cnt": removed_cnt,
+        "added": added_arr,
+        "added_cnt": added_cnt,
+        "fseeds": fseeds,
+        "fbins": fbins,
+        "fcnt": fcnt,
+    }
+    live_rows = row_map[:total]
+
+    def width(side: str) -> int:
+        if side not in store.sides:
+            return 0
+        return pow2_bucket(
+            int(store.sides[side].cnt_host[live_rows].max(initial=0)),
+            batch.COL_ALIGN,
+        )
+
+    return CohortRoundPlan(
+        store=store,
+        members=packed,
+        units=total,
+        width_a=width("a"),
+        width_b=width("b"),
+        arrays=arrays,
+        h2d_bytes=sum(a.nbytes for a in arrays.values()),
+        legacy_h2d_bytes=(
+            batch._legacy_round_bytes(
+                store, row_map[:total], removed_cnt[:total],
+                added_cnt[:total], fcnt[:total],
+            )
+            if {"a", "b"} <= set(store.sides)
+            else 0
+        ),
+    )
+
+
+def reference_plan_round(batch: SessionBatch, rnd: int) -> list[CohortRoundPlan]:
+    """The pre-vectorization ``plan_round`` body, routed through the
+    reference cohort planner (store building is shared with the live code —
+    the store layout contract is covered by its own tests)."""
+    live: dict[tuple[int, int], list] = {}
+    for s in batch.sessions:
+        if s.failed or rnd <= s.rnd0:
+            continue
+        if not session_live(s.state, s.plan.cfg, rnd - s.rnd0):
+            continue
+        live.setdefault(s.code_key, []).append((s, s.state.active_units()))
+    return [
+        reference_plan_cohort(
+            batch, batch.store_for(key, live=[s for s, _ in members]), members, rnd
+        )
+        for key, members in sorted(live.items())
+    ]

@@ -1,0 +1,195 @@
+"""Differential suite: vectorized cohort planner vs the scalar reference.
+
+PR 6's tentpole rewrites ``SessionBatch._plan_cohort`` from per-session /
+per-unit Python loops into whole-batch numpy passes (DESIGN.md §12).  The
+license for that rewrite is byte-identity: these tests pin the old scalar
+planner (tests/_planner_reference.py, kept verbatim) against the live
+vectorized one over real reconciliation runs — every cohort, every round,
+every overlay — and assert the emitted ``CohortRoundPlan``s are equal in
+every array, width, seed, and byte count, while the end-to-end results stay
+byte-identical to the ``core.pbs.reconcile`` oracle.
+
+Covered planner regimes: mixed-d cohorts, estimator sessions, two-sided
+diffs, BCH-overload splits (filter overlays), and continuous-sync epochs
+under churn (delta-mutated stores).  Randomized variants run seeded; the
+hypothesis forms engage when the ``[test]`` extra is installed.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from _planner_reference import reference_plan_cohort, reference_plan_round
+
+from repro.core.pbs import PBSConfig, reconcile, true_diff
+from repro.core.simdata import make_pair, make_pair_two_sided
+from repro.recon import ReconcileServer
+from repro.recon.session import SessionBatch
+
+
+def _assert_plans_equal(got, ref, ctx=""):
+    assert got.units == ref.units, ctx
+    assert got.width_a == ref.width_a, ctx
+    assert got.width_b == ref.width_b, ctx
+    assert got.h2d_bytes == ref.h2d_bytes, ctx
+    assert got.legacy_h2d_bytes == ref.legacy_h2d_bytes, ctx
+    assert got.store is ref.store, ctx
+    assert set(got.arrays) == set(ref.arrays), ctx
+    for k in got.arrays:
+        assert got.arrays[k].dtype == ref.arrays[k].dtype, (ctx, k)
+        assert got.arrays[k].shape == ref.arrays[k].shape, (ctx, k)
+        assert np.array_equal(got.arrays[k], ref.arrays[k]), (ctx, k)
+    assert len(got.members) == len(ref.members), ctx
+    for (s1, b1, a1, sd1), (s2, b2, a2, sd2) in zip(got.members, ref.members):
+        assert s1 is s2 and b1 == b2 and sd1 == sd2, ctx
+        assert len(a1) == len(a2) and all(
+            u1 is u2 for u1, u2 in zip(a1, a2)
+        ), ctx
+
+
+@pytest.fixture
+def checked_planner(monkeypatch):
+    """Route every live ``_plan_cohort`` call through both planners and
+    assert plan equality; yields the compared-plan counter."""
+    calls = {"n": 0}
+    orig = SessionBatch._plan_cohort
+
+    def checked(self, store, members, rnd):
+        got = orig(self, store, members, rnd)
+        ref = reference_plan_cohort(self, store, members, rnd)
+        _assert_plans_equal(got, ref, ctx=f"rnd={rnd}")
+        calls["n"] += 1
+        return got
+
+    monkeypatch.setattr(SessionBatch, "_plan_cohort", checked)
+    return calls
+
+
+def _assert_oracle(result, a, b, cfg, dk):
+    exp = reconcile(a, b, cfg, d_known=dk)
+    assert result.diff == exp.diff == true_diff(a, b)
+    assert result.bytes_sent == exp.bytes_sent
+    assert result.bytes_per_round == exp.bytes_per_round
+    assert result.rounds == exp.rounds
+    assert result.success and exp.success
+
+
+def test_mixed_grid_every_round_identical(checked_planner):
+    """Mixed-d cohorts + an estimator session + a two-sided session: every
+    cohort plan of every round must match the scalar reference, and the
+    results must stay oracle-byte-identical."""
+    cases = [
+        (*make_pair(1500, 5, np.random.default_rng(5)), PBSConfig(seed=10), 5),
+        (*make_pair(4000, 50, np.random.default_rng(50)), PBSConfig(seed=11), 50),
+        (*make_pair(6000, 80, np.random.default_rng(2)), PBSConfig(seed=8), None),
+        (
+            *make_pair_two_sided(5000, 30, 20, np.random.default_rng(3)),
+            PBSConfig(seed=2),
+            50,
+        ),
+    ]
+    server = ReconcileServer()
+    for a, b, cfg, dk in cases:
+        server.submit(a, b, cfg=cfg, d_known=dk)
+    results = server.run()
+    assert checked_planner["n"] >= 2  # multiple cohort-rounds actually compared
+    for i, (a, b, cfg, dk) in enumerate(cases):
+        _assert_oracle(results[i], a, b, cfg, dk)
+
+
+def test_split_filters_identical(checked_planner):
+    """A BCH-overloaded session (guaranteed 3-way split) exercises the
+    sparse filter-overlay fills; plans must still match row for row."""
+    a_f, b_f = make_pair(5000, 40, np.random.default_rng(17))
+    cfg_f = PBSConfig(
+        seed=6, n_override=255, t_override=8, g_override=1, max_rounds=12
+    )
+    server = ReconcileServer()
+    server.submit(a_f, b_f, cfg=cfg_f, d_known=40)
+    results = server.run()
+    assert checked_planner["n"] >= 2  # split spanned several rounds
+    assert results[0].decode_failures >= 1
+    _assert_oracle(results[0], a_f, b_f, cfg_f, 40)
+
+
+def test_churn_epochs_identical(checked_planner):
+    """Continuous-sync epochs over delta-mutated stores: the planner runs
+    against patched (slack-lane) CSR layouts; every epoch's plans and
+    results must still match reference and oracle."""
+    rng = np.random.default_rng(9)
+    a, b = make_pair(900, 20, np.random.default_rng(1))
+    cfg = PBSConfig(seed=3, n_override=127, t_override=7, g_override=4)
+    server = ReconcileServer(continuous=True)
+    server.submit(a, b, cfg=cfg, d_known=20)
+    server.run()
+    for _ in range(2):
+        add_a = rng.integers(1, 1 << 32, size=6, dtype=np.uint64).astype(np.uint32)
+        add_b = rng.integers(1, 1 << 32, size=6, dtype=np.uint64).astype(np.uint32)
+        st_ = server.sessions[0].state
+        rem_a = rng.permutation(st_.a)[:4]
+        rem_b = rng.permutation(st_.b)[:4]
+        server.advance_epoch({0: (add_a, rem_a, add_b, rem_b)}, d_known={0: 20})
+        results = server.run()
+        st_ = server.sessions[0].state
+        _assert_oracle(results[0], st_.a, st_.b, cfg, 20)
+    assert checked_planner["n"] >= 3
+
+
+def test_plan_round_matches_reference_direct():
+    """Static check (no engine in the loop): ``plan_round`` over a fresh
+    batch vs ``reference_plan_round``, cohort by cohort."""
+    server = ReconcileServer()
+    for i, d in enumerate((8, 60, 300)):
+        a, b = make_pair(500 + 900 * i, d, np.random.default_rng(d))
+        server.submit(a, b, cfg=PBSConfig(seed=30 + i), d_known=d)
+    server._flush_phase0()
+    batch = SessionBatch(server._sessions)
+    plans_v = batch.plan_round(1)
+    plans_r = reference_plan_round(batch, 1)
+    assert len(plans_v) == len(plans_r) >= 2
+    for got, ref in zip(plans_v, plans_r):
+        _assert_plans_equal(got, ref, ctx="direct")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_randomized_grids_seeded(seed, checked_planner):
+    """Seeded random batches (always-run stand-in for the hypothesis form):
+    random sizes, diffs, and seeds across several sessions per batch."""
+    rng = np.random.default_rng(1000 + seed)
+    server = ReconcileServer()
+    cases = []
+    for _ in range(int(rng.integers(2, 5))):
+        d = int(rng.integers(1, 120))
+        size = int(rng.integers(max(2 * d, 50), 4000))
+        a, b = make_pair(size, d, np.random.default_rng(int(rng.integers(1 << 30))))
+        cfg = PBSConfig(seed=int(rng.integers(1, 1 << 16)))
+        dk = d if rng.integers(2) else None
+        server.submit(a, b, cfg=cfg, d_known=dk)
+        cases.append((a, b, cfg, dk))
+    results = server.run()
+    assert checked_planner["n"] >= 1
+    for i, (a, b, cfg, dk) in enumerate(cases):
+        exp = reconcile(a, b, cfg, d_known=dk)
+        assert results[i].diff == exp.diff
+        assert results[i].bytes_sent == exp.bytes_sent
+        assert results[i].success == exp.success
+
+
+@given(
+    d=st.integers(min_value=1, max_value=150),
+    size_extra=st.integers(min_value=0, max_value=3000),
+    seed=st.integers(min_value=0, max_value=1 << 16),
+)
+@settings(max_examples=15, deadline=None)
+def test_hypothesis_single_session_plans(d, size_extra, seed):
+    """Property form: for arbitrary (d, size, seed) the round-1 plan of a
+    fresh batch equals the scalar reference plan exactly."""
+    size = max(2 * d, 40) + size_extra
+    a, b = make_pair(size, d, np.random.default_rng(seed))
+    server = ReconcileServer()
+    server.submit(a, b, cfg=PBSConfig(seed=seed), d_known=d)
+    server._flush_phase0()
+    batch = SessionBatch(server._sessions)
+    plans_v = batch.plan_round(1)
+    plans_r = reference_plan_round(batch, 1)
+    assert len(plans_v) == len(plans_r) == 1
+    _assert_plans_equal(plans_v[0], plans_r[0], ctx="hypothesis")

@@ -1,0 +1,344 @@
+"""Batched wire codecs vs the scalar bit-loop codecs, byte for byte.
+
+PR 6 rewrote the ``repro.wire`` frame codecs to bit-pack/unpack whole
+frames in numpy passes (DESIGN.md §12); the original per-bit
+``BitWriter``/``BitReader`` implementations are kept as ``*_scalar``
+oracles.  This suite asserts the two are interchangeable:
+
+* on valid frames, batched and scalar encoders emit **identical bytes**
+  and both decoders return identical structures (cross-decoding included:
+  batched decodes scalar output and vice versa);
+* on adversarial frames — truncations, nonzero padding, trailing bytes,
+  out-of-range counts/positions — both raise ``WireError``;
+* the envelopes (MSG_MUX, MSG_EPOCH) carry batched-encoded frames
+  unchanged through ``encode_mux``/``decode_mux`` and
+  ``encode_epoch``/``decode_epoch``.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.wire import frames as wf
+from repro.wire.frames import ReplyUnit, WireError
+
+
+def _payload(buf: bytes) -> bytes:
+    msg_type, payload, end = wf.split_frame(buf)
+    assert end == len(buf)
+    return payload
+
+
+def _rand_schema(rng, max_sessions=4):
+    schema = []
+    for _ in range(int(rng.integers(1, max_sessions + 1))):
+        m = int(rng.integers(3, 11))
+        t = int(rng.integers(1, 9))
+        n_units = int(rng.integers(0, 7))
+        schema.append((n_units, t, m))
+    return schema
+
+
+def _rand_reply_entries(rng, schema):
+    entries = []
+    for n_units, t, m in schema:
+        n = (1 << m) - 1
+        ok = [bool(rng.integers(2)) for _ in range(n_units)]
+        units = []
+        for flag in ok:
+            if not flag:
+                units.append(None)
+                continue
+            k = int(rng.integers(0, t + 1))
+            units.append(ReplyUnit(
+                positions=rng.integers(0, n, size=k).astype(np.int64),
+                xors=rng.integers(0, 1 << 32, size=k, dtype=np.uint64).astype(np.uint32),
+                csum=int(rng.integers(0, 1 << 32)),
+            ))
+        entries.append((ok, units))
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Valid-frame differentials
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_tow_sketch_differential(seed):
+    rng = np.random.default_rng(seed)
+    set_size = int(rng.integers(1, 100_000))
+    ell = int(rng.integers(0, 200))
+    vals = rng.integers(-set_size, set_size + 1, size=ell).astype(np.int64)
+    fb = wf.encode_tow_sketch(vals, set_size)
+    fs = wf.encode_tow_sketch_scalar(vals, set_size)
+    assert fb == fs
+    for decoder in (wf.decode_tow_sketch, wf.decode_tow_sketch_scalar):
+        got_size, got = decoder(_payload(fb))
+        assert got_size == set_size
+        assert got.dtype == np.int64 and np.array_equal(got, vals)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_round_sketches_differential(seed):
+    rng = np.random.default_rng(100 + seed)
+    schema = _rand_schema(rng)
+    blocks = [
+        (rng.integers(0, 1 << m, size=(n_units, t)).astype(np.int64), m)
+        for n_units, t, m in schema
+    ]
+    rnd = int(rng.integers(0, 50))
+    fb = wf.encode_round_sketches(rnd, blocks)
+    fs = wf.encode_round_sketches_scalar(rnd, blocks)
+    assert fb == fs
+    for decoder in (wf.decode_round_sketches, wf.decode_round_sketches_scalar):
+        got_rnd, got = decoder(_payload(fb), schema)
+        assert got_rnd == rnd
+        assert len(got) == len(blocks)
+        for g, (sk, _) in zip(got, blocks):
+            assert g.dtype == np.int64 and np.array_equal(g, sk)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_round_reply_differential(seed):
+    rng = np.random.default_rng(200 + seed)
+    schema = _rand_schema(rng)
+    entries = _rand_reply_entries(rng, schema)
+    rnd = int(rng.integers(0, 50))
+    fb = wf.encode_round_reply(rnd, entries, schema)
+    fs = wf.encode_round_reply_scalar(rnd, entries, schema)
+    assert fb == fs
+    for decoder in (wf.decode_round_reply, wf.decode_round_reply_scalar):
+        got_rnd, got = decoder(_payload(fb), schema)
+        assert got_rnd == rnd
+        for (gok, gunits), (ok, units) in zip(got, entries):
+            assert gok.dtype == bool and list(gok) == ok
+            for gu, u in zip(gunits, units):
+                assert gu == u  # ReplyUnit __eq__ covers None too
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_round_outcome_differential(seed):
+    rng = np.random.default_rng(300 + seed)
+    counts = [int(rng.integers(0, 9)) for _ in range(int(rng.integers(1, 5)))]
+    done = [rng.integers(0, 2, size=c).astype(bool) for c in counts]
+    rnd = int(rng.integers(0, 50))
+    fb = wf.encode_round_outcome(rnd, done)
+    fs = wf.encode_round_outcome_scalar(rnd, done)
+    assert fb == fs
+    for decoder in (wf.decode_round_outcome, wf.decode_round_outcome_scalar):
+        got_rnd, got = decoder(_payload(fb), counts)
+        assert got_rnd == rnd
+        assert all(np.array_equal(g, d) for g, d in zip(got, done))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_verify_and_ack_differential(seed):
+    rng = np.random.default_rng(400 + seed)
+    n = int(rng.integers(0, 10))
+    entries = [
+        (bool(rng.integers(2)), int(rng.integers(0, 1 << 32))) for _ in range(n)
+    ]
+    fb = wf.encode_verify(entries)
+    assert fb == wf.encode_verify_scalar(entries)
+    assert wf.decode_verify(_payload(fb), n) == entries
+    assert wf.decode_verify_scalar(_payload(fb), n) == entries
+
+    flags = [bool(rng.integers(2)) for _ in range(n)]
+    ab = wf.encode_verify_ack(flags)
+    assert ab == wf.encode_verify_ack_scalar(flags)
+    assert wf.decode_verify_ack(_payload(ab), n) == flags
+    assert wf.decode_verify_ack_scalar(_payload(ab), n) == flags
+
+
+def test_empty_frames_differential():
+    """Zero sessions / zero units: batched and scalar agree on the
+    degenerate frames too."""
+    assert wf.encode_tow_sketch([], 10) == wf.encode_tow_sketch_scalar([], 10)
+    assert wf.encode_round_sketches(1, []) == wf.encode_round_sketches_scalar(1, [])
+    assert wf.encode_round_reply(1, [], []) == wf.encode_round_reply_scalar(1, [], [])
+    assert wf.encode_round_outcome(1, []) == wf.encode_round_outcome_scalar(1, [])
+    assert wf.encode_verify([]) == wf.encode_verify_scalar([])
+    assert wf.encode_verify_ack([]) == wf.encode_verify_ack_scalar([])
+    # all-units-failed reply: ok bits only, no bodies
+    schema = [(3, 5, 7)]
+    entries = [([False, False, False], [None, None, None])]
+    fb = wf.encode_round_reply(2, entries, schema)
+    assert fb == wf.encode_round_reply_scalar(2, entries, schema)
+    _, got = wf.decode_round_reply(_payload(fb), schema)
+    assert list(got[0][0]) == [False, False, False]
+    assert got[0][1] == [None, None, None]
+
+
+# ---------------------------------------------------------------------------
+# Adversarial frames: both codecs must reject
+# ---------------------------------------------------------------------------
+
+
+def _reply_case(seed):
+    rng = np.random.default_rng(seed)
+    schema = [(4, 6, 8), (2, 3, 5)]
+    entries = _rand_reply_entries(rng, schema)
+    return schema, _payload(wf.encode_round_reply(3, entries, schema))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_reply_truncation_rejected_by_both(seed):
+    schema, payload = _reply_case(500 + seed)
+    for cut in range(1, len(payload)):
+        bad = payload[:cut]
+        # either codec may classify differently at pathological cuts, but
+        # both MUST reject with the WireError family
+        with pytest.raises(WireError):
+            wf.decode_round_reply(bad, schema)
+        with pytest.raises(WireError):
+            wf.decode_round_reply_scalar(bad, schema)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_reply_trailing_and_padding_rejected_by_both(seed):
+    schema, payload = _reply_case(600 + seed)
+    for bad in (payload + b"\x00", payload + b"\xff\x01"):
+        with pytest.raises(WireError):
+            wf.decode_round_reply(bad, schema)
+        with pytest.raises(WireError):
+            wf.decode_round_reply_scalar(bad, schema)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_reply_random_bitflips_agree(seed):
+    """Random single-byte corruptions: the codecs must agree on accept vs
+    reject, and on the decoded structure whenever both accept."""
+    schema, payload = _reply_case(700 + seed)
+    rng = np.random.default_rng(seed)
+    for _ in range(40):
+        pos = int(rng.integers(0, len(payload)))
+        bad = bytearray(payload)
+        bad[pos] ^= 1 << int(rng.integers(0, 8))
+        bad = bytes(bad)
+        try:
+            got_b = wf.decode_round_reply(bad, schema)
+            ok_b = True
+        except WireError:
+            ok_b = False
+        try:
+            got_s = wf.decode_round_reply_scalar(bad, schema)
+            ok_s = True
+        except WireError:
+            ok_s = False
+        assert ok_b == ok_s, (pos, bad.hex())
+        if ok_b:
+            for (gok, gunits), (sok, sunits) in zip(got_b[1], got_s[1]):
+                assert np.array_equal(gok, sok)
+                assert gunits == sunits
+
+
+def test_tow_out_of_range_value_rejected_by_both():
+    # value 2*set_size + 1 fits the bit width but exceeds the declared range
+    set_size = 100
+    bits = wf.tow_value_bits(set_size)
+    good = _payload(wf.encode_tow_sketch([0], set_size))
+    from repro.wire.varint import BitWriter, encode_uvarint
+
+    w = BitWriter()
+    w.write(2 * set_size + 1, bits)
+    bad = encode_uvarint(set_size) + encode_uvarint(1) + w.getvalue()
+    assert wf.decode_tow_sketch(good) == wf.decode_tow_sketch_scalar(good)
+    with pytest.raises(WireError):
+        wf.decode_tow_sketch(bad)
+    with pytest.raises(WireError):
+        wf.decode_tow_sketch_scalar(bad)
+
+
+def test_reply_count_exceeding_t_rejected_by_both():
+    schema = [(1, 3, 6)]  # cbits = 2, so count 3 is encodable but k <= 3 ok;
+    # craft count field = 3 with only 2 entries present -> truncated, and
+    # a full body claiming k=3 with t lowered to 2 at decode -> count error
+    rng = np.random.default_rng(0)
+    entries = [([True], [ReplyUnit(
+        positions=rng.integers(0, 62, size=3).astype(np.int64),
+        xors=rng.integers(0, 1 << 32, size=3, dtype=np.uint64).astype(np.uint32),
+        csum=7,
+    )])]
+    payload = _payload(wf.encode_round_reply(1, entries, schema))
+    tight = [(1, 2, 6)]  # same cbits (2 bits), smaller t
+    with pytest.raises(WireError):
+        wf.decode_round_reply(payload, tight)
+    with pytest.raises(WireError):
+        wf.decode_round_reply_scalar(payload, tight)
+
+
+# ---------------------------------------------------------------------------
+# Envelopes: batched frames ride MSG_MUX / MSG_EPOCH unchanged
+# ---------------------------------------------------------------------------
+
+
+def test_mux_envelope_carries_batched_frames():
+    rng = np.random.default_rng(11)
+    schema = _rand_schema(rng)
+    entries = _rand_reply_entries(rng, schema)
+    inner = wf.encode_round_reply(5, entries, schema)
+    assert inner == wf.encode_round_reply_scalar(5, entries, schema)
+    wrapped = wf.encode_mux(9, inner)
+    ch, msg_type, payload = wf.decode_mux(_payload(wrapped))
+    assert (ch, msg_type) == (9, wf.MSG_ROUND_REPLY)
+    got_rnd, got = wf.decode_round_reply(payload, schema)
+    _, exp = wf.decode_round_reply_scalar(payload, schema)
+    assert got_rnd == 5
+    for (gok, gunits), (sok, sunits) in zip(got, exp):
+        assert np.array_equal(gok, sok) and gunits == sunits
+    # adversarial: truncated inner frame inside the envelope
+    with pytest.raises(WireError):
+        wf.decode_mux(_payload(wf.encode_mux(9, inner))[:-1] )
+
+
+def test_epoch_envelope_carries_batched_tow():
+    vals = np.arange(-8, 9, dtype=np.int64)
+    inner = wf.encode_tow_sketch(vals, 64)
+    assert inner == wf.encode_tow_sketch_scalar(vals, 64)
+    wrapped = wf.encode_epoch(3, inner)
+    epoch, msg_type, payload = wf.decode_epoch(_payload(wrapped))
+    assert (epoch, msg_type) == (3, wf.MSG_TOW_SKETCH)
+    for decoder in (wf.decode_tow_sketch, wf.decode_tow_sketch_scalar):
+        size, got = decoder(payload)
+        assert size == 64 and np.array_equal(got, vals)
+    # nested envelope must be rejected
+    with pytest.raises(WireError):
+        wf.decode_epoch(_payload(wf.encode_epoch(3, wrapped)))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis forms (engage with the [test] extra installed)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    set_size=st.integers(min_value=1, max_value=1 << 20),
+    seed=st.integers(min_value=0, max_value=1 << 16),
+    ell=st.integers(min_value=0, max_value=256),
+)
+@settings(max_examples=30, deadline=None)
+def test_hypothesis_tow_differential(set_size, seed, ell):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(-set_size, set_size + 1, size=ell).astype(np.int64)
+    fb = wf.encode_tow_sketch(vals, set_size)
+    assert fb == wf.encode_tow_sketch_scalar(vals, set_size)
+    size_b, got_b = wf.decode_tow_sketch(_payload(fb))
+    size_s, got_s = wf.decode_tow_sketch_scalar(_payload(fb))
+    assert size_b == size_s == set_size
+    assert np.array_equal(got_b, vals) and np.array_equal(got_s, vals)
+
+
+@given(seed=st.integers(min_value=0, max_value=1 << 16))
+@settings(max_examples=30, deadline=None)
+def test_hypothesis_reply_differential(seed):
+    rng = np.random.default_rng(seed)
+    schema = _rand_schema(rng)
+    entries = _rand_reply_entries(rng, schema)
+    fb = wf.encode_round_reply(7, entries, schema)
+    assert fb == wf.encode_round_reply_scalar(7, entries, schema)
+    got_b = wf.decode_round_reply(_payload(fb), schema)
+    got_s = wf.decode_round_reply_scalar(_payload(fb), schema)
+    assert got_b[0] == got_s[0] == 7
+    for (gok, gunits), (sok, sunits) in zip(got_b[1], got_s[1]):
+        assert np.array_equal(gok, sok) and gunits == sunits
