@@ -36,6 +36,14 @@ full PBS protocol through the device-resident batched path, and reports
     delta-H2D bytes against the full-rebuild equivalent
     (``delta_h2d_frac``, gated by ``--max-delta-h2d-frac``; zero store
     rebuilds after epoch 0 and per-epoch oracle byte-identity asserted),
+  * with ``--chaos SEED``: a chaos-hardening point (DESIGN.md §13) — a
+    4-peer continuous hub driven through mutation epochs while scripted
+    faults fire (one clean-disconnect crash-restart, one silent crash
+    healed through the deadline path, one peer living behind a seeded
+    lossy/duplicating/reordering ARQ channel), plus a budget-exhausted
+    session completed by graceful degradation — recording
+    ``peers_resumed``, ``resume_replay_bytes`` and ``sessions_degraded``
+    into the JSON artifact with per-epoch oracle byte-identity asserted,
   * with ``--peers N1,N2,...``: a multi-peer hub sweep (DESIGN.md §10) —
     N real ``AliceEndpoint`` peers against one ``HubEndpoint`` over
     mux-enveloped in-memory transports — recording peers/s, the fused
@@ -79,11 +87,16 @@ from repro.core.tow import ELL_DEFAULT, estimate_numerator, tow_seeds, tow_sketc
 from repro.net import (
     AliceEndpoint,
     BobEndpoint,
+    ChaosTransport,
+    FaultPlan,
     HubEndpoint,
     InMemoryDuplex,
+    ReliableTransport,
+    TransportError,
     run_hub,
     run_pair,
 )
+from repro.net.hub import _drive_hub
 from repro.recon import ReconcileServer, phase0_numerators
 
 
@@ -413,6 +426,201 @@ def epoch_bench_point(sessions: int, size: int, epochs: int, churn: float,
     return row, point
 
 
+def chaos_bench_point(seed: int, *, size: int = 700, d: int = 60,
+                      epochs: int = 3, check: bool = True):
+    """Chaos-hardening point (DESIGN.md §13): the resilience machinery
+    under scripted faults, timed and ledgered.
+
+    A 4-peer continuous hub runs ``epochs`` churn epochs: peer 0
+    crash-restarts by clean disconnect and peer 1 by silent crash (both at
+    the first round barrier of epoch 1, resuming mid-epoch via
+    MSG_RESUME), peer 2 lives its whole life behind a seeded
+    lossy/duplicating/reordering ARQ channel, peer 3 is clean.  A separate
+    budget-exhausted session then completes through the degradation
+    ladder.  Records ``peers_resumed``, ``resume_replay_bytes`` and
+    ``sessions_degraded`` — the chaos stats CI tracks — with zero store
+    rebuilds, zero peer failures and (with ``check``) per-epoch oracle
+    byte-identity asserted.
+    """
+    cfg_kw = dict(n_override=127, t_override=7, g_override=4)
+    rng = np.random.default_rng(seed)
+    hub = HubEndpoint(recv_deadline=4.0, continuous=True, resume_window=60.0)
+    alices: dict[int, AliceEndpoint] = {}
+    cfgs: dict[int, PBSConfig] = {}
+    conn: dict[int, dict] = {}
+    plan2 = FaultPlan(seed=seed + 50, loss=0.08, burst_every=40, burst_len=2,
+                      dup=0.06, reorder=0.06, partitions=((120, 126),))
+    for p in range(4):
+        a, b = make_pair(size, d, np.random.default_rng(seed + 101 * p))
+        cfg = PBSConfig(seed=seed + p, **cfg_kw)
+        if p == 2:
+            raw_a, raw_h = InMemoryDuplex.pair()
+            chaos = ChaosTransport(raw_a, plan2)
+            ta = ReliableTransport(chaos, timeout=0.02, max_retries=400,
+                                   seed=p)
+            th = ReliableTransport(raw_h, timeout=0.02, max_retries=400,
+                                   seed=100 + p)
+        else:
+            ta, th = InMemoryDuplex.pair()
+            chaos = None
+            if p == 1:
+                chaos = ChaosTransport(ta, FaultPlan(crash_silent=True))
+                ta = chaos
+        ch = hub.add_peer(th, label=f"peer{p}")
+        hub.submit(ch, b, cfg=cfg, d_known=d)
+        ep = AliceEndpoint(ta, channel=ch, continuous=True)
+        ep.submit(a, cfg=cfg, d_known=d)
+        alices[ch] = ep
+        cfgs[ch] = cfg
+        conn[ch] = {"ta": ta, "chaos": chaos}
+        if p == 0:
+            ch0 = ch
+        elif p == 1:
+            ch1 = ch
+        elif p == 2:
+            ch2 = ch
+
+    pending: dict = {}
+    trigger = {"armed": False}
+
+    def on_barrier(rnd):
+        if trigger["armed"] and rnd >= 1:
+            trigger["armed"] = False
+            conn[ch0]["ta"].close()           # clean disconnect
+            conn[ch1]["chaos"]._crash()       # dark peer: deadline path
+        for ch in list(pending):
+            if hub._peers[ch].suspended:
+                hub.resume_peer(ch, pending.pop(ch))
+
+    hub.on_barrier = on_barrier
+
+    def _mk(ch, fn):
+        def call():
+            try:
+                return fn()
+            except TransportError:
+                pass
+            raw_a, nh = InMemoryDuplex.pair()
+            if ch == ch1:
+                chaos = ChaosTransport(raw_a, FaultPlan(crash_silent=True))
+                conn[ch].update(ta=chaos, chaos=chaos)
+                ta = chaos
+            else:
+                conn[ch].update(ta=raw_a, chaos=None)
+                ta = raw_a
+            pending[ch] = nh
+            alices[ch].resume(ta)
+            return alices[ch].resume_run()
+        return call
+
+    def _fresh(k):
+        return rng.integers(1, 1 << 32, size=k,
+                            dtype=np.uint64).astype(np.uint32)
+
+    outcomes, results, errors = _drive_hub(
+        hub, {ch: _mk(ch, ep.run) for ch, ep in alices.items()},
+        join_timeout=120.0)
+    if errors or not all(o.ok for o in outcomes.values()):
+        raise AssertionError(f"chaos warmup epoch failed: {errors}")
+
+    t0 = time.perf_counter()
+    for e in range(1, epochs + 1):
+        hub_muts, alice_muts = {}, {}
+        for ch, ep in alices.items():
+            b_cur = hub._peers[ch].sessions[0].state.b
+            hub_muts[ch] = {0: (_fresh(24), rng.permutation(b_cur)[:24])}
+            a_cur = ep.sessions[0].state.a
+            alice_muts[ch] = {0: (_fresh(6), rng.permutation(a_cur)[:6])}
+        hub.advance_epoch(hub_muts)
+        for ch, ep in alices.items():
+            ep.advance_epoch(alice_muts[ch])
+        if e == 1:
+            trigger["armed"] = True
+        outcomes, results, errors = _drive_hub(
+            hub, {ch: _mk(ch, ep.run_epoch) for ch, ep in alices.items()},
+            join_timeout=120.0)
+        if errors or not all(o.ok for o in outcomes.values()):
+            raise AssertionError(f"chaos epoch {e} failed: {errors}")
+        if e == 1 and not (outcomes[ch0].error_kind == "resumed"
+                           and outcomes[ch1].error_kind == "resumed"):
+            raise AssertionError("crashed peers did not resume")
+        if check:
+            for ch, ep in alices.items():
+                oracle = reconcile(ep.sessions[0].state.a,
+                                   hub._peers[ch].sessions[0].state.b,
+                                   cfgs[ch], d_known=d)
+                r = results[ch][0]
+                if (r.bytes_per_round != oracle.bytes_per_round
+                        or r.diff != oracle.diff):
+                    raise AssertionError(
+                        f"epoch {e} ch {ch}: chaos run diverged from core.pbs"
+                    )
+    wall = time.perf_counter() - t0
+
+    st = hub.stats
+    if st["store_builds"] or st.get("peers_failed", 0):
+        raise AssertionError(f"chaos run rebuilt stores or failed peers: {st}")
+    if st["peers_resumed"] < 2:
+        raise AssertionError(f"expected >=2 resumptions, got {st}")
+    chaos2 = conn[ch2]["chaos"]         # the lossy-ARQ peer's injector
+    if chaos2.crashed or not chaos2.dropped:
+        raise AssertionError("the lossy peer saw no chaos — plan inert")
+    retrans = sum(ep.wire_stats.get("retransmits", 0)
+                  for ep in alices.values())
+
+    # graceful degradation: a hopeless d̂ = 250 against d = 1000 exhausts
+    # the round budget; the escalation ladder completes it anyway
+    rngd = np.random.default_rng(seed + 11)
+    univ = rngd.choice(1 << 20, size=4000, replace=False).astype(np.uint32)
+    th_a, th_h = InMemoryDuplex.pair()
+    dhub = HubEndpoint(degrade=True, recv_deadline=30.0)
+    dcfg = PBSConfig(seed=seed + 5, max_rounds=2)
+    dch = dhub.add_peer(th_h)
+    dhub.submit(dch, univ[500:], cfg=dcfg, d_known=250)
+    dep = AliceEndpoint(th_a, channel=dch, degrade=True)
+    dep.submit(univ[:3500], cfg=dcfg, d_known=250)
+    _, dresults, derrors = run_hub(dhub, {dch: dep})
+    if derrors or not dresults[dch][0].success:
+        raise AssertionError(f"degradation run failed: {derrors}")
+    degraded = dhub.stats["sessions_degraded"]
+    if degraded < 1:
+        raise AssertionError("exhausted session completed without escalating")
+
+    point = {
+        "chaos": True,
+        "chaos_seed": seed,
+        "peers": len(alices),
+        "d": d,
+        "size": size,
+        "epochs": epochs,
+        "wall_s": round(wall, 4),
+        "epochs_per_s": round(epochs / wall, 3),
+        "peers_resumed": st["peers_resumed"],
+        "resume_replay_bytes": st["resume_replay_bytes"],
+        "sessions_degraded": degraded,
+        "peers_failed": st.get("peers_failed", 0),
+        "store_builds": st["store_builds"],
+        "retransmits": retrans,
+        "chaos_dropped": chaos2.dropped,
+        "chaos_duplicated": chaos2.duplicated,
+        "chaos_reordered": chaos2.reordered,
+        "checked": check,
+    }
+    row = Row(
+        name=f"recon_throughput/chaos_seed{seed}_e{epochs}",
+        us_per_call=wall * 1e6 / epochs,
+        derived=(
+            f"epochs_per_s={point['epochs_per_s']:.2f} "
+            f"peers_resumed={st['peers_resumed']} "
+            f"resume_replay_bytes={st['resume_replay_bytes']} "
+            f"sessions_degraded={degraded} "
+            f"retransmits={retrans} "
+            + ("oracle-checked" if check else "unchecked")
+        ),
+    )
+    return row, point
+
+
 def write_json(points: list[dict], path: str) -> None:
     """BENCH_recon.json: the perf-trajectory artifact CI tracks per PR."""
     doc = {
@@ -471,6 +679,12 @@ def main(argv=None):
     ap.add_argument("--churn", type=float, default=0.05,
                     help="fraction of |B| replaced between epochs for the "
                          "--epochs sweep (default 0.05)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="run the seeded chaos-hardening point: crash-"
+                         "restart + silent-crash resumption, ARQ over a "
+                         "lossy channel, and the degradation ladder, "
+                         "recording peers_resumed / resume_replay_bytes / "
+                         "sessions_degraded (None = skip)")
     ap.add_argument("--json", type=str, default="BENCH_recon.json",
                     help="path for the JSON artifact (default BENCH_recon.json)")
     ap.add_argument("--no-json", action="store_true", help="skip the JSON artifact")
@@ -522,11 +736,18 @@ def main(argv=None):
             rows.append(row)
             points.append(point)
             print(row.csv(), flush=True)
+    if args.chaos is not None:
+        row, point = chaos_bench_point(args.chaos, check=not args.no_check)
+        rows.append(row)
+        points.append(point)
+        print(row.csv(), flush=True)
     if not args.no_json:
         write_json(points, args.json)
         print(f"# wrote {args.json}", flush=True)
     pair_points = [
-        p for p in points if not p.get("hub") and "delta_h2d_frac" not in p
+        p for p in points
+        if not p.get("hub") and not p.get("chaos")
+        and "delta_h2d_frac" not in p
     ]
     hub_points = [p for p in points if p.get("hub")]
     if args.min_sessions_per_s:

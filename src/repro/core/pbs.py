@@ -29,7 +29,7 @@ the oracle the batched engine is validated against unit-for-unit.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
@@ -151,6 +151,27 @@ def plan_from_estimate(cfg: PBSConfig, numerator: int, set_size_a: int) -> Proto
 def plan_from_d_known(cfg: PBSConfig, d_known: int) -> ProtocolPlan:
     """Pin (n, t, g) when d is known out-of-band (no estimator traffic)."""
     return _mk_plan(cfg, float(d_known), max(1, d_known), 0)
+
+
+def escalated_plan(plan: ProtocolPlan, level: int = 1) -> ProtocolPlan:
+    """Degradation-ladder rung ``level`` for a session whose round budget
+    ran out with groups still undone (DESIGN.md §13): re-plan at the
+    difference estimate doubled ``level`` times, with group seeds freshly
+    derived per rung so the bin assignment that starved the decoder is
+    reshuffled rather than replayed.  Deterministic from (plan, level) —
+    both endpoints derive the identical rung with zero coordination
+    traffic.  Each doubling shrinks the expected per-group difference
+    d̂/g toward δ, so a rung exists where every group decodes; in the
+    limit the ladder converges on the verify-everything exchange (the
+    checksum/verify pass transfers any stragglers), which is why
+    escalation terminates instead of looping.
+    """
+    if level < 1:
+        raise ValueError(f"escalation level {level} out of range (must be >= 1)")
+    cfg = plan.cfg
+    d_est = max(float(plan.d_est), 1.0) * (1 << level)
+    base = _mk_plan(cfg, d_est, planned_d(d_est, cfg.gamma), plan.est_bytes)
+    return replace(base, seed_groups=derive_seed(cfg.seed, 0xE5, level))
 
 
 def plan_protocol(

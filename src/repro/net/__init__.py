@@ -22,9 +22,20 @@ replicas continuously* (DESIGN.md §11): ``advance_epoch`` stages the next
 epoch's set mutations, ``run_epoch``/``serve_epoch``/``serve`` exchange the
 ``MSG_EPOCH`` d̂ handshake and delta-patch the device-resident stores in
 place, so a long-lived peer pays O(churn) — not O(|set|) — per epoch.
+
+``repro.net.resilience`` (DESIGN.md §13) hardens all of it against real
+failure: ``FaultPlan``/``ChaosTransport`` script seeded loss bursts,
+duplication, reordering, corruption, partitions, and crash-restart under
+any of the transports; a crashed-and-restarted peer re-attaches through
+the ``MSG_RESUME`` handshake (``AliceEndpoint.resume`` against
+``HubEndpoint.resume_peer``) and continues from its last completed round
+barrier with zero store rebuilds; ``classify_error`` types every failure
+for ``PeerOutcome.error_kind``; and ``degrade=True`` endpoints escalate
+decode-budget-exhausted sessions instead of failing them.
 """
 from .endpoint import AliceEndpoint, BobEndpoint, run_pair, run_pair_epoch
 from .hub import HubEndpoint, PeerOutcome, run_hub, run_hub_epoch
+from .resilience import ChaosTransport, FaultPlan, PeerDeadline, classify_error
 from .transport import (
     FrameStream,
     InMemoryDuplex,
@@ -40,9 +51,12 @@ from .transport import (
 __all__ = [
     "AliceEndpoint",
     "BobEndpoint",
+    "ChaosTransport",
+    "FaultPlan",
     "FrameStream",
     "HubEndpoint",
     "InMemoryDuplex",
+    "PeerDeadline",
     "PeerOutcome",
     "ReliableTransport",
     "SimulatedChannel",
@@ -50,6 +64,7 @@ __all__ = [
     "Transport",
     "TransportError",
     "TransportTimeout",
+    "classify_error",
     "run_hub",
     "run_hub_epoch",
     "run_pair",

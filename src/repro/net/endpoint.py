@@ -54,6 +54,7 @@ from repro.recon.session import (
     SessionBatch,
     advance_session,
     apply_churn,
+    degrade_exhausted,
 )
 from repro.wire import frames as wf
 from repro.wire.frames import ReplyUnit, WireError
@@ -279,24 +280,35 @@ def verify_ack_entries(payload: bytes, sessions):
     return wf.encode_verify_ack(flags), flags
 
 
-def stream_wire_stats(stream: FrameStream, tally: dict) -> dict:
+def stream_wire_stats(
+    stream: FrameStream, tally: dict, carry: dict | None = None
+) -> dict:
     """Measured wire traffic of one stream: exact framed bytes by category
     plus the transport totals (which additionally see ARQ and mux-envelope
-    overhead, if any)."""
+    overhead, if any).  ``retransmits``/``rto_ms`` surface the ARQ layer's
+    adaptive-retry state when the transport has one (DESIGN.md §13);
+    ``resume_frame_bytes`` is the resumption tally — handshake, replayed
+    frames, and any aborted partial round, all transport overhead, never
+    Formula-(1) bits.  ``carry`` adds the transport byte totals of streams
+    torn down by earlier resumptions so the counters stay cumulative."""
     t = stream.transport
+    carry = carry or {}
     return {
         "frames_out": stream.frames_out,
         "frames_in": stream.frames_in,
         "frame_bytes_out": stream.bytes_out,
         "frame_bytes_in": stream.bytes_in,
-        "transport_bytes_out": t.bytes_out,
-        "transport_bytes_in": t.bytes_in,
+        "transport_bytes_out": t.bytes_out + carry.get("transport_bytes_out", 0),
+        "transport_bytes_in": t.bytes_in + carry.get("transport_bytes_in", 0),
         "mux_bytes_out": stream.mux_bytes_out,
         "mux_bytes_in": stream.mux_bytes_in,
         "estimator_frame_bytes": tally["estimator"],
         "protocol_frame_bytes": tally["protocol"],
         "verify_frame_bytes": tally["verify"],
         "epoch_envelope_bytes": tally.get("epoch", 0),
+        "resume_frame_bytes": tally.get("resume", 0),
+        "retransmits": getattr(t, "retransmits", 0) + carry.get("retransmits", 0),
+        "rto_ms": getattr(t, "rto_ms", None),
     }
 
 
@@ -312,17 +324,23 @@ class _Endpoint:
         interpret: bool | None = None,
         channel: int | None = None,
         continuous: bool = False,
+        degrade: bool = False,
     ):
         self._stream = FrameStream(transport, channel=channel)
         self._interpret = interpret
         self._continuous = continuous
+        self._degrade = degrade
         self._sessions: list[ReconSession | None] = []
         self._est_queue: list[int] = []     # sids awaiting phase 0, in order
         self._batch: SessionBatch | None = None
-        self._tally = {"estimator": 0, "protocol": 0, "verify": 0, "epoch": 0}
+        self._tally = {
+            "estimator": 0, "protocol": 0, "verify": 0, "epoch": 0, "resume": 0,
+        }
         self._d_known: dict[int, int | None] = {}
         self._epoch = 0
         self._epoch_pending: dict[int, tuple] | None = None  # sid -> (set, dk)
+        self._carry: dict = {}              # totals of resumed-away streams
+        self.sessions_degraded = 0          # degradation-ladder escalations
         self.verified: list[bool] | None = None
 
     # -- submission ------------------------------------------------------
@@ -424,11 +442,20 @@ class _Endpoint:
     def sessions(self) -> list[ReconSession]:
         return self._sessions
 
+    def _degrade_after(self, rnd: int) -> None:
+        """Post-barrier degradation hook: escalate any session whose round
+        budget just ran out (both endpoints call this at the same round
+        with mirrored state, so their escalations agree; DESIGN.md §13)."""
+        if self._degrade:
+            self.sessions_degraded += len(
+                degrade_exhausted(self._ensure_batch(), rnd)
+            )
+
     @property
     def wire_stats(self) -> dict:
         """Measured wire traffic: exact framed bytes by category plus the
         transport totals (which additionally see ARQ overhead, if any)."""
-        return stream_wire_stats(self._stream, self._tally)
+        return stream_wire_stats(self._stream, self._tally, self._carry)
 
 
 class AliceEndpoint(_Endpoint):
@@ -443,11 +470,23 @@ class AliceEndpoint(_Endpoint):
         interpret: bool | None = None,
         channel: int | None = None,
         continuous: bool = False,
+        degrade: bool = False,
     ):
         super().__init__(transport, interpret=interpret, channel=channel,
-                         continuous=continuous)
+                         continuous=continuous, degrade=degrade)
         self._pending: dict[int, tuple] = {}   # sid -> (a, cfg)
         self._fold_diff = True
+        # resumption state (DESIGN.md §13): the last completed local round
+        # barrier, the rolling transcript digests at that barrier and the
+        # one before, the framed outcome bytes of the last barrier (replayed
+        # when the hub missed them), and the per-category tally marks the
+        # partial-round rollback restores on resume.
+        self._rnd = 0
+        self._digest = wf.transcript_digest0(0)
+        self._digest_prev = self._digest
+        self._last_outcome: bytes | None = None
+        self._marks = {"protocol": 0, "verify": 0}
+        self.resumes = 0
 
     def _pending_store(self, sid, elems, cfg):
         self._pending[sid] = (elems, cfg)
@@ -538,6 +577,7 @@ class AliceEndpoint(_Endpoint):
             sess = self._sessions[sid]
             plan = plans.get(sid) or plan_from_d_known(sess.plan.cfg, dk)
             advance_session(batch, sess, plan, new_a=elems, rnd0=0)
+        self._reset_rounds()
         return self._run_rounds()
 
     def run(self) -> dict[int, ReconcileResult]:
@@ -548,13 +588,21 @@ class AliceEndpoint(_Endpoint):
             )
         self._phase0()
         self._ensure_batch()
+        self._reset_rounds()
         return self._run_rounds()
+
+    def _reset_rounds(self) -> None:
+        """Re-arm the round loop and resumption state for a fresh epoch."""
+        self._rnd = 0
+        self._digest = wf.transcript_digest0(self._epoch)
+        self._digest_prev = self._digest
+        self._last_outcome = None
+        self._marks = {k: self._tally[k] for k in self._marks}
 
     def _run_rounds(self) -> dict[int, ReconcileResult]:
         batch = self._ensure_batch()
-        rnd = 0
         while True:
-            rnd += 1
+            rnd = self._rnd + 1
             plans = batch.plan_round(rnd)
             if not plans:
                 break
@@ -578,6 +626,7 @@ class AliceEndpoint(_Endpoint):
             for sid, (ok, units) in zip(live, entries):
                 row = per[sid]
                 st, plan = row.sess.state, row.sess.plan
+                rloc = rnd - row.sess.rnd0   # local protocol round
                 u_cnt = len(row.active)
                 n, t, m = plan.n, plan.t, plan.m
                 xors_b = np.zeros((u_cnt, n), dtype=np.uint32)
@@ -594,7 +643,7 @@ class AliceEndpoint(_Endpoint):
                 reply_bits, done = apply_round_outcomes(
                     st, row.active, ok, positions,
                     row.xors, xors_b, row.csum, csum_b,
-                    plan=plan, bin_seed=row.bin_seed, rnd=rnd,
+                    plan=plan, bin_seed=row.bin_seed, rnd=rloc,
                 )
                 # the measured ledger: sketch bits from what we framed,
                 # reply bits from what Bob's frame actually carried — must
@@ -607,17 +656,102 @@ class AliceEndpoint(_Endpoint):
                         f"accounted {u_cnt * (t * m + 1) + reply_bits}"
                     )
                 st.bytes_per_round.append((measured + 7) // 8)
-                st.rounds = rnd
+                st.rounds = rloc
                 done_lists.append(done)
 
             out_frame = wf.encode_round_outcome(rnd, done_lists)
-            self._stream.send(out_frame)
+            # commit the barrier BEFORE the send: local state is complete, so
+            # a transport failure from here on resumes by replaying this
+            # frame instead of re-running the round (DESIGN.md §13)
+            self._digest_prev = self._digest
+            self._digest = wf.fold_transcript(self._digest, rnd, out_frame)
+            self._last_outcome = out_frame
+            self._rnd = rnd
             self._tally["protocol"] += len(out_frame)
+            self._marks = {k: self._tally[k] for k in self._marks}
+            self._stream.send(out_frame)
+            self._degrade_after(rnd)
 
         self._verify()
         # lossy-channel tail: keep ACKing the peer's retransmits until quiet
         self._stream.transport.linger()
         return {s.sid: finalize_result(s.state, s.plan) for s in self._sessions}
+
+    def resume(self, transport: Transport) -> None:
+        """Reconnect to the hub over a fresh transport after a failure and
+        re-align at the last completed round barrier (DESIGN.md §13).
+
+        Rolls any partial-round frame bytes out of the protocol/verify
+        tallies into the resume tally (the aborted attempt re-runs, so the
+        Formula-(1) ledger must count it exactly once), then runs the
+        ``MSG_RESUME`` handshake: we announce our last completed barrier
+        and transcript digests; the hub answers with its mirror's barrier.
+        Equal barriers must agree on ``digest``; a hub exactly one barrier
+        behind (our last outcome frame died in flight) must agree on
+        ``digest_prev`` and gets that frame replayed — it applies it
+        idempotently from its retained round context.  Anything else means
+        divergence or an unresumable peer and raises.  Follow with
+        ``resume_run()`` to drive the protocol to completion.
+        """
+        if self._stream.channel is None:
+            raise RuntimeError("resume needs a hub channel-tagged stream")
+        if self._last_outcome is None and self._rnd:
+            raise RuntimeError("resume before any round barrier completed")
+        for cat, mark in self._marks.items():
+            spill = self._tally[cat] - mark
+            if spill:
+                self._tally[cat] = mark
+                self._tally["resume"] += spill
+        old = self._stream
+        t_old = old.transport
+        self._carry = {
+            "transport_bytes_out": t_old.bytes_out
+            + self._carry.get("transport_bytes_out", 0),
+            "transport_bytes_in": t_old.bytes_in
+            + self._carry.get("transport_bytes_in", 0),
+            "retransmits": getattr(t_old, "retransmits", 0)
+            + self._carry.get("retransmits", 0),
+        }
+        stream = FrameStream(transport, channel=old.channel)
+        stream.frames_out, stream.frames_in = old.frames_out, old.frames_in
+        stream.bytes_out, stream.bytes_in = old.bytes_out, old.bytes_in
+        stream.mux_bytes_out = old.mux_bytes_out
+        stream.mux_bytes_in = old.mux_bytes_in
+        self._stream = stream
+
+        f = wf.encode_resume(
+            stream.channel, self._epoch, self._rnd,
+            self._digest, self._digest_prev,
+        )
+        self._stream.send(f)
+        payload = self._expect(wf.MSG_RESUME)
+        self._tally["resume"] += len(f) + _framed_len(payload)
+        ch, epoch, hub_rnd, hub_digest, _ = wf.decode_resume(payload)
+        if ch != stream.channel or epoch != self._epoch:
+            raise WireError(
+                f"resume answer for channel {ch} epoch {epoch}, "
+                f"expected channel {stream.channel} epoch {self._epoch}"
+            )
+        if hub_rnd == self._rnd:
+            if hub_digest != self._digest:
+                raise WireError("resume transcript diverged at equal barriers")
+        elif hub_rnd == self._rnd - 1 and self._last_outcome is not None:
+            if hub_digest != self._digest_prev:
+                raise WireError("resume transcript diverged one barrier back")
+            # the hub missed our last outcome barrier: replay it verbatim
+            self._stream.send(self._last_outcome)
+            self._tally["resume"] += len(self._last_outcome)
+        else:
+            raise WireError(
+                f"unresumable: hub barrier {hub_rnd}, ours {self._rnd}"
+            )
+        self.resumes += 1
+
+    def resume_run(self) -> dict[int, ReconcileResult]:
+        """Continue a resumed protocol from the re-aligned barrier to
+        completion — the round loop picks up at ``self._rnd + 1`` over the
+        intact session states and cohort stores."""
+        return self._run_rounds()
 
     def _phase0(self):
         if not self._est_queue:
@@ -672,9 +806,10 @@ class BobEndpoint(_Endpoint):
         interpret: bool | None = None,
         channel: int | None = None,
         continuous: bool = False,
+        degrade: bool = False,
     ):
         super().__init__(transport, interpret=interpret, channel=channel,
-                         continuous=continuous)
+                         continuous=continuous, degrade=degrade)
         self._pending: dict[int, tuple] = {}   # sid -> (b, cfg)
         self._rnd = 0                          # rounds whose sketches arrived
         self._ctx = None                       # current round's (live, per-sid)
@@ -797,13 +932,15 @@ class BobEndpoint(_Endpoint):
         self._tally["protocol"] += _framed_len(payload)
         for sid, done in zip(live, done_lists):
             sess, active, ok, _ = ctx[sid]
+            rloc = rnd - sess.rnd0       # local protocol round
             for slot, u in enumerate(active):
                 if not ok[slot]:
                     # our decode failed: mirror Alice's 3-way split verbatim
-                    queue_split(sess.state, u, rnd, sess.plan.cfg.seed)
+                    queue_split(sess.state, u, rloc, sess.plan.cfg.seed)
                 elif done[slot]:
                     u.done = True
-            sess.state.rounds = rnd
+            sess.state.rounds = rloc
+        self._degrade_after(rnd)
 
     def _handle_verify(self, payload: bytes) -> None:
         # Alice's A △ D̂ must sum to our B when she really learned A △ B

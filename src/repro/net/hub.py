@@ -61,6 +61,7 @@ from repro.recon.session import (
     SessionBatch,
     advance_session,
     apply_churn,
+    degrade_exhausted,
 )
 from repro.kernels.platform import enable_persistent_cache, retrace_count
 from repro.wire import frames as wf
@@ -77,6 +78,7 @@ from .endpoint import (
     stream_wire_stats,
     verify_ack_entries,
 )
+from .resilience import PeerDeadline, classify_error
 from .transport import FrameStream, Transport, TransportError, TransportTimeout
 
 _EMPTY = np.zeros(0, dtype=np.uint32)
@@ -93,6 +95,10 @@ class PeerOutcome:
     error: BaseException | None         # eviction cause (failed peers)
     sessions: list[ReconSession]        # the hub's mirrored session states
     wire_stats: dict
+    # typed failure taxonomy (DESIGN.md §13): "deadline" / "wire" /
+    # "transport" / "error" for failed peers; "resumed" / "degraded" for ok
+    # peers that took the recovery paths; None for a clean untouched run
+    error_kind: str | None = None
 
 
 class _Peer:
@@ -109,13 +115,28 @@ class _Peer:
         self.retired = False
         self.verified: list[bool] | None = None
         self.error: BaseException | None = None
-        self.tally = {"estimator": 0, "protocol": 0, "verify": 0, "epoch": 0}
+        self.tally = {
+            "estimator": 0, "protocol": 0, "verify": 0, "epoch": 0, "resume": 0,
+        }
         self.d_known: list[int | None] = []     # per local sid, epoch default
         self.epoch_pending: dict[int, tuple] | None = None  # sid -> (set_b, dk)
         self.epoch_plans: dict[int, object] = {}
+        # -- resumption record (DESIGN.md §13), bounded: one retained round
+        # context + two 64-bit digests + the frame-numbering offset
+        self.rnd0 = 0                   # global round of this peer's admission
+        self.rounds_done = 0            # local barriers applied (peer's clock)
+        self.digest = wf.transcript_digest0(0)
+        self.digest_prev = self.digest
+        self.inflight_ctx: tuple | None = None  # (live_g, ctx) awaiting outcome
+        self.suspended = False
+        self.suspend_at = 0.0           # monotonic expiry of the resume window
+        self.suspend_err: BaseException | None = None
+        self.resumes = 0
+        self.marks = {"protocol": 0, "verify": 0}   # tallies at last barrier
+        self.carry: dict = {}           # totals of resumed-away transports
 
     def wire_stats(self) -> dict:
-        return stream_wire_stats(self.stream, self.tally)
+        return stream_wire_stats(self.stream, self.tally, self.carry)
 
 
 class HubEndpoint:
@@ -145,12 +166,25 @@ class HubEndpoint:
         recv_deadline: float = 60.0,
         on_barrier=None,
         continuous: bool = False,
+        resume_window: float = 0.0,
+        degrade: bool = False,
     ):
         enable_persistent_cache()
         self._interpret = interpret
         self._deadline = recv_deadline
         self.on_barrier = on_barrier
         self._continuous = continuous
+        # resume_window > 0 turns mid-round transport failures of admitted
+        # peers into *suspensions* (DESIGN.md §13): the peer's sessions and
+        # store rows stay resident and ``resume_peer`` may re-attach it for
+        # that many seconds before the suspension hardens into an eviction.
+        # 0 keeps the historical evict-immediately behavior.
+        self._resume_window = resume_window
+        # degrade=True escalates decode-budget-exhausted sessions (doubled
+        # d̂ re-plan, counted in ``sessions_degraded``) instead of letting
+        # them run out the round budget into ``failed=True``; peers must
+        # run matching ``degrade=True`` endpoints.
+        self._degrade = degrade
         self._lock = threading.Lock()
         self._peers: dict[int, _Peer] = {}
         self._order: list[int] = []         # admission order of channels
@@ -164,6 +198,7 @@ class HubEndpoint:
         self._stats: dict = {}
         self._epoch = 0
         self._epoch_open = False
+        self._rnd = 0               # current global round (serve loop clock)
 
     # -- registration ----------------------------------------------------
 
@@ -206,6 +241,7 @@ class HubEndpoint:
         retire its channel as stale, and close its transport so a blocked
         peer fails fast instead of hanging."""
         peer.retired = True
+        peer.suspended = False
         if isinstance(err, TransportError):
             peer.error = err
         else:
@@ -213,12 +249,206 @@ class HubEndpoint:
             peer.error.__cause__ = err
         for sess in peer.sessions:
             sess.failed = True
+            sess.suspended = False
         self.stale_channels.add(peer.channel)
         self._stats["peers_failed"] = self._stats.get("peers_failed", 0) + 1
+        kind = classify_error(peer.error)
+        by_kind = self._stats.setdefault("peers_failed_by_kind", {})
+        by_kind[kind] = by_kind.get(kind, 0) + 1
         try:
             peer.transport.close()
         except Exception:
             pass
+
+    def _fail(self, peer: _Peer, err: BaseException, *, resumable: bool) -> None:
+        """Route one peer failure: a transport-level failure of an admitted,
+        mid-round peer suspends (resumable, DESIGN.md §13) when a resume
+        window is configured; protocol violations (``WireError``) and
+        pre-admission failures always evict permanently."""
+        if (
+            resumable
+            and self._resume_window > 0.0
+            and peer.admitted
+            and isinstance(err, TransportError)
+        ):
+            self._suspend(peer, err)
+        else:
+            self._evict(peer, err)
+
+    def _suspend(self, peer: _Peer, err: BaseException) -> None:
+        """Park one peer in the resumable state: its sessions stop planning
+        (``suspended``, NOT ``failed`` — cohort-store membership survives,
+        so resumption rebuilds nothing), its channel stays valid, and the
+        recovery record (``rounds_done``/``digest``/``inflight_ctx``) waits
+        for ``resume_peer`` until the resume window expires."""
+        peer.retired = True
+        peer.suspended = True
+        peer.suspend_err = err
+        peer.suspend_at = time.monotonic() + self._resume_window
+        for sess in peer.sessions:
+            sess.suspended = True
+        try:
+            peer.transport.close()
+        except Exception:
+            pass
+
+    def _expire_overdue(self) -> None:
+        """Harden every suspension whose resume window has lapsed into a
+        permanent eviction carrying the original failure as its cause."""
+        now = time.monotonic()
+        for peer in self._peers.values():
+            if not peer.suspended or now < peer.suspend_at:
+                continue
+            cause = peer.suspend_err
+            err = type(cause)(
+                f"{peer.label}: resume window ({self._resume_window}s) "
+                "expired"
+            ) if isinstance(cause, TransportError) else TransportError(
+                f"{peer.label}: resume window expired"
+            )
+            err.__cause__ = cause
+            self._evict(peer, err)
+
+    # -- resumption (DESIGN.md §13) ----------------------------------------
+
+    def resume_peer(
+        self,
+        channel: int,
+        transport: Transport,
+        *,
+        timeout: float | None = None,
+    ) -> None:
+        """Re-attach a suspended peer over a fresh transport.
+
+        Call while ``serve`` is between barriers (the ``on_barrier`` hook is
+        the deterministic spot) with the hub side of the peer's replacement
+        connection; the peer drives ``AliceEndpoint.resume`` concurrently.
+        Runs the ``MSG_RESUME`` handshake against the peer's recovery
+        record: equal barriers must agree on ``digest``; a peer exactly one
+        barrier ahead (her outcome frame died in flight) must agree on
+        ``digest_prev`` and replays that one frame, applied idempotently
+        from the retained round context and ledgered as
+        ``resume_replay_bytes`` (transport overhead — never Formula-(1)
+        bits).  The peer's sessions then re-bind at the current global
+        round via an ``rnd0`` shift — no re-admission, no store rebuild —
+        and the next barrier serves her like any live peer.  A failed
+        handshake (divergent transcript, wrong epoch, dead transport)
+        hardens the suspension into a permanent eviction and re-raises.
+        """
+        peer = self._peers.get(channel)
+        if peer is None:
+            raise KeyError(f"unknown channel {channel}")
+        with self._lock:
+            if not peer.suspended:
+                raise RuntimeError(
+                    f"channel {channel} is not suspended (nothing to resume)"
+                )
+        old = peer.stream
+        t_old = old.transport
+        peer.carry = {
+            "transport_bytes_out": t_old.bytes_out
+            + peer.carry.get("transport_bytes_out", 0),
+            "transport_bytes_in": t_old.bytes_in
+            + peer.carry.get("transport_bytes_in", 0),
+            "retransmits": getattr(t_old, "retransmits", 0)
+            + peer.carry.get("retransmits", 0),
+        }
+        stream = FrameStream(transport, channel=channel)
+        stream.frames_out, stream.frames_in = old.frames_out, old.frames_in
+        stream.bytes_out, stream.bytes_in = old.bytes_out, old.bytes_in
+        stream.mux_bytes_out = old.mux_bytes_out
+        stream.mux_bytes_in = old.mux_bytes_in
+        peer.transport = transport
+        peer.stream = stream
+        wait = self._deadline if timeout is None else timeout
+        try:
+            msg_type, payload = stream.recv(timeout=wait)
+            if msg_type != wf.MSG_RESUME:
+                raise WireError(
+                    f"expected message 0x{wf.MSG_RESUME:02x}, "
+                    f"got 0x{msg_type:02x}"
+                )
+            ch, epoch, a_rnd, a_digest, a_digest_prev = wf.decode_resume(
+                payload
+            )
+            if ch != channel or epoch != self._epoch:
+                raise WireError(
+                    f"resume for channel {ch} epoch {epoch}, expected "
+                    f"channel {channel} epoch {self._epoch}"
+                )
+            replay = False
+            if a_rnd == peer.rounds_done:
+                if a_digest != peer.digest:
+                    raise WireError(
+                        "resume transcript diverged at equal barriers"
+                    )
+                # any in-flight context is from an aborted attempt that
+                # will re-run in full — drop it
+                peer.inflight_ctx = None
+            elif a_rnd == peer.rounds_done + 1 and peer.inflight_ctx:
+                if a_digest_prev != peer.digest:
+                    raise WireError(
+                        "resume transcript diverged one barrier back"
+                    )
+                replay = True
+            else:
+                raise WireError(
+                    f"unresumable: peer barrier {a_rnd}, "
+                    f"ours {peer.rounds_done}"
+                )
+            reply = wf.encode_resume(
+                channel, self._epoch, peer.rounds_done,
+                peer.digest, peer.digest_prev,
+            )
+            stream.send(reply)
+            peer.tally["resume"] += framed_len(len(payload)) + len(reply)
+            if replay:
+                mt, opayload = stream.recv(timeout=wait)
+                if mt != wf.MSG_ROUND_OUTCOME:
+                    raise WireError(
+                        f"expected replayed message "
+                        f"0x{wf.MSG_ROUND_OUTCOME:02x}, got 0x{mt:02x}"
+                    )
+                live_g, ctx = peer.inflight_ctx
+                glob = peer.rnd0 + peer.rounds_done + 1
+                self._apply_outcome(
+                    peer, glob, opayload, live_g, ctx, replay=True
+                )
+                if peer.error is not None:
+                    raise WireError(
+                        "replayed outcome frame rejected"
+                    ) from peer.error
+            else:
+                # the aborted partial attempt re-runs: its frame bytes move
+                # to the resume tally so Formula-(1) categories count the
+                # re-run exactly once (mirrors AliceEndpoint.resume)
+                for k, mark in peer.marks.items():
+                    spill = peer.tally[k] - mark
+                    if spill:
+                        peer.tally[k] = mark
+                        peer.tally["resume"] += spill
+        except (TransportError, WireError) as e:
+            if peer.error is None:      # replay rejection already evicted
+                self._evict(peer, e)
+            raise
+        with self._lock:
+            # re-bind the peer's local round clock to the hub's: her next
+            # local round (rounds_done + 1) must land on the next global
+            # round, so every session's rnd0 shifts by the same delta
+            # (escalated sessions keep their relative offsets)
+            new_rnd0 = self._rnd - peer.rounds_done
+            delta = new_rnd0 - peer.rnd0
+            for sess in peer.sessions:
+                sess.rnd0 += delta
+                sess.suspended = False
+            peer.rnd0 = new_rnd0
+            peer.suspended = False
+            peer.retired = False
+            peer.suspend_err = None
+            peer.resumes += 1
+            self._stats["peers_resumed"] = (
+                self._stats.get("peers_resumed", 0) + 1
+            )
 
     def _finish_peer(self, peer: _Peer, payload: bytes) -> None:
         """The final verification exchange (peer has no live work left)."""
@@ -227,9 +457,15 @@ class HubEndpoint:
             peer.tally["verify"] += framed_len(len(payload))
             peer.stream.send(ack)
             peer.tally["verify"] += len(ack)
-        except (TransportError, WireError) as e:
+        except WireError as e:
             self._evict(peer, e)
             return
+        except TransportError as e:
+            # ack send died: the exchange is re-runnable after a resume
+            # (the peer re-sends MSG_VERIFY; verify_ack_entries is pure)
+            self._fail(peer, e, resumable=True)
+            return
+        peer.marks = {k: peer.tally[k] for k in peer.marks}
         peer.verified = flags
         peer.retired = True
         if not self._continuous:
@@ -251,6 +487,7 @@ class HubEndpoint:
         This one loop carries the straggler semantics of both the admission
         phase and the round barriers (DESIGN.md §10).
         """
+        resumable = phase == "round-barrier"
         deadline_at = time.monotonic() + self._deadline
         pending = dict(handlers)
         while pending:
@@ -262,7 +499,7 @@ class HubEndpoint:
                 except TransportTimeout:
                     continue
                 except (TransportError, WireError) as e:
-                    self._evict(peer, e)
+                    self._fail(peer, e, resumable=resumable)
                     del pending[ch]
                     continue
                 progressed = True
@@ -270,14 +507,14 @@ class HubEndpoint:
                     if pending[ch](peer, msg_type, payload):
                         del pending[ch]
                 except (TransportError, WireError) as e:
-                    self._evict(peer, e)
+                    self._fail(peer, e, resumable=resumable)
                     del pending[ch]
             if pending and not progressed and time.monotonic() >= deadline_at:
                 for ch in pending:
-                    self._evict(self._peers[ch], TransportError(
+                    self._fail(self._peers[ch], PeerDeadline(
                         f"{self._peers[ch].label}: no frame within the "
                         f"{self._deadline}s {phase} deadline"
-                    ))
+                    ), resumable=resumable)
                 break
 
     # -- admission (phase 0) ---------------------------------------------
@@ -358,6 +595,15 @@ class HubEndpoint:
                 peer.admitted = True
                 if peer.pending:
                     self._joiners.append(ch)
+            if not peer.sessions:
+                # first admission arms the resumption record: the frame
+                # numbering base and a transcript opened at this epoch
+                peer.rnd0 = rnd
+                peer.rounds_done = 0
+                peer.digest = wf.transcript_digest0(self._epoch)
+                peer.digest_prev = peer.digest
+                peer.inflight_ctx = None
+                peer.marks = {k: peer.tally[k] for k in peer.marks}
             peer.sessions.extend(new)
             self._batch.add_sessions(new)   # appends to self._sessions
         return True
@@ -472,6 +718,14 @@ class HubEndpoint:
                 )
                 advance_session(self._batch, sess, plan, new_b=set_b, rnd0=0)
             peer.epoch_plans = {}
+            # re-arm the resumption record for the fresh epoch, mirroring
+            # the peer endpoint's _reset_rounds (rnd0 back to 0)
+            peer.rnd0 = 0
+            peer.rounds_done = 0
+            peer.digest = wf.transcript_digest0(self._epoch)
+            peer.digest_prev = peer.digest
+            peer.inflight_ctx = None
+            peer.marks = {k: peer.tally[k] for k in peer.marks}
 
     # -- the round barrier ------------------------------------------------
 
@@ -515,29 +769,48 @@ class HubEndpoint:
             "h2d_round_bytes": 0,
             "peers": self._stats.get("peers", 0),
             "peers_failed": self._stats.get("peers_failed", 0),
+            "peers_failed_by_kind": self._stats.get("peers_failed_by_kind", {}),
+            "peers_resumed": self._stats.get("peers_resumed", 0),
+            "resume_replay_bytes": self._stats.get("resume_replay_bytes", 0),
+            "sessions_degraded": self._stats.get("sessions_degraded", 0),
         }
         prior = self._batch.counters()
         retrace_mark = retrace_count()
-        rnd = 0
+        rnd = self._rnd = 0
         hook_fired_at = -1
         if self._epoch_open:
             self._epoch_handshake()
         self._admit(rnd)
         while True:
+            self._expire_overdue()
             active = [
                 self._peers[ch] for ch in self._order
                 if not self._peers[ch].retired
             ]
             if not active:
+                suspended = any(
+                    p.suspended for p in self._peers.values()
+                )
                 # fire the barrier hook at most once per round number, even
-                # when the round-end firing below already covered this rnd
-                if self.on_barrier is not None and hook_fired_at != rnd:
+                # when the round-end firing below already covered this rnd —
+                # UNLESS suspended peers are waiting, in which case it
+                # re-fires each wait slice so a driver can resume them
+                if self.on_barrier is not None and (
+                    hook_fired_at != rnd or suspended
+                ):
                     hook_fired_at = rnd
                     self.on_barrier(rnd)
-                if not self._admit(rnd):
-                    break
-                continue
-            rnd += 1
+                if self._admit(rnd):
+                    continue
+                if any(
+                    not self._peers[ch].retired for ch in self._order
+                ):
+                    continue                # a resume re-activated a peer
+                if any(p.suspended for p in self._peers.values()):
+                    time.sleep(_POLL_S)     # wait out the resume window
+                    continue
+                break
+            rnd = self._rnd = rnd + 1
 
             # barrier phase 1: live peers owe ROUND_SKETCHES, finished
             # peers owe VERIFY — collect both in one round-robin sweep
@@ -579,6 +852,14 @@ class HubEndpoint:
                 self._apply_outcome(self._peers[ch], rnd, payload,
                                     *round_ctx[ch])
 
+            if self._degrade:
+                # graceful degradation (DESIGN.md §13): any session one
+                # round from exhausting its budget with work left re-plans
+                # at a doubled d̂; both sides run this at the same barrier
+                st["sessions_degraded"] += len(
+                    degrade_exhausted(self._batch, rnd)
+                )
+
             if self.on_barrier is not None:
                 hook_fired_at = rnd
                 self.on_barrier(rnd)
@@ -613,9 +894,23 @@ class HubEndpoint:
                 error=self._peers[ch].error,
                 sessions=self._peers[ch].sessions,
                 wire_stats=self._peers[ch].wire_stats(),
+                error_kind=self._peer_kind(self._peers[ch]),
             )
             for ch in self._order
         }
+
+    def _peer_kind(self, peer: _Peer) -> str | None:
+        """The ``PeerOutcome.error_kind`` taxonomy value for one peer:
+        failures classify by root cause; successful peers report which
+        recovery path they took (``resumed`` wins over ``degraded`` when
+        both fired), or None for a clean run."""
+        if peer.error is not None:
+            return classify_error(peer.error)
+        if peer.resumes:
+            return "resumed"
+        if any(s.escalations for s in peer.sessions):
+            return "degraded"
+        return None
 
     @property
     def stats(self) -> dict:
@@ -641,7 +936,7 @@ class HubEndpoint:
                 got_rnd, blocks = wf.decode_round_sketches(
                     payload, round_schema(per, live_g)
                 )
-                local = rnd - (peer.sessions[0].rnd0 if peer.sessions else 0)
+                local = rnd - peer.rnd0
                 if got_rnd != local:
                     raise WireError(
                         f"sketch frame for round {got_rnd}, expected {local}"
@@ -661,29 +956,39 @@ class HubEndpoint:
         round_ctx: dict[int, tuple] = {}
         for ch, live_g in peer_live.items():
             peer = self._peers[ch]
-            local = rnd - (peer.sessions[0].rnd0 if peer.sessions else 0)
+            local = rnd - peer.rnd0
             reply = wf.encode_round_reply(
                 local, [results[g] for g in live_g], round_schema(per, live_g)
             )
             try:
                 peer.stream.send(reply)
             except TransportError as e:
-                self._evict(peer, e)
+                self._fail(peer, e, resumable=True)
                 continue
             peer.tally["protocol"] += len(reply)
+            # the reply is out: the peer may now complete the round on her
+            # side, so retain the outcome context for an idempotent replay
+            # if she crashes before her outcome frame lands (DESIGN.md §13)
+            peer.inflight_ctx = (live_g, ctx)
             round_ctx[ch] = (live_g, ctx)
         return round_ctx
 
     def _apply_outcome(self, peer: _Peer, rnd: int, payload: bytes,
-                       live_g: list[int], ctx: dict[int, tuple]) -> None:
+                       live_g: list[int], ctx: dict[int, tuple],
+                       *, replay: bool = False) -> None:
         """Mirror one peer's unit-queue evolution from her outcome frame:
         our decode failures drive the same deterministic 3-way split, her
-        flags settle the checksums we cannot compute (we never see A)."""
+        flags settle the checksums we cannot compute (we never see A).
+        Applying the frame commits the peer's round barrier: the transcript
+        digest folds the exact framed bytes she folded, the recovery record
+        advances, and the tally marks snapshot — the state ``resume_peer``
+        validates against.  ``replay=True`` routes the frame's bytes to the
+        resume tally (transport overhead, never Formula-(1) bits)."""
         try:
             got_rnd, done_lists = wf.decode_round_outcome(
                 payload, [len(ctx[g][1]) for g in live_g]
             )
-            local = rnd - (peer.sessions[0].rnd0 if peer.sessions else 0)
+            local = rnd - peer.rnd0
             if got_rnd != local:
                 raise WireError(
                     f"outcome frame for round {got_rnd}, expected {local}"
@@ -691,16 +996,32 @@ class HubEndpoint:
         except WireError as e:
             self._evict(peer, e)
             return
-        peer.tally["protocol"] += framed_len(len(payload))
+        if replay:
+            peer.tally["resume"] += framed_len(len(payload))
+            self._stats["resume_replay_bytes"] = (
+                self._stats.get("resume_replay_bytes", 0)
+                + framed_len(len(payload))
+            )
+        else:
+            peer.tally["protocol"] += framed_len(len(payload))
         for g, done in zip(live_g, done_lists):
             sess, active, ok, _ = ctx[g]
-            local = rnd - sess.rnd0
+            sloc = rnd - sess.rnd0
             for slot, u in enumerate(active):
                 if not ok[slot]:
-                    queue_split(sess.state, u, local, sess.plan.cfg.seed)
+                    queue_split(sess.state, u, sloc, sess.plan.cfg.seed)
                 elif done[slot]:
                     u.done = True
-            sess.state.rounds = local
+            sess.state.rounds = sloc
+        # barrier committed: fold the same bytes the peer folded (her frame
+        # numbering is our local round) and advance the recovery record
+        peer.digest_prev = peer.digest
+        peer.digest = wf.fold_transcript(
+            peer.digest, local, wf.frame(wf.MSG_ROUND_OUTCOME, payload)
+        )
+        peer.rounds_done = local
+        peer.inflight_ctx = None
+        peer.marks = {k: peer.tally[k] for k in peer.marks}
 
 
 def _drive_hub(

@@ -64,13 +64,14 @@ class Transport:
         on timeout or closed-and-drained peer."""
         raise NotImplementedError
 
-    def linger(self) -> None:
+    def linger(self, budget: float | None = None) -> None:
         """Service the channel briefly after the last expected message.
 
         No-op for inherently reliable transports.  An ARQ layer overrides
         this to keep acknowledging retransmitted tails (the peer's final
         datagram whose ack was lost) until the channel goes quiet —
         otherwise the peer's last reliable ``send`` can never complete.
+        ``budget`` caps the whole linger window regardless of traffic.
         """
 
     def close(self) -> None:
@@ -192,6 +193,7 @@ class SimulatedChannel(Transport):
         self._rng = np.random.default_rng(seed)
         self._rx: deque[tuple[float, bytes]] = deque()  # (ready_time, data)
         self._cond = threading.Condition()
+        self._closed = False
         self.peer: SimulatedChannel | None = None
         self.dropped = 0
 
@@ -205,12 +207,14 @@ class SimulatedChannel(Transport):
         return one, two
 
     def send(self, data: bytes) -> None:
+        peer = self.peer
+        if self._closed or peer is None or peer._closed:
+            raise TransportError("send on closed simulated channel")
         self.bytes_out += len(data)
         if self._rng.random() < self._loss:
             self.dropped += 1
             return
         ready = time.monotonic() + self._latency
-        peer = self.peer
         with peer._cond:
             peer._rx.append((ready, bytes(data)))
             peer._cond.notify_all()
@@ -224,6 +228,12 @@ class SimulatedChannel(Transport):
                     _, data = self._rx.popleft()
                     self.bytes_in += len(data)
                     return data
+                # either end closing ends the conversation; datagrams already
+                # in flight (scheduled but not ready) still deliver first
+                if self._closed or (
+                    self.peer is not None and self.peer._closed and not self._rx
+                ):
+                    raise TransportError("recv on closed simulated channel")
                 wait = self._rx[0][0] - now if self._rx else None
                 if deadline is not None:
                     remain = deadline - now
@@ -231,6 +241,14 @@ class SimulatedChannel(Transport):
                         raise TransportTimeout("simulated channel recv timeout")
                     wait = remain if wait is None else min(wait, remain)
                 self._cond.wait(wait)
+
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        if self.peer is not None:
+            with self.peer._cond:       # wake a peer blocked in recv
+                self.peer._cond.notify_all()
 
 
 _DATA, _ACK = 0x00, 0x01
@@ -243,6 +261,16 @@ class ReliableTransport(Transport):
     ``send`` retransmits until the matching ACK arrives (handling any DATA
     that lands in between); ``recv`` ACKs every DATA datagram and
     suppresses duplicates by sequence number.
+
+    The retransmit timer is adaptive (DESIGN.md §13): each attempt waits
+    the current RTO (initially ``timeout``), backing off by ``backoff``
+    per retransmission up to ``rto_max`` with seeded ±``jitter``
+    randomization so synchronized peers decorrelate their retry storms; a
+    delivered ACK resets the timer.  ``max_retries`` caps attempts per
+    datagram.  A non-timeout channel failure (closed pipe) aborts the send
+    immediately instead of burning the attempt budget.  ``retransmits``
+    counts recoveries and ``rto_ms`` exposes the live timer — both
+    surfaced through the endpoint ``wire_stats()``.
     """
 
     def __init__(
@@ -251,15 +279,36 @@ class ReliableTransport(Transport):
         *,
         timeout: float = 0.05,
         max_retries: int = 200,
+        rto_max: float = 0.4,
+        backoff: float = 2.0,
+        jitter: float = 0.1,
+        seed: int = 0,
     ) -> None:
         super().__init__()
         self._ch = channel
-        self._timeout = timeout
-        self._max_retries = max_retries
+        self._timeout = float(timeout)
+        self._max_retries = int(max_retries)
+        self._rto_max = max(float(rto_max), float(timeout))
+        self._backoff = float(backoff)
+        self._jitter = float(jitter)
+        self._rng = np.random.default_rng(seed)
+        self._rto = self._timeout
         self._tx_seq = 0
         self._rx_next = 0
         self._ready: deque[bytes] = deque()
         self.retransmits = 0
+
+    @property
+    def rto_ms(self) -> float:
+        """Current retransmit timeout in milliseconds (pre-jitter)."""
+        return self._rto * 1e3
+
+    def _attempt_wait(self) -> float:
+        """One attempt's ACK wait: the current RTO with ±jitter applied."""
+        if self._jitter <= 0.0:
+            return self._rto
+        spread = self._jitter * (2.0 * float(self._rng.random()) - 1.0)
+        return self._rto * (1.0 + spread)
 
     def _handle(self, dgram: bytes, want_ack: int | None) -> bool:
         """Process one inbound datagram; True iff it ACKs ``want_ack``."""
@@ -286,17 +335,19 @@ class ReliableTransport(Transport):
             self._ch.send(dgram)
             if attempt:
                 self.retransmits += 1
-            deadline = time.monotonic() + self._timeout
+            deadline = time.monotonic() + self._attempt_wait()
             while True:
                 remain = deadline - time.monotonic()
                 if remain <= 0:
                     break
                 try:
                     inbound = self._ch.recv(timeout=remain)
-                except TransportError:
+                except TransportTimeout:
                     break
                 if self._handle(inbound, want_ack=seq):
+                    self._rto = self._timeout      # delivery: reset the timer
                     return
+            self._rto = min(self._rto_max, self._rto * self._backoff)
         raise TransportError(f"no ACK for seq {seq} after {self._max_retries} tries")
 
     def recv(self, timeout: float | None = None) -> bytes:
@@ -310,13 +361,26 @@ class ReliableTransport(Transport):
         self.bytes_in += len(data)
         return data
 
-    def linger(self) -> None:
+    def linger(self, budget: float | None = None) -> None:
         """Re-ACK retransmitted tails until the channel stays quiet for a
-        few timeout windows (the two-army tail: our ACK of the peer's last
-        datagram may have been lost while we no longer expect data)."""
+        full backed-off retransmit window (the two-army tail: our ACK of
+        the peer's last datagram may have been lost while we no longer
+        expect data).  The quiet window covers the peer's maximum RTO plus
+        jitter, else a backed-off peer would retransmit into a dead
+        channel; ``budget`` caps the whole linger regardless of traffic so
+        a babbling peer cannot hold close open forever."""
+        quiet = self._rto_max * (1.0 + self._jitter) + 4 * self._timeout
+        if budget is None:
+            budget = 16 * quiet
+        deadline = time.monotonic() + budget
         while True:
+            remain = deadline - time.monotonic()
+            if remain <= 0:
+                return
             try:
-                self._handle(self._ch.recv(timeout=4 * self._timeout), want_ack=None)
+                self._handle(
+                    self._ch.recv(timeout=min(quiet, remain)), want_ack=None
+                )
             except TransportError:
                 return
 

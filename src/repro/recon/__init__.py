@@ -25,6 +25,8 @@ from .session import (
     StoreCapacityError,
     advance_session,
     apply_churn,
+    degrade_exhausted,
+    escalate_session,
 )
 
 __all__ = [
@@ -37,6 +39,8 @@ __all__ = [
     "StoreCapacityError",
     "advance_session",
     "apply_churn",
+    "degrade_exhausted",
+    "escalate_session",
     "encode_side",
     "execute_round",
     "phase0_numerators",

@@ -60,6 +60,7 @@ from .session import (
     SessionBatch,
     advance_session,
     apply_churn,
+    escalate_session,
 )
 
 _EMPTY = np.zeros(0, dtype=np.uint32)
@@ -139,10 +140,21 @@ class ReconcileServer:
     (interpreter off-TPU, compiled on TPU).
     """
 
-    def __init__(self, *, interpret: bool | None = None, continuous: bool = False):
+    def __init__(
+        self,
+        *,
+        interpret: bool | None = None,
+        continuous: bool = False,
+        degrade: bool = False,
+    ):
         enable_persistent_cache()
         self._interpret = interpret
         self._continuous = continuous
+        # degrade=True: a session that exhausts its round budget with work
+        # left re-plans at a doubled d̂ (graceful degradation, DESIGN.md §13)
+        # instead of finishing with success=False; counted per escalation
+        # in stats["sessions_degraded"].
+        self._degrade = degrade
         self._sessions: list[ReconSession | None] = []
         self._pending: dict[int, tuple] = {}   # sid -> (a, b, cfg), d unknown
         self._d_known: dict[int, int | None] = {}
@@ -252,31 +264,44 @@ class ReconcileServer:
             "legacy_h2d_round_bytes": 0,
             "kernel_launches": 0,
             "legacy_kernel_launches": 0,
+            "sessions_degraded": 0,
             "device_s": 0.0,
         }
         by_code = batch.sessions_by_code()
-        # prime the pipeline: every cohort's round 1, dispatched before the
-        # first readback (JAX async dispatch overlaps their device work)
-        inflight: deque = deque()
-        for key in sorted(by_code):
-            plan = batch.plan_cohort(key, by_code[key], 1)
-            if plan is not None:
-                inflight.append((key, 1, plan, self._dispatch(plan)))
-        while inflight:
-            key, rnd, plan, fut = inflight.popleft()
-            t0 = time.perf_counter()
-            out = jax.device_get(fut)
-            st["device_s"] += time.perf_counter() - t0
-            self._apply_cohort(plan, out, rnd)
-            st["rounds"] = max(st["rounds"], rnd)
-            st["cohort_rounds"] += 1
-            st["h2d_round_bytes"] += plan.h2d_bytes
-            st["legacy_h2d_round_bytes"] += plan.legacy_h2d_bytes
-            st["kernel_launches"] += 2       # fused bin launch + sketch matmul
-            st["legacy_kernel_launches"] += 4  # 2x bin + 2x sketch, per side
-            nxt = batch.plan_cohort(key, by_code[key], rnd + 1)
-            if nxt is not None:
-                inflight.append((key, rnd + 1, nxt, self._dispatch(nxt)))
+        while True:
+            # prime the pipeline: every cohort's round 1, dispatched before
+            # the first readback (JAX async dispatch overlaps device work)
+            inflight: deque = deque()
+            for key in sorted(by_code):
+                plan = batch.plan_cohort(key, by_code[key], 1)
+                if plan is not None:
+                    inflight.append((key, 1, plan, self._dispatch(plan)))
+            while inflight:
+                key, rnd, plan, fut = inflight.popleft()
+                t0 = time.perf_counter()
+                out = jax.device_get(fut)
+                st["device_s"] += time.perf_counter() - t0
+                self._apply_cohort(plan, out, rnd)
+                st["rounds"] = max(st["rounds"], rnd)
+                st["cohort_rounds"] += 1
+                st["h2d_round_bytes"] += plan.h2d_bytes
+                st["legacy_h2d_round_bytes"] += plan.legacy_h2d_bytes
+                st["kernel_launches"] += 2   # fused bin launch + sketch matmul
+                st["legacy_kernel_launches"] += 4  # 2x bin + 2x sketch, per side
+                nxt = batch.plan_cohort(key, by_code[key], rnd + 1)
+                if nxt is not None:
+                    inflight.append((key, rnd + 1, nxt, self._dispatch(nxt)))
+            if not self._degrade:
+                break
+            # graceful degradation (DESIGN.md §13): any session that drained
+            # its round budget with units left re-plans at a doubled d̂ and
+            # re-enters the pipeline under its new code key; escalation is
+            # capped, so a hopeless session still converges to failed=True
+            escalated = self._escalate_exhausted()
+            if not escalated:
+                break
+            st["sessions_degraded"] += len(escalated)
+            by_code = batch.sessions_by_code()
 
         # stores built during *this* run (cached ones re-upload nothing);
         # the delta ledger additionally covers the advance_epoch patches
@@ -409,6 +434,25 @@ class ReconcileServer:
                     self._batch, s, plans[s.sid], new_a=new_a, new_b=new_b, rnd0=0
                 )
         return self._epoch
+
+    def _escalate_exhausted(self, max_escalations: int = 3) -> list[ReconSession]:
+        """Escalate every budget-exhausted session one degradation rung
+        (doubled d̂ re-plan from scratch, ``escalate_session``); returns the
+        escalated sessions.  Exhausted means the round budget is spent with
+        active units left — the state ``finalize_result`` would report as
+        ``success=False``."""
+        out = []
+        for s in self._sessions:
+            if s is None or s.failed or s.suspended:
+                continue
+            if s.escalations >= max_escalations:
+                continue
+            if s.state.rounds < s.plan.cfg.max_rounds:
+                continue
+            if not s.state.active_units():
+                continue
+            out.append(escalate_session(self._batch, s, rnd0=0))
+        return out
 
     def _dispatch(self, plan: CohortRoundPlan):
         """Enqueue one cohort's fused round executor; returns device futures."""

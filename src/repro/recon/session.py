@@ -56,6 +56,7 @@ from repro.core.pbs import (
     ProtocolPlan,
     SessionState,
     diff_overlay,
+    escalated_plan,
     group_view,
     new_session_state,
     session_live,
@@ -81,6 +82,13 @@ class ReconSession:
     started alone.  ``failed`` excludes a session from all future planning
     (hub eviction: straggler deadline or peer disconnect) without touching
     its cohort's device-resident store.
+
+    ``suspended`` (DESIGN.md §13) parks a session whose peer disconnected
+    but is still *resumable*: it plans no rounds while parked, but — unlike
+    ``failed`` — it keeps its cohort-store membership, so a store rebuilt
+    during the outage still carries its rows and resumption needs zero
+    store work.  ``escalations`` counts the degradation-ladder rungs this
+    session has climbed (``escalate_session``).
     """
 
     sid: int
@@ -88,6 +96,8 @@ class ReconSession:
     state: SessionState
     rnd0: int = 0
     failed: bool = False
+    suspended: bool = False
+    escalations: int = 0
 
     @property
     def code_key(self) -> tuple[int, int]:
@@ -561,8 +571,8 @@ class SessionBatch:
         """
         live: dict[tuple[int, int], list] = {}
         for s in self.sessions:
-            if s.failed or rnd <= s.rnd0:
-                continue  # evicted, or not yet admitted at this round
+            if s.failed or s.suspended or rnd <= s.rnd0:
+                continue  # evicted/parked, or not yet admitted at this round
             if not session_live(s.state, s.plan.cfg, rnd - s.rnd0):
                 continue  # budget exhausted (reported failed) or finished
             live.setdefault(s.code_key, []).append((s, s.state.active_units()))
@@ -585,7 +595,7 @@ class SessionBatch:
         members = [
             (s, s.state.active_units())
             for s in sessions
-            if not s.failed and rnd > s.rnd0
+            if not s.failed and not s.suspended and rnd > s.rnd0
             and session_live(s.state, s.plan.cfg, rnd - s.rnd0)
         ]
         if not members:
@@ -846,3 +856,63 @@ def advance_session(
     sess.state = new_session_state(a, b, plan)
     sess.rnd0 = rnd0
     return sess
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation on decode exhaustion (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def escalate_session(
+    batch: SessionBatch, sess: ReconSession, *, rnd0: int
+) -> ReconSession:
+    """Climb one degradation-ladder rung: install ``escalated_plan`` (d̂
+    doubled again, groups reseeded) with a fresh round state over the
+    session's current sets, restarting its local protocol at global round
+    ``rnd0 + 1``.  The reshuffled group seed always moves the store
+    layout, so — exactly like an epoch-advance layout change — both
+    affected cohort keys are invalidated and rebuild on next live use as
+    counted builds.  Partial progress is discarded: the escalated run
+    re-derives the full difference under parameters that can actually
+    decode it, which keeps both endpoints byte-identical with no
+    negotiation about which groups had already finished.
+    """
+    level = sess.escalations + 1
+    plan = escalated_plan(sess.plan, level)
+    old = sess.plan
+    batch._stores.pop((old.n, old.t), None)
+    batch._stores.pop((plan.n, plan.t), None)
+    sess.plan = plan
+    sess.state = new_session_state(sess.state.a, sess.state.b, plan)
+    sess.rnd0 = rnd0
+    sess.escalations = level
+    return sess
+
+
+def degrade_exhausted(
+    batch: SessionBatch, rnd: int, *, max_escalations: int = 3
+) -> list[ReconSession]:
+    """Escalate every session whose round budget just ran out with groups
+    still undone, instead of letting it report failure (DESIGN.md §13).
+
+    Called after global round ``rnd``'s outcomes are applied; a session is
+    exhausted when its *next* local round would exceed ``cfg.max_rounds``
+    while units remain undone.  Both endpoints evaluate this at the same
+    global round with identical state, so they derive identical rungs with
+    zero coordination traffic.  Suspended (resumable) sessions are skipped
+    — their local clock is parked, not running out.  A session that has
+    already climbed ``max_escalations`` rungs is left alone and fails
+    exactly as it would have before degradation existed.
+    """
+    out: list[ReconSession] = []
+    for s in batch.sessions:
+        if s.failed or s.suspended or rnd <= s.rnd0:
+            continue
+        if s.escalations >= max_escalations:
+            continue
+        if rnd + 1 - s.rnd0 <= s.plan.cfg.max_rounds:
+            continue                    # round budget not exhausted yet
+        if not s.state.active_units():
+            continue                    # finished cleanly
+        out.append(escalate_session(batch, s, rnd0=rnd))
+    return out

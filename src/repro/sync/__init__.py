@@ -30,6 +30,8 @@ under churn against the ``core.pbs.reconcile`` oracle).
 from repro.net import (
     AliceEndpoint,
     BobEndpoint,
+    ChaosTransport,
+    FaultPlan,
     HubEndpoint,
     run_hub_epoch,
     run_pair_epoch,
@@ -46,6 +48,8 @@ from repro.wire import decode_epoch, encode_epoch, epoch_overhead_bytes
 __all__ = [
     "AliceEndpoint",
     "BobEndpoint",
+    "ChaosTransport",
+    "FaultPlan",
     "HubEndpoint",
     "ReconcileServer",
     "SessionBatch",

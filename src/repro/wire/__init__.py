@@ -14,11 +14,16 @@ The ``MSG_MUX`` envelope (DESIGN.md §10) channel-tags complete frames for
 the multi-peer hub, and the ``MSG_EPOCH`` envelope (DESIGN.md §11) opens a
 continuous-sync epoch carrying the epoch id + d̂ re-estimation handshake;
 both envelopes' bytes are transport overhead, never ledger bits.
+``MSG_RESUME`` (DESIGN.md §13) is the session-resumption handshake: channel
+id, epoch, last completed round barrier, and two rolling FNV-1a transcript
+digests letting a crashed peer re-attach to the hub at its last barrier;
+resume bytes are transport overhead too.
 """
 from .frames import (
     MSG_DHAT,
     MSG_EPOCH,
     MSG_MUX,
+    MSG_RESUME,
     MSG_ROUND_OUTCOME,
     MSG_ROUND_REPLY,
     MSG_ROUND_SKETCHES,
@@ -31,6 +36,7 @@ from .frames import (
     decode_dhat,
     decode_epoch,
     decode_mux,
+    decode_resume,
     decode_round_outcome,
     decode_round_reply,
     decode_round_sketches,
@@ -40,6 +46,7 @@ from .frames import (
     encode_dhat,
     encode_epoch,
     encode_mux,
+    encode_resume,
     encode_round_outcome,
     encode_round_reply,
     encode_round_sketches,
@@ -47,7 +54,10 @@ from .frames import (
     encode_verify,
     encode_verify_ack,
     epoch_overhead_bytes,
+    fold_transcript,
     frame,
+    resume_overhead_bytes,
+    transcript_digest0,
     mux_overhead_bytes,
     reply_ledger_bits,
     sketches_ledger_bits,
@@ -59,6 +69,7 @@ __all__ = [
     "MSG_DHAT",
     "MSG_EPOCH",
     "MSG_MUX",
+    "MSG_RESUME",
     "MSG_ROUND_OUTCOME",
     "MSG_ROUND_REPLY",
     "MSG_ROUND_SKETCHES",
@@ -71,6 +82,7 @@ __all__ = [
     "decode_dhat",
     "decode_epoch",
     "decode_mux",
+    "decode_resume",
     "decode_round_outcome",
     "decode_round_reply",
     "decode_round_sketches",
@@ -81,6 +93,7 @@ __all__ = [
     "encode_dhat",
     "encode_epoch",
     "encode_mux",
+    "encode_resume",
     "encode_round_outcome",
     "encode_round_reply",
     "encode_round_sketches",
@@ -89,7 +102,10 @@ __all__ = [
     "encode_verify",
     "encode_verify_ack",
     "epoch_overhead_bytes",
+    "fold_transcript",
     "frame",
+    "resume_overhead_bytes",
+    "transcript_digest0",
     "mux_overhead_bytes",
     "reply_ledger_bits",
     "sketches_ledger_bits",

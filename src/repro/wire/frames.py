@@ -53,10 +53,12 @@ MSG_VERIFY = 0x06         # Alice -> Bob: success + c(A xor D_hat) per session
 MSG_VERIFY_ACK = 0x07     # Bob -> Alice: per-session verification verdicts
 MSG_MUX = 0x08            # either direction: channel-tagged envelope (hub)
 MSG_EPOCH = 0x09          # either direction: epoch-open envelope (continuous sync)
+MSG_RESUME = 0x0A         # either direction: session-resumption handshake (hub)
 
 _KNOWN = frozenset(
     (MSG_TOW_SKETCH, MSG_DHAT, MSG_ROUND_SKETCHES, MSG_ROUND_REPLY,
-     MSG_ROUND_OUTCOME, MSG_VERIFY, MSG_VERIFY_ACK, MSG_MUX, MSG_EPOCH)
+     MSG_ROUND_OUTCOME, MSG_VERIFY, MSG_VERIFY_ACK, MSG_MUX, MSG_EPOCH,
+     MSG_RESUME)
 )
 
 KEY_BITS = 32  # element keys are 32-bit (core.pbs.KEY_BITS)
@@ -197,6 +199,98 @@ def epoch_overhead_bytes(epoch: int, inner_len: int) -> int:
     transport overhead, excluded from the protocol ledger like mux/ARQ."""
     payload_len = uvarint_len(epoch) + inner_len
     return uvarint_len(1 + payload_len) + 1 + uvarint_len(epoch)
+
+
+# ---------------------------------------------------------------------------
+# Session-resumption handshake (repro.net.resilience, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+_DIGEST_BYTES = 8
+_DIGEST_MASK = (1 << 64) - 1
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x00000100000001B3
+
+
+def transcript_digest0(epoch: int) -> int:
+    """The rolling transcript digest's per-epoch starting value.
+
+    Both sides reset to this at admission and at each epoch install, then
+    fold every completed round's outcome frame via ``fold_transcript`` —
+    so two transcripts agree iff both sides applied the same outcome
+    frames in the same rounds of the same epoch.
+    """
+    return fold_transcript(_FNV_OFFSET, 0, int(epoch).to_bytes(8, "big"))
+
+
+def fold_transcript(digest: int, rnd: int, frame_bytes: bytes) -> int:
+    """Fold one completed round barrier into the rolling transcript digest
+    (FNV-1a over the round number then the framed outcome bytes).  The
+    digest is a divergence *guard* for ``MSG_RESUME``, not a proof: a peer
+    whose replayed state drifted from the hub's mirror is rejected at the
+    resume handshake instead of corrupting the shared cohort state.
+    """
+    d = digest & _DIGEST_MASK
+    for b in int(rnd).to_bytes(8, "big") + bytes(frame_bytes):
+        d = ((d ^ b) * _FNV_PRIME) & _DIGEST_MASK
+    return d
+
+
+def encode_resume(
+    channel: int, epoch: int, last_round: int, digest: int, digest_prev: int
+) -> bytes:
+    """One side of the resumption handshake (DESIGN.md §13).
+
+    Payload: ``uvarint(channel) || uvarint(epoch) || uvarint(last_round) ||
+    digest[8] || digest_prev[8]`` — the sender's channel id, its current
+    epoch, its last *completed* local round barrier, and the rolling
+    transcript digests at that barrier and the one before it (the previous
+    digest is what the receiver checks when it is exactly one outcome
+    frame behind, i.e. the peer's last outcome frame was lost in flight).
+    The reconnecting peer sends it first; the hub answers with its own
+    ``MSG_RESUME`` carrying the mirror's barrier, which tells the peer
+    whether to replay its buffered outcome frame.  Channel 0 is reserved,
+    exactly like ``MSG_MUX``.  Resume frames are transport overhead —
+    ledgered like ARQ/mux bytes, never Formula-(1) bits.
+    """
+    if channel < 1:
+        raise WireError(f"resume channel {channel} out of range (must be >= 1)")
+    if last_round < 0:
+        raise WireError(f"resume round {last_round} out of range")
+    return frame(
+        MSG_RESUME,
+        encode_uvarint(channel)
+        + encode_uvarint(epoch)
+        + encode_uvarint(last_round)
+        + (digest & _DIGEST_MASK).to_bytes(_DIGEST_BYTES, "big")
+        + (digest_prev & _DIGEST_MASK).to_bytes(_DIGEST_BYTES, "big"),
+    )
+
+
+def decode_resume(payload: bytes) -> tuple[int, int, int, int, int]:
+    """(channel, epoch, last_round, digest, digest_prev); strict."""
+    channel, off = decode_uvarint(payload)
+    if channel < 1:
+        raise WireError(f"resume channel {channel} out of range (must be >= 1)")
+    epoch, off = decode_uvarint(payload, off)
+    last_round, off = decode_uvarint(payload, off)
+    if len(payload) - off != 2 * _DIGEST_BYTES:
+        raise WireError(
+            f"resume frame carries {len(payload) - off} digest bytes, "
+            f"expected {2 * _DIGEST_BYTES}"
+        )
+    digest = int.from_bytes(payload[off : off + _DIGEST_BYTES], "big")
+    digest_prev = int.from_bytes(payload[off + _DIGEST_BYTES :], "big")
+    return channel, epoch, last_round, digest, digest_prev
+
+
+def resume_overhead_bytes(channel: int, epoch: int, last_round: int) -> int:
+    """Framed size of one ``MSG_RESUME`` — all of it transport overhead
+    (the handshake re-establishes a channel; it carries no set data)."""
+    payload_len = (
+        uvarint_len(channel) + uvarint_len(epoch) + uvarint_len(last_round)
+        + 2 * _DIGEST_BYTES
+    )
+    return uvarint_len(1 + payload_len) + 1 + payload_len
 
 
 # ---------------------------------------------------------------------------

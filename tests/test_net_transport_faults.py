@@ -16,6 +16,8 @@ from repro.core.simdata import make_pair
 from repro.net import (
     AliceEndpoint,
     BobEndpoint,
+    ChaosTransport,
+    FaultPlan,
     HubEndpoint,
     InMemoryDuplex,
     ReliableTransport,
@@ -25,6 +27,7 @@ from repro.net import (
     TransportTimeout,
     run_hub,
     run_pair,
+    tcp_loopback_pair,
 )
 from repro.net.transport import FrameStream
 from repro.wire.varint import decode_uvarint, encode_uvarint
@@ -358,3 +361,152 @@ def test_hub_straggler_on_lossy_simulated_channel():
     assert not outcomes[ch_slow].ok
     assert isinstance(outcomes[ch_slow].error, TransportError)
     assert "deadline" in str(outcomes[ch_slow].error)
+
+# ---------------------------------------------------------------------------
+# eviction while the peer is mid-protocol: clean, prompt, no leaked thread
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["memory", "tcp", "simulated"])
+def test_evict_mid_protocol_fails_peer_cleanly_no_hang(kind):
+    """Evicting a peer while it is mid-exchange (in-flight send/recv) must
+    surface a clean, prompt TransportError on the peer's thread — no hang,
+    no leaked thread — on every transport flavor, while a healthy neighbor
+    completes byte-identically."""
+    import time as _time
+
+    if kind == "memory":
+        ta, th = InMemoryDuplex.pair()
+    elif kind == "tcp":
+        ta, th = tcp_loopback_pair()
+    else:
+        ca, cb = SimulatedChannel.pair(latency=0.001)
+        ta = ReliableTransport(ca, timeout=0.02, max_retries=100)
+        th = ReliableTransport(cb, timeout=0.02, max_retries=100)
+
+    # a multi-round workload so the eviction (at the round-1 barrier, via
+    # the deterministic on_barrier hook) always lands mid-protocol
+    cfg = PBSConfig(seed=3, n_override=127, t_override=7, g_override=4)
+    av, bv = make_pair(700, 60, np.random.default_rng(5))
+    hub = HubEndpoint(recv_deadline=30.0)
+    ch_bad = hub.add_peer(th, label="victim")
+    hub.submit(ch_bad, bv, cfg=cfg, d_known=60)
+    ep_bad = AliceEndpoint(ta, channel=ch_bad)
+    ep_bad.submit(av, cfg=cfg, d_known=60)
+
+    ah, bh = make_pair(700, 60, np.random.default_rng(6))
+    cfg_h = PBSConfig(seed=4, n_override=127, t_override=7, g_override=4)
+    to_a, to_h = InMemoryDuplex.pair()
+    ch_ok = hub.add_peer(to_h, label="healthy")
+    hub.submit(ch_ok, bh, cfg=cfg_h, d_known=60)
+    ep_ok = AliceEndpoint(to_a, channel=ch_ok)
+    ep_ok.submit(ah, cfg=cfg_h, d_known=60)
+
+    def on_barrier(rnd):
+        peer = hub._peers[ch_bad]
+        if rnd >= 1 and not peer.retired:
+            hub._evict(peer, TransportError("operator eviction"))
+
+    hub.on_barrier = on_barrier
+
+    seen: dict = {}
+
+    def drive_victim():
+        t0 = _time.monotonic()
+        try:
+            ep_bad.run()
+            seen["res"] = "completed"
+        except TransportError as e:
+            seen["err"] = e
+        seen["dt"] = _time.monotonic() - t0
+
+    ok_res: dict = {}
+    th_bad = threading.Thread(target=drive_victim, daemon=True)
+    th_ok = threading.Thread(
+        target=lambda: ok_res.update(r=ep_ok.run()), daemon=True
+    )
+    th_bad.start()
+    th_ok.start()
+    outcomes = hub.serve()
+    th_bad.join(timeout=15.0)
+    th_ok.join(timeout=15.0)
+
+    assert not th_bad.is_alive(), f"{kind}: victim thread leaked"
+    assert not th_ok.is_alive(), f"{kind}: healthy thread leaked"
+    assert "err" in seen, f"{kind}: victim never saw the eviction: {seen}"
+    assert isinstance(seen["err"], TransportError), kind
+    assert not isinstance(seen["err"], TransportTimeout), kind
+    assert seen["dt"] < 15.0, f"{kind}: not prompt: {seen['dt']:.1f}s"
+
+    assert not outcomes[ch_bad].ok
+    assert outcomes[ch_bad].error_kind == "transport"
+    assert ch_bad in hub.stale_channels
+    exp = reconcile(ah, bh, cfg_h, d_known=60)
+    got = ok_res["r"][0]
+    assert outcomes[ch_ok].ok and outcomes[ch_ok].verified == [True]
+    assert got.diff == exp.diff == true_diff(ah, bh)
+    assert got.bytes_per_round == exp.bytes_per_round
+
+
+# ---------------------------------------------------------------------------
+# close/linger: the two-army tail (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def test_linger_delivers_final_frame_exactly_once_under_ack_loss():
+    """The lost-final-ACK problem: the receiver's ACK of the last frame is
+    dropped, the sender retransmits, and the receiver's linger window
+    re-ACKs — the frame is delivered exactly once and the sender's send
+    completes instead of exhausting its retries."""
+    raw_a, raw_b = InMemoryDuplex.pair()
+    rt_s = ReliableTransport(raw_a, timeout=0.03, max_retries=50,
+                             rto_max=0.1)
+    # the receiver's first send op IS the ACK of the final frame: drop it
+    rt_r = ReliableTransport(
+        ChaosTransport(raw_b, FaultPlan(partitions=((0, 1),))),
+        timeout=0.03, rto_max=0.1,
+    )
+
+    done = threading.Event()
+
+    def _send():
+        rt_s.send(b"final frame")
+        done.set()
+
+    th = threading.Thread(target=_send, daemon=True)
+    th.start()
+    assert rt_r.recv(timeout=2.0) == b"final frame"   # its ACK was dropped
+    assert not done.is_set()                          # sender still waiting
+    rt_r.linger(budget=5.0)      # re-ACK the retransmitted tail until quiet
+    assert done.wait(2.0), "sender never completed: final ACK not healed"
+    th.join(2.0)
+    assert rt_s.retransmits >= 1
+    # exactly once: the retransmitted copies were suppressed, not delivered
+    with pytest.raises(TransportTimeout):
+        rt_r.recv(timeout=0.2)
+
+
+def test_linger_budget_bounds_a_babbling_peer():
+    """``linger`` must respect its budget even when the peer never goes
+    quiet — a babbler cannot hold close open forever."""
+    import time as _time
+
+    raw, side = InMemoryDuplex.pair()
+    rt = ReliableTransport(side, timeout=0.02, rto_max=0.05)
+    stop = threading.Event()
+
+    def _babble():
+        seq = 0
+        while not stop.is_set():
+            raw.send(_dgram(_DATA, seq))
+            seq += 1
+            _time.sleep(0.005)
+
+    th = threading.Thread(target=_babble, daemon=True)
+    th.start()
+    t0 = _time.monotonic()
+    rt.linger(budget=0.3)
+    dt = _time.monotonic() - t0
+    stop.set()
+    th.join(2.0)
+    assert 0.25 <= dt < 1.5, f"linger ignored its budget: {dt:.2f}s"
