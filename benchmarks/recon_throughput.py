@@ -97,6 +97,7 @@ from repro.net import (
     run_pair,
 )
 from repro.net.hub import _drive_hub
+from repro.obs import Tracer
 from repro.recon import ReconcileServer, phase0_numerators
 
 
@@ -156,9 +157,9 @@ def _wire_measurement(pairs, d, seed, results):
     }
 
 
-def _run_batch(pairs, d, *, seed):
+def _run_batch(pairs, d, *, seed, tracer=None):
     """One fresh-server pass over the pairs; (server, results, wall_s)."""
-    server = ReconcileServer()
+    server = ReconcileServer(tracer=tracer)
     for s, (a, b) in enumerate(pairs):
         server.submit(a, b, cfg=PBSConfig(seed=seed + s), d_known=d)
     t0 = time.perf_counter()
@@ -167,7 +168,7 @@ def _run_batch(pairs, d, *, seed):
 
 
 def bench_point(sessions: int, d: int, size: int, *, check: bool = True, seed: int = 0,
-                wire: bool = True):
+                wire: bool = True, trace_path: str | None = None):
     pairs = [
         make_pair(size, d, np.random.default_rng(seed + 7919 * s + d))
         for s in range(sessions)
@@ -197,6 +198,20 @@ def bench_point(sessions: int, d: int, size: int, *, check: bool = True, seed: i
             raise AssertionError(
                 f"per-session bytes deviate {max_dev:.2%} from core.pbs (>1%)"
             )
+
+    obs_overhead_frac = None
+    trace_events = None
+    if trace_path:
+        # third warm pass, tracing on: the gated number above stays
+        # untraced; this one exports the Chrome timeline and prices the
+        # observability tax as (traced - untraced) / untraced warm wall
+        tracer = Tracer()
+        traced_server, _, traced_wall = _run_batch(
+            pairs, d, seed=seed, tracer=tracer)
+        if traced_server.stats["retraces"]:
+            raise AssertionError("traced warm pass recompiled kernels")
+        trace_events = tracer.export_chrome(trace_path)
+        obs_overhead_frac = round((traced_wall - wall) / wall, 4)
 
     phase0_host_s, phase0_device_s = _phase0_times(pairs, seed)
     st = server.stats
@@ -229,6 +244,9 @@ def bench_point(sessions: int, d: int, size: int, *, check: bool = True, seed: i
         "success": n_ok,
         "max_byte_dev": max_dev if check else None,
     }
+    if trace_path:
+        point["obs_overhead_frac"] = obs_overhead_frac
+        point["trace_events"] = trace_events
     if wire:
         point.update(_wire_measurement(pairs, d, seed, results))
         point["wire_bytes_per_diff"] = round(
@@ -685,6 +703,12 @@ def main(argv=None):
                          "lossy channel, and the degradation ladder, "
                          "recording peers_resumed / resume_replay_bytes / "
                          "sessions_degraded (None = skip)")
+    ap.add_argument("--trace", type=str, default=None, metavar="PATH",
+                    help="run each pair point a third time with repro.obs "
+                         "tracing on, export the Chrome trace (Perfetto-"
+                         "loadable) to PATH, and record obs_overhead_frac "
+                         "(traced vs untraced warm wall) into the JSON; "
+                         "the gated warm numbers stay untraced")
     ap.add_argument("--json", type=str, default="BENCH_recon.json",
                     help="path for the JSON artifact (default BENCH_recon.json)")
     ap.add_argument("--no-json", action="store_true", help="skip the JSON artifact")
@@ -716,7 +740,8 @@ def main(argv=None):
         for d in grid_d:
             row, point = bench_point(sessions, d, args.size,
                                      check=not args.no_check, seed=args.seed,
-                                     wire=not args.no_wire)
+                                     wire=not args.no_wire,
+                                     trace_path=args.trace)
             rows.append(row)
             points.append(point)
             print(row.csv(), flush=True)

@@ -47,6 +47,7 @@ from repro.core.pbs import (
 )
 from repro.core.tow import estimate_numerator, tow_sketches
 from repro.kernels.ops import bch_decode_batched
+from repro.obs import NULL_TRACER, Recorder
 from repro.recon.engine import encode_side
 from repro.recon.session import (
     CohortRoundPlan,
@@ -325,9 +326,16 @@ class _Endpoint:
         channel: int | None = None,
         continuous: bool = False,
         degrade: bool = False,
+        recorder: Recorder | None = None,
+        tracer=None,
     ):
         self._stream = FrameStream(transport, channel=channel)
         self._interpret = interpret
+        # telemetry (DESIGN.md §14): wire_stats derives from the recorder's
+        # wire.* rows; spans/instants go through the tracer (NULL_TRACER =
+        # disabled, free)
+        self.recorder = recorder if recorder is not None else Recorder()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._continuous = continuous
         self._degrade = degrade
         self._sessions: list[ReconSession | None] = []
@@ -377,7 +385,8 @@ class _Endpoint:
             raise WireError("round traffic before phase 0 completed")
         if self._batch is None:
             self._batch = SessionBatch(
-                self._sessions, sides=(self.side,), mutable=self._continuous
+                self._sessions, sides=(self.side,),
+                mutable=self._continuous, tracer=self.tracer,
             )
         return self._batch
 
@@ -447,15 +456,26 @@ class _Endpoint:
         budget just ran out (both endpoints call this at the same round
         with mirrored state, so their escalations agree; DESIGN.md §13)."""
         if self._degrade:
-            self.sessions_degraded += len(
-                degrade_exhausted(self._ensure_batch(), rnd)
-            )
+            escalated = degrade_exhausted(self._ensure_batch(), rnd)
+            if escalated:
+                self.sessions_degraded += len(escalated)
+                self.tracer.instant("endpoint.degrade", round=rnd,
+                                    sessions=len(escalated))
 
     @property
     def wire_stats(self) -> dict:
         """Measured wire traffic: exact framed bytes by category plus the
-        transport totals (which additionally see ARQ overhead, if any)."""
-        return stream_wire_stats(self._stream, self._tally, self._carry)
+        transport totals (which additionally see ARQ overhead, if any).
+
+        A derived snapshot of the ``wire.*`` metrics in the recorder —
+        same keys and values as the pre-obs ad-hoc dict (DESIGN.md §14).
+        """
+        self.recorder.publish(
+            "wire", stream_wire_stats(self._stream, self._tally, self._carry)
+        )
+        self.recorder.set("endpoint.resumes", getattr(self, "resumes", 0))
+        self.recorder.set("endpoint.sessions_degraded", self.sessions_degraded)
+        return self.recorder.view("wire")
 
 
 class AliceEndpoint(_Endpoint):
@@ -471,9 +491,12 @@ class AliceEndpoint(_Endpoint):
         channel: int | None = None,
         continuous: bool = False,
         degrade: bool = False,
+        recorder: Recorder | None = None,
+        tracer=None,
     ):
         super().__init__(transport, interpret=interpret, channel=channel,
-                         continuous=continuous, degrade=degrade)
+                         continuous=continuous, degrade=degrade,
+                         recorder=recorder, tracer=tracer)
         self._pending: dict[int, tuple] = {}   # sid -> (a, cfg)
         self._fold_diff = True
         # resumption state (DESIGN.md §13): the last completed local round
@@ -522,6 +545,7 @@ class AliceEndpoint(_Endpoint):
             raise RuntimeError("no epoch staged: call advance_epoch first")
         pending, self._epoch_pending = self._epoch_pending, None
         e = self._epoch
+        self.tracer.instant("epoch.open", epoch=e)
         batch = self._ensure_batch()
 
         est_sids = [sid for sid in sorted(pending) if pending[sid][1] is None]
@@ -601,12 +625,15 @@ class AliceEndpoint(_Endpoint):
 
     def _run_rounds(self) -> dict[int, ReconcileResult]:
         batch = self._ensure_batch()
+        tracer = self.tracer
         while True:
             rnd = self._rnd + 1
             plans = batch.plan_round(rnd)
             if not plans:
                 break
-            per = self._encode_round(plans)
+            with tracer.span("round.encode", cat="device", round=rnd,
+                             cohorts=len(plans)):
+                per = self._encode_round(plans)
             live = sorted(per)
             schema = self._schema(per, live)
 
@@ -616,7 +643,9 @@ class AliceEndpoint(_Endpoint):
             self._stream.send(sk_frame)
             self._tally["protocol"] += len(sk_frame)
 
-            payload = self._expect(wf.MSG_ROUND_REPLY)
+            with tracer.span("round.reply_wait", cat="wire", round=rnd,
+                             sessions=len(live)):
+                payload = self._expect(wf.MSG_ROUND_REPLY)
             self._tally["protocol"] += _framed_len(payload)
             got_rnd, entries = wf.decode_round_reply(payload, schema)
             if got_rnd != rnd:
@@ -670,12 +699,28 @@ class AliceEndpoint(_Endpoint):
             self._tally["protocol"] += len(out_frame)
             self._marks = {k: self._tally[k] for k in self._marks}
             self._stream.send(out_frame)
+            tracer.instant("round.barrier", round=rnd, epoch=self._epoch)
             self._degrade_after(rnd)
 
-        self._verify()
+        with tracer.span("verify", sessions=len(self._sessions)):
+            self._verify()
         # lossy-channel tail: keep ACKing the peer's retransmits until quiet
         self._stream.transport.linger()
-        return {s.sid: finalize_result(s.state, s.plan) for s in self._sessions}
+        results = {
+            s.sid: finalize_result(s.state, s.plan) for s in self._sessions
+        }
+        if tracer.enabled:
+            # per-session attribution for trace_report: bytes/diff/rounds
+            # against the plan's (n, t, d_est) for the Markov comparison
+            for sid, r in results.items():
+                p = self._sessions[sid].plan
+                tracer.instant(
+                    "session.result", sid=sid, rounds=r.rounds,
+                    diff=len(r.diff), bytes=r.bytes_sent, success=r.success,
+                    n=p.n, t=p.t, g=p.g, d_est=p.d_est,
+                    channel=self._stream.channel,
+                )
+        return results
 
     def resume(self, transport: Transport) -> None:
         """Reconnect to the hub over a fresh transport after a failure and
@@ -697,6 +742,11 @@ class AliceEndpoint(_Endpoint):
             raise RuntimeError("resume needs a hub channel-tagged stream")
         if self._last_outcome is None and self._rnd:
             raise RuntimeError("resume before any round barrier completed")
+        with self.tracer.span("resume", channel=self._stream.channel,
+                              epoch=self._epoch, barrier=self._rnd):
+            self._resume(transport)
+
+    def _resume(self, transport: Transport) -> None:
         for cat, mark in self._marks.items():
             spill = self._tally[cat] - mark
             if spill:
@@ -756,6 +806,10 @@ class AliceEndpoint(_Endpoint):
     def _phase0(self):
         if not self._est_queue:
             return
+        with self.tracer.span("phase0", sessions=len(self._est_queue)):
+            self._phase0_exchange()
+
+    def _phase0_exchange(self):
         sent = {}
         for sid in self._est_queue:
             a, cfg = self._pending[sid]
@@ -807,9 +861,12 @@ class BobEndpoint(_Endpoint):
         channel: int | None = None,
         continuous: bool = False,
         degrade: bool = False,
+        recorder: Recorder | None = None,
+        tracer=None,
     ):
         super().__init__(transport, interpret=interpret, channel=channel,
-                         continuous=continuous, degrade=degrade)
+                         continuous=continuous, degrade=degrade,
+                         recorder=recorder, tracer=tracer)
         self._pending: dict[int, tuple] = {}   # sid -> (b, cfg)
         self._rnd = 0                          # rounds whose sketches arrived
         self._ctx = None                       # current round's (live, per-sid)
@@ -900,7 +957,9 @@ class BobEndpoint(_Endpoint):
         batch = self._ensure_batch()
         rnd = self._rnd + 1
         plans = batch.plan_round(rnd)
-        per = self._encode_round(plans)
+        with self.tracer.span("round.encode", cat="device", round=rnd,
+                              cohorts=len(plans)):
+            per = self._encode_round(plans)
         live = sorted(per)
         schema = self._schema(per, live)
         got_rnd, blocks = wf.decode_round_sketches(payload, schema)
@@ -912,7 +971,11 @@ class BobEndpoint(_Endpoint):
         # per cohort: place each session's frame sketches at its row slice,
         # XOR with our device-resident side, decode every unit at once
         # (padding rows carry zero sketches on both sides: trivially ok)
-        results, ctx = decode_side_b_round(plans, per, dict(zip(live, blocks)))
+        with self.tracer.span("round.decode", cat="device", round=rnd,
+                              sessions=len(live)):
+            results, ctx = decode_side_b_round(
+                plans, per, dict(zip(live, blocks))
+            )
         reply = wf.encode_round_reply(rnd, [results[sid] for sid in live], schema)
         self._stream.send(reply)
         self._tally["protocol"] += len(reply)

@@ -63,7 +63,12 @@ from repro.recon.session import (
     apply_churn,
     degrade_exhausted,
 )
-from repro.kernels.platform import enable_persistent_cache, retrace_count
+from repro.kernels.platform import (
+    enable_persistent_cache,
+    retrace_count,
+    retrace_counts,
+)
+from repro.obs import NULL_TRACER, Recorder
 from repro.wire import frames as wf
 from repro.wire.frames import WireError
 from repro.wire.varint import framed_len
@@ -134,9 +139,15 @@ class _Peer:
         self.resumes = 0
         self.marks = {"protocol": 0, "verify": 0}   # tallies at last barrier
         self.carry: dict = {}           # totals of resumed-away transports
+        # per-peer registry: wire_stats routes through it so every key is
+        # schema-declared and the dict is a derived snapshot (DESIGN.md §14)
+        self.recorder = Recorder()
 
     def wire_stats(self) -> dict:
-        return stream_wire_stats(self.stream, self.tally, self.carry)
+        self.recorder.publish(
+            "wire", stream_wire_stats(self.stream, self.tally, self.carry)
+        )
+        return self.recorder.view("wire")
 
 
 class HubEndpoint:
@@ -168,9 +179,16 @@ class HubEndpoint:
         continuous: bool = False,
         resume_window: float = 0.0,
         degrade: bool = False,
+        recorder: Recorder | None = None,
+        tracer=None,
     ):
         enable_persistent_cache()
         self._interpret = interpret
+        # telemetry (DESIGN.md §14): the `stats` view derives from the
+        # recorder's hub.* rows; every barrier/eviction/resume goes through
+        # the tracer (NULL_TRACER = disabled, free)
+        self.recorder = recorder if recorder is not None else Recorder()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._deadline = recv_deadline
         self.on_barrier = on_barrier
         self._continuous = continuous
@@ -193,7 +211,8 @@ class HubEndpoint:
         self.stale_channels: set[int] = set()
         self._sessions: list[ReconSession] = []
         self._batch = SessionBatch(
-            self._sessions, sides=(self.side,), mutable=continuous
+            self._sessions, sides=(self.side,), mutable=continuous,
+            tracer=self.tracer,
         )
         self._stats: dict = {}
         self._epoch = 0
@@ -255,6 +274,8 @@ class HubEndpoint:
         kind = classify_error(peer.error)
         by_kind = self._stats.setdefault("peers_failed_by_kind", {})
         by_kind[kind] = by_kind.get(kind, 0) + 1
+        self.tracer.instant("peer.evict", channel=peer.channel,
+                            peer=peer.label, kind=kind)
         try:
             peer.transport.close()
         except Exception:
@@ -285,6 +306,8 @@ class HubEndpoint:
         peer.suspended = True
         peer.suspend_err = err
         peer.suspend_at = time.monotonic() + self._resume_window
+        self.tracer.instant("peer.suspend", channel=peer.channel,
+                            peer=peer.label, barrier=peer.rounds_done)
         for sess in peer.sessions:
             sess.suspended = True
         try:
@@ -338,6 +361,17 @@ class HubEndpoint:
         peer = self._peers.get(channel)
         if peer is None:
             raise KeyError(f"unknown channel {channel}")
+        with self.tracer.span("peer.resume", channel=channel,
+                              peer=peer.label, barrier=peer.rounds_done):
+            self._resume_peer(peer, channel, transport, timeout)
+
+    def _resume_peer(
+        self,
+        peer: _Peer,
+        channel: int,
+        transport: Transport,
+        timeout: float | None,
+    ) -> None:
         with self._lock:
             if not peer.suspended:
                 raise RuntimeError(
@@ -778,8 +812,11 @@ class HubEndpoint:
         retrace_mark = retrace_count()
         rnd = self._rnd = 0
         hook_fired_at = -1
+        tracer = self.tracer
+        tracer.instant("hub.serve", epoch=self._epoch)
         if self._epoch_open:
-            self._epoch_handshake()
+            with tracer.span("hub.epoch_handshake", epoch=self._epoch):
+                self._epoch_handshake()
         self._admit(rnd)
         while True:
             self._expire_overdue()
@@ -821,7 +858,9 @@ class HubEndpoint:
                 )
                 for p in active
             }
-            frames = self._collect(expect)
+            with tracer.span("hub.collect_sketches", cat="wire", round=rnd,
+                             peers=len(expect)):
+                frames = self._collect(expect)
             for ch, payload in list(frames.items()):
                 if expect[ch] == wf.MSG_VERIFY:
                     self._finish_peer(self._peers[ch], payload)
@@ -835,8 +874,10 @@ class HubEndpoint:
             # helpers, so the fusion stats measure dispatches — one encode
             # and one decode per cohort regardless of peer count — rather
             # than echoing the planner's own bookkeeping
-            per = encode_round_rows(plans, self.side, self._interpret,
-                                    launches=st)
+            with tracer.span("hub.encode", cat="device", round=rnd,
+                             cohorts=len(plans)):
+                per = encode_round_rows(plans, self.side, self._interpret,
+                                        launches=st)
             if plans:
                 st["rounds"] = rnd
             st["cohort_rounds"] += len(plans)
@@ -845,12 +886,18 @@ class HubEndpoint:
             round_ctx = self._apply_sketches(rnd, frames, plans, per)
 
             # barrier phase 2: the per-peer checksum-outcome frames
-            outcomes = self._collect({
-                ch: wf.MSG_ROUND_OUTCOME for ch in round_ctx
-            })
+            with tracer.span("hub.collect_outcomes", cat="wire", round=rnd,
+                             peers=len(round_ctx)):
+                outcomes = self._collect({
+                    ch: wf.MSG_ROUND_OUTCOME for ch in round_ctx
+                })
             for ch, payload in outcomes.items():
-                self._apply_outcome(self._peers[ch], rnd, payload,
-                                    *round_ctx[ch])
+                with tracer.span("peer.round.outcome", round=rnd, channel=ch,
+                                 peer=self._peers[ch].label):
+                    self._apply_outcome(self._peers[ch], rnd, payload,
+                                        *round_ctx[ch])
+            tracer.instant("hub.barrier", round=rnd, epoch=self._epoch,
+                           peers=len(active))
 
             if self._degrade:
                 # graceful degradation (DESIGN.md §13): any session one
@@ -886,6 +933,22 @@ class HubEndpoint:
         # triggered across every kernel entry point — a warm hub epoch
         # re-uses the pow2-bucketed signatures and reports 0
         st["retraces"] = retrace_count() - retrace_mark
+        # the freeze point is the publish point: the legacy `stats` view
+        # derives back from these registry rows (DESIGN.md §14)
+        self.recorder.publish("hub", st)
+        self.recorder.publish("store", self._batch.counters())
+        self.recorder.set("kernels.retraces_total", retrace_count())
+        self.recorder.set("kernels.retraces_by_fn", retrace_counts())
+        if tracer.enabled:
+            for ch in self._order:
+                p = self._peers[ch]
+                tracer.instant(
+                    "peer.result", channel=ch, peer=p.label,
+                    ok=p.error is None, kind=self._peer_kind(p),
+                    rounds=p.rounds_done, resumes=p.resumes,
+                    protocol_bytes=p.tally["protocol"],
+                    resume_bytes=p.tally["resume"],
+                )
         return {
             ch: PeerOutcome(
                 channel=ch,
@@ -916,8 +979,17 @@ class HubEndpoint:
     def stats(self) -> dict:
         """Fusion ledger of the last ``serve``: global rounds, cohort
         rounds, kernel/decode launches (2 + 1 per cohort-round, shared
-        across all peers), and the store-upload accounting."""
-        return dict(self._stats)
+        across all peers), and the store-upload accounting.
+
+        A derived snapshot of the ``hub.*`` metrics in the recorder: the
+        working ledger is re-published on read (mid-serve mutations like
+        evictions land immediately) and the dict rebuilds from the
+        registry rows — same keys and values as the pre-obs ad-hoc dict
+        (DESIGN.md §14)."""
+        st = dict(self._stats)
+        self.recorder.publish("hub", st)
+        view = self.recorder.view("hub")
+        return {k: view[k] for k in st}
 
     # -- round internals ---------------------------------------------------
 
@@ -950,21 +1022,26 @@ class HubEndpoint:
 
         # one decode launch per cohort, all peers' units stacked; sessions
         # of peers evicted after planning keep zero rows and are skipped
-        results, ctx = decode_side_b_round(plans, per, sk_a_of,
-                                           launches=self._stats)
+        with self.tracer.span("hub.decode", cat="device", round=rnd,
+                              cohorts=len(plans)):
+            results, ctx = decode_side_b_round(plans, per, sk_a_of,
+                                               launches=self._stats)
 
         round_ctx: dict[int, tuple] = {}
         for ch, live_g in peer_live.items():
             peer = self._peers[ch]
             local = rnd - peer.rnd0
-            reply = wf.encode_round_reply(
-                local, [results[g] for g in live_g], round_schema(per, live_g)
-            )
-            try:
-                peer.stream.send(reply)
-            except TransportError as e:
-                self._fail(peer, e, resumable=True)
-                continue
+            with self.tracer.span("peer.round.reply", round=rnd, channel=ch,
+                                  peer=peer.label, sessions=len(live_g)):
+                reply = wf.encode_round_reply(
+                    local, [results[g] for g in live_g],
+                    round_schema(per, live_g),
+                )
+                try:
+                    peer.stream.send(reply)
+                except TransportError as e:
+                    self._fail(peer, e, resumable=True)
+                    continue
             peer.tally["protocol"] += len(reply)
             # the reply is out: the peer may now complete the round on her
             # side, so retain the outcome context for an idempotent replay

@@ -28,6 +28,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
 from repro.wire.frames import WireError
 
 from .transport import Transport, TransportError, TransportTimeout
@@ -107,10 +108,16 @@ class ChaosTransport(Transport):
     whether the scripted crash fired.
     """
 
-    def __init__(self, inner: Transport, plan: FaultPlan) -> None:
+    def __init__(
+        self, inner: Transport, plan: FaultPlan, tracer=None
+    ) -> None:
         super().__init__()
         self._inner = inner
         self._plan = plan
+        # injected faults mark instants on the shared timeline so a chaos
+        # soak's trace shows each drop/crash next to the ARQ recovery it
+        # provoked; per-datagram, so guarded by ``enabled`` (DESIGN.md §14)
+        self._tracer = tracer if tracer is not None else NULL_TRACER
         self._rng = np.random.default_rng(plan.seed)
         self._held: bytes | None = None    # reorder: datagram awaiting swap
         self.crashed = False
@@ -145,9 +152,14 @@ class ChaosTransport(Transport):
         plan = self._plan
         if plan.crash_after_sends is not None and op >= plan.crash_after_sends:
             self._crash()
+            if self._tracer.enabled:
+                self._tracer.instant("chaos.crash", cat="chaos", op=op,
+                                     silent=plan.crash_silent)
             raise TransportError(f"chaos: scripted crash at send {op}")
         if self._dropped_at(op):
             self.dropped += 1
+            if self._tracer.enabled:
+                self._tracer.instant("chaos.drop", cat="chaos", op=op)
             return
         data = bytes(data)
         if op in plan.corrupt_at or (
@@ -156,11 +168,15 @@ class ChaosTransport(Transport):
             # garble the ARQ header byte: detected, never silent damage
             data = bytes((data[0] ^ 0x80,)) + data[1:] if data else data
             self.corrupted += 1
+            if self._tracer.enabled:
+                self._tracer.instant("chaos.corrupt", cat="chaos", op=op)
         if self._held is not None:
             held, self._held = self._held, None
             self._inner.send(data)       # adjacent swap completes
             self._inner.send(held)
             self.reordered += 1
+            if self._tracer.enabled:
+                self._tracer.instant("chaos.reorder", cat="chaos", op=op)
         elif plan.reorder > 0.0 and float(self._rng.random()) < plan.reorder:
             self._held = data            # hold until the next delivered send
         else:
@@ -168,6 +184,8 @@ class ChaosTransport(Transport):
             if plan.dup > 0.0 and float(self._rng.random()) < plan.dup:
                 self._inner.send(data)
                 self.duplicated += 1
+                if self._tracer.enabled:
+                    self._tracer.instant("chaos.dup", cat="chaos", op=op)
 
     def recv(self, timeout: float | None = None) -> bytes:
         if self.crashed:

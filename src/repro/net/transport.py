@@ -27,6 +27,7 @@ from collections import deque
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
 from repro.wire import frames as wire_frames
 from repro.wire.frames import WireError, split_frame
 from repro.wire.varint import decode_uvarint, encode_uvarint, framed_len
@@ -283,9 +284,14 @@ class ReliableTransport(Transport):
         backoff: float = 2.0,
         jitter: float = 0.1,
         seed: int = 0,
+        tracer=None,
     ) -> None:
         super().__init__()
         self._ch = channel
+        # per-datagram tracing is hot-path: every site below checks
+        # ``_tracer.enabled`` first so the disabled default costs one
+        # attribute read per send/recv (DESIGN.md §14)
+        self._tracer = tracer if tracer is not None else NULL_TRACER
         self._timeout = float(timeout)
         self._max_retries = int(max_retries)
         self._rto_max = max(float(rto_max), float(timeout))
@@ -331,10 +337,20 @@ class ReliableTransport(Transport):
         self._tx_seq += 1
         dgram = bytes((_DATA,)) + encode_uvarint(seq) + bytes(data)
         self.bytes_out += len(data)
+        if self._tracer.enabled:
+            with self._tracer.span("arq.send", cat="arq", seq=seq,
+                                   bytes=len(data)):
+                return self._send_arq(seq, dgram)
+        return self._send_arq(seq, dgram)
+
+    def _send_arq(self, seq: int, dgram: bytes) -> None:
         for attempt in range(self._max_retries):
             self._ch.send(dgram)
             if attempt:
                 self.retransmits += 1
+                if self._tracer.enabled:
+                    self._tracer.instant("arq.retransmit", cat="arq", seq=seq,
+                                         attempt=attempt, rto_ms=self.rto_ms)
             deadline = time.monotonic() + self._attempt_wait()
             while True:
                 remain = deadline - time.monotonic()
@@ -351,6 +367,12 @@ class ReliableTransport(Transport):
         raise TransportError(f"no ACK for seq {seq} after {self._max_retries} tries")
 
     def recv(self, timeout: float | None = None) -> bytes:
+        if self._tracer.enabled:
+            with self._tracer.span("arq.recv", cat="arq"):
+                return self._recv_arq(timeout)
+        return self._recv_arq(timeout)
+
+    def _recv_arq(self, timeout: float | None) -> bytes:
         deadline = None if timeout is None else time.monotonic() + timeout
         while not self._ready:
             remain = None if deadline is None else deadline - time.monotonic()

@@ -45,6 +45,20 @@ from repro.kernels.bin_xorsum import (
 )
 from repro.kernels.ops import bch_decode_batched, sketch_groups
 from repro.kernels.platform import count_retrace
+from repro.obs.trace import NULL_TRACER
+
+# Opt-in profiler hook (DESIGN.md §14): install a Tracer built with
+# jax_profiler=True and every executor dispatch window is annotated inside
+# a ``jax.profiler.trace`` capture.  The default NULL_TRACER hands back a
+# shared no-op context, so the un-opted path costs one with-statement.
+_DISPATCH_TRACER = NULL_TRACER
+
+
+def set_dispatch_tracer(tracer) -> None:
+    """Install (or, with None, remove) the tracer whose ``annotate`` wraps
+    every ``execute_round``/``encode_side`` dispatch."""
+    global _DISPATCH_TRACER
+    _DISPATCH_TRACER = tracer if tracer is not None else NULL_TRACER
 
 
 def _count_trace(name: str, probe) -> None:
@@ -252,7 +266,8 @@ def _jitted_executor(donate: bool):
 def execute_round(*args, **kwargs):
     """Jitted ``_execute_round``; the backend probe for buffer donation is
     deferred to call time so importing this module never initializes JAX."""
-    return _jitted_executor(jax.default_backend() == "tpu")(*args, **kwargs)
+    with _DISPATCH_TRACER.annotate("repro.execute_round"):
+        return _jitted_executor(jax.default_backend() == "tpu")(*args, **kwargs)
 
 
 @functools.lru_cache(maxsize=None)
@@ -265,4 +280,5 @@ def _jitted_side_executor():
 
 def encode_side(*args, **kwargs):
     """Jitted ``_encode_side`` (the per-endpoint half of ``execute_round``)."""
-    return _jitted_side_executor()(*args, **kwargs)
+    with _DISPATCH_TRACER.annotate("repro.encode_side"):
+        return _jitted_side_executor()(*args, **kwargs)

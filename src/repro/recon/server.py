@@ -50,8 +50,10 @@ from repro.kernels.platform import (
     enable_persistent_cache,
     pow2_bucket,
     retrace_count,
+    retrace_counts,
 )
 from repro.kernels.tow_sketch import tow_sketch
+from repro.obs import NULL_TRACER, Recorder
 
 from .engine import execute_round
 from .session import (
@@ -146,6 +148,8 @@ class ReconcileServer:
         interpret: bool | None = None,
         continuous: bool = False,
         degrade: bool = False,
+        recorder: Recorder | None = None,
+        tracer=None,
     ):
         enable_persistent_cache()
         self._interpret = interpret
@@ -162,7 +166,11 @@ class ReconcileServer:
         self._stats: dict = {}
         self._phase0_s = 0.0                   # accrued until the next run()
         self._epoch = 0
-        self._counter_mark: dict = {}          # batch counters at last run end
+        # telemetry (DESIGN.md §14): all run ledgers publish into the
+        # recorder (the `stats` view derives from it) and every phase
+        # boundary is spanned through the tracer (NULL_TRACER = disabled).
+        self.recorder = recorder if recorder is not None else Recorder()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
     def submit(
         self,
@@ -192,9 +200,10 @@ class ReconcileServer:
             self._pending[sid] = (a, b, cfg)
         self._d_known[sid] = d_known
         self._batch = None  # new member: cohort stores must be rebuilt
-        # the discarded batch's counters die with it: reset the stats mark
-        # so the next run's per-epoch ledger diffs against the new batch
-        self._counter_mark = {}
+        # the discarded batch's counters die with it: drop the recorder's
+        # store mark so the next run's per-epoch ledger diffs against the
+        # new batch's zeros, not a dead batch's cumulative counters
+        self.recorder.drop_mark("store")
         return sid
 
     def _flush_phase0(self) -> None:
@@ -207,18 +216,19 @@ class ReconcileServer:
             return
         t0 = time.perf_counter()
         items = sorted(self._pending.items())
-        pairs = [(a, b) for _, (a, b, _) in items]
-        seeds_list = [
-            tow_seeds(derive_seed(cfg.seed, 0x70), cfg.ell)
-            for _, (_, _, cfg) in items
-        ]
-        nums = phase0_numerators(pairs, seeds_list, interpret=self._interpret)
-        for (sid, (a, b, cfg)), num in zip(items, nums):
-            plan = plan_from_estimate(cfg, num, len(a))
-            self._sessions[sid] = ReconSession(
-                sid=sid, plan=plan, state=new_session_state(a, b, plan)
-            )
-        self._pending.clear()
+        with self.tracer.span("server.phase0", sessions=len(items)):
+            pairs = [(a, b) for _, (a, b, _) in items]
+            seeds_list = [
+                tow_seeds(derive_seed(cfg.seed, 0x70), cfg.ell)
+                for _, (_, _, cfg) in items
+            ]
+            nums = phase0_numerators(pairs, seeds_list, interpret=self._interpret)
+            for (sid, (a, b, cfg)), num in zip(items, nums):
+                plan = plan_from_estimate(cfg, num, len(a))
+                self._sessions[sid] = ReconSession(
+                    sid=sid, plan=plan, state=new_session_state(a, b, plan)
+                )
+            self._pending.clear()
         self._phase0_s += time.perf_counter() - t0
 
     @property
@@ -228,8 +238,12 @@ class ReconcileServer:
 
     @property
     def stats(self) -> dict:
-        """Transfer/launch/time ledger of the last ``run`` (DESIGN.md §5)."""
-        return dict(self._stats)
+        """Transfer/launch/time ledger of the last ``run`` (DESIGN.md §5).
+
+        A derived snapshot of the ``server.*`` metrics in the recorder —
+        same keys and values as the pre-obs ad-hoc dict (DESIGN.md §14).
+        """
+        return self.recorder.view("server")
 
     def run(self) -> dict[int, ReconcileResult]:
         """Drive every submitted session to completion; sid -> result.
@@ -252,7 +266,9 @@ class ReconcileServer:
         self._flush_phase0()
         phase0_s, self._phase0_s = self._phase0_s, 0.0
         if self._batch is None:
-            self._batch = SessionBatch(self._sessions, mutable=self._continuous)
+            self._batch = SessionBatch(
+                self._sessions, mutable=self._continuous, tracer=self.tracer
+            )
         batch = self._batch
         prior_store_bytes = batch.store_upload_bytes()
         st = {
@@ -268,29 +284,37 @@ class ReconcileServer:
             "device_s": 0.0,
         }
         by_code = batch.sessions_by_code()
+        tracer = self.tracer
         while True:
             # prime the pipeline: every cohort's round 1, dispatched before
             # the first readback (JAX async dispatch overlaps device work)
             inflight: deque = deque()
             for key in sorted(by_code):
-                plan = batch.plan_cohort(key, by_code[key], 1)
-                if plan is not None:
-                    inflight.append((key, 1, plan, self._dispatch(plan)))
+                with tracer.span("cohort.plan_dispatch", n=key[0], t=key[1], round=1):
+                    plan = batch.plan_cohort(key, by_code[key], 1)
+                    if plan is not None:
+                        inflight.append((key, 1, plan, self._dispatch(plan)))
             while inflight:
                 key, rnd, plan, fut = inflight.popleft()
                 t0 = time.perf_counter()
-                out = jax.device_get(fut)
+                with tracer.span("cohort.collect", cat="device",
+                                 n=key[0], t=key[1], round=rnd):
+                    out = jax.device_get(fut)
                 st["device_s"] += time.perf_counter() - t0
-                self._apply_cohort(plan, out, rnd)
+                with tracer.span("cohort.apply", n=key[0], t=key[1], round=rnd,
+                                 units=len(plan.arrays["row_map"])):
+                    self._apply_cohort(plan, out, rnd)
                 st["rounds"] = max(st["rounds"], rnd)
                 st["cohort_rounds"] += 1
                 st["h2d_round_bytes"] += plan.h2d_bytes
                 st["legacy_h2d_round_bytes"] += plan.legacy_h2d_bytes
                 st["kernel_launches"] += 2   # fused bin launch + sketch matmul
                 st["legacy_kernel_launches"] += 4  # 2x bin + 2x sketch, per side
-                nxt = batch.plan_cohort(key, by_code[key], rnd + 1)
-                if nxt is not None:
-                    inflight.append((key, rnd + 1, nxt, self._dispatch(nxt)))
+                with tracer.span("cohort.plan_dispatch", n=key[0], t=key[1],
+                                 round=rnd + 1):
+                    nxt = batch.plan_cohort(key, by_code[key], rnd + 1)
+                    if nxt is not None:
+                        inflight.append((key, rnd + 1, nxt, self._dispatch(nxt)))
             if not self._degrade:
                 break
             # graceful degradation (DESIGN.md §13): any session that drained
@@ -300,6 +324,9 @@ class ReconcileServer:
             escalated = self._escalate_exhausted()
             if not escalated:
                 break
+            for s in escalated:
+                tracer.instant("server.degrade", sid=s.sid,
+                               escalations=s.escalations)
             st["sessions_degraded"] += len(escalated)
             by_code = batch.sessions_by_code()
 
@@ -310,11 +337,11 @@ class ReconcileServer:
         # O(churn) scatter bytes (DESIGN.md §11)
         st["h2d_store_bytes"] = batch.store_upload_bytes() - prior_store_bytes
         counters = batch.counters()
-        delta = {k: v - self._counter_mark.get(k, 0) for k, v in counters.items()}
+        delta = self.recorder.delta_since_mark("store", counters)
         st["store_builds"] = delta["store_builds"]
         st["store_compactions"] = delta["store_compactions"]
         st["h2d_delta_bytes"] = delta["store_delta_bytes"]
-        self._counter_mark = counters
+        self.recorder.mark("store", counters)
         st["h2d_bytes"] = (
             st["h2d_store_bytes"] + st["h2d_round_bytes"] + st["h2d_delta_bytes"]
         )
@@ -332,7 +359,24 @@ class ReconcileServer:
             # an idempotent re-run that did no work keeps the meaningful
             # ledger of the run that actually drove rounds
             self._stats = st
-        return {s.sid: finalize_result(s.state, s.plan) for s in self._sessions}
+            # the freeze point is the publish point: the legacy `stats`
+            # view derives back from these registry rows (DESIGN.md §14)
+            self.recorder.publish("server", st)
+            self.recorder.publish("store", counters)
+            self.recorder.set("kernels.retraces_total", retrace_count())
+            self.recorder.set("kernels.retraces_by_fn", retrace_counts())
+        results = {s.sid: finalize_result(s.state, s.plan) for s in self._sessions}
+        if tracer.enabled:
+            # per-session attribution for trace_report: bytes/diff/rounds
+            # against the plan's (n, t, d_est) for the Markov comparison
+            for sid, r in results.items():
+                p = self._sessions[sid].plan
+                tracer.instant(
+                    "session.result", sid=sid, rounds=r.rounds,
+                    diff=len(r.diff), bytes=r.bytes_sent, success=r.success,
+                    n=p.n, t=p.t, g=p.g, d_est=p.d_est,
+                )
+        return results
 
     def advance_epoch(
         self,
@@ -369,7 +413,9 @@ class ReconcileServer:
             )
         self._flush_phase0()
         if self._batch is None:
-            self._batch = SessionBatch(self._sessions, mutable=True)
+            self._batch = SessionBatch(
+                self._sessions, mutable=True, tracer=self.tracer
+            )
         muts = mutations or {}
         dk_over = d_known or {}
         unknown = (set(muts) | set(dk_over)) - set(range(len(self._sessions)))
@@ -377,6 +423,8 @@ class ReconcileServer:
             # a typo'd sid must not silently drop the caller's churn
             raise KeyError(f"unknown sid(s) {sorted(unknown)} in epoch advance")
         self._epoch += 1
+        self.tracer.instant("server.epoch_advance", epoch=self._epoch,
+                            mutated=len(muts))
 
         new_sets: dict[int, tuple] = {}
         for s in self._sessions:

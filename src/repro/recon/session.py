@@ -63,6 +63,7 @@ from repro.core.pbs import (
 )
 from repro.kernels.platform import ceil_to as _ceil_to
 from repro.kernels.platform import pow2_bucket
+from repro.obs.trace import NULL_TRACER
 
 
 class StoreCapacityError(RuntimeError):
@@ -397,6 +398,7 @@ class SessionBatch:
         sessions: list[ReconSession],
         sides: tuple = ("a", "b"),
         mutable: bool = False,
+        tracer=None,
     ):
         self.sessions = sessions
         self.sides = tuple(sides)
@@ -407,6 +409,9 @@ class SessionBatch:
         self.store_delta_bytes = 0     # cumulative delta-patch H2D bytes
         self.store_patches = 0         # apply_mutations calls that patched
         self.store_compactions = 0     # capacity overflows -> forced rebuilds
+        # store-lifecycle timeline (DESIGN.md §14): builds span, compactions
+        # mark instants; NULL_TRACER (the default) makes both free
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
     # ---- upload-once element store -------------------------------------
 
@@ -490,6 +495,9 @@ class SessionBatch:
             # session not in the resident build (joined after it): compact
             self._stores.pop(sess.code_key)
             self.store_compactions += 1
+            self.tracer.instant("store.compact", sid=sess.sid,
+                                n=sess.code_key[0], t=sess.code_key[1],
+                                reason="late-join")
             return
         plan = sess.plan
         updates: dict[int, tuple[list, list]] = {}
@@ -506,8 +514,15 @@ class SessionBatch:
         except StoreCapacityError:
             self._stores.pop(sess.code_key, None)
             self.store_compactions += 1
+            self.tracer.instant("store.compact", sid=sess.sid,
+                                n=sess.code_key[0], t=sess.code_key[1],
+                                reason="capacity")
 
     def _build_store(self, n: int, t: int, members: list[ReconSession]) -> CohortStore:
+        with self.tracer.span("store.build", n=n, t=t, members=len(members)):
+            return self._build_store_cold(n, t, members)
+
+    def _build_store_cold(self, n: int, t: int, members: list[ReconSession]) -> CohortStore:
         # per member, per side: ONE gather puts the session's elements in
         # group-sorted slot order (the cached group view's stable argsort),
         # and the per-row counts are the view's bound diffs — the

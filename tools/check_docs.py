@@ -6,6 +6,12 @@ like ``DESIGN.md §5``; this keeps those citations honest: every ``§N``
 referenced next to a DESIGN.md mention must appear as a ``## §N`` heading
 in DESIGN.md, so README links can't silently drift when sections move.
 
+Markdown intra-document links are held to the same bar: every
+``](#anchor)`` in the root docs must resolve to a heading in the same
+file under GitHub's slugification (lowercase, spaces to dashes,
+punctuation dropped), so ``[Observability](#observability)``-style
+cross-references can't dangle when a heading is renamed.
+
 Usage: python tools/check_docs.py   (exit 1 on dangling anchors)
 """
 from __future__ import annotations
@@ -19,6 +25,9 @@ SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
 SCAN_DOCS = ("README.md",)
 CITE_RE = re.compile(r"DESIGN\.md[^§\n]{0,10}((?:§\d+[/,\s–—-]{0,3})+)")
 SECT_RE = re.compile(r"§(\d+)")
+LINK_DOCS = ("README.md", "DESIGN.md", "ROADMAP.md")
+INTRA_LINK_RE = re.compile(r"\]\(#([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.+?)\s*$", re.MULTILINE)
 
 
 def design_anchors() -> set[str]:
@@ -53,19 +62,57 @@ def cited_anchors() -> dict[str, list[str]]:
     return cites
 
 
+def github_slug(heading: str) -> str:
+    """GitHub's markdown heading slug: strip inline code/emphasis markers,
+    lowercase, drop punctuation, spaces to dashes."""
+    text = heading.strip().lower()
+    text = re.sub(r"[`*_]", "", text)
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def check_intra_links() -> tuple[int, list[str]]:
+    """Verify every ``](#anchor)`` in the root docs resolves to a heading
+    slug in the same file; returns (links checked, failure messages)."""
+    checked = 0
+    failures = []
+    for doc in LINK_DOCS:
+        path = ROOT / doc
+        if not path.exists():
+            continue
+        text = path.read_text(errors="replace")
+        slugs = {github_slug(m.group(1)) for m in HEADING_RE.finditer(text)}
+        # inline code and fenced blocks may *mention* link syntax; only
+        # live markdown links are checked
+        text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+        text = re.sub(r"`[^`\n]*`", "", text)
+        for m in INTRA_LINK_RE.finditer(text):
+            checked += 1
+            if m.group(1) not in slugs:
+                failures.append(
+                    f"FAIL: {doc} links to #{m.group(1)} but has no "
+                    f"matching heading"
+                )
+    return checked, failures
+
+
 def main() -> int:
     anchors = design_anchors()
     cites = cited_anchors()
     missing = {sec: files for sec, files in cites.items() if sec not in anchors}
-    if missing:
+    n_links, link_failures = check_intra_links()
+    if missing or link_failures:
         for sec in sorted(missing, key=int):
             files = ", ".join(sorted(set(missing[sec])))
             print(f"FAIL: DESIGN.md has no '## §{sec}' heading, cited by: {files}",
                   file=sys.stderr)
+        for msg in link_failures:
+            print(msg, file=sys.stderr)
         return 1
     total = sum(len(v) for v in cites.values())
     print(f"ok: {total} DESIGN.md citations across {len(cites)} anchors "
-          f"({', '.join('§' + s for s in sorted(cites, key=int))}), all present")
+          f"({', '.join('§' + s for s in sorted(cites, key=int))}), all present; "
+          f"{n_links} intra-doc links resolve")
     return 0
 
 
