@@ -639,6 +639,97 @@ def chaos_bench_point(seed: int, *, size: int = 700, d: int = 60,
     return row, point
 
 
+def tree_bench_point(size: int, d_frac: float, *, seed: int = 0):
+    """Tree front end vs plain PBS when no sane d̂ exists (DESIGN.md §15).
+
+    Builds a pair whose symmetric difference is ``d_frac`` of the union —
+    the cold-start / long-offline regime where the ToW estimator is out of
+    its envelope — and races three contenders on bytes per distinct
+    element:
+
+      * ``tree``: the recursive range-partition walk + leaf PBS sessions
+        (no prior d at all; its ledger is digest frames + PBS bits),
+      * ``honest``: ``core.pbs.reconcile`` told the exact d — the floor
+        no oracle-less protocol can beat,
+      * ``wrongd``: ``core.pbs.reconcile`` with a 10× overestimated d̂ —
+        what actually happens when a stale estimate is trusted (t grows
+        with d̂, so every round ships ~10× the sketch bytes).
+
+    The tree must always beat ``wrongd`` (asserted here, not just gated)
+    and ``--max-tree-vs-honest`` bounds its overhead over the floor.
+    """
+    from repro.tree import TreeConfig, partition_pair, tree_reconcile
+
+    rng = np.random.default_rng(seed + 77)
+    union = int(size)
+    d = max(2, int(d_frac * union))
+    half = d // 2
+    univ = np.unique(
+        rng.choice(1 << 32, size=union, replace=False).astype(np.uint32)
+    )
+    a = univ[: union - d + half]                      # shared + a-only
+    b = np.concatenate([univ[: union - d], univ[union - d + half :]])
+    cfg = PBSConfig(seed=seed)
+
+    t0 = time.perf_counter()
+    tr = tree_reconcile(a, b, cfg, TreeConfig())
+    wall = time.perf_counter() - t0
+    if not tr.success:
+        raise AssertionError("tree walk failed to reconcile")
+    n_diff = max(1, len(tr.diff))
+    tree_bpd = tr.total_bytes / n_diff
+
+    honest = reconcile(a, b, cfg, d_known=d)
+    wrongd = reconcile(a, b, cfg, d_known=10 * d)
+    if not (honest.success and wrongd.success):
+        raise AssertionError("plain-PBS contenders failed")
+    honest_bpd = honest.bytes_sent / max(1, len(honest.diff))
+    wrongd_bpd = wrongd.bytes_sent / max(1, len(wrongd.diff))
+    if tree_bpd >= wrongd_bpd:
+        raise AssertionError(
+            f"tree {tree_bpd:.2f} B/diff does not beat 10x-wrong-d̂ PBS "
+            f"{wrongd_bpd:.2f} B/diff"
+        )
+
+    # warm re-walk: the digest sweep must hit every jit cache
+    _, warm = partition_pair(a, b, TreeConfig())
+    if warm.retraces:
+        raise AssertionError(f"warm re-walk retraced {warm.retraces} kernels")
+
+    st = tr.stats
+    point = {
+        "tree": True,
+        "d_frac": d_frac,
+        "d": d,
+        "size": union,
+        "wall_s": round(wall, 4),
+        "tree_levels": st.levels,
+        "tree_depth": st.depth,
+        "tree_leaves": st.leaves,
+        "tree_launches_per_level": round(st.launches / max(1, st.levels), 2),
+        "tree_digest_bytes": tr.tree_bytes,
+        "pbs_bytes": tr.pbs_bytes,
+        "total_bytes": tr.total_bytes,
+        "bytes_per_diff": round(tree_bpd, 2),
+        "honest_bytes_per_diff": round(honest_bpd, 2),
+        "wrongd_bytes_per_diff": round(wrongd_bpd, 2),
+        "tree_vs_honest": round(tree_bpd / honest_bpd, 3),
+        "retraces_warm": warm.retraces,
+    }
+    row = Row(
+        name=f"recon_throughput/tree_f{d_frac}_U{union}",
+        us_per_call=wall * 1e6,
+        derived=(
+            f"bytes_per_diff={tree_bpd:.2f} "
+            f"honest={honest_bpd:.2f} wrongd={wrongd_bpd:.2f} "
+            f"tree_vs_honest={point['tree_vs_honest']:.2f} "
+            f"levels={st.levels} leaves={st.leaves} "
+            f"launches_per_level={point['tree_launches_per_level']}"
+        ),
+    )
+    return row, point
+
+
 def write_json(points: list[dict], path: str) -> None:
     """BENCH_recon.json: the perf-trajectory artifact CI tracks per PR."""
     doc = {
@@ -703,6 +794,20 @@ def main(argv=None):
                          "lossy channel, and the degradation ladder, "
                          "recording peers_resumed / resume_replay_bytes / "
                          "sessions_degraded (None = skip)")
+    ap.add_argument("--tree", action="store_true",
+                    help="run the tree-front-end point (DESIGN.md §15): a "
+                         "d-frac-of-the-union cold-start pair reconciled "
+                         "through the range-partition walk, recording its "
+                         "bytes/diff against plain PBS at honest and "
+                         "10x-wrong d̂ (the tree must beat the wrong-d̂ "
+                         "contender; asserted)")
+    ap.add_argument("--d-frac", type=float, default=0.5,
+                    help="symmetric-difference fraction of the union for "
+                         "the --tree point (default 0.5)")
+    ap.add_argument("--max-tree-vs-honest", type=float, default=0.0,
+                    help="fail if the --tree point's bytes/diff exceed this "
+                         "multiple of the honest-d̂ plain-PBS floor (CI "
+                         "passes 1.5)")
     ap.add_argument("--trace", type=str, default=None, metavar="PATH",
                     help="run each pair point a third time with repro.obs "
                          "tracing on, export the Chrome trace (Perfetto-"
@@ -766,12 +871,17 @@ def main(argv=None):
         rows.append(row)
         points.append(point)
         print(row.csv(), flush=True)
+    if args.tree:
+        row, point = tree_bench_point(args.size, args.d_frac, seed=args.seed)
+        rows.append(row)
+        points.append(point)
+        print(row.csv(), flush=True)
     if not args.no_json:
         write_json(points, args.json)
         print(f"# wrote {args.json}", flush=True)
     pair_points = [
         p for p in points
-        if not p.get("hub") and not p.get("chaos")
+        if not p.get("hub") and not p.get("chaos") and not p.get("tree")
         and "delta_h2d_frac" not in p
     ]
     hub_points = [p for p in points if p.get("hub")]
@@ -803,6 +913,14 @@ def main(argv=None):
             raise AssertionError(
                 f"measured hub wire bytes/diff {worst:.2f} > allowed "
                 f"{args.max_hub_bytes_per_diff}"
+            )
+    tree_points = [p for p in points if p.get("tree")]
+    if args.max_tree_vs_honest and tree_points:
+        worst = max(p["tree_vs_honest"] for p in tree_points)
+        if worst > args.max_tree_vs_honest:
+            raise AssertionError(
+                f"tree bytes/diff {worst:.2f}x the honest-d̂ floor > allowed "
+                f"{args.max_tree_vs_honest}"
             )
     epoch_points = [p for p in points if "delta_h2d_frac" in p]
     if args.max_delta_h2d_frac and epoch_points:

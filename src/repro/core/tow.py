@@ -28,6 +28,49 @@ from .hashing import derive_seed, mix32
 ELL_DEFAULT = 128
 GAMMA = 1.38
 
+# Fraction of |A| + |B| beyond which a planned d̂ leaves the PBS operating
+# regime: at d approaching the total element count, partition-and-recover
+# stops paying (bytes/diff crosses the ship-the-keys baseline) while a
+# ±3σ estimator error is large in absolute terms, so an underestimate
+# burns the whole round budget before degradation catches it.  The tree
+# front end (repro.tree) is the intended route for such pairs.
+ESTIMATE_LIMIT_FRAC = 0.5
+
+
+class EstimateOutOfRange(RuntimeError):
+    """Planned d̂ exceeds the PBS operating regime for the pair's size.
+
+    Raised on the *estimator* path only (``d_known`` submissions never
+    raise — an operator pinning d explicitly has opted out).  Carries the
+    numbers so callers can reroute the pair through the tree front end;
+    ``classify_error`` maps it to ``error_kind="estimate"``.
+    """
+
+    def __init__(self, d_plan: int, total: int, limit_frac: float, sid=None):
+        self.d_plan = int(d_plan)
+        self.total = int(total)
+        self.limit_frac = float(limit_frac)
+        self.sid = sid
+        at = f" (sid {sid})" if sid is not None else ""
+        super().__init__(
+            f"planned d̂ {self.d_plan} exceeds {limit_frac:g} of the pair's "
+            f"{self.total} elements{at}: outside the PBS estimator regime — "
+            f"route this pair through the tree front end (repro.tree)"
+        )
+
+
+def check_estimate(
+    d_plan: int,
+    total_elems: int,
+    limit_frac: float | None = ESTIMATE_LIMIT_FRAC,
+    sid=None,
+) -> None:
+    """Raise ``EstimateOutOfRange`` when a planned d̂ is out of regime;
+    ``limit_frac=None`` disables the guard (the legacy burn-the-budget
+    behavior)."""
+    if limit_frac is not None and d_plan > limit_frac * total_elems:
+        raise EstimateOutOfRange(d_plan, total_elems, limit_frac, sid=sid)
+
 
 def tow_seeds(seed: int, ell: int = ELL_DEFAULT) -> np.ndarray:
     """The per-sketch seed vector (stream 0xE57) — shared host/kernel."""

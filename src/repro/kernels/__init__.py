@@ -15,6 +15,7 @@ from .ops import (
 )
 from .platform import resolve_interpret
 from .tow_sketch import tow_sketch
+from .tree_digest import tree_digest
 
 __all__ = [
     "bch_decode_batched",
@@ -27,5 +28,6 @@ __all__ = [
     "sketch_groups",
     "tow_estimate",
     "tow_sketch",
+    "tree_digest",
     "xor_bits_to_u32",
 ]

@@ -45,7 +45,13 @@ from repro.core.pbs import (
     plan_from_estimate,
     queue_split,
 )
-from repro.core.tow import estimate_numerator, tow_sketches
+from repro.core.tow import (
+    ESTIMATE_LIMIT_FRAC,
+    check_estimate,
+    estimate_numerator,
+    planned_d,
+    tow_sketches,
+)
 from repro.kernels.ops import bch_decode_batched
 from repro.obs import NULL_TRACER, Recorder
 from repro.recon.engine import encode_side
@@ -56,6 +62,15 @@ from repro.recon.session import (
     advance_session,
     apply_churn,
     degrade_exhausted,
+)
+from repro.tree.partition import (
+    SPAN,
+    TreeConfig,
+    TreeLeaf,
+    leaf_slices,
+    level_digests,
+    level_verdicts,
+    split_ranges,
 )
 from repro.wire import frames as wf
 from repro.wire.frames import ReplyUnit, WireError
@@ -135,12 +150,17 @@ def round_schema(per: dict[int, _SessionRows], live: list[int]):
     ]
 
 
-def serve_phase0(payload: bytes, set_b, cfg: PBSConfig):
+def serve_phase0(payload: bytes, set_b, cfg: PBSConfig,
+                 limit_frac: float | None = ESTIMATE_LIMIT_FRAC):
     """Answer one peer's phase-0 ToW sketch frame (the serving side).
 
     Returns (d_hat reply frame, the pinned ProtocolPlan, estimator ledger
-    bytes covering both framed messages).  Shared by ``BobEndpoint`` and
-    the multi-peer hub so the two serving paths cannot drift.
+    bytes covering both framed messages).  Raises ``EstimateOutOfRange``
+    when the planned d̂ leaves the PBS operating regime for the pair's
+    size (``limit_frac=None`` disables — the legacy burn-the-budget
+    behavior); the tree front end (§15) is the route for such pairs.
+    Shared by ``BobEndpoint`` and the multi-peer hub so the two serving
+    paths cannot drift.
     """
     set_size_a, sk_a = wf.decode_tow_sketch(payload)
     if len(sk_a) != cfg.ell:
@@ -151,11 +171,79 @@ def serve_phase0(payload: bytes, set_b, cfg: PBSConfig):
     num = estimate_numerator(sk_a, sk_b)
     reply = wf.encode_dhat(num)
     est_bytes = _framed_len(payload) + len(reply)
-    return reply, plan_from_estimate(cfg, num, set_size_a), est_bytes
+    plan = plan_from_estimate(cfg, num, set_size_a)
+    check_estimate(
+        planned_d(plan.d_est, cfg.gamma), set_size_a + len(set_b), limit_frac
+    )
+    return reply, plan, est_bytes
+
+
+def tree_walk_state(elems, cfg: PBSConfig, tcfg: TreeConfig) -> dict:
+    """Fresh serving-side tree-walk state (§15): the staged set plus the
+    root frontier, the level clock, and the leaf accumulator."""
+    return {
+        "elems": elems, "cfg": cfg, "tcfg": tcfg,
+        "frontier": [(0, SPAN)], "level": 0, "leaves": [], "bytes": 0,
+    }
+
+
+def serve_tree_frame(payload: bytes, walk: dict, stream, tally: dict,
+                     tracer, interpret: bool | None) -> bool:
+    """Serve one inbound ``MSG_TREE`` digest frame (the serving side's half
+    of one tree-walk level, §15); returns True when the walk completed.
+
+    Digest our own frontier — one batched ``tree_digest`` launch — compute
+    the verdicts (the serving side holds both digest sets), ship them back,
+    and advance the frontier by the shared deterministic split rule.
+    Accumulates ``TREE_LEAF`` ranges into ``walk["leaves"]`` and the framed
+    exchange bytes into both ``tally["tree"]`` and ``walk["bytes"]``.
+    Shared by ``BobEndpoint`` and the multi-peer hub so the two serving
+    paths cannot drift.
+    """
+    elems, tcfg, frontier = walk["elems"], walk["tcfg"], walk["frontier"]
+    level, ell, cnt_a, cs_a, sk_a = wf.decode_tree_digest(payload)
+    if level != walk["level"]:
+        raise WireError(
+            f"tree digest for level {level} at level {walk['level']}"
+        )
+    if ell != tcfg.ell:
+        raise WireError(f"tree digest ell {ell}, configured {tcfg.ell}")
+    if len(cnt_a) != len(frontier):
+        raise WireError(
+            f"tree digest covers {len(cnt_a)} ranges, "
+            f"frontier has {len(frontier)}"
+        )
+    tally["tree"] += _framed_len(payload)
+    walk["bytes"] += _framed_len(payload)
+    with tracer.span("tree.level.dispatch", cat="device",
+                     level=level, ranges=len(frontier)):
+        cnt_b, cs_b, sk_b = level_digests(
+            elems, frontier, tcfg, interpret=interpret
+        )
+    with tracer.span("tree.level.collect", cat="wire",
+                     level=level, ranges=len(frontier)):
+        verdicts, leaf_ds = level_verdicts(
+            level, cnt_a, cs_a, sk_a, cnt_b, cs_b, sk_b, tcfg
+        )
+        reply = wf.encode_tree_verdict(level, verdicts, leaf_ds)
+        stream.send(reply)
+        tally["tree"] += len(reply)
+        walk["bytes"] += len(reply)
+        li = 0
+        for (lo, hi), v in zip(frontier, verdicts):
+            if v == wf.TREE_LEAF:
+                walk["leaves"].append(
+                    TreeLeaf(lo=lo, hi=hi, d_plan=int(leaf_ds[li]))
+                )
+                li += 1
+        walk["frontier"] = split_ranges(frontier, verdicts)
+        walk["level"] = level + 1
+    return not walk["frontier"]
 
 
 def serve_epoch_frame(payload: bytes, expected_epoch: int, pending: dict,
-                      plans: dict, cfg_of, stream, tally: dict) -> bool:
+                      plans: dict, cfg_of, stream, tally: dict,
+                      limit_frac: float | None = ESTIMATE_LIMIT_FRAC) -> bool:
     """Serve one inbound ``MSG_EPOCH`` frame (the serving side's half of
     the epoch handshake, DESIGN.md §11); returns True when the peer owes
     no more epoch frames.
@@ -190,7 +278,9 @@ def serve_epoch_frame(payload: bytes, expected_epoch: int, pending: dict,
         raise WireError("epoch ToW frame with no estimator session pending")
     sid = est[0]
     elems, _ = pending[sid]
-    inner_reply, plan, est_bytes = serve_phase0(ipayload, elems, cfg_of(sid))
+    inner_reply, plan, est_bytes = serve_phase0(
+        ipayload, elems, cfg_of(sid), limit_frac
+    )
     reply = wf.encode_epoch(e, inner_reply)
     stream.send(reply)
     tally["estimator"] += est_bytes
@@ -308,6 +398,7 @@ def stream_wire_stats(
         "verify_frame_bytes": tally["verify"],
         "epoch_envelope_bytes": tally.get("epoch", 0),
         "resume_frame_bytes": tally.get("resume", 0),
+        "tree_frame_bytes": tally.get("tree", 0),
         "retransmits": getattr(t, "retransmits", 0) + carry.get("retransmits", 0),
         "rto_ms": getattr(t, "rto_ms", None),
     }
@@ -326,6 +417,7 @@ class _Endpoint:
         channel: int | None = None,
         continuous: bool = False,
         degrade: bool = False,
+        estimate_limit: float | None = ESTIMATE_LIMIT_FRAC,
         recorder: Recorder | None = None,
         tracer=None,
     ):
@@ -338,12 +430,22 @@ class _Endpoint:
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self._continuous = continuous
         self._degrade = degrade
+        # phase-0 operating-regime guard (§15): planned d̂ beyond this
+        # fraction of |A| + |B| raises EstimateOutOfRange; None disables
+        self._estimate_limit = estimate_limit
         self._sessions: list[ReconSession | None] = []
         self._est_queue: list[int] = []     # sids awaiting phase 0, in order
         self._batch: SessionBatch | None = None
         self._tally = {
-            "estimator": 0, "protocol": 0, "verify": 0, "epoch": 0, "resume": 0,
+            "estimator": 0, "protocol": 0, "verify": 0, "epoch": 0,
+            "resume": 0, "tree": 0,
         }
+        # tree front end (§15): staged (elems, cfg, tcfg) awaiting the walk,
+        # the serving side's in-flight walk state, and the outcome summary
+        self._tree: tuple | None = None
+        self._tree_walk: dict | None = None
+        self.tree_depth = 0
+        self.tree_leaves: int | None = None
         self._d_known: dict[int, int | None] = {}
         self._epoch = 0
         self._epoch_pending: dict[int, tuple] | None = None  # sid -> (set, dk)
@@ -378,9 +480,43 @@ class _Endpoint:
     def _pending_store(self, sid, elems, cfg):
         raise NotImplementedError
 
+    # -- tree front end (DESIGN.md §15) ----------------------------------
+
+    def submit_tree(self, elems, cfg: PBSConfig | None = None,
+                    tree: TreeConfig | None = None) -> None:
+        """Stage this endpoint's side of a tree-phase cold start: the walk
+        runs before phase 0, and every divergent leaf range becomes an
+        ordinary known-d session appended after all regular submits — so
+        the peer must ``submit_tree`` its matching side with the same
+        ``cfg``/``tree`` (positional contract, like ``submit``)."""
+        if self._tree is not None or self._tree_walk is not None:
+            raise RuntimeError("a tree phase is already staged")
+        if self._batch is not None:
+            raise RuntimeError("tree staging after the session batch formed")
+        self._tree = (
+            np.unique(np.asarray(elems, dtype=np.uint32)),
+            cfg or PBSConfig(),
+            tree or TreeConfig(),
+        )
+
+    def _collect_leaves(self, frontier, verdicts, leaf_ds, leaves) -> None:
+        li = 0
+        for (lo, hi), v in zip(frontier, verdicts):
+            if v == wf.TREE_LEAF:
+                leaves.append(TreeLeaf(lo=lo, hi=hi, d_plan=int(leaf_ds[li])))
+                li += 1
+
+    def _install_tree_leaves(self, elems, cfg, leaves, depth: int) -> None:
+        self.tree_depth = depth
+        self.tree_leaves = len(leaves)
+        for sub, leaf in zip(leaf_slices(elems, leaves), leaves):
+            self._submit(sub, cfg, d_known=leaf.d_plan)
+
     # -- round machinery -------------------------------------------------
 
     def _ensure_batch(self) -> SessionBatch:
+        if self._tree is not None or self._tree_walk is not None:
+            raise WireError("round traffic before the tree phase completed")
         if self._est_queue:
             raise WireError("round traffic before phase 0 completed")
         if self._batch is None:
@@ -491,11 +627,13 @@ class AliceEndpoint(_Endpoint):
         channel: int | None = None,
         continuous: bool = False,
         degrade: bool = False,
+        estimate_limit: float | None = ESTIMATE_LIMIT_FRAC,
         recorder: Recorder | None = None,
         tracer=None,
     ):
         super().__init__(transport, interpret=interpret, channel=channel,
                          continuous=continuous, degrade=degrade,
+                         estimate_limit=estimate_limit,
                          recorder=recorder, tracer=tracer)
         self._pending: dict[int, tuple] = {}   # sid -> (a, cfg)
         self._fold_diff = True
@@ -610,10 +748,52 @@ class AliceEndpoint(_Endpoint):
             raise RuntimeError(
                 f"epoch {self._epoch} is staged: call run_epoch, not run"
             )
+        self._tree_phase()
         self._phase0()
         self._ensure_batch()
         self._reset_rounds()
         return self._run_rounds()
+
+    def _tree_phase(self) -> None:
+        """Drive the staged tree walk (§15): one digest->verdict barrier
+        per level — one batched ``tree_digest`` launch a side — then
+        install every divergent leaf range as an ordinary known-d session.
+        The serving peer mirrors the frontier from the same deterministic
+        split rule, so frames never ship range bounds."""
+        if self._tree is None:
+            return
+        elems, cfg, tcfg = self._tree
+        self._tree = None
+        frontier: list[tuple[int, int]] = [(0, SPAN)]
+        leaves: list[TreeLeaf] = []
+        level = 0
+        while frontier:
+            with self.tracer.span("tree.level.dispatch", cat="device",
+                                  level=level, ranges=len(frontier)):
+                cnt, cs, sk = level_digests(
+                    elems, frontier, tcfg, interpret=self._interpret
+                )
+                f = wf.encode_tree_digest(level, cnt, cs, sk)
+                self._stream.send(f)
+                self._tally["tree"] += len(f)
+            with self.tracer.span("tree.level.collect", cat="wire",
+                                  level=level, ranges=len(frontier)):
+                payload = self._expect(wf.MSG_TREE)
+                self._tally["tree"] += _framed_len(payload)
+                got, verdicts, leaf_ds = wf.decode_tree_verdict(payload)
+                if got != level:
+                    raise WireError(
+                        f"tree verdict for level {got} at level {level}"
+                    )
+                if len(verdicts) != len(frontier):
+                    raise WireError(
+                        f"tree verdict covers {len(verdicts)} ranges, "
+                        f"frontier has {len(frontier)}"
+                    )
+                self._collect_leaves(frontier, verdicts, leaf_ds, leaves)
+                frontier = split_ranges(frontier, verdicts)
+            level += 1
+        self._install_tree_leaves(elems, cfg, leaves, max(level - 1, 0))
 
     def _reset_rounds(self) -> None:
         """Re-arm the round loop and resumption state for a fresh epoch."""
@@ -861,11 +1041,13 @@ class BobEndpoint(_Endpoint):
         channel: int | None = None,
         continuous: bool = False,
         degrade: bool = False,
+        estimate_limit: float | None = ESTIMATE_LIMIT_FRAC,
         recorder: Recorder | None = None,
         tracer=None,
     ):
         super().__init__(transport, interpret=interpret, channel=channel,
                          continuous=continuous, degrade=degrade,
+                         estimate_limit=estimate_limit,
                          recorder=recorder, tracer=tracer)
         self._pending: dict[int, tuple] = {}   # sid -> (b, cfg)
         self._rnd = 0                          # rounds whose sketches arrived
@@ -896,7 +1078,9 @@ class BobEndpoint(_Endpoint):
         """Answer frames until the verification exchange completes."""
         while True:
             msg_type, payload = self._stream.recv()
-            if msg_type == wf.MSG_TOW_SKETCH:
+            if msg_type == wf.MSG_TREE:
+                self._handle_tree(payload)
+            elif msg_type == wf.MSG_TOW_SKETCH:
                 self._handle_tow(payload)
             elif msg_type == wf.MSG_EPOCH:
                 self._handle_epoch(payload)
@@ -910,6 +1094,24 @@ class BobEndpoint(_Endpoint):
             else:
                 raise WireError(f"unexpected message type 0x{msg_type:02x}")
 
+    def _handle_tree(self, payload: bytes) -> None:
+        """Answer one level of the peer's tree walk (§15) through the
+        shared ``serve_tree_frame``; when the deterministic split rule
+        empties the frontier, install the accumulated leaf sessions."""
+        if self._tree_walk is None:
+            if self._tree is None:
+                raise WireError("tree frame with no tree phase staged")
+            elems, cfg, tcfg = self._tree
+            self._tree = None
+            self._tree_walk = tree_walk_state(elems, cfg, tcfg)
+        w = self._tree_walk
+        if serve_tree_frame(payload, w, self._stream, self._tally,
+                            self.tracer, self._interpret):
+            self._tree_walk = None
+            self._install_tree_leaves(
+                w["elems"], w["cfg"], w["leaves"], w["level"] - 1
+            )
+
     def _handle_epoch(self, payload: bytes) -> None:
         """One step of the peer's epoch handshake (the shared
         ``serve_epoch_frame`` state machine); once every staged session
@@ -920,7 +1122,7 @@ class BobEndpoint(_Endpoint):
         done = serve_epoch_frame(
             payload, self._epoch, self._epoch_pending, self._epoch_plans,
             lambda sid: self._sessions[sid].plan.cfg,
-            self._stream, self._tally,
+            self._stream, self._tally, self._estimate_limit,
         )
         if done:
             self._install_epoch()
@@ -944,7 +1146,9 @@ class BobEndpoint(_Endpoint):
             raise WireError("ToW sketch frame with no estimator session pending")
         sid = self._est_queue.pop(0)
         b, cfg = self._pending.pop(sid)
-        reply, plan, est_bytes = serve_phase0(payload, b, cfg)
+        reply, plan, est_bytes = serve_phase0(
+            payload, b, cfg, self._estimate_limit
+        )
         self._stream.send(reply)
         self._tally["estimator"] += est_bytes
         self._install(sid, b, plan, append=False)

@@ -48,6 +48,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core.tow import ESTIMATE_LIMIT_FRAC, EstimateOutOfRange
 from repro.core.pbs import (
     PBSConfig,
     ReconcileResult,
@@ -73,6 +74,8 @@ from repro.wire import frames as wf
 from repro.wire.frames import WireError
 from repro.wire.varint import framed_len
 
+from repro.tree.partition import TreeConfig, leaf_slices
+
 from .endpoint import (
     AliceEndpoint,
     decode_side_b_round,
@@ -80,7 +83,9 @@ from .endpoint import (
     round_schema,
     serve_epoch_frame,
     serve_phase0,
+    serve_tree_frame,
     stream_wire_stats,
+    tree_walk_state,
     verify_ack_entries,
 )
 from .resilience import PeerDeadline, classify_error
@@ -100,10 +105,15 @@ class PeerOutcome:
     error: BaseException | None         # eviction cause (failed peers)
     sessions: list[ReconSession]        # the hub's mirrored session states
     wire_stats: dict
-    # typed failure taxonomy (DESIGN.md §13): "deadline" / "wire" /
-    # "transport" / "error" for failed peers; "resumed" / "degraded" for ok
-    # peers that took the recovery paths; None for a clean untouched run
+    # typed failure taxonomy (DESIGN.md §13): "deadline" / "estimate" /
+    # "wire" / "transport" / "error" for failed peers; "resumed" /
+    # "degraded" for ok peers that took the recovery paths; None for a
+    # clean untouched run
     error_kind: str | None = None
+    # tree front end (§15): deepest level the peer's walk reached and the
+    # leaf sessions it admitted; (0, None) for peers that ran no tree phase
+    tree_depth: int = 0
+    tree_leaves: int | None = None
 
 
 class _Peer:
@@ -121,15 +131,28 @@ class _Peer:
         self.verified: list[bool] | None = None
         self.error: BaseException | None = None
         self.tally = {
-            "estimator": 0, "protocol": 0, "verify": 0, "epoch": 0, "resume": 0,
+            "estimator": 0, "protocol": 0, "verify": 0, "epoch": 0,
+            "resume": 0, "tree": 0,
         }
         self.d_known: list[int | None] = []     # per local sid, epoch default
+        # tree front end (§15): staged (set_b, cfg, tcfg) awaiting the
+        # walk, the in-flight walk state, and the outcome summary
+        self.tree_pending: tuple | None = None
+        self.tree_walk: dict | None = None
+        self.tree_depth = 0
+        self.tree_leaves: int | None = None
         self.epoch_pending: dict[int, tuple] | None = None  # sid -> (set_b, dk)
         self.epoch_plans: dict[int, object] = {}
         # -- resumption record (DESIGN.md §13), bounded: one retained round
         # context + two 64-bit digests + the frame-numbering offset
         self.rnd0 = 0                   # global round of this peer's admission
         self.rounds_done = 0            # local barriers applied (peer's clock)
+        # the hub's global epoch at this peer's admission: a mid-life
+        # joiner (tree cold start, §15) opens at local epoch 0 while the
+        # hub's counter is already at E — every protocol-visible epoch for
+        # this peer (MSG_EPOCH ids, transcript seeds, resume frames) is
+        # the local ``hub epoch - epoch_base``
+        self.epoch_base = 0
         self.digest = wf.transcript_digest0(0)
         self.digest_prev = self.digest
         self.inflight_ctx: tuple | None = None  # (live_g, ctx) awaiting outcome
@@ -179,6 +202,7 @@ class HubEndpoint:
         continuous: bool = False,
         resume_window: float = 0.0,
         degrade: bool = False,
+        estimate_limit: float | None = ESTIMATE_LIMIT_FRAC,
         recorder: Recorder | None = None,
         tracer=None,
     ):
@@ -203,6 +227,11 @@ class HubEndpoint:
         # them run out the round budget into ``failed=True``; peers must
         # run matching ``degrade=True`` endpoints.
         self._degrade = degrade
+        # phase-0 operating-regime guard (§15): a joiner whose planned d̂
+        # exceeds this fraction of |A| + |B| is evicted with
+        # error_kind="estimate" (the pair belongs to the tree front end);
+        # None restores the unguarded legacy behaviour
+        self._estimate_limit = estimate_limit
         self._lock = threading.Lock()
         self._peers: dict[int, _Peer] = {}
         self._order: list[int] = []         # admission order of channels
@@ -252,6 +281,38 @@ class HubEndpoint:
             peer.pending.append((elems, cfg or PBSConfig(), d_known))
             peer.d_known.append(d_known)
             return len(peer.pending) - 1
+
+    def submit_tree(
+        self,
+        channel: int,
+        set_b,
+        cfg: PBSConfig | None = None,
+        tree: TreeConfig | None = None,
+    ) -> None:
+        """Stage the hub's side of the peer's tree-phase cold start (§15):
+        the walk runs at the peer's admission, before phase 0, under the
+        same per-peer deadline — a peer that goes silent mid-walk is
+        evicted cleanly (nothing was admitted yet) and may reconnect and
+        re-stage from scratch.  Every divergent leaf range becomes an
+        ordinary known-d session appended after the peer's regular
+        ``submit``s; the peer must ``submit_tree`` its matching side with
+        the same ``cfg``/``tree`` (positional contract)."""
+        peer = self._peers[channel]
+        with self._lock:
+            if peer.admitted:
+                raise RuntimeError(
+                    f"channel {channel} already admitted; stage the tree "
+                    "before serve"
+                )
+            if peer.tree_pending is not None or peer.tree_walk is not None:
+                raise RuntimeError(
+                    f"channel {channel} already has a tree phase staged"
+                )
+            peer.tree_pending = (
+                np.unique(np.asarray(set_b, dtype=np.uint32)),
+                cfg or PBSConfig(),
+                tree or TreeConfig(),
+            )
 
     # -- eviction / retirement -------------------------------------------
 
@@ -405,10 +466,10 @@ class HubEndpoint:
             ch, epoch, a_rnd, a_digest, a_digest_prev = wf.decode_resume(
                 payload
             )
-            if ch != channel or epoch != self._epoch:
+            if ch != channel or epoch != self._epoch - peer.epoch_base:
                 raise WireError(
                     f"resume for channel {ch} epoch {epoch}, expected "
-                    f"channel {channel} epoch {self._epoch}"
+                    f"channel {channel} epoch {self._epoch - peer.epoch_base}"
                 )
             replay = False
             if a_rnd == peer.rounds_done:
@@ -431,7 +492,7 @@ class HubEndpoint:
                     f"ours {peer.rounds_done}"
                 )
             reply = wf.encode_resume(
-                channel, self._epoch, peer.rounds_done,
+                channel, self._epoch - peer.epoch_base, peer.rounds_done,
                 peer.digest, peer.digest_prev,
             )
             stream.send(reply)
@@ -540,7 +601,7 @@ class HubEndpoint:
                 try:
                     if pending[ch](peer, msg_type, payload):
                         del pending[ch]
-                except (TransportError, WireError) as e:
+                except (EstimateOutOfRange, TransportError, WireError) as e:
                     self._fail(peer, e, resumable=resumable)
                     del pending[ch]
             if pending and not progressed and time.monotonic() >= deadline_at:
@@ -550,6 +611,49 @@ class HubEndpoint:
                         f"{self._deadline}s {phase} deadline"
                     ), resumable=resumable)
                 break
+
+    # -- tree front end (DESIGN.md §15) -----------------------------------
+
+    def _tree_handler(self, ch: int):
+        """Frame handler driving one tree-staged joiner's walk through the
+        shared poller: each inbound digest frame is one level served via
+        ``serve_tree_frame``; walk completion appends the leaf sessions to
+        the peer's pending queue and returns True."""
+        def handle(peer, msg_type, payload):
+            if msg_type != wf.MSG_TREE:
+                raise WireError(
+                    f"expected message 0x{wf.MSG_TREE:02x}, "
+                    f"got 0x{msg_type:02x}"
+                )
+            if peer.tree_walk is None:
+                elems, cfg, tcfg = peer.tree_pending
+                peer.tree_pending = None
+                peer.tree_walk = tree_walk_state(elems, cfg, tcfg)
+            w = peer.tree_walk
+            if not serve_tree_frame(payload, w, peer.stream, peer.tally,
+                                    self.tracer, self._interpret):
+                return False
+            peer.tree_walk = None
+            peer.tree_depth = w["level"] - 1
+            peer.tree_leaves = len(w["leaves"])
+            with self._lock:
+                for sub, leaf in zip(
+                    leaf_slices(w["elems"], w["leaves"]), w["leaves"]
+                ):
+                    peer.pending.append((sub, w["cfg"], leaf.d_plan))
+                    peer.d_known.append(leaf.d_plan)
+            st = self._stats
+            st["tree_levels"] = max(st.get("tree_levels", 0), w["level"])
+            st["tree_digest_bytes"] = (
+                st.get("tree_digest_bytes", 0) + w["bytes"]
+            )
+            st["tree_leaves"] = st.get("tree_leaves", 0) + len(w["leaves"])
+            self.tracer.instant(
+                "peer.tree_done", channel=ch, peer=peer.label,
+                levels=w["level"], leaves=len(w["leaves"]), bytes=w["bytes"],
+            )
+            return True
+        return handle
 
     # -- admission (phase 0) ---------------------------------------------
 
@@ -565,12 +669,42 @@ class HubEndpoint:
         barrier.  Returns True iff any peer was admitted."""
         with self._lock:
             joiners = [
-                ch for ch in self._joiners if self._peers[ch].pending
+                ch for ch in self._joiners
+                if self._peers[ch].pending
+                or self._peers[ch].tree_pending is not None
             ]
             self._joiners = [ch for ch in self._joiners if ch not in joiners]
-            pending_of = {ch: list(self._peers[ch].pending) for ch in joiners}
         if not joiners:
             return False
+        # tree phase (§15): drive every tree-staged joiner's whole walk —
+        # one digest->verdict barrier per level, same deadline semantics —
+        # before phase 0; its leaf sessions join the pending queue as
+        # known-d submits, appended after the peer's regular ones
+        tree_chs = [
+            ch for ch in joiners
+            if self._peers[ch].tree_pending is not None
+        ]
+        if tree_chs:
+            # a tree-staged joiner enters the protocol here: register it
+            # for outcome reporting NOW so a mid-walk eviction still
+            # surfaces as a (failed) PeerOutcome instead of vanishing
+            with self._lock:
+                for ch in tree_chs:
+                    if ch not in self._order:
+                        self._order.append(ch)
+                        self._stats["peers"] = (
+                            self._stats.get("peers", 0) + 1
+                        )
+            with self.tracer.span("hub.tree_phase", peers=len(tree_chs)):
+                self._poll_peers(
+                    {ch: self._tree_handler(ch) for ch in tree_chs},
+                    phase="tree",
+                )
+            joiners = [ch for ch in joiners if not self._peers[ch].retired]
+            if not joiners:
+                return False
+        with self._lock:
+            pending_of = {ch: list(self._peers[ch].pending) for ch in joiners}
         plans: dict[int, list] = {}
         est_idx: dict[int, list[int]] = {}      # ch -> indices awaiting ToW
         for ch in joiners:
@@ -595,7 +729,9 @@ class HubEndpoint:
                     )
                 idx = est_idx[ch][0]
                 set_b, cfg, _ = pending_of[ch][idx]
-                reply, plan, est_bytes = serve_phase0(payload, set_b, cfg)
+                reply, plan, est_bytes = serve_phase0(
+                    payload, set_b, cfg, self._estimate_limit
+                )
                 peer.stream.send(reply)
                 peer.tally["estimator"] += est_bytes
                 plans[ch][idx] = plan
@@ -631,10 +767,13 @@ class HubEndpoint:
                     self._joiners.append(ch)
             if not peer.sessions:
                 # first admission arms the resumption record: the frame
-                # numbering base and a transcript opened at this epoch
+                # numbering base and a transcript opened at this epoch —
+                # which is the peer's LOCAL epoch 0 even when the hub's
+                # counter is mid-life (tree cold-start joiners, §15)
                 peer.rnd0 = rnd
                 peer.rounds_done = 0
-                peer.digest = wf.transcript_digest0(self._epoch)
+                peer.epoch_base = self._epoch
+                peer.digest = wf.transcript_digest0(0)
                 peer.digest_prev = peer.digest
                 peer.inflight_ctx = None
                 peer.marks = {k: peer.tally[k] for k in peer.marks}
@@ -728,10 +867,11 @@ class HubEndpoint:
                         f"got 0x{msg_type:02x}"
                     )
                 return serve_epoch_frame(
-                    payload, self._epoch, peer.epoch_pending,
+                    payload, self._epoch - peer.epoch_base,
+                    peer.epoch_pending,
                     peer.epoch_plans,
                     lambda i: peer.sessions[i].plan.cfg,
-                    peer.stream, peer.tally,
+                    peer.stream, peer.tally, self._estimate_limit,
                 )
             return handle
 
@@ -756,7 +896,7 @@ class HubEndpoint:
             # the peer endpoint's _reset_rounds (rnd0 back to 0)
             peer.rnd0 = 0
             peer.rounds_done = 0
-            peer.digest = wf.transcript_digest0(self._epoch)
+            peer.digest = wf.transcript_digest0(self._epoch - peer.epoch_base)
             peer.digest_prev = peer.digest
             peer.inflight_ctx = None
             peer.marks = {k: peer.tally[k] for k in peer.marks}
@@ -807,6 +947,7 @@ class HubEndpoint:
             "peers_resumed": self._stats.get("peers_resumed", 0),
             "resume_replay_bytes": self._stats.get("resume_replay_bytes", 0),
             "sessions_degraded": self._stats.get("sessions_degraded", 0),
+            "tree_levels": 0, "tree_digest_bytes": 0, "tree_leaves": 0,
         }
         prior = self._batch.counters()
         retrace_mark = retrace_count()
@@ -958,6 +1099,8 @@ class HubEndpoint:
                 sessions=self._peers[ch].sessions,
                 wire_stats=self._peers[ch].wire_stats(),
                 error_kind=self._peer_kind(self._peers[ch]),
+                tree_depth=self._peers[ch].tree_depth,
+                tree_leaves=self._peers[ch].tree_leaves,
             )
             for ch in self._order
         }

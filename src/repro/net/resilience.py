@@ -28,6 +28,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core.tow import EstimateOutOfRange
 from repro.obs.trace import NULL_TRACER
 from repro.wire.frames import WireError
 
@@ -47,8 +48,10 @@ def classify_error(err: BaseException | None) -> str | None:
     """Collapse an exception to the ``PeerOutcome.error_kind`` taxonomy.
 
     ``deadline`` — the hub's round-barrier deadline elapsed (or a recv
-    deadline did); ``wire`` — the peer spoke malformed or out-of-protocol
-    bytes; ``transport`` — the channel itself failed (closed pipe, ARQ
+    deadline did); ``estimate`` — phase-0 d̂ left the PBS operating regime
+    (``EstimateOutOfRange``: the pair belongs to the tree front end);
+    ``wire`` — the peer spoke malformed or out-of-protocol bytes;
+    ``transport`` — the channel itself failed (closed pipe, ARQ
     exhaustion, injected crash).  Wrapper exceptions are unwrapped through
     ``__cause__`` so an eviction that re-wraps the root failure still
     classifies by the root.  Anything else is ``"error"``; None stays
@@ -59,6 +62,8 @@ def classify_error(err: BaseException | None) -> str | None:
     while err is not None:
         if isinstance(err, (PeerDeadline, TransportTimeout)):
             return "deadline"
+        if isinstance(err, EstimateOutOfRange):
+            return "estimate"
         if isinstance(err, WireError):
             return "wire"
         if isinstance(err, TransportError):

@@ -86,6 +86,10 @@ def _specs() -> list[MetricSpec]:
         M("server.legacy_h2d_bytes_per_round", "gauge", "bytes", "server", "legacy H2D bytes per round"),
         M("server.h2d_ratio", "gauge", "ratio", "server", "legacy/actual H2D win"),
         M("server.retraces", "counter", "count", "server", "jit traces attributed to the run"),
+        M("server.tree_levels", "gauge", "count", "server", "tree levels walked by the front end"),
+        M("server.tree_digest_bytes", "counter", "bytes", "server", "framed MSG_TREE exchange bytes"),
+        M("server.tree_leaves", "gauge", "count", "server", "divergent ranges handed to PBS"),
+        M("server.tree_bytes_per_diff", "gauge", "ratio", "server", "(tree + PBS bytes) per recovered diff"),
         # -- hub: HubEndpoint.serve's fusion/resilience ledger (DESIGN.md §10/§13)
         M("hub.epoch", "gauge", "count", "hub", "epoch the serve drove"),
         M("hub.rounds", "gauge", "rounds", "hub", "global rounds driven"),
@@ -106,6 +110,9 @@ def _specs() -> list[MetricSpec]:
         M("hub.h2d_delta_bytes", "counter", "bytes", "hub", "O(churn) delta-patch H2D this serve"),
         M("hub.h2d_bytes", "counter", "bytes", "hub", "total H2D this serve"),
         M("hub.retraces", "counter", "count", "hub", "jit traces attributed to the serve"),
+        M("hub.tree_levels", "gauge", "count", "hub", "deepest tree phase driven this serve"),
+        M("hub.tree_digest_bytes", "counter", "bytes", "hub", "framed MSG_TREE exchange bytes this serve"),
+        M("hub.tree_leaves", "counter", "count", "hub", "tree leaf sessions admitted this serve"),
         # -- wire: per-stream measured traffic (DESIGN.md §9/§13)
         M("wire.frames_out", "counter", "count", "wire", "protocol frames sent"),
         M("wire.frames_in", "counter", "count", "wire", "protocol frames received"),
@@ -120,6 +127,7 @@ def _specs() -> list[MetricSpec]:
         M("wire.verify_frame_bytes", "counter", "bytes", "wire", "final verify exchange bytes"),
         M("wire.epoch_envelope_bytes", "counter", "bytes", "wire", "MSG_EPOCH envelope overhead"),
         M("wire.resume_frame_bytes", "counter", "bytes", "wire", "resume handshake/replay/rollback bytes"),
+        M("wire.tree_frame_bytes", "counter", "bytes", "wire", "tree digest/verdict exchange bytes"),
         M("wire.retransmits", "counter", "count", "wire", "ARQ retransmissions"),
         M("wire.rto_ms", "gauge", "ms", "wire", "live adaptive retransmit timeout"),
         # -- endpoint: per-endpoint recovery state (DESIGN.md §13)

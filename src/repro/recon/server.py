@@ -45,7 +45,13 @@ from repro.core.pbs import (
     plan_from_d_known,
     plan_from_estimate,
 )
-from repro.core.tow import tow_seeds
+from repro.core.tow import (
+    ESTIMATE_LIMIT_FRAC,
+    EstimateOutOfRange,
+    check_estimate,
+    planned_d,
+    tow_seeds,
+)
 from repro.kernels.platform import (
     enable_persistent_cache,
     pow2_bucket,
@@ -150,10 +156,16 @@ class ReconcileServer:
         degrade: bool = False,
         recorder: Recorder | None = None,
         tracer=None,
+        estimate_limit: float | None = ESTIMATE_LIMIT_FRAC,
     ):
         enable_persistent_cache()
         self._interpret = interpret
         self._continuous = continuous
+        # estimator sessions whose planned d̂ exceeds this fraction of the
+        # pair's total elements raise EstimateOutOfRange instead of burning
+        # the round budget (None disables; d_known sessions never raise) —
+        # such pairs belong to the tree front end (repro.tree, §15)
+        self._estimate_limit = estimate_limit
         # degrade=True: a session that exhausts its round budget with work
         # left re-plans at a doubled d̂ (graceful degradation, DESIGN.md §13)
         # instead of finishing with success=False; counted per escalation
@@ -225,6 +237,10 @@ class ReconcileServer:
             nums = phase0_numerators(pairs, seeds_list, interpret=self._interpret)
             for (sid, (a, b, cfg)), num in zip(items, nums):
                 plan = plan_from_estimate(cfg, num, len(a))
+                check_estimate(
+                    planned_d(plan.d_est, cfg.gamma),
+                    len(a) + len(b), self._estimate_limit, sid=sid,
+                )
                 self._sessions[sid] = ReconSession(
                     sid=sid, plan=plan, state=new_session_state(a, b, plan)
                 )
@@ -474,6 +490,11 @@ class ReconcileServer:
             for s, num in zip(est, nums):
                 plans[s.sid] = plan_from_estimate(
                     s.plan.cfg, num, len(new_sets[s.sid][0])
+                )
+                check_estimate(
+                    planned_d(plans[s.sid].d_est, s.plan.cfg.gamma),
+                    len(new_sets[s.sid][0]) + len(new_sets[s.sid][1]),
+                    self._estimate_limit, sid=s.sid,
                 )
             self._phase0_s += time.perf_counter() - t0
             for s in est:

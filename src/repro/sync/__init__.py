@@ -21,7 +21,13 @@ The pieces, in dependency order:
 * ``AliceEndpoint`` / ``BobEndpoint`` / ``HubEndpoint`` with
   ``continuous=True`` plus the ``run_pair_epoch`` / ``run_hub_epoch``
   drivers (``repro.net``) — epochs over real transports, reusing live
-  sessions and channels with no re-admission.
+  sessions and channels with no re-admission;
+* ``submit_tree`` on the endpoints + ``tree_reconcile`` (``repro.tree``,
+  DESIGN.md §15) — the cold-start ramp: a brand-new or long-offline
+  replica's first epoch has no sane d̂, so it routes through the tree
+  front end (range digests, recurse into divergence, leaf ranges as
+  known-d sessions) and from the next ``advance_epoch`` on rejoins the
+  ordinary delta path above.
 
 Locked down by tests/test_sync_properties.py (delta path ≡ from-scratch
 rebuild, byte for byte) and tests/test_sync_churn.py (multi-epoch hub soak
@@ -37,6 +43,7 @@ from repro.net import (
     run_pair_epoch,
 )
 from repro.recon.server import ReconcileServer
+from repro.tree import TreeConfig, TreeResult, partition_pair, tree_reconcile
 from repro.recon.session import (
     SessionBatch,
     StoreCapacityError,
@@ -54,11 +61,15 @@ __all__ = [
     "ReconcileServer",
     "SessionBatch",
     "StoreCapacityError",
+    "TreeConfig",
+    "TreeResult",
     "advance_session",
     "apply_churn",
     "decode_epoch",
     "encode_epoch",
     "epoch_overhead_bytes",
+    "partition_pair",
     "run_hub_epoch",
     "run_pair_epoch",
+    "tree_reconcile",
 ]

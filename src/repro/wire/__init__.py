@@ -17,13 +17,17 @@ both envelopes' bytes are transport overhead, never ledger bits.
 ``MSG_RESUME`` (DESIGN.md §13) is the session-resumption handshake: channel
 id, epoch, last completed round barrier, and two rolling FNV-1a transcript
 digests letting a crashed peer re-attach to the hub at its last barrier;
-resume bytes are transport overhead too.
+resume bytes are transport overhead too.  ``MSG_TREE`` (DESIGN.md §15)
+carries the tree-phase per-range digest/verdict exchange the cold-start
+front end runs before PBS admission; tree bytes are transport overhead,
+split from PBS ledger bits exactly like the envelopes.
 """
 from .frames import (
     MSG_DHAT,
     MSG_EPOCH,
     MSG_MUX,
     MSG_RESUME,
+    MSG_TREE,
     MSG_ROUND_OUTCOME,
     MSG_ROUND_REPLY,
     MSG_ROUND_SKETCHES,
@@ -41,6 +45,8 @@ from .frames import (
     decode_round_reply,
     decode_round_sketches,
     decode_tow_sketch,
+    decode_tree_digest,
+    decode_tree_verdict,
     decode_verify,
     decode_verify_ack,
     encode_dhat,
@@ -51,6 +57,8 @@ from .frames import (
     encode_round_reply,
     encode_round_sketches,
     encode_tow_sketch,
+    encode_tree_digest,
+    encode_tree_verdict,
     encode_verify,
     encode_verify_ack,
     epoch_overhead_bytes,
@@ -70,6 +78,7 @@ __all__ = [
     "MSG_EPOCH",
     "MSG_MUX",
     "MSG_RESUME",
+    "MSG_TREE",
     "MSG_ROUND_OUTCOME",
     "MSG_ROUND_REPLY",
     "MSG_ROUND_SKETCHES",
@@ -87,6 +96,8 @@ __all__ = [
     "decode_round_reply",
     "decode_round_sketches",
     "decode_tow_sketch",
+    "decode_tree_digest",
+    "decode_tree_verdict",
     "decode_uvarint",
     "decode_verify",
     "decode_verify_ack",
@@ -98,6 +109,8 @@ __all__ = [
     "encode_round_reply",
     "encode_round_sketches",
     "encode_tow_sketch",
+    "encode_tree_digest",
+    "encode_tree_verdict",
     "encode_uvarint",
     "encode_verify",
     "encode_verify_ack",

@@ -136,6 +136,15 @@ def test_classify_error_taxonomy():
     plain = TransportError("closed")
     plain.__cause__ = ValueError("boom")
     assert classify_error(plain) == "transport"
+    # the estimator regime guard (DESIGN.md §15) is its own class, both
+    # bare and through the eviction wrapper
+    from repro.core.tow import EstimateOutOfRange
+
+    oor = EstimateOutOfRange(900, 1000, 0.5)
+    assert classify_error(oor) == "estimate"
+    wrapped_oor = TransportError("peer: estimate out of range")
+    wrapped_oor.__cause__ = oor
+    assert classify_error(wrapped_oor) == "estimate"
 
 
 # ---------------------------------------------------------------------------
@@ -796,3 +805,149 @@ def test_chaos_soak_20_epochs():
     """The full acceptance soak: 20 epochs, two K=2 crash-restart epochs,
     persistent loss/dup/reorder chaos and a scripted mid-run corruption."""
     _chaos_soak(20, crash_epochs=(1, 8), corrupt_op=260, seed=7)
+
+
+# ---------------------------------------------------------------------------
+# tree-phase crashes (cold-start front end, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+def _tree_pair(seed=23):
+    """A pair whose walk is guaranteed multi-level (d > leaf_d); sorted
+    unique, the form ``leaf_slices`` (and the walk itself) operates on."""
+    a, b = make_pair(600, 120, np.random.default_rng(seed))
+    return np.unique(a), np.unique(b), PBSConfig(seed=seed)
+
+
+def test_mid_tree_crash_evicts_cleanly_then_fresh_channel_readmits():
+    """A peer dying mid-walk is a hard eviction — the tree phase holds no
+    resumption record, so even an armed resume window never suspends it —
+    and the same client re-admits from scratch on a fresh channel."""
+    from repro.tree import TreeConfig, partition_pair
+    from repro.tree.partition import leaf_slices
+
+    a, b, cfg = _tree_pair()
+    _, stats = partition_pair(a, b, TreeConfig())
+    assert stats.levels >= 2, "walk too shallow to crash mid-tree"
+
+    t_a_raw, t_h = InMemoryDuplex.pair()
+    t_a = ChaosTransport(t_a_raw, FaultPlan(crash_after_sends=1))
+    hub = HubEndpoint(resume_window=30.0, recv_deadline=2.0)
+    ch1 = hub.add_peer(t_h, label="treecrash")
+    hub.submit_tree(ch1, b, cfg=cfg)
+    ep1 = AliceEndpoint(t_a, channel=ch1)
+    ep1.submit_tree(a, cfg)
+
+    def drive():
+        with pytest.raises(TransportError):
+            ep1.run()
+
+    th = threading.Thread(target=drive, daemon=True)
+    th.start()
+    outcomes = hub.serve()
+    th.join(timeout=60)
+    assert not th.is_alive()
+    assert not outcomes[ch1].ok
+    assert outcomes[ch1].error_kind == "transport"
+    assert outcomes[ch1].tree_leaves is None     # walk never completed
+    assert not hub._peers[ch1].suspended
+    assert ch1 in hub.stale_channels
+    st = hub.stats
+    assert st["peers_resumed"] == 0
+    assert st["peers_failed_by_kind"] == {"transport": 1}
+
+    # the client reconnects on a brand-new channel and stages the tree
+    # again: full admission, byte-identical to the in-process walk
+    ta2, th2 = InMemoryDuplex.pair()
+    ch2 = hub.add_peer(ta2 if False else th2, label="retry")
+    hub.submit_tree(ch2, b, cfg=cfg)
+    ep2 = AliceEndpoint(ta2, channel=ch2)
+    ep2.submit_tree(a, cfg)
+    state: dict = {}
+
+    def drive2():
+        state["res"] = ep2.run()
+
+    th2d = threading.Thread(target=drive2, daemon=True)
+    th2d.start()
+    outcomes2 = hub.serve()
+    th2d.join(timeout=60)
+    assert not th2d.is_alive()
+    assert outcomes2[ch2].ok
+    assert outcomes2[ch2].tree_leaves == ep2.tree_leaves == len(
+        partition_pair(a, b, TreeConfig())[0]
+    )
+    got = set().union(*(r.diff for r in state["res"].values()))
+    leaves, _ = partition_pair(a, b, TreeConfig())
+    want = set()
+    for a_sub, b_sub, leaf in zip(
+        leaf_slices(a, leaves), leaf_slices(b, leaves), leaves
+    ):
+        want |= reconcile(a_sub, b_sub, cfg, d_known=leaf.d_plan).diff
+    assert got == want
+
+
+def test_post_tree_crash_resumes_via_msg_resume():
+    """Once the walk has settled into leaf PBS sessions, a crash is just
+    an ordinary mid-protocol crash: the peer suspends at the barrier and
+    resumes through MSG_RESUME with no re-walk and no re-admission."""
+    from repro.tree import TreeConfig, partition_pair
+
+    a, b, cfg = _tree_pair(seed=29)
+    _, stats = partition_pair(a, b, TreeConfig())
+    # alice's sends: one digest frame per level, then the PBS rounds —
+    # crash on the second post-tree send, squarely inside the rounds
+    crash_after = stats.levels + 1
+
+    t_a_raw, t_h = InMemoryDuplex.pair()
+    t_a = ChaosTransport(t_a_raw, FaultPlan(crash_after_sends=crash_after))
+    hub = HubEndpoint(resume_window=30.0, recv_deadline=10.0)
+    ch = hub.add_peer(t_h, label="latecrash")
+    hub.submit_tree(ch, b, cfg=cfg)
+    ep = AliceEndpoint(t_a, channel=ch)
+    ep.submit_tree(a, cfg)
+
+    pending: dict = {}
+
+    def on_barrier(rnd):
+        if "t" in pending and hub._peers[ch].suspended:
+            hub.resume_peer(ch, pending.pop("t"))
+
+    hub.on_barrier = on_barrier
+    state: dict = {}
+
+    def drive():
+        try:
+            state["res"] = ep.run()
+            return
+        except TransportError as e:
+            state["crash"] = e
+        na, nh = InMemoryDuplex.pair()
+        pending["t"] = nh
+        ep.resume(na)
+        state["res"] = ep.resume_run()
+
+    th = threading.Thread(target=drive, daemon=True)
+    th.start()
+    outcomes = hub.serve()
+    th.join(timeout=60)
+    assert not th.is_alive()
+    assert "crash" in state, "scripted crash never fired"
+    assert outcomes[ch].ok and outcomes[ch].error_kind == "resumed"
+    assert ep.resumes == 1 and hub.stats["peers_resumed"] == 1
+    assert hub.stats.get("peers_failed", 0) == 0
+    # the walk itself never re-ran: one tree phase's worth of digest bytes
+    assert outcomes[ch].tree_leaves == stats.leaves
+    assert ep.wire_stats["tree_frame_bytes"] == stats.digest_bytes
+    # every leaf session still byte-identical to its standalone oracle
+    leaves, _ = partition_pair(a, b, TreeConfig())
+    from repro.tree.partition import leaf_slices
+
+    for sid, (a_sub, b_sub, leaf) in enumerate(
+        zip(leaf_slices(a, leaves), leaf_slices(b, leaves), leaves)
+    ):
+        oracle = reconcile(a_sub, b_sub, cfg, d_known=leaf.d_plan)
+        r = state["res"][sid]
+        assert r.success and r.diff == oracle.diff
+        assert r.bytes_sent == oracle.bytes_sent
+        assert r.bytes_per_round == oracle.bytes_per_round

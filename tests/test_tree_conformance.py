@@ -1,0 +1,590 @@
+"""Differential conformance for the tree-partitioned front end (§15).
+
+The ISSUE 9 acceptance harness: the recursive range-partition front end for
+unknown/adversarial d must be a *pure router* — every divergent leaf range
+it hands to PBS reconciles byte-identically to a standalone
+``core.pbs.reconcile`` session over that range with the tree's planned d,
+and the union of leaf diffs equals ``true_diff`` over the whole pair — and
+the walk itself must obey its analytic contracts:
+
+* the batched ``tree_digest`` kernel sweep matches the pure-host oracle
+  (``level_digests_ref``) count-for-count, checksum-for-checksum,
+  sketch-for-sketch;
+* the walk terminates with depth within the analytic bound — globally
+  ``KEY_BITS - floor(log2(leaf_d))`` (halving a range also halves its
+  element count ceiling, so the leaf clamp must fire by then) and
+  ``~log2(gamma * d / leaf_d)`` for uniformly spread difference;
+* one kernel launch per level (both sides stacked), and a re-walk over the
+  same pow2 buckets retraces nothing;
+* the wire flow (``submit_tree`` endpoints, hub tree phase, continuous
+  cold-start epochs) ships exactly the framed ``MSG_TREE`` bytes the
+  in-process ``partition_pair`` ledgers, and lands in the same leaves;
+* the phase-0 estimator refuses pairs outside its operating regime with a
+  typed ``EstimateOutOfRange`` (``error_kind="estimate"``) instead of
+  silently under-planning — the regression that motivates the tree.
+
+Seeded variants always run; hypothesis variants skip cleanly without the
+``[test]`` extra.  The adversarial multi-epoch hub soak (one cold-start
+tree joiner per epoch) is marked ``slow`` for CI's non-blocking job.
+"""
+import math
+import threading
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.pbs import PBSConfig, reconcile, true_diff
+from repro.core.simdata import make_pair
+from repro.core.tow import (
+    ESTIMATE_LIMIT_FRAC,
+    EstimateOutOfRange,
+    check_estimate,
+)
+from repro.net import (
+    AliceEndpoint,
+    BobEndpoint,
+    HubEndpoint,
+    InMemoryDuplex,
+    TransportError,
+    classify_error,
+    run_hub,
+    run_pair,
+    run_pair_epoch,
+)
+from repro.tree import (
+    SPAN,
+    TreeConfig,
+    leaf_slices,
+    level_digests,
+    level_digests_ref,
+    partition_pair,
+    tree_reconcile,
+)
+from repro.wire.frames import KEY_BITS
+
+_EMPTY = np.zeros(0, dtype=np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# generators: the adversarial shape zoo
+# ---------------------------------------------------------------------------
+
+
+def _uniq(x):
+    return np.unique(np.asarray(x, dtype=np.uint32))
+
+
+def _shape_pair(shape: str, rng: np.random.Generator):
+    """One (a, b) pair per adversarial shape; keys are uint32."""
+    if shape == "disjoint":
+        univ = rng.choice(1 << 32, size=520, replace=False).astype(np.uint32)
+        return _uniq(univ[:260]), _uniq(univ[260:])
+    if shape == "identical":
+        a = _uniq(rng.choice(1 << 32, size=500, replace=False))
+        return a, a.copy()
+    if shape == "near_total":
+        # d close to |A|: tiny overlap, estimator regime hopeless
+        univ = rng.choice(1 << 32, size=700, replace=False).astype(np.uint32)
+        return _uniq(univ[:380]), _uniq(univ[330:])
+    if shape == "skewed":
+        # the whole key population inside one narrow 2^16-wide band
+        lo = int(rng.integers(0, (1 << 32) - (1 << 16)))
+        band = lo + rng.choice(1 << 16, size=700, replace=False)
+        a = band[:640].astype(np.uint32)
+        b = np.concatenate([band[60:640], band[640:]]).astype(np.uint32)
+        return _uniq(a), _uniq(b)
+    if shape == "clustered":
+        # adversarial clustering: shared keys uniform, ALL difference
+        # packed into one 2^12-wide window — the worst case for a
+        # fixed-split partition
+        shared = rng.choice(1 << 32, size=600, replace=False).astype(np.uint64)
+        lo = int(rng.integers(0, (1 << 32) - (1 << 12)))
+        hot = lo + rng.choice(1 << 12, size=90, replace=False)
+        a = np.concatenate([shared, hot[:45].astype(np.uint64)])
+        b = np.concatenate([shared, hot[45:].astype(np.uint64)])
+        return _uniq(a), _uniq(b)
+    raise AssertionError(shape)
+
+
+_SHAPES = ["disjoint", "identical", "near_total", "skewed", "clustered"]
+
+
+def _assert_leaf_oracle(tr, a, b, cfg):
+    """Every leaf session byte-identical to a standalone PBS session over
+    that range at the tree's planned d (the router contract)."""
+    a, b = _uniq(a), _uniq(b)
+    subs_a = leaf_slices(a, tr.leaves)
+    subs_b = leaf_slices(b, tr.leaves)
+    assert set(tr.results) == set(range(len(tr.leaves)))
+    for sid, (a_sub, b_sub, leaf) in enumerate(
+        zip(subs_a, subs_b, tr.leaves)
+    ):
+        exp = reconcile(a_sub, b_sub, cfg, d_known=leaf.d_plan)
+        got = tr.results[sid]
+        assert got.diff == exp.diff == true_diff(a_sub, b_sub), sid
+        assert got.bytes_per_round == exp.bytes_per_round, sid
+        assert got.bytes_sent == exp.bytes_sent, sid
+        assert got.estimator_bytes == exp.estimator_bytes == 0, sid
+        assert got.rounds == exp.rounds, sid
+        assert got.success == exp.success, sid
+
+
+# ---------------------------------------------------------------------------
+# kernel sweep vs pure-host oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_level_digests_match_host_oracle(seed):
+    rng = np.random.default_rng(seed)
+    elems = _uniq(rng.choice(1 << 32, size=800, replace=False))
+    tcfg = TreeConfig(seed=seed)
+    quarter = SPAN // 4
+    frontiers = [
+        [(0, SPAN)],
+        [(i * quarter, (i + 1) * quarter) for i in range(4)],
+        # includes ranges that hold no elements at all (zero sketch bits)
+        [(i * (SPAN // 16), (i + 1) * (SPAN // 16)) for i in range(0, 16, 2)],
+    ]
+    for frontier in frontiers[:2]:       # these two tile the whole space
+        cnt, _, _ = level_digests(elems, frontier, tcfg)
+        assert int(cnt.sum()) == len(elems)
+    for frontier in frontiers:
+        cnt, cs, sk = level_digests(elems, frontier, tcfg)
+        cnt_r, cs_r, sk_r = level_digests_ref(elems, frontier, tcfg)
+        assert np.array_equal(cnt, cnt_r), frontier
+        assert np.array_equal(cs, cs_r), frontier
+        assert np.array_equal(sk, sk_r), frontier
+
+
+# ---------------------------------------------------------------------------
+# the differential core: tree + PBS vs the oracle, per adversarial shape
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", _SHAPES)
+def test_tree_reconcile_matches_oracle(shape):
+    rng = np.random.default_rng(11)
+    a, b = _shape_pair(shape, rng)
+    cfg = PBSConfig(seed=3)
+    tr = tree_reconcile(a, b, cfg, TreeConfig(seed=5))
+    assert tr.success
+    assert tr.diff == true_diff(a, b)
+    assert tr.tree_bytes == tr.stats.digest_bytes > 0
+    assert tr.pbs_bytes == sum(r.bytes_sent for r in tr.results.values())
+    assert tr.total_bytes == tr.tree_bytes + tr.pbs_bytes
+    _assert_leaf_oracle(tr, a, b, cfg)
+    if shape == "identical":
+        # one level prunes the whole space: no leaves, no PBS traffic
+        assert tr.stats.leaves == 0 and tr.stats.levels == 1
+        assert tr.pbs_bytes == 0 and tr.diff == set()
+    else:
+        assert tr.stats.leaves >= 1
+
+
+def test_depth_within_analytic_bounds():
+    rng = np.random.default_rng(23)
+    tcfg = TreeConfig(seed=1)
+    # the global bound: halving a range halves its element-count ceiling,
+    # so d_plan <= cnt_a + cnt_b forces the leaf clamp to fire by
+    # KEY_BITS - floor(log2(leaf_d)) even under adversarial clustering
+    hard_cap = KEY_BITS - int(math.floor(math.log2(tcfg.leaf_d)))
+    a, b = _shape_pair("clustered", rng)
+    _, stats = partition_pair(a, b, tcfg)
+    assert stats.depth <= hard_cap, (stats.depth, hard_cap)
+    # uniformly spread difference splits geometrically: the residual d̂
+    # per range halves each level, so the walk bottoms out around
+    # log2(gamma * d / leaf_d) (+ a margin for estimation noise)
+    a, b = _shape_pair("disjoint", rng)
+    d = len(true_diff(a, b))
+    _, stats = partition_pair(a, b, tcfg)
+    uniform_bound = math.log2(max(2.0, tcfg.gamma * d / tcfg.leaf_d)) + 3
+    assert stats.depth <= uniform_bound, (stats.depth, uniform_bound)
+
+
+def test_one_launch_per_level_and_warm_rewalk_retraces_nothing():
+    rng = np.random.default_rng(31)
+    a, b = _shape_pair("clustered", rng)
+    tcfg = TreeConfig(seed=2)
+    _, cold = partition_pair(a, b, tcfg)
+    assert cold.launches == cold.levels  # both sides stacked: ONE per level
+    # identical sizes land in the same pow2 buckets: zero recompilations
+    _, warm = partition_pair(a, b, tcfg)
+    assert warm.retraces == 0, warm
+    assert warm.launches == warm.levels
+
+
+@given(seed=st.integers(min_value=0, max_value=2**20))
+@settings(max_examples=5, deadline=None)
+def test_tree_reconcile_random_pairs_hypothesis(seed):
+    # the seed-robust form of the differential contract: the tree's diff
+    # equals the union of standalone PBS oracles over its own leaves (the
+    # oracle itself may false-settle its sum checksum on adversarial
+    # clustered keys — the tree must mirror it byte-for-byte regardless)
+    rng = np.random.default_rng(seed)
+    shape = _SHAPES[seed % len(_SHAPES)]
+    a, b = _shape_pair(shape, rng)
+    cfg = PBSConfig(seed=seed & 0xFFFF)
+    tr = tree_reconcile(a, b, cfg, TreeConfig(seed=seed >> 4))
+    assert tr.success
+    _assert_leaf_oracle(tr, a, b, cfg)
+
+
+# ---------------------------------------------------------------------------
+# wire equivalence: the MSG_TREE flow is byte-identical to the in-process walk
+# ---------------------------------------------------------------------------
+
+
+def test_wire_pair_byte_identical_to_inprocess_walk():
+    rng = np.random.default_rng(41)
+    base = rng.choice(1 << 32, size=1000, replace=False).astype(np.uint32)
+    a = _uniq(base[:640])
+    b = _uniq(base[360:])                    # heavy divergence, d ~ 640
+    oracle = true_diff(a, b)
+    cfg, tcfg = PBSConfig(seed=3), TreeConfig(seed=5)
+
+    ta, tb = InMemoryDuplex.pair()
+    alice = AliceEndpoint(ta)
+    bob = BobEndpoint(tb)
+    alice.submit_tree(a, cfg, tcfg)
+    bob.submit_tree(b, cfg, tcfg)
+    res = run_pair(alice, bob)
+
+    diff = set()
+    pbs_bytes = 0
+    for r in res.values():
+        assert r.success
+        diff |= r.diff
+        pbs_bytes += r.bytes_sent
+    assert diff == oracle
+
+    # the in-process walk is the wire flow's ledger oracle: same leaves,
+    # same depth, and digest_bytes == the framed MSG_TREE tally both
+    # endpoints measured on the wire
+    tr = tree_reconcile(a, b, cfg, tcfg)
+    ws_a, ws_b = alice.wire_stats, bob.wire_stats
+    assert ws_a["tree_frame_bytes"] == ws_b["tree_frame_bytes"]
+    assert ws_a["tree_frame_bytes"] == tr.tree_bytes == tr.stats.digest_bytes
+    assert alice.tree_leaves == bob.tree_leaves == tr.stats.leaves
+    assert alice.tree_depth == bob.tree_depth == tr.stats.depth
+    assert pbs_bytes == tr.pbs_bytes
+    # per-session byte identity against standalone PBS at the planned d
+    subs_a = leaf_slices(a, tr.leaves)
+    subs_b = leaf_slices(b, tr.leaves)
+    for sid, (a_sub, b_sub, leaf) in enumerate(
+        zip(subs_a, subs_b, tr.leaves)
+    ):
+        exp = reconcile(a_sub, b_sub, cfg, d_known=leaf.d_plan)
+        assert res[sid].diff == exp.diff, sid
+        assert res[sid].bytes_per_round == exp.bytes_per_round, sid
+        assert res[sid].bytes_sent == exp.bytes_sent, sid
+        assert res[sid].rounds == exp.rounds, sid
+
+
+def test_hub_tree_peer_coexists_with_plain_peers():
+    rng = np.random.default_rng(51)
+    hub = HubEndpoint(recv_deadline=30.0)
+    alices = {}
+    # peer 1: known-d; peer 2: estimator (in regime)
+    cases = {}
+    for i, dk in ((0, 9), (1, None)):
+        a, b = make_pair(600, 9, np.random.default_rng(100 + i))
+        cfg = PBSConfig(seed=10 + i)
+        ta, tb = InMemoryDuplex.pair()
+        ch = hub.add_peer(tb)
+        hub.submit(ch, b, cfg=cfg, d_known=dk)
+        ep = AliceEndpoint(ta, channel=ch)
+        ep.submit(a, cfg=cfg, d_known=dk)
+        alices[ch] = ep
+        cases[ch] = (a, b, cfg, dk)
+    # peer 3: cold start through the tree phase
+    a3, b3 = _shape_pair("clustered", rng)
+    cfg3, tcfg3 = PBSConfig(seed=12), TreeConfig(seed=7)
+    ta, tb = InMemoryDuplex.pair()
+    ch3 = hub.add_peer(tb, label="coldstart")
+    hub.submit_tree(ch3, b3, cfg=cfg3, tree=tcfg3)
+    ep3 = AliceEndpoint(ta, channel=ch3)
+    ep3.submit_tree(a3, cfg3, tcfg3)
+    alices[ch3] = ep3
+
+    outcomes, results, errors = run_hub(hub, alices)
+    assert not errors
+    assert all(o.ok for o in outcomes.values())
+
+    for ch, (a, b, cfg, dk) in cases.items():
+        exp = reconcile(a, b, cfg, d_known=dk)
+        got = results[ch][0]
+        assert got.diff == exp.diff and got.bytes_sent == exp.bytes_sent, ch
+        assert outcomes[ch].tree_leaves is None  # no tree phase ran
+    # the cold-start peer: union of leaf diffs == whole-pair oracle, and
+    # the walk's shape surfaces through PeerOutcome and the hub stats
+    tr = tree_reconcile(a3, b3, cfg3, tcfg3)
+    diff3 = set()
+    for r in results[ch3].values():
+        assert r.success
+        diff3 |= r.diff
+    assert diff3 == true_diff(a3, b3)
+    assert outcomes[ch3].tree_leaves == tr.stats.leaves
+    assert outcomes[ch3].tree_depth == tr.stats.depth
+    st = hub.stats
+    assert st["tree_leaves"] == tr.stats.leaves
+    assert st["tree_digest_bytes"] == tr.stats.digest_bytes
+    assert st["tree_levels"] == tr.stats.levels
+
+
+def test_continuous_cold_start_rejoins_delta_mode():
+    """Epoch 0 routes through the tree (no sane d̂ exists); the next epoch
+    runs the ordinary delta path with per-leaf estimator rebinding."""
+    rng = np.random.default_rng(62)
+    a, b = _shape_pair("clustered", rng)
+    cfg = PBSConfig(seed=9)
+
+    ta, tb = InMemoryDuplex.pair()
+    alice = AliceEndpoint(ta, continuous=True)
+    bob = BobEndpoint(tb, continuous=True)
+    alice.submit_tree(a, cfg)
+    bob.submit_tree(b, cfg)
+    res0 = run_pair(alice, bob)
+    diff0 = set()
+    for r in res0.values():
+        assert r.success
+        diff0 |= r.diff
+    assert diff0 == true_diff(a, b)
+    assert alice.tree_leaves == bob.tree_leaves >= 1
+
+    # epoch 1: replicas converged (A <- A △ D = B per leaf), small churn on
+    # the largest leaf (so the re-estimated d̂ stays inside the phase-0
+    # operating regime), every leaf session rebound to wire d̂ re-estimation
+    churn = rng.choice(1 << 32, size=6, replace=False).astype(np.uint32)
+    sid_big = max(res0, key=lambda s: len(alice.sessions[s].state.a))
+    rebind = {sid: None for sid in res0}
+    alice.advance_epoch({sid_big: (churn, _EMPTY)}, d_known=rebind)
+    bob.advance_epoch({}, d_known=rebind)
+    res1 = run_pair_epoch(alice, bob)
+    diff1 = set()
+    for r in res1.values():
+        assert r.success
+        diff1 |= r.diff
+    assert diff1 == set(int(x) for x in churn) - set(int(x) for x in b)
+
+
+# ---------------------------------------------------------------------------
+# the estimator's failure envelope (the regression that motivates the tree)
+# ---------------------------------------------------------------------------
+
+
+def test_check_estimate_envelope_unit():
+    # inside the regime: silent pass; outside: typed, number-carrying raise
+    check_estimate(100, 1000, ESTIMATE_LIMIT_FRAC)
+    check_estimate(500, 1000, ESTIMATE_LIMIT_FRAC)   # boundary is inclusive
+    with pytest.raises(EstimateOutOfRange) as ei:
+        check_estimate(501, 1000, ESTIMATE_LIMIT_FRAC, sid=4)
+    assert ei.value.d_plan == 501 and ei.value.total == 1000
+    assert ei.value.limit_frac == ESTIMATE_LIMIT_FRAC and ei.value.sid == 4
+    check_estimate(999999, 10, None)                 # None disables the guard
+    # taxonomy: typed raise -> error_kind="estimate", also through the
+    # eviction wrapper (TransportError with __cause__ = the root)
+    err = EstimateOutOfRange(501, 1000, 0.5)
+    assert classify_error(err) == "estimate"
+    wrapped = TransportError("peer: evicted")
+    wrapped.__cause__ = err
+    assert classify_error(wrapped) == "estimate"
+
+
+def test_estimator_pair_out_of_regime_raises_typed():
+    rng = np.random.default_rng(71)
+    a, b = _shape_pair("near_total", rng)        # d ~ |A|: d̂ >> regime
+    ta, tb = InMemoryDuplex.pair()
+    alice, bob = AliceEndpoint(ta), BobEndpoint(tb)
+    alice.submit(a)
+    bob.submit(b)
+    with pytest.raises(EstimateOutOfRange) as ei:
+        run_pair(alice, bob)
+    assert ei.value.d_plan > ei.value.limit_frac * ei.value.total
+
+    # the same pair with pinned d never raises: d_known opts out
+    d = len(true_diff(a, b))
+    ta, tb = InMemoryDuplex.pair()
+    alice, bob = AliceEndpoint(ta), BobEndpoint(tb)
+    alice.submit(a, d_known=d)
+    bob.submit(b, d_known=d)
+    res = run_pair(alice, bob)
+    assert res[0].success and res[0].diff == true_diff(a, b)
+
+    # estimate_limit=None restores the legacy unguarded behaviour: the
+    # wildly wrong plan completes (degradation soaks it) instead of raising
+    ta, tb = InMemoryDuplex.pair()
+    alice = AliceEndpoint(ta, estimate_limit=None, degrade=True)
+    bob = BobEndpoint(tb, estimate_limit=None, degrade=True)
+    alice.submit(a)
+    bob.submit(b)
+    run_pair(alice, bob)                         # must not raise
+
+
+def test_hub_evicts_out_of_regime_estimator_as_estimate():
+    rng = np.random.default_rng(81)
+    hub = HubEndpoint(recv_deadline=20.0)
+    a_ok, b_ok = make_pair(600, 12, rng)
+    a_bad, b_bad = _shape_pair("near_total", rng)
+
+    alices = {}
+    ta, tb = InMemoryDuplex.pair()
+    ch_ok = hub.add_peer(tb, label="inregime")
+    hub.submit(ch_ok, b_ok)
+    ep = AliceEndpoint(ta, channel=ch_ok)
+    ep.submit(a_ok)
+    alices[ch_ok] = ep
+
+    ta, tb = InMemoryDuplex.pair()
+    ch_bad = hub.add_peer(tb, label="outofregime")
+    hub.submit(ch_bad, b_bad)
+    ep = AliceEndpoint(ta, channel=ch_bad)
+    ep.submit(a_bad)
+    alices[ch_bad] = ep
+
+    outcomes, results, errors = run_hub(hub, alices)
+    assert outcomes[ch_ok].ok and ch_ok not in errors
+    assert results[ch_ok][0].diff == true_diff(a_ok, b_ok)
+    assert not outcomes[ch_bad].ok
+    assert outcomes[ch_bad].error_kind == "estimate"
+    assert hub.stats["peers_failed_by_kind"].get("estimate") == 1
+
+
+# ---------------------------------------------------------------------------
+# the adversarial soak: cold-start joiners against a churning hub (slow tier)
+# ---------------------------------------------------------------------------
+
+
+def _drive_mixed(hub, runners):
+    """One hub serve against per-channel runner callables (run/run_epoch)."""
+    results, errors = {}, {}
+
+    def drive(ch, fn):
+        try:
+            results[ch] = fn()
+        except BaseException as e:  # noqa: BLE001 - surfaced via `errors`
+            errors[ch] = e
+
+    threads = [
+        threading.Thread(target=drive, args=(ch, fn), daemon=True)
+        for ch, fn in runners.items()
+    ]
+    for t in threads:
+        t.start()
+    outcomes = hub.serve()
+    for t in threads:
+        t.join(timeout=120)
+    assert not any(t.is_alive() for t in threads)
+    return outcomes, results, errors
+
+
+@pytest.mark.slow
+def test_adversarial_cold_start_soak():
+    """10 epochs over an 8-peer continuous hub where EVERY epoch admits one
+    fresh cold-start peer through the tree phase while the standing peers
+    churn — survivors stay oracle-identical throughout, joiners' leaf
+    unions equal their whole-pair oracle, and nobody is perturbed."""
+    epochs = 10
+    seed = 17
+    rng = np.random.default_rng(seed)
+    hub = HubEndpoint(recv_deadline=30.0, continuous=True)
+    alices: dict[int, AliceEndpoint] = {}
+    cfgs: dict[int, PBSConfig] = {}
+    dks: dict[int, int | None] = {}
+    tree_chs: set[int] = set()
+
+    for p in range(8):
+        a, b = make_pair(500, 14, np.random.default_rng(seed + 31 * p))
+        dk = None if p % 3 == 0 else 14
+        cfg = PBSConfig(seed=seed + p, n_override=127, t_override=7,
+                        g_override=4)
+        ta, tb = InMemoryDuplex.pair()
+        ch = hub.add_peer(tb, label=f"peer{p}")
+        hub.submit(ch, b, cfg=cfg, d_known=dk)
+        ep = AliceEndpoint(ta, channel=ch, continuous=True)
+        ep.submit(a, cfg=cfg, d_known=dk)
+        alices[ch] = ep
+        cfgs[ch], dks[ch] = cfg, dk
+
+    outcomes, results, errors = _drive_mixed(
+        hub, {ch: ep.run for ch, ep in alices.items()}
+    )
+    assert not errors and all(o.ok for o in outcomes.values())
+
+    for e in range(1, epochs + 1):
+        # standing peers churn; the hub's canonical B and each Alice's A
+        # drift a little every epoch
+        hub_muts, alice_muts = {}, {}
+        for ch, ep in alices.items():
+            if ch in tree_chs:
+                continue                 # joiners ride their pinned leaf d
+            b_cur = hub._peers[ch].sessions[0].state.b
+            hub_muts[ch] = {0: (
+                rng.integers(1, 1 << 32, size=4, dtype=np.uint64)
+                   .astype(np.uint32),
+                rng.permutation(b_cur)[:4],
+            )}
+            a_cur = ep.sessions[0].state.a
+            alice_muts[ch] = {0: (
+                rng.integers(1, 1 << 32, size=2, dtype=np.uint64)
+                   .astype(np.uint32),
+                rng.permutation(a_cur)[:2],
+            )}
+        hub.advance_epoch(hub_muts)
+        for ch, ep in alices.items():
+            ep.advance_epoch(alice_muts.get(ch, {}))
+
+        # one brand-new cold-start peer joins THIS epoch through the tree
+        aj, bj = _shape_pair("clustered", np.random.default_rng(seed + 997 * e))
+        cfgj = PBSConfig(seed=seed + 500 + e)
+        ta, tb = InMemoryDuplex.pair()
+        chj = hub.add_peer(tb, label=f"cold{e}")
+        hub.submit_tree(chj, bj, cfg=cfgj)
+        epj = AliceEndpoint(ta, channel=chj, continuous=True)
+        epj.submit_tree(aj, cfgj)
+
+        runners = {ch: ep.run_epoch for ch, ep in alices.items()}
+        runners[chj] = epj.run
+        outcomes, results, errors = _drive_mixed(hub, runners)
+        assert not errors, (e, errors)
+        assert all(o.ok for o in outcomes.values()), e
+
+        # the joiner: tree walk ran, and its diff equals the union of
+        # standalone PBS oracles over its own leaves (byte-identical
+        # router contract; robust to the oracle's own residual checksum
+        # collisions on adversarially clustered keys)
+        assert outcomes[chj].tree_leaves == epj.tree_leaves >= 1, e
+        diff_j = set()
+        for r in results[chj].values():
+            assert r.success, e
+            diff_j |= r.diff
+        uaj, ubj = _uniq(aj), _uniq(bj)
+        leaves_j, _ = partition_pair(uaj, ubj, TreeConfig())
+        expected_j = set()
+        for a_sub, b_sub, leaf in zip(
+            leaf_slices(uaj, leaves_j), leaf_slices(ubj, leaves_j), leaves_j
+        ):
+            expected_j |= reconcile(
+                a_sub, b_sub, cfgj, d_known=leaf.d_plan
+            ).diff
+        assert diff_j == expected_j, e
+
+        # every standing survivor: byte-identical to the fresh oracle over
+        # this epoch's sets
+        for ch, ep in alices.items():
+            if ch in tree_chs:
+                continue
+            a_e = ep.sessions[0].state.a
+            b_e = hub._peers[ch].sessions[0].state.b
+            r = results[ch][0]
+            oracle = reconcile(a_e, b_e, cfgs[ch], d_known=dks[ch])
+            assert r.success and r.diff == oracle.diff, (e, ch)
+            assert r.bytes_sent == oracle.bytes_sent, (e, ch)
+            assert r.rounds == oracle.rounds, (e, ch)
+
+        alices[chj] = epj
+        tree_chs.add(chj)
+
+    assert hub.stats["peers_failed"] == 0
+    assert len(alices) == 8 + epochs

@@ -422,3 +422,213 @@ def test_epoch_rejects_zero_epoch_nesting_and_trailing():
     )
     assert ch == 5 and msg_type == wf.MSG_EPOCH
     assert wf.decode_epoch(ip)[0] == 3
+
+
+# ---------------------------------------------------------------------------
+# tree-phase frames (cold-start front end, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+def _tree_digest_case(rng):
+    """Random digest-frame contents: counts include empty ranges, sketch
+    values bounded by their own range count (the codec's width contract)."""
+    n_ranges = int(rng.integers(1, 12))
+    ell = int(rng.integers(1, 40))
+    counts = rng.integers(0, 1 << 12, size=n_ranges)
+    counts[rng.integers(0, n_ranges)] = 0          # always one empty range
+    csums = rng.integers(0, 1 << 32, size=n_ranges)
+    sketches = np.zeros((n_ranges, ell), dtype=np.int64)
+    for r in range(n_ranges):
+        c = int(counts[r])
+        if c:
+            sketches[r] = rng.integers(-c, c + 1, size=ell)
+    return int(rng.integers(0, 33)), counts, csums, sketches
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_tree_digest_roundtrip_seeded(seed):
+    rng = np.random.default_rng(seed)
+    level, counts, csums, sketches = _tree_digest_case(rng)
+    buf = wf.encode_tree_digest(level, counts, csums, sketches)
+    payload = _unframe(buf, wf.MSG_TREE)
+    lvl, ell, cnt, cs, sk = wf.decode_tree_digest(payload)
+    assert lvl == level and ell == sketches.shape[1]
+    assert np.array_equal(cnt, counts)
+    assert np.array_equal(cs, csums)
+    assert np.array_equal(sk, sketches)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_tree_digest_roundtrip_hypothesis(seed):
+    rng = np.random.default_rng(seed)
+    level, counts, csums, sketches = _tree_digest_case(rng)
+    buf = wf.encode_tree_digest(level, counts, csums, sketches)
+    lvl, ell, cnt, cs, sk = wf.decode_tree_digest(_unframe(buf, wf.MSG_TREE))
+    assert (lvl, ell) == (level, sketches.shape[1])
+    assert np.array_equal(cnt, counts)
+    assert np.array_equal(cs, csums)
+    assert np.array_equal(sk, sketches)
+
+
+def test_tree_digest_strict_rejection():
+    rng = np.random.default_rng(9)
+    level, counts, csums, sketches = _tree_digest_case(rng)
+    buf = wf.encode_tree_digest(level, counts, csums, sketches)
+    payload = _unframe(buf, wf.MSG_TREE)
+    # a sketch value exceeding its own range count never encodes...
+    bad = sketches.copy()
+    bad[0, 0] = int(counts[0]) + 1
+    with pytest.raises(WireError, match="exceeds"):
+        wf.encode_tree_digest(level, counts, csums, bad)
+    # ...and never decodes: shrink a range's count in a re-encoded frame
+    # so the payload's zigzag values overflow the tightened width contract
+    shrunk = counts.copy()
+    shrunk[int(np.argmax(counts))] = 0
+    ok_vals = np.zeros_like(sketches)
+    mixed = _unframe(
+        wf.encode_tree_digest(level, counts, csums, sketches), wf.MSG_TREE
+    )
+    # splice the original (wider) value section after a header re-encoded
+    # with the shrunk counts: decode must reject, never misread
+    narrow = _unframe(
+        wf.encode_tree_digest(level, shrunk, csums, ok_vals), wf.MSG_TREE
+    )
+    spliced = narrow[: len(narrow) - len(mixed) // 4] + mixed[-(len(mixed) // 4):]
+    with pytest.raises((WireError, WireTruncated)):
+        wf.decode_tree_digest(spliced)
+    # flavor confusion: a verdict payload is not a digest
+    vbuf = wf.encode_tree_verdict(3, [wf.TREE_PRUNE], [])
+    with pytest.raises(WireError, match="flavor"):
+        wf.decode_tree_digest(_unframe(vbuf, wf.MSG_TREE))
+    # trailing bytes and truncation are both fatal
+    with pytest.raises(WireError):
+        wf.decode_tree_digest(payload + b"\x00")
+    with pytest.raises((WireError, WireTruncated)):
+        wf.decode_tree_digest(payload[:-1])
+    # empty sketch rows are meaningless
+    with pytest.raises(WireError, match="empty sketch"):
+        wf.encode_tree_digest(0, [1], [0], np.zeros((1, 0), dtype=np.int64))
+
+
+def _tree_verdict_case(rng):
+    n_ranges = int(rng.integers(1, 24))
+    verdicts = rng.integers(0, 3, size=n_ranges)    # PRUNE/RECURSE/LEAF
+    leaf_ds = [int(rng.integers(1, 1 << 10))
+               for _ in range(int(np.sum(verdicts == wf.TREE_LEAF)))]
+    return int(rng.integers(0, 33)), verdicts, leaf_ds
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_tree_verdict_roundtrip_seeded(seed):
+    rng = np.random.default_rng(seed)
+    level, verdicts, leaf_ds = _tree_verdict_case(rng)
+    buf = wf.encode_tree_verdict(level, verdicts, leaf_ds)
+    lvl, v, ds = wf.decode_tree_verdict(_unframe(buf, wf.MSG_TREE))
+    assert lvl == level
+    assert np.array_equal(v, verdicts)
+    assert list(ds) == leaf_ds
+
+
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_tree_verdict_roundtrip_hypothesis(seed):
+    rng = np.random.default_rng(seed)
+    level, verdicts, leaf_ds = _tree_verdict_case(rng)
+    buf = wf.encode_tree_verdict(level, verdicts, leaf_ds)
+    lvl, v, ds = wf.decode_tree_verdict(_unframe(buf, wf.MSG_TREE))
+    assert lvl == level and np.array_equal(v, verdicts)
+    assert list(ds) == leaf_ds
+
+
+def test_tree_verdict_strict_rejection():
+    # the reserved verdict value 3 never encodes...
+    with pytest.raises(WireError, match="out of range"):
+        wf.encode_tree_verdict(0, [3], [])
+    # ...and never decodes: craft header + a bit pair of 0b11
+    crafted = (
+        encode_uvarint(wf.TREE_VERDICT)
+        + encode_uvarint(0)
+        + encode_uvarint(1)
+        + bytes([0b11000000])
+    )
+    with pytest.raises(WireError, match="out of range"):
+        wf.decode_tree_verdict(crafted)
+    # nonzero padding bits after the packed verdicts are rejected
+    crafted = (
+        encode_uvarint(wf.TREE_VERDICT)
+        + encode_uvarint(0)
+        + encode_uvarint(1)
+        + bytes([0b10100000])        # verdict 2 (leaf) + a stray pad bit
+        + encode_uvarint(5)
+    )
+    with pytest.raises(WireError, match="padding"):
+        wf.decode_tree_verdict(crafted)
+    # leaf d list must match the leaf verdict count, and d >= 1
+    with pytest.raises(WireError, match="does not match"):
+        wf.encode_tree_verdict(0, [wf.TREE_LEAF], [])
+    with pytest.raises(WireError, match=">= 1"):
+        wf.encode_tree_verdict(0, [wf.TREE_LEAF], [0])
+    buf = wf.encode_tree_verdict(2, [wf.TREE_LEAF, wf.TREE_PRUNE], [7])
+    payload = _unframe(buf, wf.MSG_TREE)
+    lvl, v, ds = wf.decode_tree_verdict(payload)
+    assert lvl == 2 and list(ds) == [7]
+    # truncation and trailing bytes are both fatal
+    with pytest.raises((WireError, WireTruncated)):
+        wf.decode_tree_verdict(payload[:-1])
+    with pytest.raises(WireError, match="unconsumed"):
+        wf.decode_tree_verdict(payload + b"\x00")
+    # flavor confusion: a digest payload is not a verdict
+    dbuf = wf.encode_tree_digest(0, [1], [3], np.ones((1, 4), dtype=np.int64))
+    with pytest.raises(WireError, match="flavor"):
+        wf.decode_tree_verdict(_unframe(dbuf, wf.MSG_TREE))
+
+
+def test_tree_envelope_nesting_legality():
+    """MSG_TREE rides inside both envelopes (a hub tree phase is muxed; a
+    future epoch-scoped walk is epoch-wrapped) — while envelope nesting
+    rules stay intact."""
+    inner = wf.encode_tree_verdict(1, [wf.TREE_PRUNE, wf.TREE_RECURSE], [])
+    ch, msg_type, ip = wf.decode_mux(
+        _unframe(wf.encode_mux(4, inner), wf.MSG_MUX)
+    )
+    assert ch == 4 and msg_type == wf.MSG_TREE
+    assert wf.decode_tree_verdict(ip)[0] == 1
+    e, msg_type, ip = wf.decode_epoch(
+        _unframe(wf.encode_epoch(2, inner), wf.MSG_EPOCH)
+    )
+    assert e == 2 and msg_type == wf.MSG_TREE
+    assert wf.decode_tree_verdict(ip)[0] == 1
+
+
+def test_tree_digest_ledger_mirrors_partition_walk():
+    """The framed MSG_TREE byte ledger ``partition_pair`` reports is the
+    exact sum of the per-level digest + verdict frame lengths."""
+    from repro.tree import TreeConfig, partition_pair
+    from repro.tree.partition import (
+        level_digests_ref,
+        level_verdicts,
+        split_ranges,
+        SPAN,
+    )
+
+    rng = np.random.default_rng(5)
+    univ = rng.choice(1 << 32, size=500, replace=False).astype(np.uint32)
+    a, b = np.unique(univ[:300]), np.unique(univ[180:])
+    tcfg = TreeConfig(seed=3)
+    _, stats = partition_pair(a, b, tcfg)
+
+    total = 0
+    frontier = [(0, SPAN)]
+    level = 0
+    while frontier:
+        cnt_a, cs_a, sk_a = level_digests_ref(a, frontier, tcfg)
+        cnt_b, cs_b, sk_b = level_digests_ref(b, frontier, tcfg)
+        verdicts, leaf_ds = level_verdicts(
+            level, cnt_a, cs_a, sk_a, cnt_b, cs_b, sk_b, tcfg
+        )
+        total += len(wf.encode_tree_digest(level, cnt_a, cs_a, sk_a))
+        total += len(wf.encode_tree_verdict(level, verdicts, leaf_ds))
+        frontier = split_ranges(frontier, verdicts)
+        level += 1
+    assert stats.digest_bytes == total > 0
