@@ -44,6 +44,15 @@ full PBS protocol through the device-resident batched path, and reports
     session completed by graceful degradation — recording
     ``peers_resumed``, ``resume_replay_bytes`` and ``sessions_degraded``
     into the JSON artifact with per-epoch oracle byte-identity asserted,
+  * with ``--wrongd``: the rateless-recovery point (DESIGN.md §16) — the
+    same pairs planned with a 10×-underestimated d̂ and ``rateless=True``,
+    recovering every overloaded group through incremental ``MSG_PARITY``
+    syndromes instead of the legacy doubled-d̂ re-plan — asserting zero
+    degraded sessions, store builds unchanged vs the honest plan, warm
+    ``retraces == 0`` and per-session oracle byte-identity, and recording
+    the measured wire bytes/diff against the honestly-planned floor
+    (``wrongd_vs_honest``, gated by ``--max-wrongd-vs-honest``; CI passes
+    1.6 — before the rateless ladder this ratio was ~4.3),
   * with ``--peers N1,N2,...``: a multi-peer hub sweep (DESIGN.md §10) —
     N real ``AliceEndpoint`` peers against one ``HubEndpoint`` over
     mux-enveloped in-memory transports — recording peers/s, the fused
@@ -267,6 +276,124 @@ def bench_point(sessions: int, d: int, size: int, *, check: bool = True, seed: i
             )
             + f"success={n_ok}/{sessions} "
             + (f"max_byte_dev={max_dev:.4%}" if check else "unchecked")
+        ),
+    )
+    return row, point
+
+
+def wrongd_bench_point(sessions: int, d: int, size: int, *, seed: int = 0,
+                       factor: int = 10):
+    """Rateless recovery under a ``factor``×-underestimated d̂
+    (DESIGN.md §16).
+
+    Every group overloads its round-1 decode budget; with
+    ``rateless=True`` the receiver ships only the incremental BCH
+    syndromes S_{2t+1}..S_{2t'-1} in ``MSG_PARITY`` frames and re-decodes
+    the concatenation at t' — no settled bits re-sent, no store rebuilt,
+    no session through the degradation ladder.  Asserts all of that (plus
+    warm ``retraces == 0`` and per-session byte-identity to the
+    ``core.pbs.reconcile`` oracle, whose ladder is the spec), measures
+    the wire pair both wrong-d̂ and honestly planned, and reports the
+    bytes/diff ratio the ``--max-wrongd-vs-honest`` gate inspects.
+    """
+    pairs = [
+        make_pair(size, d, np.random.default_rng(seed + 7919 * s + d))
+        for s in range(sessions)
+    ]
+    d_hat = max(1, d // factor)
+
+    def _cfg(s):
+        return PBSConfig(seed=seed + s, rateless=True)
+
+    def _serve(dk):
+        srv = ReconcileServer(degrade=True)
+        for s, (a, b) in enumerate(pairs):
+            srv.submit(a, b, cfg=_cfg(s), d_known=dk)
+        t0 = time.perf_counter()
+        return srv, srv.run(), time.perf_counter() - t0
+
+    # the honest floor: identical pairs, exact d̂ — its store-build count
+    # is the budget the recovery path must not exceed
+    honest_srv, _, _ = _serve(d)
+    # wrong-d̂ cold + warm passes (warm is the reported number)
+    cold_srv, _, cold_wall = _serve(d_hat)
+    srv, results, wall = _serve(d_hat)
+    st = srv.stats
+    if st["retraces"]:
+        raise AssertionError(
+            f"warm wrong-d̂ pass recompiled {st['retraces']} kernel signatures"
+        )
+    if st["sessions_degraded"]:
+        raise AssertionError(
+            f"{st['sessions_degraded']} sessions took the from-scratch "
+            "re-plan ladder despite the rateless path"
+        )
+    if not st["parity_extensions"]:
+        raise AssertionError("wrong-d̂ point fired no parity extensions")
+    if st["store_builds"] != honest_srv.stats["store_builds"]:
+        raise AssertionError(
+            f"recovery rebuilt stores: {st['store_builds']} builds vs "
+            f"{honest_srv.stats['store_builds']} under the honest plan"
+        )
+    for s, (a, b) in enumerate(pairs):
+        oracle = reconcile(a, b, _cfg(s), d_known=d_hat)
+        if (results[s].bytes_per_round != oracle.bytes_per_round
+                or results[s].diff != oracle.diff):
+            raise AssertionError(
+                f"sid {s}: wrong-d̂ engine result diverged from core.pbs"
+            )
+
+    def _wire(dk):
+        ta, tb = InMemoryDuplex.pair()
+        alice, bob = AliceEndpoint(ta), BobEndpoint(tb)
+        for s, (a, b) in enumerate(pairs):
+            alice.submit(a, cfg=_cfg(s), d_known=dk)
+            bob.submit(b, cfg=_cfg(s), d_known=dk)
+        wres = run_pair(alice, bob)
+        bpd = alice.wire_stats["protocol_frame_bytes"] / max(
+            1, sum(len(wres[s].diff) for s in range(sessions)))
+        return alice, wres, bpd
+
+    alice_w, wres, wrongd_bpd = _wire(d_hat)
+    for s in range(sessions):
+        if wres[s].bytes_per_round != results[s].bytes_per_round:
+            raise AssertionError(
+                f"sid {s}: measured wrong-d̂ wire ledger diverged from "
+                "the engine accounting"
+            )
+    if alice_w.sessions_degraded or not alice_w.parity_extensions:
+        raise AssertionError("wire pair did not recover ratelessly")
+    _, _, honest_bpd = _wire(d)
+    ratio = wrongd_bpd / honest_bpd
+
+    point = {
+        "wrongd": True,
+        "sessions": sessions,
+        "d": d,
+        "d_hat": d_hat,
+        "size": size,
+        "wall_s": round(wall, 4),
+        "cold_wall_s": round(cold_wall, 4),
+        "sessions_per_s": round(sessions / wall, 3),
+        "retraces_cold": cold_srv.stats["retraces"],
+        "retraces_warm": st["retraces"],
+        "rounds": st["rounds"],
+        "parity_extensions": st["parity_extensions"],
+        "sessions_degraded": st["sessions_degraded"],
+        "store_builds": st["store_builds"],
+        "wire_bytes_per_diff": round(wrongd_bpd, 2),
+        "honest_wire_bytes_per_diff": round(honest_bpd, 2),
+        "wrongd_vs_honest": round(ratio, 3),
+    }
+    row = Row(
+        name=f"recon_throughput/wrongd_S{sessions}_d{d}",
+        us_per_call=wall * 1e6 / sessions,
+        derived=(
+            f"wire_bytes_per_diff={wrongd_bpd:.2f} "
+            f"honest={honest_bpd:.2f} "
+            f"wrongd_vs_honest={ratio:.2f} "
+            f"parity_extensions={st['parity_extensions']} "
+            f"sessions_degraded=0 store_builds={st['store_builds']}"
         ),
     )
     return row, point
@@ -735,7 +862,7 @@ def write_json(points: list[dict], path: str) -> None:
     doc = {
         "bench": "recon_throughput",
         "grid": [
-            {k: p[k] for k in ("sessions", "peers", "d") if k in p}
+            {k: p[k] for k in ("sessions", "peers", "d", "d_hat") if k in p}
             for p in points
         ],
         "points": points,
@@ -755,6 +882,9 @@ def run():
         row, point = bench_point(8, d, size=2000, check=True)
         rows.append(row)
         points.append(point)
+    row, point = wrongd_bench_point(2, 100, size=2000)
+    rows.append(row)
+    points.append(point)
     row, point = hub_bench_point(4, 10, size=1200)
     rows.append(row)
     points.append(point)
@@ -794,6 +924,18 @@ def main(argv=None):
                          "lossy channel, and the degradation ladder, "
                          "recording peers_resumed / resume_replay_bytes / "
                          "sessions_degraded (None = skip)")
+    ap.add_argument("--wrongd", action="store_true",
+                    help="run the rateless-recovery point (DESIGN.md §16): "
+                         "each d in the grid re-planned with a 10x-under"
+                         "estimated d̂ and rateless=True, asserting zero "
+                         "degraded sessions / unchanged store builds / "
+                         "oracle byte-identity and recording the measured "
+                         "wire bytes/diff vs the honest plan")
+    ap.add_argument("--max-wrongd-vs-honest", type=float, default=0.0,
+                    help="fail if any --wrongd point's wire bytes/diff "
+                         "exceed this multiple of the honestly-planned "
+                         "floor (CI passes 1.6; the legacy re-plan ladder "
+                         "sat at ~4.3)")
     ap.add_argument("--tree", action="store_true",
                     help="run the tree-front-end point (DESIGN.md §15): a "
                          "d-frac-of-the-union cold-start pair reconciled "
@@ -858,6 +1000,13 @@ def main(argv=None):
                 rows.append(row)
                 points.append(point)
                 print(row.csv(), flush=True)
+    if args.wrongd:
+        for d in grid_d:
+            row, point = wrongd_bench_point(min(grid_s), d, args.size,
+                                            seed=args.seed)
+            rows.append(row)
+            points.append(point)
+            print(row.csv(), flush=True)
     if args.epochs:
         for sessions in grid_s:
             row, point = epoch_bench_point(sessions, args.size, args.epochs,
@@ -882,7 +1031,7 @@ def main(argv=None):
     pair_points = [
         p for p in points
         if not p.get("hub") and not p.get("chaos") and not p.get("tree")
-        and "delta_h2d_frac" not in p
+        and not p.get("wrongd") and "delta_h2d_frac" not in p
     ]
     hub_points = [p for p in points if p.get("hub")]
     if args.min_sessions_per_s:
@@ -913,6 +1062,14 @@ def main(argv=None):
             raise AssertionError(
                 f"measured hub wire bytes/diff {worst:.2f} > allowed "
                 f"{args.max_hub_bytes_per_diff}"
+            )
+    wrongd_points = [p for p in points if p.get("wrongd")]
+    if args.max_wrongd_vs_honest and wrongd_points:
+        worst = max(p["wrongd_vs_honest"] for p in wrongd_points)
+        if worst > args.max_wrongd_vs_honest:
+            raise AssertionError(
+                f"wrong-d̂ wire bytes/diff {worst:.2f}x the honest floor "
+                f"> allowed {args.max_wrongd_vs_honest}"
             )
     tree_points = [p for p in points if p.get("tree")]
     if args.max_tree_vs_honest and tree_points:

@@ -71,6 +71,44 @@ def sketch_xor(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     return np.bitwise_xor(a, b)
 
 
+def sketch_increment(code: BCHCode, positions: np.ndarray, t0: int) -> np.ndarray:
+    """The incremental odd syndromes S_{2*t0+1} .. S_{2t-1} of a bitmap.
+
+    Prefix compatibility (the rateless invariant, DESIGN.md §16): for any
+    t0 < t over the same field,
+
+        concat(sketch at t0, sketch_increment(t0)) == sketch at t
+
+    because syndrome j never depends on the sketch capacity it ships in.
+    ``MSG_PARITY`` frames carry exactly these columns.
+    """
+    gf = code.field
+    if not 0 <= t0 <= code.t:
+        raise ValueError(f"increment base t0={t0} out of range for t={code.t}")
+    syn = np.zeros(code.t - t0, dtype=np.int64)
+    if len(positions):
+        pos = np.asarray(positions, dtype=np.int64)[:, None]
+        j = np.arange(t0, code.t, dtype=np.int64)[None, :]
+        vals = gf.pow_alpha(pos * (2 * j + 1))
+        syn = np.bitwise_xor.reduce(vals, axis=0)
+    return syn
+
+
+def decode_extended(n: int, prefix: np.ndarray, increment: np.ndarray):
+    """Decode a difference bitmap from a cached sketch prefix plus the
+    incremental syndromes a ``MSG_PARITY`` extension delivered.
+
+    Concatenation *is* the fresh (n, t') sketch — no re-derivation, no
+    re-sent bits — so this is byte-identical to ``decode_sketch`` over a
+    sketch encoded at t' from scratch (property-tested in
+    tests/test_rateless.py).  Returns (ok, positions).
+    """
+    prefix = np.asarray(prefix, dtype=np.int64)
+    increment = np.asarray(increment, dtype=np.int64)
+    t2 = len(prefix) + len(increment)
+    return decode_sketch(bch_code(n, t2), np.concatenate([prefix, increment]))
+
+
 def _expand_syndromes(code: BCHCode, odd_syn: np.ndarray) -> np.ndarray:
     """Full S_1..S_2t from odd syndromes via S_{2k} = S_k^2 (char-2 Frobenius)."""
     gf = code.field

@@ -128,6 +128,26 @@ class GF2m:
         return self.to_bits(powers).reshape(self.n, t * self.m)
 
     @functools.lru_cache(maxsize=None)
+    def syndrome_matrix_range(self, t0: int, t1: int) -> np.ndarray:
+        """(n, (t1-t0)*m) column slice of ``syndrome_matrix``: syndromes
+        S_{2*t0+1} .. S_{2*t1-1} only.
+
+        Because ``syndrome_matrix(t)[:, j*m:(j+1)*m]`` depends only on j —
+        never on t — the (n, t) sketch is a strict prefix of the (n, t')
+        sketch for any t' > t, and
+        ``hstack(syndrome_matrix(t0), syndrome_matrix_range(t0, t1)) ==
+        syndrome_matrix(t1)`` exactly.  This is what lets the rateless
+        recovery path (DESIGN.md §16) ship only the *incremental* syndromes
+        on BCH overload and decode at t1 against the cached prefix.
+        """
+        if not 0 <= t0 <= t1:
+            raise ValueError(f"bad syndrome range [{t0}, {t1})")
+        i = np.arange(self.n, dtype=np.int64)[:, None]
+        j = np.arange(t0, t1, dtype=np.int64)[None, :]
+        powers = self.pow_alpha(i * (2 * j + 1))
+        return self.to_bits(powers).reshape(self.n, (t1 - t0) * self.m)
+
+    @functools.lru_cache(maxsize=None)
     def chien_matrix(self, t: int) -> np.ndarray:
         """((t+1)*m, n*m) binary matrix C for whole-field polynomial evaluation.
 

@@ -33,7 +33,13 @@ from dataclasses import dataclass, field, replace
 
 import numpy as np
 
-from .bch import BCHCode, batched_decode, sketch_from_positions
+from .bch import (
+    BCHCode,
+    batched_decode,
+    bch_code,
+    decode_sketch,
+    sketch_from_positions,
+)
 from .hashing import derive_seed, hash_to_range
 from .markov import optimize_parameters
 from .tow import (
@@ -48,6 +54,32 @@ from .tow import (
 
 KEY_BITS = 32
 _MOD = np.uint64(1) << np.uint64(KEY_BITS)
+
+# Degradation-ladder caps (DESIGN.md §13/§16) — the single source of truth
+# threaded through session/server/endpoint/hub as keyword defaults, so the
+# wire-separated sides can never drift on when a session stops escalating.
+#
+# MAX_ESCALATIONS caps the legacy from-scratch re-plan ladder (doubled d̂
+# per rung).  MAX_PARITY_EXTENSIONS caps the in-round rateless ladder:
+# level e extends a unit's BCH capacity to min(t << e, (n-1)//2), so four
+# levels reach 16t — enough headroom for a 10x-underestimated d̂ before
+# the legacy ladder is consulted at all.
+MAX_ESCALATIONS = 3
+MAX_PARITY_EXTENSIONS = 4
+
+
+def parity_extension_t(t: int, level: int, n: int) -> int:
+    """Extended BCH capacity at rateless-extension level ``level`` (0 = the
+    round's base sketch).  Deterministic from the cohort's (n, t) alone —
+    both wire sides derive the identical t-ladder with zero negotiation.
+    Doubling per level telescopes: a unit that decodes at level e has
+    shipped exactly t_e * m syndrome bits total (prefix + increments ==
+    the fresh (n, t_e) sketch), so no parity byte is ever wasted on a unit
+    that eventually decodes.  Capped at (n-1)//2, where BM decoding runs
+    out of syndrome equations; a level where the cap stops growth is the
+    ladder's exhaustion signal.
+    """
+    return min(t << level, (n - 1) // 2)
 
 
 def checksum(elems: np.ndarray) -> int:
@@ -68,6 +100,12 @@ class PBSConfig:
     n_override: int | None = None  # pin (n, t) instead of optimizing
     t_override: int | None = None
     g_override: int | None = None
+    # rateless recovery (DESIGN.md §16): on BCH overload, extend the unit's
+    # sketch in-round with incremental MSG_PARITY syndromes (prefix-
+    # compatible, zero re-sent bits) before falling back to the 3-way
+    # split.  Off by default: every success path stays byte-identical to
+    # the paper's accounting, and overload handling matches §3.2 verbatim.
+    rateless: bool = False
 
 
 @dataclass
@@ -341,6 +379,68 @@ def segmented_sketches(code, slot_of_pos, positions, n_units):
     return out
 
 
+def segmented_sketches_range(code, t0, slot_of_pos, positions, n_units):
+    """Incremental BCH syndromes S_{2*t0+1}..S_{2t-1} for all units at once.
+
+    The ``[t0, code.t)`` column slice of ``segmented_sketches`` — the prefix
+    property (``gf2m.syndrome_matrix_range``) makes concatenating this onto
+    a cached ``segmented_sketches`` prefix bit-identical to sketching at
+    ``code.t`` directly.  This is the oracle's ``MSG_PARITY`` payload
+    (DESIGN.md §16)."""
+    out = np.zeros((n_units, code.t - t0), dtype=np.int64)
+    if len(positions):
+        gf = code.field
+        j = np.arange(t0, code.t, dtype=np.int64)[None, :]
+        vals = gf.pow_alpha(positions[:, None] * (2 * j + 1))  # (P, t-t0)
+        np.bitwise_xor.at(out, slot_of_pos, vals)
+    return out
+
+
+def rateless_extend(n, t, m, sk_diff, ok, positions, incremental):
+    """In-round rateless recovery ladder (DESIGN.md §16), the shared oracle.
+
+    Instead of surrendering every failed BCH decode to the 3-way split,
+    level e = 1.. re-decodes the *same* round bitmaps at
+    t_e = ``parity_extension_t(t, e, n)``: ``incremental(t0, t1)`` supplies
+    the (U, t1-t0) incremental *diff* syndromes S_{2*t0+1}..S_{2*t1-1} for
+    every unit, which concatenate onto the cached prefix — zero re-sent
+    sketch bits.  The ladder stops when nothing fails, the level cap is
+    reached, or the code cap (n-1)//2 stops t from growing.
+
+    Returns (ok, positions, ext_bits, levels): merged outcomes plus the
+    Formula-(1) ledger bits — per level, U_e failing units pay
+    U_e * (Δt_e·m + 1), exactly what ``MSG_PARITY`` and its extension reply
+    measure on the wire (repro.wire.parity_ledger_bits + the reply flags).
+    """
+    ok = np.asarray(ok, dtype=bool).copy()
+    positions = list(positions)
+    fail = ~ok
+    if not fail.any():
+        return ok, positions, 0, 0
+    acc = np.asarray(sk_diff)
+    ext_bits = 0
+    levels = 0
+    t_prev = t
+    for level in range(1, MAX_PARITY_EXTENSIONS + 1):
+        t_e = parity_extension_t(t, level, n)
+        if t_e <= t_prev:
+            break  # code cap reached: ladder exhausted, splits take over
+        acc = np.concatenate([acc, incremental(t_prev, t_e)], axis=1)
+        ext_bits += int(fail.sum()) * ((t_e - t_prev) * m + 1)
+        levels += 1
+        code_e = bch_code(n, t_e)
+        for slot in np.flatnonzero(fail):
+            ok_e, pos_e = decode_sketch(code_e, acc[slot])
+            if ok_e:
+                ok[slot] = True
+                positions[slot] = pos_e.astype(np.int64)
+                fail[slot] = False
+        t_prev = t_e
+        if not fail.any():
+            break
+    return ok, positions, ext_bits, levels
+
+
 def apply_round_outcomes(
     st: SessionState,
     active: list,
@@ -465,7 +565,20 @@ def reconcile(
         sk_b_all = segmented_sketches(code, pslot_b, ppos_b, n_units)
         round_bits = n_units * (t * m + 1)  # Alice->Bob sketches + ok flags
 
-        ok, err_positions = batched_decode(code, sk_a_all ^ sk_b_all)
+        sk_diff = sk_a_all ^ sk_b_all
+        ok, err_positions = batched_decode(code, sk_diff)
+        if cfg.rateless and not np.asarray(ok, dtype=bool).all():
+
+            def _inc(t0, t1):
+                code_e = bch_code(n, t1)
+                return segmented_sketches_range(
+                    code_e, t0, pslot_a, ppos_a, n_units
+                ) ^ segmented_sketches_range(code_e, t0, pslot_b, ppos_b, n_units)
+
+            ok, err_positions, ext_bits, _ = rateless_extend(
+                n, t, m, sk_diff, ok, err_positions, _inc
+            )
+            round_bits += ext_bits
 
         reply_bits, _ = apply_round_outcomes(
             st, active, ok, err_positions, xors_a, xors_b, csum_a, csum_b,

@@ -54,6 +54,22 @@ def sketch_groups(bitmaps: jax.Array, code: BCHCode, *, interpret: bool | None =
     return pack_bits_to_field(bits, code.m)
 
 
+def sketch_groups_range(
+    bitmaps: jax.Array, code: BCHCode, t0: int, *, interpret: bool | None = None
+):
+    """Incremental BCH syndromes S_{2*t0+1}..S_{2t-1} for G parity bitmaps.
+
+    The same one-matmul formulation as ``sketch_groups`` against the
+    ``[t0*m, t*m)`` column slice of the syndrome matrix — the prefix
+    property (``core.gf2m.syndrome_matrix_range``) guarantees
+    ``concat(sketch at t0, this) == sketch at t`` bit for bit, which is
+    what ``MSG_PARITY`` ships on rateless recovery (DESIGN.md §16).
+    """
+    P = jnp.asarray(code.field.syndrome_matrix_range(t0, code.t))
+    bits = gf2_matmul(bitmaps.astype(jnp.int32), P, interpret=interpret)
+    return pack_bits_to_field(bits, code.m)
+
+
 def encode_group(elems: jax.Array, code: BCHCode, seed: int, *, interpret: bool | None = None):
     """Full PBS encode of one group: (parity bitmap, bin XOR sums, sketch)."""
     parity, xor_bits = bin_parity_xorsum(

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core.hashing import derive_seed
 from repro.core.pbs import (
+    MAX_PARITY_EXTENSIONS,
     PBSConfig,
     ReconcileResult,
     apply_round_outcomes,
@@ -41,6 +42,7 @@ from repro.core.pbs import (
     effective_set,
     finalize_result,
     new_session_state,
+    parity_extension_t,
     plan_from_d_known,
     plan_from_estimate,
     queue_split,
@@ -54,7 +56,7 @@ from repro.core.tow import (
 )
 from repro.kernels.ops import bch_decode_batched
 from repro.obs import NULL_TRACER, Recorder
-from repro.recon.engine import encode_side
+from repro.recon.engine import encode_side, encode_side_ext
 from repro.recon.session import (
     CohortRoundPlan,
     ReconSession,
@@ -137,6 +139,52 @@ def encode_round_rows(
             per[sess.sid] = _SessionRows(
                 sess, active, bin_seed, sk[rows], xors[rows], csum[rows], plan
             )
+    return per
+
+
+def encode_round_rows_ext(
+    plans: list[CohortRoundPlan],
+    side: str,
+    level: int,
+    interpret: bool | None,
+    launches: dict | None = None,
+) -> dict[int, tuple]:
+    """Dispatch every cohort's *incremental* single-side executor for one
+    rateless ladder level (DESIGN.md §16) and collect per-session slices.
+
+    Per cohort the syndrome matmul covers only columns
+    [t_{level-1}·m, t_level·m) of the (n, t_level) code — the
+    ``MSG_PARITY`` payload.  Cohorts whose t-ladder cannot grow at this
+    level (the (n-1)//2 code cap) are skipped.  Shared by the pair
+    endpoints and the multi-peer hub, which passes plans spanning all
+    peers so the two launches per cohort stay fused across peers.
+
+    Returns sid -> (inc (U, t1-t0) int array, t0, t1).
+    """
+    inflight = []
+    for plan in plans:
+        store = plan.store
+        n, t = store.n, store.t
+        t0 = parity_extension_t(t, level - 1, n)
+        t1 = parity_extension_t(t, level, n)
+        if t1 <= t0:
+            continue
+        ss = store.sides[side]
+        out = encode_side_ext(
+            ss.flat, ss.start, ss.cnt,
+            *(jnp.asarray(plan.arrays[k]) for k in _ROUND_ARRAY_KEYS),
+            n=n, t0=t0, t1=t1,
+            width=plan.width_a if side == "a" else plan.width_b,
+            interpret=interpret,
+        )
+        if launches is not None:
+            launches["kernel_launches"] = launches.get("kernel_launches", 0) + 2
+        inflight.append((plan, t0, t1, out))
+    per: dict[int, tuple] = {}
+    for plan, t0, t1, out in inflight:
+        inc = np.asarray(jax.device_get(out))
+        for sess, base, active, _ in plan.members:
+            per[sess.sid] = (inc[base : base + len(active)], t0, t1)
     return per
 
 
@@ -333,6 +381,9 @@ def decode_side_b_round(
     ctx: dict[int, tuple] = {}
     for plan, out in inflight:
         ok_pad, pos_pad, cnt_pad = (np.asarray(x) for x in jax.device_get(out))
+        # writable: the rateless ladder merges extension verdicts into the
+        # per-session ok views in place (DESIGN.md §16)
+        ok_pad = np.array(ok_pad)
         for sess, base, active, bin_seed in plan.members:
             if sess.sid not in sk_a_of:
                 continue
@@ -451,6 +502,7 @@ class _Endpoint:
         self._epoch_pending: dict[int, tuple] | None = None  # sid -> (set, dk)
         self._carry: dict = {}              # totals of resumed-away streams
         self.sessions_degraded = 0          # degradation-ladder escalations
+        self.parity_extensions = 0          # rateless ladder levels applied
         self.verified: list[bool] | None = None
 
     # -- submission ------------------------------------------------------
@@ -611,6 +663,7 @@ class _Endpoint:
         )
         self.recorder.set("endpoint.resumes", getattr(self, "resumes", 0))
         self.recorder.set("endpoint.sessions_degraded", self.sessions_degraded)
+        self.recorder.set("endpoint.parity_extensions", self.parity_extensions)
         return self.recorder.view("wire")
 
 
@@ -831,8 +884,28 @@ class AliceEndpoint(_Endpoint):
             if got_rnd != rnd:
                 raise WireError(f"reply for round {got_rnd} during round {rnd}")
 
-            done_lists = []
+            # the measured main-reply ledger is snapshotted BEFORE the
+            # rateless ladder merges extension outcomes into the entries:
+            # an ext-recovered unit's positions are measured once, from the
+            # extension reply that actually carried them
+            measured_of = {}
+            ent_of = {}
             for sid, (ok, units) in zip(live, entries):
+                row = per[sid]
+                u_cnt = len(row.active)
+                t_, m_ = row.plan.store.t, row.plan.store.m
+                measured_of[sid] = (
+                    wf.sketches_ledger_bits(u_cnt, t_, m_)
+                    + wf.reply_ledger_bits(ok, units, m_)
+                )
+                ent_of[sid] = [np.asarray(ok, dtype=bool).copy(), list(units)]
+            ext_bits_of, measured_ext = self._rateless_ladder(
+                rnd, plans, per, live, ent_of
+            )
+
+            done_lists = []
+            for sid in live:
+                ok, units = ent_of[sid]
                 row = per[sid]
                 st, plan = row.sess.state, row.sess.plan
                 rloc = rnd - row.sess.rnd0   # local protocol round
@@ -855,14 +928,14 @@ class AliceEndpoint(_Endpoint):
                     plan=plan, bin_seed=row.bin_seed, rnd=rloc,
                 )
                 # the measured ledger: sketch bits from what we framed,
-                # reply bits from what Bob's frame actually carried — must
-                # land exactly on the oracle's Formula-(1) accounting
-                measured = wf.sketches_ledger_bits(u_cnt, t, m)
-                measured += wf.reply_ledger_bits(ok, units, m)
-                if measured != u_cnt * (t * m + 1) + reply_bits:
+                # reply + parity bits from what the frames actually carried
+                # — must land exactly on the Formula-(1) accounting
+                measured = measured_of[sid] + measured_ext[sid]
+                accounted = u_cnt * (t * m + 1) + reply_bits + ext_bits_of[sid]
+                if measured != accounted:
                     raise WireError(
                         f"sid {sid} round {rnd}: measured {measured} bits != "
-                        f"accounted {u_cnt * (t * m + 1) + reply_bits}"
+                        f"accounted {accounted}"
                     )
                 st.bytes_per_round.append((measured + 7) // 8)
                 st.rounds = rloc
@@ -901,6 +974,85 @@ class AliceEndpoint(_Endpoint):
                     channel=self._stream.channel,
                 )
         return results
+
+    def _rateless_ladder(self, rnd, plans, per, live, ent_of):
+        """Drive the ``MSG_PARITY`` recovery ladder for one round (§16).
+
+        While any rateless session has units whose BCH decode failed and
+        its cohort's t can still grow, ship only the incremental syndrome
+        columns for the failing units and fold Bob's extension replies
+        into ``ent_of`` in place — the merged entries drive the single
+        ``apply_round_outcomes`` downstream, so settled units are never
+        re-sent and split seeds still derive from this round.  Returns
+        per-sid (accounted ext bits, measured ext bits); both stay zero on
+        the honest path, which therefore remains byte-identical to the
+        ``rateless=False`` wire format.
+        """
+        ext_bits = {sid: 0 for sid in live}
+        measured = {sid: 0 for sid in live}
+        fail: dict[int, list[int]] = {}
+        for sid in live:
+            row = per[sid]
+            if not row.sess.plan.cfg.rateless:
+                continue
+            bad = [s for s in range(len(row.active)) if not ent_of[sid][0][s]]
+            if bad:
+                fail[sid] = bad
+        for level in range(1, MAX_PARITY_EXTENSIONS + 1):
+            if not fail:
+                break
+            part_plans = [
+                plan for plan in plans
+                if any(sess.sid in fail for sess, *_ in plan.members)
+            ]
+            inc_of = encode_round_rows_ext(
+                part_plans, self.side, level, self._interpret
+            )
+            parts = [sid for sid in live if sid in fail and sid in inc_of]
+            if not parts:
+                break  # every failing cohort hit the (n-1)//2 code cap
+            blocks = []
+            reply_schema = []
+            for sid in parts:
+                inc, t0, t1 = inc_of[sid]
+                m = per[sid].plan.store.m
+                blocks.append((inc[fail[sid]], m))
+                reply_schema.append((len(fail[sid]), t1, m))
+            pf = wf.encode_parity(rnd, level, blocks)
+            self._stream.send(pf)
+            self._tally["protocol"] += len(pf)
+            payload = self._expect(wf.MSG_ROUND_REPLY)
+            self._tally["protocol"] += _framed_len(payload)
+            got_rnd, ext_entries = wf.decode_round_reply(payload, reply_schema)
+            if got_rnd != rnd:
+                raise WireError(
+                    f"extension reply for round {got_rnd} during round {rnd}"
+                )
+            for sid, (ok_e, units_e) in zip(parts, ext_entries):
+                _, t0, t1 = inc_of[sid]
+                m = per[sid].plan.store.m
+                slots = fail[sid]
+                ext_bits[sid] += len(slots) * ((t1 - t0) * m + 1)
+                measured[sid] += wf.parity_ledger_bits(len(slots), t1 - t0, m)
+                measured[sid] += wf.reply_ledger_bits(ok_e, units_e, m)
+                self.parity_extensions += 1
+                self.tracer.instant(
+                    "endpoint.parity_extension", sid=sid, round=rnd,
+                    level=level, units=len(slots), t=t1,
+                )
+                ok_m, units_m = ent_of[sid]
+                still = []
+                for i, slot in enumerate(slots):
+                    if ok_e[i]:
+                        ok_m[slot] = True
+                        units_m[slot] = units_e[i]
+                    else:
+                        still.append(slot)
+                if still:
+                    fail[sid] = still
+                else:
+                    del fail[sid]
+        return ext_bits, measured
 
     def resume(self, transport: Transport) -> None:
         """Reconnect to the hub over a fresh transport after a failure and
@@ -1086,6 +1238,8 @@ class BobEndpoint(_Endpoint):
                 self._handle_epoch(payload)
             elif msg_type == wf.MSG_ROUND_SKETCHES:
                 self._handle_sketches(payload)
+            elif msg_type == wf.MSG_PARITY:
+                self._handle_parity(payload)
             elif msg_type == wf.MSG_ROUND_OUTCOME:
                 self._handle_outcome(payload)
             elif msg_type == wf.MSG_VERIFY:
@@ -1183,12 +1337,159 @@ class BobEndpoint(_Endpoint):
         reply = wf.encode_round_reply(rnd, [results[sid] for sid in live], schema)
         self._stream.send(reply)
         self._tally["protocol"] += len(reply)
-        self._ctx = (live, ctx)
+        # rateless ladder state (§16): the failing slots of every rateless
+        # session, plus everything a MSG_PARITY extension needs to re-decode
+        # this round's bitmaps at a wider t — cached frame sketches (the
+        # prefix), our row slices, and the cohort plans.
+        fail: dict[int, list[int]] = {}
+        for sid in live:
+            sess, active, ok, _ = ctx[sid]
+            if not sess.plan.cfg.rateless:
+                continue
+            bad = [s for s in range(len(active)) if not ok[s]]
+            if bad:
+                fail[sid] = bad
+        self._ctx = {
+            "live": live, "ctx": ctx, "per": per, "plans": plans,
+            "sk_a": dict(zip(live, blocks)), "fail": fail, "level": 0,
+            "acc": {},
+        }
+
+    def _handle_parity(self, payload: bytes) -> None:
+        """Serve one ``MSG_PARITY`` rateless extension (DESIGN.md §16).
+
+        XOR Alice's incremental syndrome columns with our own side's, grow
+        each failing unit's cached round-diff prefix, re-decode per cohort
+        in one batched launch at the extended t, and reply with the
+        extension outcomes through the ordinary round-reply codec.  The
+        round context's ``ok`` arrays are merged in place, so the outcome
+        frame (and any resume replay) sees the post-ladder verdicts.
+        """
+        c = self._ctx
+        if c is None:
+            raise WireError("parity frame with no round in flight")
+        fail = c["fail"]
+        level = c["level"] + 1
+        if level > MAX_PARITY_EXTENSIONS:
+            raise WireError(f"parity frame beyond the level-{level - 1} cap")
+        part_plans = [
+            plan for plan in c["plans"]
+            if any(sess.sid in fail for sess, *_ in plan.members)
+        ]
+        inc_of = encode_round_rows_ext(
+            part_plans, self.side, level, self._interpret
+        )
+        parts = [sid for sid in c["live"] if sid in fail and sid in inc_of]
+        if not parts:
+            raise WireError("unexpected parity frame: no extension pending")
+        schema = [
+            (len(fail[sid]), inc_of[sid][2] - inc_of[sid][1],
+             c["per"][sid].plan.store.m)
+            for sid in parts
+        ]
+        # reply schema before the merge loop mutates ``fail``: the ext
+        # reply covers every unit that was failing at this level, at t1
+        reply_schema = [
+            (len(fail[sid]), inc_of[sid][2], c["per"][sid].plan.store.m)
+            for sid in parts
+        ]
+        got_rnd, got_level, blocks = wf.decode_parity(payload, schema)
+        if got_rnd != self._rnd:
+            raise WireError(
+                f"parity frame for round {got_rnd}, expected {self._rnd}"
+            )
+        if got_level != level:
+            raise WireError(
+                f"parity frame at level {got_level}, expected {level}"
+            )
+        self._tally["protocol"] += _framed_len(payload)
+
+        # grow each failing unit's accumulated diff syndromes: prefix
+        # (frame sketch ^ our sketch, cached at decode time) + increments
+        acc = c["acc"]
+        for sid, inc_a in zip(parts, blocks):
+            inc_b = inc_of[sid][0]
+            prefix_a = c["sk_a"][sid]
+            sk_b = c["per"][sid].sk
+            slot_acc = acc.setdefault(sid, {})
+            for i, slot in enumerate(fail[sid]):
+                prev = slot_acc.get(slot)
+                if prev is None:
+                    prev = np.asarray(prefix_a[slot], dtype=np.int64) ^ np.asarray(
+                        sk_b[slot], dtype=np.int64
+                    )
+                d = np.asarray(inc_a[i], dtype=np.int64) ^ np.asarray(
+                    inc_b[slot], dtype=np.int64
+                )
+                slot_acc[slot] = np.concatenate([prev, d])
+
+        # one batched decode per cohort: failing rows scattered into a
+        # padded buffer, settled rows stay zero (trivially ok, ignored)
+        entries: dict[int, tuple] = {}
+        for plan in part_plans:
+            n, t = plan.store.n, plan.store.t
+            t1 = parity_extension_t(t, level, n)
+            if t1 <= parity_extension_t(t, level - 1, n):
+                continue
+            u_pad = plan.arrays["row_map"].shape[0]
+            buf = np.zeros((u_pad, t1), dtype=np.int64)
+            hit = False
+            for sess, base, active, _ in plan.members:
+                if sess.sid not in parts:
+                    continue
+                for slot in fail[sess.sid]:
+                    buf[base + slot] = acc[sess.sid][slot]
+                    hit = True
+            if not hit:
+                continue
+            ok_p, pos_p, cnt_p = (
+                np.asarray(x) for x in jax.device_get(
+                    bch_decode_batched(
+                        jnp.asarray(buf, dtype=jnp.int32), n=n, t=t1
+                    )
+                )
+            )
+            for sess, base, active, _ in plan.members:
+                sid = sess.sid
+                if sid not in parts:
+                    continue
+                row = c["per"][sid]
+                ok_m = c["ctx"][sid][2]
+                ok_e, units, still = [], [], []
+                for slot in fail[sid]:
+                    if ok_p[base + slot]:
+                        k = int(cnt_p[base + slot])
+                        p = pos_p[base + slot, :k].astype(np.int64)
+                        units.append(
+                            ReplyUnit(
+                                positions=p,
+                                xors=row.xors[slot, p],
+                                csum=int(row.csum[slot]),
+                            )
+                        )
+                        ok_e.append(True)
+                        ok_m[slot] = True   # in-place: outcome/resume see it
+                    else:
+                        units.append(None)
+                        ok_e.append(False)
+                        still.append(slot)
+                entries[sid] = (ok_e, units)
+                if still:
+                    fail[sid] = still
+                else:
+                    del fail[sid]
+                self.parity_extensions += 1
+        c["level"] = level
+        reply = wf.encode_round_reply(
+            self._rnd, [entries[sid] for sid in parts], reply_schema
+        )
+        self._stream.send(reply)
+        self._tally["protocol"] += len(reply)
 
     def _handle_outcome(self, payload: bytes) -> None:
         if self._ctx is None:
             raise WireError("outcome frame with no round in flight")
-        live, ctx = self._ctx
+        live, ctx = self._ctx["live"], self._ctx["ctx"]
         self._ctx = None
         rnd = self._rnd
         got_rnd, done_lists = wf.decode_round_outcome(

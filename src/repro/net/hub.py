@@ -48,15 +48,21 @@ from dataclasses import dataclass
 
 import numpy as np
 
+import jax
+import jax.numpy as jnp
+
 from repro.core.tow import ESTIMATE_LIMIT_FRAC, EstimateOutOfRange
 from repro.core.pbs import (
+    MAX_PARITY_EXTENSIONS,
     PBSConfig,
     ReconcileResult,
     new_session_state,
+    parity_extension_t,
     plan_from_d_known,
     queue_split,
     session_live,
 )
+from repro.kernels.ops import bch_decode_batched
 from repro.recon.session import (
     ReconSession,
     SessionBatch,
@@ -71,7 +77,7 @@ from repro.kernels.platform import (
 )
 from repro.obs import NULL_TRACER, Recorder
 from repro.wire import frames as wf
-from repro.wire.frames import WireError
+from repro.wire.frames import ReplyUnit, WireError
 from repro.wire.varint import framed_len
 
 from repro.tree.partition import TreeConfig, leaf_slices
@@ -80,6 +86,7 @@ from .endpoint import (
     AliceEndpoint,
     decode_side_b_round,
     encode_round_rows,
+    encode_round_rows_ext,
     round_schema,
     serve_epoch_frame,
     serve_phase0,
@@ -947,6 +954,7 @@ class HubEndpoint:
             "peers_resumed": self._stats.get("peers_resumed", 0),
             "resume_replay_bytes": self._stats.get("resume_replay_bytes", 0),
             "sessions_degraded": self._stats.get("sessions_degraded", 0),
+            "parity_extensions": self._stats.get("parity_extensions", 0),
             "tree_levels": 0, "tree_digest_bytes": 0, "tree_leaves": 0,
         }
         prior = self._batch.counters()
@@ -1191,7 +1199,223 @@ class HubEndpoint:
             # if she crashes before her outcome frame lands (DESIGN.md §13)
             peer.inflight_ctx = (live_g, ctx)
             round_ctx[ch] = (live_g, ctx)
+        if round_ctx:
+            self._rateless_phase(rnd, plans, per, sk_a_of, round_ctx)
         return round_ctx
+
+    def _rateless_phase(self, rnd, plans, per, sk_a_of, round_ctx) -> None:
+        """Serve the rateless recovery ladder (DESIGN.md §16) between the
+        reply send and the outcome barrier.
+
+        Every peer with failing rateless units owes one ``MSG_PARITY``
+        frame per ladder level, collected through the shared poller; the
+        hub answers each level with ONE incremental encode dispatch and
+        ONE extended decode per cohort, shared across all peers, and
+        merges recovered verdicts into the retained round contexts in
+        place — the outcome frames (and any resume replay from
+        ``inflight_ctx``, which aliases the same ``ctx`` tuples) see the
+        post-ladder verdicts.  Peers that fail mid-ladder drop out of
+        ``round_ctx`` so the outcome barrier never polls them; a
+        suspended peer's re-run starts the round (and its ladder) from
+        scratch, so partial merges never leak into session state."""
+        fail: dict[int, dict[int, list[int]]] = {}      # ch -> sid -> slots
+        for ch, (live_g, ctx) in round_ctx.items():
+            bad = {}
+            for sid in live_g:
+                sess, active, ok, _ = ctx[sid]
+                if not sess.plan.cfg.rateless:
+                    continue
+                slots = [s for s in range(len(active)) if not ok[s]]
+                if slots:
+                    bad[sid] = slots
+            if bad:
+                fail[ch] = bad
+        if not fail:
+            return
+        st = self._stats
+        acc: dict[int, dict[int, np.ndarray]] = {}      # sid -> slot -> syn
+        for level in range(1, MAX_PARITY_EXTENSIONS + 1):
+            if not fail:
+                return
+            failing = {sid for bad in fail.values() for sid in bad}
+            part_plans = [
+                plan for plan in plans
+                if any(sess.sid in failing for sess, *_ in plan.members)
+            ]
+            with self.tracer.span("hub.parity_encode", cat="device",
+                                  round=rnd, level=level,
+                                  cohorts=len(part_plans)):
+                inc_of = encode_round_rows_ext(
+                    part_plans, self.side, level, self._interpret,
+                    launches=st,
+                )
+            # mirror of each peer's own participation check: failing
+            # sessions whose cohort t still grows at this level
+            need: dict[int, list[int]] = {}
+            for ch, bad in fail.items():
+                parts = [
+                    sid for sid in round_ctx[ch][0]
+                    if sid in bad and sid in inc_of
+                ]
+                if parts:
+                    need[ch] = parts
+            if not need:
+                return
+            with self.tracer.span("hub.collect_parity", cat="wire",
+                                  round=rnd, level=level, peers=len(need)):
+                frames = self._collect({
+                    ch: wf.MSG_PARITY for ch in need
+                })
+            for ch in list(need):
+                if ch not in frames:    # evicted/suspended at the barrier
+                    del need[ch]
+                    fail.pop(ch, None)
+                    round_ctx.pop(ch, None)
+            # fold each peer's incremental columns into its failing
+            # units' accumulated diff syndromes (prefix cached at decode)
+            for ch, payload in frames.items():
+                peer = self._peers[ch]
+                bad = fail[ch]
+                parts = need[ch]
+                schema = [
+                    (len(bad[sid]), inc_of[sid][2] - inc_of[sid][1],
+                     per[sid].plan.store.m)
+                    for sid in parts
+                ]
+                try:
+                    got_rnd, got_level, blocks = wf.decode_parity(
+                        payload, schema
+                    )
+                    local = rnd - peer.rnd0
+                    if got_rnd != local:
+                        raise WireError(
+                            f"parity frame for round {got_rnd}, "
+                            f"expected {local}"
+                        )
+                    if got_level != level:
+                        raise WireError(
+                            f"parity frame at level {got_level}, "
+                            f"expected {level}"
+                        )
+                except WireError as e:
+                    self._evict(peer, e)
+                    del need[ch]
+                    del fail[ch]
+                    round_ctx.pop(ch, None)
+                    continue
+                peer.tally["protocol"] += framed_len(len(payload))
+                for sid, inc_a in zip(parts, blocks):
+                    inc_b = inc_of[sid][0]
+                    prefix_a = sk_a_of[sid]
+                    sk_b = per[sid].sk
+                    slot_acc = acc.setdefault(sid, {})
+                    for i, slot in enumerate(bad[sid]):
+                        prev = slot_acc.get(slot)
+                        if prev is None:
+                            prev = np.asarray(
+                                prefix_a[slot], dtype=np.int64
+                            ) ^ np.asarray(sk_b[slot], dtype=np.int64)
+                        d = np.asarray(
+                            inc_a[i], dtype=np.int64
+                        ) ^ np.asarray(inc_b[slot], dtype=np.int64)
+                        slot_acc[slot] = np.concatenate([prev, d])
+            if not need:
+                continue
+            # reply schemas before the merge loop mutates ``fail``: each
+            # ext reply covers every unit failing at this level, at t1
+            reply_schema = {
+                ch: [
+                    (len(fail[ch][sid]), inc_of[sid][2],
+                     per[sid].plan.store.m)
+                    for sid in parts
+                ]
+                for ch, parts in need.items()
+            }
+            ch_of = {sid: ch for ch, parts in need.items() for sid in parts}
+            entries: dict[int, tuple] = {}
+            with self.tracer.span("hub.parity_decode", cat="device",
+                                  round=rnd, level=level):
+                for plan in part_plans:
+                    n, t = plan.store.n, plan.store.t
+                    t1 = parity_extension_t(t, level, n)
+                    if t1 <= parity_extension_t(t, level - 1, n):
+                        continue
+                    u_pad = plan.arrays["row_map"].shape[0]
+                    buf = np.zeros((u_pad, t1), dtype=np.int64)
+                    hit = False
+                    for sess, base, active, _ in plan.members:
+                        ch = ch_of.get(sess.sid)
+                        if ch is None:
+                            continue
+                        for slot in fail[ch][sess.sid]:
+                            buf[base + slot] = acc[sess.sid][slot]
+                            hit = True
+                    if not hit:
+                        continue
+                    ok_p, pos_p, cnt_p = (
+                        np.asarray(x) for x in jax.device_get(
+                            bch_decode_batched(
+                                jnp.asarray(buf, dtype=jnp.int32), n=n, t=t1
+                            )
+                        )
+                    )
+                    st["decode_launches"] = st.get("decode_launches", 0) + 1
+                    for sess, base, active, _ in plan.members:
+                        sid = sess.sid
+                        ch = ch_of.get(sid)
+                        if ch is None:
+                            continue
+                        row = per[sid]
+                        ok_m = round_ctx[ch][1][sid][2]
+                        ok_e, units, still = [], [], []
+                        for slot in fail[ch][sid]:
+                            if ok_p[base + slot]:
+                                k = int(cnt_p[base + slot])
+                                p = pos_p[base + slot, :k].astype(np.int64)
+                                units.append(
+                                    ReplyUnit(
+                                        positions=p,
+                                        xors=row.xors[slot, p],
+                                        csum=int(row.csum[slot]),
+                                    )
+                                )
+                                ok_e.append(True)
+                                ok_m[slot] = True   # in place: outcome +
+                                # resume replay see the ladder verdict
+                            else:
+                                units.append(None)
+                                ok_e.append(False)
+                                still.append(slot)
+                        entries[sid] = (ok_e, units)
+                        if still:
+                            fail[ch][sid] = still
+                        else:
+                            del fail[ch][sid]
+                        st["parity_extensions"] = (
+                            st.get("parity_extensions", 0) + 1
+                        )
+                        self.tracer.instant(
+                            "hub.parity_extension", channel=ch, sid=sid,
+                            round=rnd, level=level,
+                            units=len(ok_e), t=t1,
+                        )
+            for ch, parts in need.items():
+                peer = self._peers[ch]
+                reply = wf.encode_round_reply(
+                    rnd - peer.rnd0,
+                    [entries[sid] for sid in parts],
+                    reply_schema[ch],
+                )
+                try:
+                    peer.stream.send(reply)
+                except TransportError as e:
+                    self._fail(peer, e, resumable=True)
+                    fail.pop(ch, None)
+                    round_ctx.pop(ch, None)
+                    continue
+                peer.tally["protocol"] += len(reply)
+                if not fail.get(ch):
+                    fail.pop(ch, None)
 
     def _apply_outcome(self, peer: _Peer, rnd: int, payload: bytes,
                        live_g: list[int], ctx: dict[int, tuple],

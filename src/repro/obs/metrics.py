@@ -73,6 +73,7 @@ def _specs() -> list[MetricSpec]:
         M("server.kernel_launches", "counter", "count", "server", "fused executor launches"),
         M("server.legacy_kernel_launches", "counter", "count", "server", "pre-fusion launch equivalent"),
         M("server.sessions_degraded", "counter", "count", "server", "degradation-ladder escalations"),
+        M("server.parity_extensions", "counter", "count", "server", "rateless MSG_PARITY-equivalent extensions applied"),
         M("server.device_s", "gauge", "seconds", "server", "device wait inside the round loop"),
         M("server.host_s", "gauge", "seconds", "server", "run wall minus device wait"),
         M("server.total_s", "gauge", "seconds", "server", "run wall time"),
@@ -103,6 +104,7 @@ def _specs() -> list[MetricSpec]:
         M("hub.peers_resumed", "counter", "count", "hub", "MSG_RESUME re-attachments (cumulative)"),
         M("hub.resume_replay_bytes", "counter", "bytes", "hub", "replayed outcome frames (transport overhead)"),
         M("hub.sessions_degraded", "counter", "count", "hub", "degradation-ladder escalations (cumulative)"),
+        M("hub.parity_extensions", "counter", "count", "hub", "rateless MSG_PARITY extensions served (cumulative)"),
         M("hub.store_uploads", "counter", "count", "hub", "cohort-store builds (cumulative)"),
         M("hub.h2d_store_bytes", "counter", "bytes", "hub", "store-build H2D this serve"),
         M("hub.store_builds", "counter", "count", "hub", "store (re)builds this serve"),
@@ -133,6 +135,7 @@ def _specs() -> list[MetricSpec]:
         # -- endpoint: per-endpoint recovery state (DESIGN.md §13)
         M("endpoint.resumes", "counter", "count", "endpoint", "MSG_RESUME reconnects driven"),
         M("endpoint.sessions_degraded", "counter", "count", "endpoint", "degradation-ladder escalations"),
+        M("endpoint.parity_extensions", "counter", "count", "endpoint", "rateless MSG_PARITY extensions applied"),
         # -- store: SessionBatch cumulative counters (DESIGN.md §11)
         M("store.store_builds", "counter", "count", "store", "cohort-store builds incl. rebuilds"),
         M("store.store_compactions", "counter", "count", "store", "capacity overflows -> forced rebuilds"),

@@ -14,7 +14,12 @@ continuous epoch reconciliation (DESIGN.md §11): ``advance_epoch`` folds
 learned diffs and local churn into delta-mutable stores patched in place,
 so a long-lived session pays O(churn) H2D per epoch instead of a rebuild.
 """
-from .engine import encode_side, execute_round
+from .engine import (
+    encode_side,
+    encode_side_ext,
+    execute_round,
+    execute_round_ext,
+)
 from .server import ReconcileServer, phase0_numerators, reconcile_batch
 from .session import (
     CohortRoundPlan,
@@ -42,7 +47,9 @@ __all__ = [
     "degrade_exhausted",
     "escalate_session",
     "encode_side",
+    "encode_side_ext",
     "execute_round",
+    "execute_round_ext",
     "phase0_numerators",
     "reconcile_batch",
 ]

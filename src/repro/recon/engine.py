@@ -43,7 +43,7 @@ from repro.kernels.bin_xorsum import (
     mulshift_bins,
     xor_bits_to_u32,
 )
-from repro.kernels.ops import bch_decode_batched, sketch_groups
+from repro.kernels.ops import bch_decode_batched, sketch_groups, sketch_groups_range
 from repro.kernels.platform import count_retrace
 from repro.obs.trace import NULL_TRACER
 
@@ -199,8 +199,12 @@ def _execute_round(
     csum2 = _wrap_csum(elems2, valid2)
 
     u = row_map.shape[0]
-    ok, pos, cnt = bch_decode_batched(sk2[:u] ^ sk2[u:], n=n, t=t)
-    return xors2[:u], xors2[u:], ok, pos, cnt, csum2[:u], csum2[u:]
+    sk_diff = sk2[:u] ^ sk2[u:]
+    ok, pos, cnt = bch_decode_batched(sk_diff, n=n, t=t)
+    # sk_diff rides back with the outcomes: it is the cached syndrome
+    # *prefix* the rateless recovery path (DESIGN.md §16) concatenates with
+    # incremental parity when a unit overloads — nothing re-encodes.
+    return xors2[:u], xors2[u:], ok, pos, cnt, csum2[:u], csum2[u:], sk_diff
 
 
 def _encode_side(
@@ -245,6 +249,104 @@ def _encode_side(
     return sk, xor_bits_to_u32(xor_bits), _wrap_csum(e, v)
 
 
+def _execute_round_ext(
+    flat_a: jax.Array,
+    start_a: jax.Array,
+    cnt_a: jax.Array,
+    flat_b: jax.Array,
+    start_b: jax.Array,
+    cnt_b: jax.Array,
+    row_map: jax.Array,
+    unit_valid: jax.Array,
+    seeds: jax.Array,
+    removed: jax.Array,
+    removed_cnt: jax.Array,
+    added: jax.Array,
+    added_cnt: jax.Array,
+    fseeds: jax.Array,
+    fbins: jax.Array,
+    fcnt: jax.Array,
+    *,
+    n: int,
+    t0: int,
+    t1: int,
+    width_a: int,
+    width_b: int,
+    interpret: bool | None = None,
+):
+    """One rateless extension step for U packed units of one (n, t) cohort
+    (DESIGN.md §16): rebuild both sides' rows for the SAME round (identical
+    bin seeds → identical parity bitmaps) and emit only the XOR of the
+    *incremental* syndromes S_{2*t0+1}..S_{2*t1-1} — a (U, t1-t0) array the
+    host concatenates onto the cached round-diff prefix and decodes at t1.
+    """
+    _count_trace("execute_round_ext", flat_a)
+    code = bch_code(n, t1)
+    empty_overlay = jnp.zeros((row_map.shape[0], 0), jnp.uint32)
+    zero_cnt = jnp.zeros(row_map.shape[0], jnp.int32)
+    ea, va = _build_side(
+        flat_a, start_a, cnt_a, row_map, width_a,
+        removed, removed_cnt, added, added_cnt, unit_valid, fseeds, fbins, fcnt,
+    )
+    eb, vb = _build_side(
+        flat_b, start_b, cnt_b, row_map, width_b,
+        empty_overlay, zero_cnt, empty_overlay, zero_cnt,
+        unit_valid, fseeds, fbins, fcnt,
+    )
+    width = max(ea.shape[1], eb.shape[1])
+    ea, va = _pad_width(ea, va, width)
+    eb, vb = _pad_width(eb, vb, width)
+    elems2 = jnp.concatenate([ea, eb], axis=0)
+    valid2 = jnp.concatenate([va, vb], axis=0)
+    seeds2 = jnp.concatenate([seeds, seeds], axis=0)
+    parity2, _ = bin_parity_xorsum_units(
+        elems2, valid2.astype(jnp.int32), seeds2, n_bins=n, interpret=interpret
+    )
+    inc2 = sketch_groups_range(parity2, code, t0, interpret=interpret)
+    u = row_map.shape[0]
+    return inc2[:u] ^ inc2[u:]
+
+
+def _encode_side_ext(
+    flat: jax.Array,
+    start: jax.Array,
+    cnt: jax.Array,
+    row_map: jax.Array,
+    unit_valid: jax.Array,
+    seeds: jax.Array,
+    removed: jax.Array,
+    removed_cnt: jax.Array,
+    added: jax.Array,
+    added_cnt: jax.Array,
+    fseeds: jax.Array,
+    fbins: jax.Array,
+    fcnt: jax.Array,
+    *,
+    n: int,
+    t0: int,
+    t1: int,
+    width: int,
+    interpret: bool | None = None,
+):
+    """ONE side's incremental syndromes for the current round: the
+    ``encode_side`` variant behind ``MSG_PARITY`` (DESIGN.md §16).  Same
+    on-device row build and bin pass over the same round seeds, but the
+    sketch matmul covers only syndrome columns [t0, t1) — Alice frames the
+    result; Bob XORs his own against the frame and decodes at t1 with the
+    cached prefix.  Returns (U, t1-t0) field elements.
+    """
+    _count_trace("encode_side_ext", flat)
+    code = bch_code(n, t1)
+    e, v = _build_side(
+        flat, start, cnt, row_map, width,
+        removed, removed_cnt, added, added_cnt, unit_valid, fseeds, fbins, fcnt,
+    )
+    parity, _ = bin_parity_xorsum_units(
+        e, v.astype(jnp.int32), seeds, n_bins=n, interpret=interpret
+    )
+    return sketch_groups_range(parity, code, t0, interpret=interpret)
+
+
 # Per-round overlay buffers are dead after the call; donating them lets XLA
 # alias their device memory on TPU.  Off-TPU donation is unsupported and
 # only warns, so it stays off there.
@@ -282,3 +384,37 @@ def encode_side(*args, **kwargs):
     """Jitted ``_encode_side`` (the per-endpoint half of ``execute_round``)."""
     with _DISPATCH_TRACER.annotate("repro.encode_side"):
         return _jitted_side_executor()(*args, **kwargs)
+
+
+# Extension executors stay donation-free: a cohort may extend several levels
+# over the same overlay arrays, and the host re-dispatches from the numpy
+# plan arrays each level anyway.  (n, t0, t1) are static — the deterministic
+# t-ladder keeps the signature set bounded, so a warm serving loop extends
+# with zero retraces (DESIGN.md §16).
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_ext_executor():
+    return jax.jit(
+        _execute_round_ext,
+        static_argnames=("n", "t0", "t1", "width_a", "width_b", "interpret"),
+    )
+
+
+def execute_round_ext(*args, **kwargs):
+    """Jitted ``_execute_round_ext`` (both sides' incremental syndrome XOR)."""
+    with _DISPATCH_TRACER.annotate("repro.execute_round_ext"):
+        return _jitted_ext_executor()(*args, **kwargs)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_side_ext_executor():
+    return jax.jit(
+        _encode_side_ext, static_argnames=("n", "t0", "t1", "width", "interpret")
+    )
+
+
+def encode_side_ext(*args, **kwargs):
+    """Jitted ``_encode_side_ext`` (one endpoint's ``MSG_PARITY`` payload)."""
+    with _DISPATCH_TRACER.annotate("repro.encode_side_ext"):
+        return _jitted_side_ext_executor()(*args, **kwargs)

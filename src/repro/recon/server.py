@@ -36,12 +36,15 @@ import jax.numpy as jnp
 
 from repro.core.hashing import derive_seed
 from repro.core.pbs import (
+    MAX_ESCALATIONS,
+    MAX_PARITY_EXTENSIONS,
     PBSConfig,
     ReconcileResult,
     apply_round_outcomes,
     effective_set,
     finalize_result,
     new_session_state,
+    parity_extension_t,
     plan_from_d_known,
     plan_from_estimate,
 )
@@ -61,7 +64,9 @@ from repro.kernels.platform import (
 from repro.kernels.tow_sketch import tow_sketch
 from repro.obs import NULL_TRACER, Recorder
 
-from .engine import execute_round
+from repro.kernels.ops import bch_decode_batched
+
+from .engine import execute_round, execute_round_ext
 from .session import (
     CohortRoundPlan,
     ReconSession,
@@ -297,6 +302,7 @@ class ReconcileServer:
             "kernel_launches": 0,
             "legacy_kernel_launches": 0,
             "sessions_degraded": 0,
+            "parity_extensions": 0,
             "device_s": 0.0,
         }
         by_code = batch.sessions_by_code()
@@ -319,12 +325,14 @@ class ReconcileServer:
                 st["device_s"] += time.perf_counter() - t0
                 with tracer.span("cohort.apply", n=key[0], t=key[1], round=rnd,
                                  units=len(plan.arrays["row_map"])):
-                    self._apply_cohort(plan, out, rnd)
+                    ext = self._apply_cohort(plan, out, rnd)
                 st["rounds"] = max(st["rounds"], rnd)
                 st["cohort_rounds"] += 1
                 st["h2d_round_bytes"] += plan.h2d_bytes
                 st["legacy_h2d_round_bytes"] += plan.legacy_h2d_bytes
                 st["kernel_launches"] += 2   # fused bin launch + sketch matmul
+                st["kernel_launches"] += ext["kernel_launches"]
+                st["parity_extensions"] += ext["parity_extensions"]
                 st["legacy_kernel_launches"] += 4  # 2x bin + 2x sketch, per side
                 with tracer.span("cohort.plan_dispatch", n=key[0], t=key[1],
                                  round=rnd + 1):
@@ -504,7 +512,9 @@ class ReconcileServer:
                 )
         return self._epoch
 
-    def _escalate_exhausted(self, max_escalations: int = 3) -> list[ReconSession]:
+    def _escalate_exhausted(
+        self, max_escalations: int = MAX_ESCALATIONS
+    ) -> list[ReconSession]:
         """Escalate every budget-exhausted session one degradation rung
         (doubled d̂ re-plan from scratch, ``escalate_session``); returns the
         escalated sessions.  Exhausted means the round budget is spent with
@@ -544,17 +554,22 @@ class ReconcileServer:
             interpret=self._interpret,
         )
 
-    def _apply_cohort(self, plan: CohortRoundPlan, out, rnd: int) -> None:
-        xors_a, xors_b, ok, pos, cnt, csum_a, csum_b = out
+    def _apply_cohort(self, plan: CohortRoundPlan, out, rnd: int) -> dict:
+        xors_a, xors_b, ok, pos, cnt, csum_a, csum_b, sk_diff = out
         # one vectorized unpack of the (U, t) padded position rows: valid
         # entries are left-justified, so a masked flatten + split by the
         # per-unit counts yields every unit's decoded bins at once.
         cnt = np.asarray(cnt, dtype=np.int64)
         pos = np.asarray(pos)
-        positions = np.split(pos[pos >= 0].astype(np.int64), np.cumsum(cnt)[:-1])
+        positions = list(
+            np.split(pos[pos >= 0].astype(np.int64), np.cumsum(cnt)[:-1])
+        )
+        ok = np.asarray(ok).copy()
+        ext = {"parity_extensions": 0, "kernel_launches": 0}
+        ext_bits = self._extend_cohort(plan, ok, positions, sk_diff, ext)
 
         sketch_bits = plan.store.t * plan.store.m + 1  # per-unit sketch + ok flag
-        for sess, base, active, bin_seed in plan.members:
+        for idx, (sess, base, active, bin_seed) in enumerate(plan.members):
             k = len(active)
             rows = slice(base, base + k)
             reply_bits, _ = apply_round_outcomes(
@@ -570,9 +585,90 @@ class ReconcileServer:
                 bin_seed=bin_seed,
                 rnd=rnd,
             )
-            round_bits = k * sketch_bits + reply_bits
+            round_bits = k * sketch_bits + reply_bits + ext_bits.get(idx, 0)
             sess.state.bytes_per_round.append((round_bits + 7) // 8)
             sess.state.rounds = rnd
+        return ext
+
+    def _extend_cohort(
+        self, plan: CohortRoundPlan, ok, positions, sk_diff, ext
+    ) -> dict[int, int]:
+        """Rateless recovery ladder for one cohort round (DESIGN.md §16).
+
+        Instead of surrendering a failed BCH decode to the 3-way split (or,
+        round budget permitting none, to a from-scratch degradation re-plan),
+        every failing unit of a ``rateless`` session re-decodes the *same*
+        round bitmap at t' = t·2^level: ``execute_round_ext`` emits only the
+        incremental syndromes S_{2t+1}..S_{2t'-1}, the host concatenates
+        them onto the cached round-diff prefix, and one batched decode at t'
+        recovers everything the wider code can reach — zero re-sent sketch
+        bits, zero store rebuilds.  ``ok``/``positions`` are merged in place
+        so the single ``apply_round_outcomes`` call downstream sees the
+        post-ladder outcome (split seeds therefore still derive from this
+        round, deterministically on both wire sides).  Returns per-member
+        Formula-(1) ledger bits: sum over levels of U_e·(Δt_e·m + 1) —
+        exactly what the ``MSG_PARITY`` frame plus its extension reply
+        measure on the wire path (repro.net).
+        """
+        ext_bits: dict[int, int] = {}
+        rateless = np.zeros(len(ok), dtype=bool)
+        for sess, base, active, _ in plan.members:
+            if sess.plan.cfg.rateless:
+                rateless[base : base + len(active)] = True
+        fail = rateless & ~ok
+        if not fail.any():
+            return ext_bits
+        store = plan.store
+        n, t, m = store.n, store.t, store.m
+        arrays = tuple(
+            jnp.asarray(plan.arrays[k]) for k in (
+                "row_map", "unit_valid", "seeds", "removed", "removed_cnt",
+                "added", "added_cnt", "fseeds", "fbins", "fcnt",
+            )
+        )
+        acc = np.asarray(sk_diff)
+        t_prev = t
+        for level in range(1, MAX_PARITY_EXTENSIONS + 1):
+            t_e = parity_extension_t(t, level, n)
+            if t_e <= t_prev:
+                break  # code cap (n-1)//2 reached: the ladder is exhausted
+            inc = execute_round_ext(
+                store.a.flat, store.a.start, store.a.cnt,
+                store.b.flat, store.b.start, store.b.cnt,
+                *arrays,
+                n=n, t0=t_prev, t1=t_e,
+                width_a=plan.width_a, width_b=plan.width_b,
+                interpret=self._interpret,
+            )
+            ext["kernel_launches"] += 2  # bin rebuild + incremental matmul
+            acc = np.concatenate([acc, np.asarray(jax.device_get(inc))], axis=1)
+            # only failing rateless rows carry content: settled/foreign rows
+            # decode trivially as zero sketches and are never touched
+            masked = np.where(fail[:, None], acc, 0)
+            ok_e, pos_e, _ = jax.device_get(
+                bch_decode_batched(jnp.asarray(masked), n=n, t=t_e)
+            )
+            ok_e, pos_e = np.asarray(ok_e), np.asarray(pos_e)
+            dt = t_e - t_prev
+            for idx, (sess, base, active, _) in enumerate(plan.members):
+                u_e = int(fail[base : base + len(active)].sum())
+                if u_e:
+                    ext_bits[idx] = ext_bits.get(idx, 0) + u_e * (dt * m + 1)
+                    ext["parity_extensions"] += 1
+                    self.tracer.instant(
+                        "server.parity_extension", sid=sess.sid,
+                        level=level, units=u_e, t=t_e,
+                    )
+            recovered = np.flatnonzero(fail & ok_e)
+            for row in recovered:
+                ok[row] = True
+                r = pos_e[row]
+                positions[row] = r[r >= 0].astype(np.int64)
+            fail &= ~ok_e
+            t_prev = t_e
+            if not fail.any():
+                break
+        return ext_bits
 
 
 def reconcile_batch(

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 from repro.core.bch import bch_code
 from repro.core.hashing import derive_seed_seeded, hash_to_range_seeded
 from repro.core.pbs import (
+    MAX_ESCALATIONS,
     ProtocolPlan,
     SessionState,
     diff_overlay,
@@ -887,25 +888,35 @@ def escalate_session(
     ``rnd0 + 1``.  The reshuffled group seed always moves the store
     layout, so — exactly like an epoch-advance layout change — both
     affected cohort keys are invalidated and rebuild on next live use as
-    counted builds.  Partial progress is discarded: the escalated run
-    re-derives the full difference under parameters that can actually
-    decode it, which keeps both endpoints byte-identical with no
-    negotiation about which groups had already finished.
+    counted builds.  Settled progress carries over: the recovered diff
+    (Alice-side; Bob's mirror never holds one) and the accumulated byte
+    ledger and counters transfer into the fresh state, so elements already
+    recovered are never re-transmitted — any new group whose differences
+    were all settled has equal effective sets, a zero difference sketch,
+    and settles in round 1 with an empty position payload.  Both endpoints
+    stay byte-identical with no negotiation: the carried diff only shapes
+    Alice's effective set, which Bob observes through the sketches exactly
+    like any other round.  (Regression-tested: no settled unit's bits are
+    ledgered twice across an escalation.)
     """
     level = sess.escalations + 1
     plan = escalated_plan(sess.plan, level)
-    old = sess.plan
-    batch._stores.pop((old.n, old.t), None)
+    old_plan, old_state = sess.plan, sess.state
+    batch._stores.pop((old_plan.n, old_plan.t), None)
     batch._stores.pop((plan.n, plan.t), None)
     sess.plan = plan
-    sess.state = new_session_state(sess.state.a, sess.state.b, plan)
+    sess.state = new_session_state(old_state.a, old_state.b, plan)
+    sess.state.diff = old_state.diff
+    sess.state.bytes_per_round = old_state.bytes_per_round
+    sess.state.decode_failures = old_state.decode_failures
+    sess.state.fake_rejections = old_state.fake_rejections
     sess.rnd0 = rnd0
     sess.escalations = level
     return sess
 
 
 def degrade_exhausted(
-    batch: SessionBatch, rnd: int, *, max_escalations: int = 3
+    batch: SessionBatch, rnd: int, *, max_escalations: int = MAX_ESCALATIONS
 ) -> list[ReconSession]:
     """Escalate every session whose round budget just ran out with groups
     still undone, instead of letting it report failure (DESIGN.md §13).

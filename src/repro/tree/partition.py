@@ -30,7 +30,7 @@ ledger bits the leaf sessions report.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as _dc_replace
 
 import numpy as np
 
@@ -354,17 +354,25 @@ def tree_reconcile(
     tree: TreeConfig | None = None,
     *,
     interpret: bool | None = None,
+    rateless: bool = False,
     recorder=None,
     tracer=None,
 ) -> TreeResult:
     """Full cold-start reconciliation: tree front end, then every leaf as
     an ordinary known-d PBS session fused into one ``ReconcileServer``
     batch (graceful degradation on, so an underestimated leaf escalates
-    instead of failing).  Publishes the ``server.tree_*`` metrics.
+    instead of failing).  ``rateless=True`` arms the ``MSG_PARITY``
+    recovery ladder (DESIGN.md §16) on every leaf session: a leaf whose
+    tree-estimated d̂ undershot recovers in-round by extending its BCH
+    sketches instead of burning a doubled-d̂ re-plan — degradation stays
+    on as the fallback past the extension cap.  Publishes the
+    ``server.tree_*`` metrics.
     """
     from repro.recon.server import ReconcileServer
 
     cfg = cfg or PBSConfig()
+    if rateless and not cfg.rateless:
+        cfg = _dc_replace(cfg, rateless=True)
     a = np.unique(np.asarray(set_a, dtype=np.uint32))
     b = np.unique(np.asarray(set_b, dtype=np.uint32))
     leaves, stats = partition_pair(

@@ -55,11 +55,12 @@ MSG_MUX = 0x08            # either direction: channel-tagged envelope (hub)
 MSG_EPOCH = 0x09          # either direction: epoch-open envelope (continuous sync)
 MSG_RESUME = 0x0A         # either direction: session-resumption handshake (hub)
 MSG_TREE = 0x0B           # either direction: tree-phase digest/verdict exchange
+MSG_PARITY = 0x0C         # Alice -> Bob: incremental parity syndromes (rateless)
 
 _KNOWN = frozenset(
     (MSG_TOW_SKETCH, MSG_DHAT, MSG_ROUND_SKETCHES, MSG_ROUND_REPLY,
      MSG_ROUND_OUTCOME, MSG_VERIFY, MSG_VERIFY_ACK, MSG_MUX, MSG_EPOCH,
-     MSG_RESUME, MSG_TREE)
+     MSG_RESUME, MSG_TREE, MSG_PARITY)
 )
 
 KEY_BITS = 32  # element keys are 32-bit (core.pbs.KEY_BITS)
@@ -520,6 +521,102 @@ def decode_round_sketches_scalar(
         out.append(sk)
     r.finish()
     return rnd, out
+
+
+def parity_ledger_bits(n_units: int, dt: int, m: int) -> int:
+    """Formula-(1) bits of one session's parity-extension block: dt
+    incremental m-bit syndromes per still-overloaded unit.  Telescoping
+    (DESIGN.md §16): a unit that decodes at extension level e has shipped
+    exactly t_e * m total syndrome bits across the round — the prefix plus
+    every increment IS the fresh (n, t_e) sketch, so nothing is re-sent."""
+    return n_units * dt * m
+
+
+def encode_parity(rnd: int, level: int, blocks) -> bytes:
+    """``blocks``: per extending session (schema order), (inc (U, dt), m) —
+    the incremental odd syndromes S_{2*t_prev+1}..S_{2*t_e-1} of each
+    still-overloaded unit, slots in ascending order.
+
+    Payload: ``uvarint(rnd) || uvarint(level)`` then one MSB-first bit
+    stream of m-bit syndromes.  Which units extend at which level is
+    derived deterministically by both sides from the reply's ok flags and
+    the shared t-ladder, so the frame ships no unit identities — the same
+    schema convention as every round frame (DESIGN.md §9).
+    """
+    if level < 1:
+        raise WireError(f"parity level {level} out of range (must be >= 1)")
+    segs = []
+    for inc, m in blocks:
+        inc = np.asarray(inc, dtype=np.int64)
+        if np.any(inc < 0) or np.any(inc >> m):
+            raise WireError(f"syndrome out of range for m={m}")
+        if inc.size:
+            segs.append(_field_bits(inc.ravel(), m))
+    header = encode_uvarint(rnd) + encode_uvarint(level)
+    return frame(MSG_PARITY, _pack_payload(header, segs))
+
+
+def encode_parity_scalar(rnd: int, level: int, blocks) -> bytes:
+    """Per-bit ``BitWriter`` form of ``encode_parity`` (test oracle)."""
+    if level < 1:
+        raise WireError(f"parity level {level} out of range (must be >= 1)")
+    w = BitWriter()
+    for inc, m in blocks:
+        inc = np.asarray(inc, dtype=np.int64)
+        if np.any(inc < 0) or np.any(inc >> m):
+            raise WireError(f"syndrome out of range for m={m}")
+        for row in inc:
+            for s in row:
+                w.write(int(s), m)
+    payload = encode_uvarint(rnd) + encode_uvarint(level) + w.getvalue()
+    return frame(MSG_PARITY, payload)
+
+
+def decode_parity(payload: bytes, schema) -> tuple[int, int, list[np.ndarray]]:
+    """``schema``: [(n_units, dt, m)] per extending session, both-endpoint-
+    derived from the failing slots and the t-ladder; strict."""
+    rnd, off = decode_uvarint(payload)
+    level, off = decode_uvarint(payload, off)
+    if level < 1:
+        raise WireError(f"parity level {level} out of range (must be >= 1)")
+    bits = _bit_array(payload, off)
+    total = sum(n_units * dt * m for n_units, dt, m in schema)
+    if total > len(bits):
+        raise WireTruncated("bit field runs past end of buffer")
+    out = []
+    pos = 0
+    for n_units, dt, m in schema:
+        nb = n_units * dt * m
+        blk = (
+            bits[pos : pos + nb].reshape(n_units * dt, m).astype(np.int64)
+            @ _weights(m)
+            if nb
+            else np.zeros(0, dtype=np.int64)
+        )
+        out.append(blk.reshape(n_units, dt))
+        pos += nb
+    _finish_bits(bits, total, payload, off)
+    return rnd, level, out
+
+
+def decode_parity_scalar(
+    payload: bytes, schema
+) -> tuple[int, int, list[np.ndarray]]:
+    """Per-bit ``BitReader`` form of ``decode_parity`` (test oracle)."""
+    rnd, off = decode_uvarint(payload)
+    level, off = decode_uvarint(payload, off)
+    if level < 1:
+        raise WireError(f"parity level {level} out of range (must be >= 1)")
+    r = BitReader(payload, off)
+    out = []
+    for n_units, dt, m in schema:
+        inc = np.zeros((n_units, dt), dtype=np.int64)
+        for u in range(n_units):
+            for j in range(dt):
+                inc[u, j] = r.read(m)
+        out.append(inc)
+    r.finish()
+    return rnd, level, out
 
 
 @dataclass

@@ -84,7 +84,13 @@ def _transport_pairs(kind: str, n: int):
     return [tcp_loopback_pair() for _ in range(n)]
 
 
-@pytest.mark.parametrize("kind", ["memory", "loopback"])
+@pytest.mark.parametrize(
+    "kind",
+    # the in-memory variant covers the protocol fast; the real-socket
+    # variant (the single heaviest fast-tier test) moves to the full-suite
+    # job — CI's wire-endpoints job exercises loopback end-to-end anyway
+    ["memory", pytest.param("loopback", marks=pytest.mark.slow)],
+)
 def test_hub_eight_peers_acceptance(kind):
     rng_seed = 100
     pairs = _transport_pairs(kind, 8)

@@ -150,7 +150,12 @@ def test_plan_round_matches_reference_direct():
         _assert_plans_equal(got, ref, ctx="direct")
 
 
-@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize(
+    "seed",
+    # seed 0 rides the fast tier; the redundant heavier seeds run in the
+    # full-suite job (same property, ~10s apiece)
+    [0] + [pytest.param(s, marks=pytest.mark.slow) for s in (1, 2, 3)],
+)
 def test_randomized_grids_seeded(seed, checked_planner):
     """Seeded random batches (always-run stand-in for the hypothesis form):
     random sizes, diffs, and seeds across several sessions per batch."""

@@ -632,3 +632,99 @@ def test_tree_digest_ledger_mirrors_partition_walk():
         frontier = split_ranges(frontier, verdicts)
         level += 1
     assert stats.digest_bytes == total > 0
+
+
+# ---------------------------------------------------------------------------
+# parity extension frames (rateless recovery, DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+
+def _random_parity(rng, max_sessions=4):
+    """Random [(n_units, dt, m)] schema + matching incremental blocks."""
+    schema, blocks = [], []
+    for _ in range(rng.integers(1, max_sessions + 1)):
+        m = int(rng.integers(4, 11))
+        dt = int(rng.integers(1, 9))
+        u = int(rng.integers(1, 7))
+        schema.append((u, dt, m))
+        blocks.append(
+            (rng.integers(0, 1 << m, size=(u, dt), dtype=np.int64), m)
+        )
+    return schema, blocks
+
+
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_parity_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    schema, blocks = _random_parity(rng)
+    rnd = int(rng.integers(1, 13))
+    level = int(rng.integers(1, 5))
+    buf = wf.encode_parity(rnd, level, blocks)
+    # batched encoder is byte-identical to the per-bit oracle
+    assert buf == wf.encode_parity_scalar(rnd, level, blocks)
+    payload = _unframe(buf, wf.MSG_PARITY)
+    for decode in (wf.decode_parity, wf.decode_parity_scalar):
+        got_rnd, got_level, got = decode(payload, schema)
+        assert (got_rnd, got_level) == (rnd, level)
+        for (inc, _), g in zip(blocks, got):
+            np.testing.assert_array_equal(g, inc)
+    # the payload past the header is exactly the Formula-(1) ledger
+    bits = sum(wf.parity_ledger_bits(u, dt, m) for u, dt, m in schema)
+    header = len(encode_uvarint(rnd)) + len(encode_uvarint(level))
+    assert len(payload) == header + (bits + 7) // 8
+
+
+def test_parity_rejects_level_range_truncation_and_corruption():
+    rng = np.random.default_rng(0)
+    schema, blocks = _random_parity(rng)
+    # level 0 is the base sketch, never a parity frame
+    with pytest.raises(WireError, match="level"):
+        wf.encode_parity(3, 0, blocks)
+    buf = wf.encode_parity(3, 1, blocks)
+    payload = _unframe(buf, wf.MSG_PARITY)
+    # corrupt the level varint down to 0 (header is uvarint(3) uvarint(1))
+    with pytest.raises(WireError, match="level"):
+        wf.decode_parity(payload[:1] + b"\x00" + payload[2:], schema)
+    # a syndrome outside GF(2^m) is rejected at encode time
+    (inc, m) = blocks[0]
+    bad = inc.copy()
+    bad[0, 0] = 1 << m
+    with pytest.raises(WireError, match="range"):
+        wf.encode_parity(3, 1, [(bad, m)] + blocks[1:])
+    # truncation: the bit field runs past the shortened buffer
+    with pytest.raises(WireTruncated):
+        wf.decode_parity(payload[:-1], schema)
+    # trailing bytes after the bit stream are rejected
+    with pytest.raises(WireError, match="unconsumed"):
+        wf.decode_parity(payload + b"\x00", schema)
+    # nonzero pad bits are corruption, not slack
+    pschema = [(1, 1, 5)]
+    pbuf = _unframe(
+        wf.encode_parity(2, 1, [(np.zeros((1, 1), dtype=np.int64), 5)]),
+        wf.MSG_PARITY,
+    )
+    with pytest.raises(WireError, match="padding"):
+        wf.decode_parity(pbuf[:-1] + bytes([pbuf[-1] | 1]), pschema)
+
+
+def test_parity_legal_inside_mux_and_epoch():
+    """MSG_PARITY is an ordinary round frame: it rides inside the hub's
+    MSG_MUX and the continuous-sync MSG_EPOCH envelopes (which reject only
+    nested *envelopes*), in both nesting orders mux(epoch(parity)) never
+    arises but each single wrap must pass."""
+    rng = np.random.default_rng(1)
+    schema, blocks = _random_parity(rng)
+    inner = wf.encode_parity(2, 1, blocks)
+    ch, msg_type, ip = wf.decode_mux(
+        _unframe(wf.encode_mux(5, inner), wf.MSG_MUX)
+    )
+    assert ch == 5 and msg_type == wf.MSG_PARITY
+    got_rnd, got_level, got = wf.decode_parity(ip, schema)
+    assert (got_rnd, got_level) == (2, 1)
+    np.testing.assert_array_equal(got[0], blocks[0][0])
+    e, msg_type, ip = wf.decode_epoch(
+        _unframe(wf.encode_epoch(3, inner), wf.MSG_EPOCH)
+    )
+    assert e == 3 and msg_type == wf.MSG_PARITY
+    assert wf.decode_parity(ip, schema)[0] == 2
